@@ -1,0 +1,160 @@
+"""AOT bridge: lower every artifact in the manifest to HLO **text**.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (what `make artifacts` runs):
+    cd python && python -m compile.aot --out ../artifacts
+
+Python runs ONLY here, at build time. The rust binary is self-contained
+once `artifacts/` exists.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from jax._src.lib import xla_client as xc
+
+from . import model as l2
+from . import models_zoo
+
+# Fused conv-subtask artifacts are generated for the models actually
+# executed end-to-end on this testbed, for every split 1..=N_WORKERS.
+DEFAULT_MODELS = ["tinyvgg", "tinyresnet"]
+DEFAULT_N_WORKERS = 6
+# Shape-polymorphic GEMM tiles for the fallback provider.
+GEMM_TILES = [(128, 128, 128), (256, 256, 256)]
+# One encode-offload artifact (n, k, m) as a demonstrator.
+ENCODE_SHAPES = [(6, 3, 8192)]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def conv_subtask_shapes(m, n_workers):
+    """All distinct (layer, k_split) subtask shapes of a model — mirrors
+    rust conv::split (eqs. 1-2 with floored piece widths)."""
+    shapes = models_zoo.infer_shapes(m)
+    out = {}
+    for l in m["layers"]:
+        if l["op"] != "conv":
+            continue
+        _, h_in, w_in = shapes[l["in"][0]]
+        h_i, w_i = h_in + 2 * l["p"], w_in + 2 * l["p"]
+        h_o = (h_i - l["k"]) // l["s"] + 1
+        w_o = (w_i - l["k"]) // l["s"] + 1
+        for k_split in range(1, n_workers + 1):
+            if k_split > w_o:
+                break
+            w_o_p = w_o // k_split
+            w_i_p = l["k"] + (w_o_p - 1) * l["s"]
+            key = (l["c_in"], l["c_out"], l["k"], l["s"], h_i, w_i_p)
+            out.setdefault(
+                key,
+                {
+                    "kind": "conv_subtask",
+                    "c_in": l["c_in"],
+                    "c_out": l["c_out"],
+                    "k_w": l["k"],
+                    "s_w": l["s"],
+                    "h_i": h_i,
+                    "w_i_p": w_i_p,
+                    "h_o": h_o,
+                    "w_o_p": w_o_p,
+                    "uses": [],
+                },
+            )["uses"].append(f"{m['name']}/{l['id']}/k{k_split}")
+    return out
+
+
+def emit(out_dir: str, models, n_workers: int, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": 1, "n_workers": n_workers, "artifacts": []}
+
+    def write(name: str, lowered, meta: dict):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        t0 = time.time()
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        meta = dict(meta, name=name, file=f"{name}.hlo.txt")
+        manifest["artifacts"].append(meta)
+        if verbose:
+            print(
+                f"  {name}: {len(text) / 1024:.0f} KiB in {time.time() - t0:.1f}s",
+                file=sys.stderr,
+            )
+
+    # 1. Fused conv subtasks.
+    for model_name in models:
+        m = models_zoo.model(model_name)
+        shapes = conv_subtask_shapes(m, n_workers)
+        if verbose:
+            print(
+                f"{model_name}: {len(shapes)} distinct conv-subtask shapes",
+                file=sys.stderr,
+            )
+        for meta in shapes.values():
+            name = (
+                f"conv_{meta['c_in']}x{meta['c_out']}"
+                f"_k{meta['k_w']}s{meta['s_w']}"
+                f"_h{meta['h_i']}_w{meta['w_i_p']}"
+            )
+            if any(a["name"] == name for a in manifest["artifacts"]):
+                continue  # shape shared across models
+            lowered = l2.lower_conv_subtask(
+                meta["c_in"], meta["h_i"], meta["w_i_p"],
+                meta["c_out"], meta["k_w"], meta["s_w"],
+            )
+            write(name, lowered, meta)
+
+    # 2. GEMM tiles.
+    for (m_, k_, n_) in GEMM_TILES:
+        write(
+            f"gemm_{m_}x{k_}x{n_}",
+            l2.lower_gemm_tile(m_, k_, n_),
+            {"kind": "gemm_tile", "m": m_, "k": k_, "n": n_},
+        )
+
+    # 3. Encode offload demo.
+    for (n_, k_, mlen) in ENCODE_SHAPES:
+        write(
+            f"encode_n{n_}k{k_}m{mlen}",
+            l2.lower_encode(n_, k_, mlen),
+            {"kind": "encode", "n": n_, "k": k_, "m_len": mlen},
+        )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(DEFAULT_MODELS))
+    ap.add_argument("--n-workers", type=int, default=DEFAULT_N_WORKERS)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    manifest = emit(
+        args.out,
+        [m for m in args.models.split(",") if m],
+        args.n_workers,
+        verbose=not args.quiet,
+    )
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: MDS encode (paper eq. 3) as a blocked matrix product.
+
+`G (n, k) @ X (k, m)` where the rows of X are flattened input partitions.
+`n, k <= ~20` while `m` is huge (C_I*H_I*W_I^p), so the kernel blocks the
+*m* dimension only and keeps the whole generator in registers/VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _encode_kernel(g_ref, x_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        g_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def encode_pallas(g, x, bm: int = 2048):
+    """Encode k partitions of length m into n: `(n,k) @ (k,m) -> (n,m)`,
+    blocked along m. m must be a multiple of bm (callers pad)."""
+    n, k = g.shape
+    k2, m = x.shape
+    assert k == k2, "generator/partition mismatch"
+    bm = min(bm, m)
+    assert m % bm == 0, "pad m to a block multiple"
+    return pl.pallas_call(
+        _encode_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, bm), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((n, bm), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(g, x)
+
+
+def vandermonde(n: int, k: int):
+    """The MdsCode generator used by rust (coding::mds): Vandermonde rows
+    `[g^(k-1), ..., g^0]` over nodes evenly spaced in [-1, 1]. Kept in sync
+    with rust by the cross-language test in tests/test_coding_kernel.py."""
+    if n == 1:
+        nodes = jnp.array([1.0], dtype=jnp.float32)
+    else:
+        nodes = jnp.linspace(-1.0, 1.0, n, dtype=jnp.float32)
+    powers = jnp.arange(k - 1, -1, -1, dtype=jnp.float32)
+    return nodes[:, None] ** powers[None, :]
+
+
+def decode_ref(g_sub, y):
+    """Reference decode (eq. 4): solve G_S^{-1} @ Y without forming the
+    inverse. Used by pytest to close the encode→compute→decode loop."""
+    return jnp.linalg.solve(g_sub.astype(jnp.float64), y.astype(jnp.float64)).astype(
+        jnp.float32
+    )
+
+
+__all__ = ["encode_pallas", "vandermonde", "decode_ref", "ref"]

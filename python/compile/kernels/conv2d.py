@@ -1,0 +1,110 @@
+"""L1 Pallas kernel: the conv-subtask hot spot.
+
+The kernel computes a *valid* 2D convolution of an already-padded input
+partition — exactly the linear map CoCoI distributes to workers (bias and
+activation stay on the master, after MDS decode; see rust/src/coding).
+
+Structure (the TPU-shaped design, DESIGN.md §Hardware-Adaptation):
+
+* grid walks the **output width** in blocks — the same dimension CoCoI
+  splits across workers, so one subtask's HBM↔VMEM schedule mirrors the
+  system-level split;
+* the K×K taps are a static python loop; each tap contributes an
+  `einsum('oc,chw->ohw')` — a (C_O × C_I) · (C_I × H_O·W_b) contraction
+  that maps onto the MXU systolic array;
+* the input stays unblocked (the overlapping receptive fields of adjacent
+  width blocks make BlockSpec-level blocking of the input unsound) and is
+  sliced dynamically per program instance.
+
+`interpret=True` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that both jax and the
+rust runtime execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_block_kernel(x_ref, w_ref, o_ref, *, stride: int, k: int, w_block: int):
+    """One program instance: compute `w_block` output columns."""
+    i = pl.program_id(0)
+    c_o, h_o, _ = o_ref.shape
+    c_i = x_ref.shape[0]
+    # Input span covering this output block (eq. 1 of the paper at the
+    # kernel scale): start = block_start * stride, width K + (w_block-1)*S.
+    x_start = i * w_block * stride
+    in_span = k + (w_block - 1) * stride
+    x_blk = x_ref[:, :, pl.ds(x_start, in_span)]  # (C_I, H_I, in_span)
+
+    acc = jnp.zeros((c_o, h_o, w_block), dtype=jnp.float32)
+    for ky in range(k):
+        for kx in range(k):
+            # Strided tap window: (C_I, H_O, w_block).
+            tap = jax.lax.slice(
+                x_blk,
+                (0, ky, kx),
+                (c_i, ky + (h_o - 1) * stride + 1, kx + (w_block - 1) * stride + 1),
+                (1, stride, stride),
+            )
+            # (C_O, C_I) x (C_I, H_O*w_block) on the MXU.
+            acc = acc + jnp.einsum(
+                "oc,chw->ohw",
+                w_ref[:, :, ky, kx],
+                tap,
+                preferred_element_type=jnp.float32,
+            )
+    o_ref[...] = acc
+
+
+def _pick_w_block(w_o: int) -> int:
+    """Largest divisor of W_O not exceeding 16 — keeps the VMEM slab for
+    (input span + output block) small while amortizing the tap loop."""
+    for cand in range(min(16, w_o), 0, -1):
+        if w_o % cand == 0:
+            return cand
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "w_block"))
+def conv2d_pallas(x, w, stride: int = 1, w_block: int | None = None):
+    """Valid conv of padded input `x (C_I, H_I, W_I)` with `w (C_O, C_I,
+    K, K)`, gridded over output-width blocks."""
+    c_i, h_i, w_i = x.shape
+    c_o, c_i2, k, k2 = w.shape
+    assert c_i == c_i2 and k == k2, "weight shape mismatch"
+    h_o = (h_i - k) // stride + 1
+    w_o = (w_i - k) // stride + 1
+    if w_block is None:
+        w_block = _pick_w_block(w_o)
+    assert w_o % w_block == 0, f"w_block {w_block} must divide W_O {w_o}"
+
+    kernel = functools.partial(
+        _conv_block_kernel, stride=stride, k=k, w_block=w_block
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(w_o // w_block,),
+        in_specs=[
+            # Full input per program: overlapping receptive fields.
+            pl.BlockSpec(x.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(w.shape, lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((c_o, h_o, w_block), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((c_o, h_o, w_o), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w)
+
+
+def vmem_estimate_bytes(c_i, h_i, c_o, h_o, k, stride, w_block) -> int:
+    """Structural VMEM footprint of one program instance (perf model):
+    input span + weights + output block, f32."""
+    in_span = k + (w_block - 1) * stride
+    return 4 * (c_i * h_i * in_span + c_o * c_i * k * k + c_o * h_o * w_block)
+
+
+def mxu_utilization_estimate(c_i, c_o) -> float:
+    """Fraction of a 128×128 MXU tile the per-tap contraction fills."""
+    return min(c_i, 128) * min(c_o, 128) / (128.0 * 128.0)

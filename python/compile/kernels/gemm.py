@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: MXU-tiled GEMM.
+
+Two uses:
+* the fixed-shape **tile artifact** behind the rust shape-polymorphic
+  provider (rust does im2col + tiling, this kernel does each
+  `(BM, BK) @ (BK, BN)` tile);
+* the MDS **encode** matrix product `G (n,k) @ X (k,m)` when the master
+  offloads coding to the runtime.
+
+Classic 3-D grid (M/BM, N/BN, K/BK) with an accumulator carried in the
+output block across the K-steps (revisiting: K is the innermost grid dim).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm_pallas(a, b, bm: int = 128, bn: int = 128, bk: int = 128):
+    """`a (M, K) @ b (K, N)` with (bm, bn, bk) MXU tiles. Dimensions must
+    be tile multiples (the rust caller pads)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, "inner dims differ"
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, "pad to tile multiples"
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def vmem_estimate_bytes(bm, bn, bk) -> int:
+    """Structural VMEM per program: A tile + B tile + accumulator, f32,
+    double-buffered inputs."""
+    return 4 * (2 * bm * bk + 2 * bk * bn + bm * bn)

@@ -1,0 +1,37 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1 correctness).
+
+These are the ground truth the pytest suite checks the kernels against —
+deliberately written with stock jax ops (lax.conv / jnp.dot) and zero
+Pallas machinery.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_ref(x, w, stride: int):
+    """Valid (unpadded) 2D convolution.
+
+    x: (C_I, H_I, W_I) already-padded input feature map.
+    w: (C_O, C_I, K, K) kernel.
+    returns: (C_O, H_O, W_O).
+    """
+    out = lax.conv_general_dilated(
+        x[None],  # NCHW with N=1
+        w,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def gemm_ref(a, b):
+    """Plain matmul: (M, K) @ (K, N) in f32."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def encode_ref(g, x):
+    """MDS encode: generator (n, k) applied to k flattened partitions
+    (k, m) -> (n, m)."""
+    return jnp.dot(g, x, preferred_element_type=jnp.float32)

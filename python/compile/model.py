@@ -1,0 +1,56 @@
+"""L2: the jax compute graphs that get AOT-lowered for the rust runtime.
+
+Three graph families, all calling the L1 Pallas kernels:
+
+* `conv_subtask` — the worker-side unit of CoCoI: a *pure* valid conv of
+  an (already padded, already encoded) input partition. Weights arrive as
+  runtime arguments so one artifact serves every weight set.
+* `gemm_tile` — fixed-shape GEMM tile for the shape-polymorphic provider.
+* `encode` — the master's MDS encode offload.
+
+The full-model forward in `models_zoo.forward` is the oracle used by
+pytest to validate the distributed decomposition end-to-end in python
+before anything touches rust.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.coding import encode_pallas
+from .kernels.conv2d import conv2d_pallas
+from .kernels.gemm import gemm_pallas
+
+
+def conv_subtask(x, w, stride: int):
+    """Worker subtask: valid conv, no bias, no activation (linearity is
+    what makes MDS decode exact — see paper §II-B)."""
+    return (conv2d_pallas(x, w, stride=stride),)
+
+
+def gemm_tile(a, b):
+    """One (M, K) @ (K, N) tile."""
+    return (gemm_pallas(a, b),)
+
+
+def encode(g, x):
+    """MDS encode `G @ X`."""
+    return (encode_pallas(g, x),)
+
+
+def lower_conv_subtask(c_in, h_i, w_i_p, c_out, k, stride):
+    """jit+lower a conv subtask for one concrete partition shape."""
+    x = jax.ShapeDtypeStruct((c_in, h_i, w_i_p), jnp.float32)
+    w = jax.ShapeDtypeStruct((c_out, c_in, k, k), jnp.float32)
+    return jax.jit(lambda x, w: conv_subtask(x, w, stride)).lower(x, w)
+
+
+def lower_gemm_tile(m, kk, n):
+    a = jax.ShapeDtypeStruct((m, kk), jnp.float32)
+    b = jax.ShapeDtypeStruct((kk, n), jnp.float32)
+    return jax.jit(gemm_tile).lower(a, b)
+
+
+def lower_encode(n, k, mlen):
+    g = jax.ShapeDtypeStruct((n, k), jnp.float32)
+    x = jax.ShapeDtypeStruct((k, mlen), jnp.float32)
+    return jax.jit(encode).lower(g, x)

@@ -1,0 +1,129 @@
+"""Model zoo (python side): parses the same `config/models.json` the rust
+coordinator embeds, provides shape inference and a pure-jnp forward pass
+used as the L2 oracle."""
+
+import json
+import os
+
+import jax.numpy as jnp
+from jax import lax
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+MODELS_JSON = os.path.normpath(os.path.join(_HERE, "..", "..", "config", "models.json"))
+
+
+def load_zoo(path: str = MODELS_JSON):
+    with open(path) as f:
+        return json.load(f)["models"]
+
+
+def model(name: str, path: str = MODELS_JSON):
+    for m in load_zoo(path):
+        if m["name"] == name:
+            return m
+    raise KeyError(f"unknown model '{name}'")
+
+
+def conv_out(dim: int, k: int, s: int, p: int) -> int:
+    return (dim + 2 * p - k) // s + 1
+
+
+def infer_shapes(m):
+    """Mirror of rust `ModelSpec::infer_shapes` — (C, H, W) per node id."""
+    shapes = {"input": tuple(m["input"])}
+    for l in m["layers"]:
+        c0, h0, w0 = shapes[l["in"][0]]
+        op = l["op"]
+        if op == "conv":
+            assert c0 == l["c_in"], f"{l['id']}: c_in mismatch"
+            out = (
+                l["c_out"],
+                conv_out(h0, l["k"], l["s"], l["p"]),
+                conv_out(w0, l["k"], l["s"], l["p"]),
+            )
+        elif op == "maxpool":
+            p = l.get("p", 0)
+            out = (c0, conv_out(h0, l["k"], l["s"], p), conv_out(w0, l["k"], l["s"], p))
+        elif op == "gap":
+            out = (c0, 1, 1)
+        elif op == "linear":
+            assert c0 * h0 * w0 == l["c_in"], f"{l['id']}: flatten mismatch"
+            out = (l["c_out"], 1, 1)
+        elif op == "add":
+            assert shapes[l["in"][1]] == (c0, h0, w0)
+            out = (c0, h0, w0)
+        elif op == "relu":
+            out = (c0, h0, w0)
+        else:
+            raise ValueError(f"unknown op {op}")
+        shapes[l["id"]] = out
+    return shapes
+
+
+def forward(m, params, x):
+    """Pure-jnp forward pass. `params[layer_id] = (w, b)`; `x (C, H, W)`."""
+    values = {"input": x}
+    for l in m["layers"]:
+        a = values[l["in"][0]]
+        op = l["op"]
+        if op == "conv":
+            w, b = params[l["id"]]
+            y = lax.conv_general_dilated(
+                a[None],
+                w,
+                window_strides=(l["s"], l["s"]),
+                padding=[(l["p"], l["p"])] * 2,
+                dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            )[0]
+            y = y + b[:, None, None]
+            if l.get("relu"):
+                y = jnp.maximum(y, 0.0)
+        elif op == "maxpool":
+            p = l.get("p", 0)
+            y = lax.reduce_window(
+                a,
+                -jnp.inf,
+                lax.max,
+                (1, l["k"], l["k"]),
+                (1, l["s"], l["s"]),
+                [(0, 0), (p, p), (p, p)],
+            )
+        elif op == "gap":
+            y = jnp.mean(a, axis=(1, 2), keepdims=True)
+        elif op == "linear":
+            w, b = params[l["id"]]
+            y = (w @ a.reshape(-1) + b).reshape(-1, 1, 1)
+            if l.get("relu"):
+                y = jnp.maximum(y, 0.0)
+        elif op == "add":
+            y = a + values[l["in"][1]]
+            if l.get("relu"):
+                y = jnp.maximum(y, 0.0)
+        elif op == "relu":
+            y = jnp.maximum(a, 0.0)
+        else:
+            raise ValueError(f"unknown op {op}")
+        values[l["id"]] = y
+    return values[m["layers"][-1]["id"]]
+
+
+def random_params(m, seed: int = 0):
+    """He-style deterministic init (numpy-side; tests only — the rust
+    WeightStore is the runtime source of parameters)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    params = {}
+    for l in m["layers"]:
+        if l["op"] == "conv":
+            fan_in = l["c_in"] * l["k"] * l["k"]
+            bound = (3.0 / fan_in) ** 0.5
+            w = rng.uniform(-bound, bound, (l["c_out"], l["c_in"], l["k"], l["k"]))
+            b = rng.uniform(-0.05, 0.05, l["c_out"])
+            params[l["id"]] = (jnp.float32(w), jnp.float32(b))
+        elif l["op"] == "linear":
+            bound = (3.0 / l["c_in"]) ** 0.5
+            w = rng.uniform(-bound, bound, (l["c_out"], l["c_in"]))
+            b = rng.uniform(-0.05, 0.05, l["c_out"])
+            params[l["id"]] = (jnp.float32(w), jnp.float32(b))
+    return params

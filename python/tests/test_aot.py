@@ -1,0 +1,62 @@
+"""AOT path: HLO-text emission, manifest schema, and numeric equivalence
+of a lowered artifact executed through jax itself (the rust runtime
+round-trip is covered by rust integration tests)."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model as l2, models_zoo as zoo
+
+RNG = np.random.default_rng(11)
+
+
+def test_hlo_text_emission_smoke():
+    lowered = l2.lower_conv_subtask(4, 10, 7, 8, 3, 1)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "f32[8,4,3,3]" in text  # weight parameter shape present
+    # No Mosaic custom-call may leak into a CPU artifact.
+    assert "mosaic" not in text.lower()
+
+
+def test_conv_subtask_shapes_cover_all_convs():
+    m = zoo.model("tinyvgg")
+    shapes = aot.conv_subtask_shapes(m, 6)
+    conv_ids = {l["id"] for l in m["layers"] if l["op"] == "conv"}
+    used = {u.split("/")[1] for meta in shapes.values() for u in meta["uses"]}
+    assert used == conv_ids
+    # Every entry satisfies eq. 1.
+    for meta in shapes.values():
+        assert meta["w_i_p"] == meta["k_w"] + (meta["w_o_p"] - 1) * meta["s_w"]
+
+
+def test_emit_writes_manifest(tmp_path):
+    out = str(tmp_path / "artifacts")
+    manifest = aot.emit(out, ["tinyvgg"], n_workers=2, verbose=False)
+    with open(os.path.join(out, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk == manifest
+    kinds = {a["kind"] for a in manifest["artifacts"]}
+    assert kinds == {"conv_subtask", "gemm_tile", "encode"}
+    for a in manifest["artifacts"]:
+        path = os.path.join(out, a["file"])
+        assert os.path.exists(path), a["name"]
+        with open(path) as f:
+            assert f.read(9) == "HloModule"
+
+
+def test_lowered_subtask_equals_jit_execution():
+    """Executing the lowered computation (compiled from the same lowering
+    we serialize) must equal calling the kernel directly."""
+    c_in, h_i, w_i_p, c_out, k, s = 3, 12, 9, 5, 3, 1
+    lowered = l2.lower_conv_subtask(c_in, h_i, w_i_p, c_out, k, s)
+    compiled = lowered.compile()
+    x = jnp.float32(RNG.standard_normal((c_in, h_i, w_i_p)))
+    w = jnp.float32(RNG.standard_normal((c_out, c_in, k, k)))
+    (via_artifact,) = compiled(x, w)
+    (direct,) = l2.conv_subtask(x, w, s)
+    np.testing.assert_allclose(via_artifact, direct, rtol=1e-5, atol=1e-5)

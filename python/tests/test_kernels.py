@@ -1,0 +1,154 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes/strides; this is the CORE correctness signal for
+the compute that ends up inside every AOT artifact.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.conv2d import (
+    conv2d_pallas,
+    mxu_utilization_estimate,
+    vmem_estimate_bytes,
+    _pick_w_block,
+)
+from compile.kernels.gemm import gemm_pallas
+from compile.kernels.coding import decode_ref, encode_pallas, vandermonde
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+
+def rand(*shape):
+    return jnp.float32(RNG.standard_normal(shape))
+
+
+# ---------------------------------------------------------------- conv2d
+
+@settings(max_examples=25, deadline=None)
+@given(
+    c_i=st.integers(1, 8),
+    c_o=st.integers(1, 8),
+    k=st.sampled_from([1, 3, 5]),
+    s=st.integers(1, 2),
+    h_extra=st.integers(0, 6),
+    w_extra=st.integers(0, 12),
+)
+def test_conv2d_matches_ref(c_i, c_o, k, s, h_extra, w_extra):
+    h_i = k + h_extra
+    w_i = k + w_extra
+    x = rand(c_i, h_i, w_i)
+    w = rand(c_o, c_i, k, k)
+    got = conv2d_pallas(x, w, stride=s)
+    want = ref.conv2d_ref(x, w, s)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_explicit_w_block():
+    x = rand(4, 10, 34)
+    w = rand(6, 4, 3, 3)
+    want = ref.conv2d_ref(x, w, 1)  # W_O = 32
+    for w_block in [1, 2, 4, 8, 16, 32]:
+        got = conv2d_pallas(x, w, stride=1, w_block=w_block)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_subtask_shapes_from_paper_split():
+    # A k-way split piece: W_I^p = K + (W_O^p - 1) S (paper eq. 1).
+    k_kernel, stride = 3, 1
+    w_o_p = 14
+    w_i_p = k_kernel + (w_o_p - 1) * stride
+    x = rand(32, 58, w_i_p)
+    w = rand(32, 32, k_kernel, k_kernel)
+    got = conv2d_pallas(x, w, stride=stride)
+    assert got.shape == (32, 56, w_o_p)
+    np.testing.assert_allclose(got, ref.conv2d_ref(x, w, stride), rtol=1e-4, atol=1e-4)
+
+
+def test_pick_w_block_divides():
+    for w_o in range(1, 200):
+        b = _pick_w_block(w_o)
+        assert w_o % b == 0 and 1 <= b <= 16
+
+
+def test_structural_perf_estimates():
+    # Estimates are used by DESIGN.md §Perf — sanity-bound them.
+    vmem = vmem_estimate_bytes(c_i=128, h_i=58, c_o=128, h_o=56, k=3, stride=1, w_block=16)
+    assert vmem < 16 * 2**20, "one program instance must fit VMEM"
+    assert 0.0 < mxu_utilization_estimate(128, 128) <= 1.0
+    assert mxu_utilization_estimate(3, 32) < 0.01  # stem conv underfills MXU
+
+
+# ------------------------------------------------------------------ gemm
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([1, 7, 64, 128]),
+    k=st.sampled_from([1, 32, 128]),
+    n=st.sampled_from([1, 5, 128]),
+)
+def test_gemm_matches_ref_unblocked(m, k, n):
+    # When dims < block, gemm_pallas clamps blocks to the dims.
+    a, b = rand(m, k), rand(k, n)
+    np.testing.assert_allclose(
+        gemm_pallas(a, b), ref.gemm_ref(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_gemm_tiled_multi_step():
+    # Forces a real 3-D grid with K-accumulation: 256/128 = 2 steps per dim.
+    a, b = rand(256, 256), rand(256, 256)
+    np.testing.assert_allclose(
+        gemm_pallas(a, b, bm=128, bn=128, bk=128),
+        ref.gemm_ref(a, b),
+        rtol=1e-3,
+        atol=1e-3,
+    )
+
+
+# ---------------------------------------------------------------- coding
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 10), data=st.data())
+def test_encode_matches_ref(n, data):
+    k = data.draw(st.integers(1, n))
+    g = vandermonde(n, k)
+    x = rand(k, 2048)
+    np.testing.assert_allclose(
+        encode_pallas(g, x, bm=1024), ref.encode_ref(g, x), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_encode_compute_decode_closes():
+    """The CoCoI linearity loop in pure python: encode inputs, convolve
+    each encoded partition, decode any-k outputs, compare to convolving
+    the sources directly."""
+    n, k = 5, 3
+    c_i, h_i, w_i_p = 4, 9, 7
+    stride, kk = 1, 3
+    g = vandermonde(n, k)
+    sources = rand(k, c_i * h_i * w_i_p)
+    w = rand(6, c_i, kk, kk)
+
+    encoded = encode_pallas(g, sources, bm=sources.shape[1])
+
+    conv = lambda flat: ref.conv2d_ref(
+        flat.reshape(c_i, h_i, w_i_p), w, stride
+    ).reshape(-1)
+    encoded_outputs = jnp.stack([conv(encoded[i]) for i in range(n)])
+    subset = [0, 2, 4]
+    decoded = decode_ref(g[jnp.array(subset)], encoded_outputs[jnp.array(subset)])
+    direct = jnp.stack([conv(sources[i]) for i in range(k)])
+    np.testing.assert_allclose(decoded, direct, rtol=1e-3, atol=1e-3)
+
+
+def test_vandermonde_matches_rust_layout():
+    # rust coding::mds: nodes evenly spaced in [-1, 1], rows [g^(k-1)..g^0].
+    g = np.asarray(vandermonde(3, 2))
+    np.testing.assert_allclose(g, [[-1.0, 1.0], [0.0, 1.0], [1.0, 1.0]], atol=1e-7)
+    g1 = np.asarray(vandermonde(1, 1))
+    np.testing.assert_allclose(g1, [[1.0]])

@@ -1,0 +1,87 @@
+//! Coding micro-benchmarks: MDS/LT encode + decode throughput on
+//! feature-map-sized rows, and the `G_S` inversion. These are the master
+//! hot path whose FLOP counts (eqs. 8, 12) the latency model charges.
+
+use cocoi::bench::harness::BenchTimer;
+use cocoi::coding::{matrix::Matrix, LtCode, MdsCode, RedundancyScheme};
+use cocoi::util::Rng;
+
+fn main() {
+    let timer = BenchTimer::new(2, 15);
+    let mut rng = Rng::new(1);
+
+    // VGG conv3-ish partition: C_I*H_I*W_I^p = 128*114*21 ≈ 306k floats.
+    let row_len = 128 * 114 * 21;
+    for (n, k) in [(10usize, 7usize), (10, 5), (6, 4)] {
+        let code = MdsCode::new(n, k);
+        let sources: Vec<Vec<f32>> = (0..k)
+            .map(|_| {
+                let mut v = vec![0f32; row_len];
+                rng.fill_uniform_f32(&mut v, -1.0, 1.0);
+                v
+            })
+            .collect();
+
+        let mut tasks = Vec::new();
+        let s = timer.run(|| {
+            tasks = code.encode(&sources);
+        });
+        let gbps = code.encode_flops(row_len) / s.mean() / 1e9;
+        timer.report(
+            &format!("mds({n},{k}) encode {row_len} floats [{gbps:.2} GFLOP/s]"),
+            &s,
+        );
+
+        let subset: Vec<usize> = rng.sample_distinct(n, k);
+        let s = timer.run(|| {
+            let mut dec = code.decoder();
+            for &t in &subset {
+                dec.add(tasks[t].id, tasks[t].payload.clone());
+            }
+            std::hint::black_box(dec.decode().unwrap());
+        });
+        timer.report(&format!("mds({n},{k}) decode (incl. G_S^-1)"), &s);
+    }
+
+    // G_S inversion alone (k ≤ 20 stays trivially cheap — eq. 12 note).
+    for k in [5usize, 10, 20] {
+        let code = MdsCode::new(k + 2, k);
+        let idx: Vec<usize> = (0..k).collect();
+        let gs = code.generator().select_rows(&idx);
+        let s = timer.run(|| {
+            std::hint::black_box(gs.inverse().unwrap());
+        });
+        timer.report(&format!("vandermonde G_S^-1 (k={k})"), &s);
+    }
+
+    // Dense coefficient apply (the decode hot loop).
+    for k in [4usize, 8] {
+        let coeff = Matrix::identity(k);
+        let rows: Vec<Vec<f32>> = (0..k).map(|_| vec![1.0f32; row_len]).collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let s = timer.run(|| {
+            std::hint::black_box(cocoi::coding::matrix::apply_f32(&coeff, &refs));
+        });
+        timer.report(&format!("apply_f32 {k}x{k} × {row_len}"), &s);
+    }
+
+    // LT encode + rank-k decode at the paper's k_s scale.
+    let k = 8;
+    let code = LtCode::new(10, k, 99);
+    let sources: Vec<Vec<f32>> = (0..k).map(|_| vec![1.0f32; row_len / 4]).collect();
+    let mut tasks = Vec::new();
+    let s = timer.run(|| {
+        tasks = code.encode(&sources);
+    });
+    timer.report(&format!("lt(k={k}) encode budget={}", code.num_subtasks()), &s);
+    let s = timer.run(|| {
+        let mut dec = code.decoder();
+        for t in &tasks {
+            if dec.add(t.id, t.payload.clone()) {
+                break;
+            }
+        }
+        std::hint::black_box(dec.decode().unwrap());
+    });
+    timer.report(&format!("lt(k={k}) decode (rank tracking + solve)"), &s);
+}

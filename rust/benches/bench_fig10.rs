@@ -1,0 +1,8 @@
+//! Regenerates paper Fig. 10 (App. E): impact of μ/θ (compute and
+//! transmission) on the optimal split k* and its approximation k°,
+//! plus the §IV-C theory margins (Props. 2–3).
+fn main() -> anyhow::Result<()> {
+    let scale = cocoi::bench::experiments::Scale::from_env();
+    cocoi::bench::experiments::fig10(scale)?;
+    cocoi::bench::experiments::theory()
+}

@@ -1,0 +1,5 @@
+//! Regenerates paper Fig. 4: per-conv-layer latency stacks (encode/decode
+//! vs worker time), CoCoI vs uncoded, under scenario-1 with λ_tr = 0.5.
+fn main() -> anyhow::Result<()> {
+    cocoi::bench::experiments::fig4(cocoi::bench::experiments::Scale::from_env())
+}

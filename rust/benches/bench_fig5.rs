@@ -1,0 +1,5 @@
+//! Regenerates paper Fig. 5: end-to-end inference latency vs λ_tr
+//! (scenario-1) for all six methods, VGG16 + ResNet18, n = 10.
+fn main() -> anyhow::Result<()> {
+    cocoi::bench::experiments::fig5(cocoi::bench::experiments::Scale::from_env())
+}

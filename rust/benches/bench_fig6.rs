@@ -1,0 +1,5 @@
+//! Regenerates paper Fig. 6: latency under device failures (scenario-2)
+//! and failures + chronic straggler (scenario-3), n_f ∈ {0, 1, 2}.
+fn main() -> anyhow::Result<()> {
+    cocoi::bench::experiments::fig6(cocoi::bench::experiments::Scale::from_env())
+}

@@ -1,0 +1,5 @@
+//! Regenerates paper Fig. 9 (App. D): (a) |k* − k°| heatmap over
+//! (μ_tr, μ_cmp), n = 20; (b) actual vs approximate E[T(k)] curves.
+fn main() -> anyhow::Result<()> {
+    cocoi::bench::experiments::fig9(cocoi::bench::experiments::Scale::from_env())
+}

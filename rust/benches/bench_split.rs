@@ -1,0 +1,42 @@
+//! Regenerates paper App. A Fig. 7 (per-layer local latency / conv
+//! bottleneck) and App. B Fig. 8 (shift-exponential fit of real measured
+//! transmission + compute latencies), plus split/im2col micro-benches.
+use cocoi::bench::harness::BenchTimer;
+use cocoi::conv::{im2col, ConvSpec, SplitPlan, Tensor};
+use cocoi::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    cocoi::bench::experiments::fig7()?;
+    cocoi::bench::experiments::fig8()?;
+
+    // Micro: split geometry + im2col on a VGG-scale layer.
+    let timer = BenchTimer::new(2, 20);
+    let spec = ConvSpec::new(128, 128, 3, 1, 1);
+    let mut rng = Rng::new(1);
+    let mut input = Tensor::zeros(128, 114, 114);
+    rng.fill_uniform_f32(&mut input.data, -1.0, 1.0);
+
+    let s = timer.run(|| {
+        let plan = SplitPlan::new(&spec, 114, 7).unwrap();
+        std::hint::black_box(&plan);
+    });
+    timer.report("split_plan(vgg conv3, k=7)", &s);
+
+    let s = timer.run(|| {
+        let pieces = SplitPlan::new(&spec, 114, 7)
+            .unwrap()
+            .in_ranges
+            .iter()
+            .map(|r| input.slice_w(r.start, r.end))
+            .collect::<Vec<_>>();
+        std::hint::black_box(&pieces);
+    });
+    timer.report("slice 7 input partitions (128x114)", &s);
+
+    let piece = input.slice_w(0, 21);
+    let s = timer.run(|| {
+        std::hint::black_box(im2col::im2col(&piece, 3, 1));
+    });
+    timer.report("im2col(128x114x21, 3x3)", &s);
+    Ok(())
+}

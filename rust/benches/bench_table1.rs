@@ -1,0 +1,5 @@
+//! Regenerates paper Table I: k* vs k° statistics (max/avg gap, latency
+//! difference) across λ_tr ∈ {0.2, …, 1.0}, VGG16 + ResNet18.
+fn main() -> anyhow::Result<()> {
+    cocoi::bench::experiments::table1(cocoi::bench::experiments::Scale::from_env())
+}

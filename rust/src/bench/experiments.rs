@@ -1,0 +1,588 @@
+//! One driver per paper table/figure (DESIGN.md §4 experiment index).
+//!
+//! Absolute numbers come from this testbed's calibrated profile, not the
+//! authors' Raspberry-Pi cluster; the *shape* of each result (who wins,
+//! by what factor, where crossovers fall) is the reproduction target.
+
+use anyhow::Result;
+
+use crate::latency::approx::l_integer;
+use crate::transport::Link as _;
+use crate::latency::phases::LayerDims;
+use crate::latency::{ShiftExp, SystemProfile};
+use crate::model::plan::conv_flop_share;
+use crate::model::{zoo, ModelPlan};
+use crate::planner::{montecarlo, solve_k_circ, Param, SplitPolicy};
+use crate::sim::{simulate_model, MethodSim, Scenario};
+use crate::util::stats::Summary;
+use crate::util::Rng;
+
+use super::harness::{fmt_secs, Table};
+
+/// Fold scenario-1's extra `Exp(λ_tr · T̄_tr)` transmission delay into the
+/// profile: each transmission phase's exponential part grows by
+/// `λ_tr × (θ + 1/μ)` per unit, i.e. `1/μ' = 1/μ + λ_tr (θ + 1/μ)`.
+pub fn scenario1_profile(base: &SystemProfile, lambda_tr: f64) -> SystemProfile {
+    let fold = |mu: f64, theta: f64| 1.0 / (1.0 / mu + lambda_tr * (theta + 1.0 / mu));
+    let mut p = *base;
+    p.mu_rec = fold(base.mu_rec, base.theta_rec);
+    p.mu_sen = fold(base.mu_sen, base.theta_sen);
+    p
+}
+
+/// Per-model calibrated profile (App. B): θ_cmp scaled so total conv
+/// FLOPs reproduce the paper's measured single-RPi latency.
+pub fn model_profile(name: &str) -> Result<SystemProfile> {
+    let base = SystemProfile::paper_default();
+    let measured = match name {
+        "vgg16" => 50.8,
+        "resnet18" => 89.8,
+        _ => return Ok(base),
+    };
+    let model = zoo::model(name)?;
+    let conv_flops: f64 = model
+        .conv_layers()?
+        .iter()
+        .map(|(_, spec, (_, h, w))| LayerDims::new(*spec, *h, *w).full_flops())
+        .sum();
+    Ok(base.calibrated_for(conv_flops, measured))
+}
+
+/// Experiment scale: quick mode for CI, full for EXPERIMENTS.md numbers.
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    pub trials: usize,
+    pub mc_samples: usize,
+    pub grid: usize,
+}
+
+impl Scale {
+    pub fn quick() -> Scale {
+        Scale {
+            trials: 8,
+            mc_samples: 3_000,
+            grid: 4,
+        }
+    }
+
+    /// Paper-scale: 20 trials per point (§V), 3×10⁵ MC samples (App. D).
+    pub fn full() -> Scale {
+        Scale {
+            trials: 20,
+            mc_samples: 300_000,
+            grid: 7,
+        }
+    }
+
+    pub fn from_env() -> Scale {
+        match std::env::var("COCOI_BENCH_SCALE").as_deref() {
+            Ok("full") => Scale::full(),
+            Ok("quick") => Scale::quick(),
+            _ => Scale {
+                trials: 20,
+                mc_samples: 20_000,
+                grid: 5,
+            },
+        }
+    }
+}
+
+const METHODS: [MethodSim; 6] = [
+    MethodSim::CocoiKStar { samples: 10_000 },
+    MethodSim::CocoiKCirc,
+    MethodSim::Uncoded,
+    MethodSim::Replication,
+    MethodSim::LtFine,
+    MethodSim::LtCoarse,
+];
+
+// ====================================================================
+// Appendix A, Fig. 7: per-layer local latency; conv share > 99%.
+// ====================================================================
+pub fn fig7() -> Result<()> {
+    for name in ["vgg16", "resnet18"] {
+        // Local single-device inference: everything runs at the model's
+        // calibrated worker-compute speed (θ_cmp + 1/μ_cmp per FLOP).
+        let p = model_profile(name)?;
+        let per_flop = p.theta_cmp + 1.0 / p.mu_cmp;
+        let model = zoo::model(name)?;
+        let mut table = Table::new(
+            &format!("Fig. 7 — {name}: estimated local per-layer latency"),
+            &["layer", "c_in->c_out", "kxk/s", "flops", "latency"],
+        );
+        let mut total_conv = 0.0;
+        for (id, spec, (_, h, w)) in model.conv_layers()? {
+            let dims = LayerDims::new(spec, h, w);
+            let t = dims.full_flops() * per_flop;
+            total_conv += t;
+            table.row(vec![
+                id,
+                format!("{}->{}", spec.c_in, spec.c_out),
+                format!("{}x{}/{}", spec.k_w, spec.k_w, spec.s_w),
+                format!("{:.2}G", dims.full_flops() / 1e9),
+                fmt_secs(t),
+            ]);
+        }
+        table.print();
+        let share = conv_flop_share(&model)?;
+        println!(
+            "total conv latency {:.1}s; conv FLOP share {:.2}% (paper: VGG16 50.8s/99.43%, \
+             ResNet18 89.8s/99.68%)",
+            total_conv,
+            share * 100.0
+        );
+    }
+    Ok(())
+}
+
+// ====================================================================
+// Appendix B, Fig. 8: shift-exponential fit of real measured latencies.
+// ====================================================================
+pub fn fig8() -> Result<()> {
+    // (a) transmission: real TCP loopback transfers of a 2 MB tensor.
+    let payload = vec![0u8; 2 << 20];
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let server = std::thread::spawn(move || -> Result<()> {
+        let (stream, _) = listener.accept()?;
+        let mut link = crate::transport::tcp::TcpLink::from_stream(stream);
+        while let Some(frame) = link.recv()? {
+            link.send(&frame[..1])?; // short ack, like the paper's RTT probe
+        }
+        Ok(())
+    });
+    let mut link = crate::transport::tcp::TcpLink::connect(&addr.to_string())?;
+    let mut tr_samples = Vec::new();
+    for _ in 0..200 {
+        let t0 = std::time::Instant::now();
+        crate::transport::Link::send(&mut link, &payload)?;
+        crate::transport::Link::recv(&mut link)?;
+        tr_samples.push(t0.elapsed().as_secs_f64());
+    }
+    drop(link);
+    let _ = server.join();
+
+    // (b) computation: repeated real conv subtask execution (VGG16 conv3
+    // analogue scaled to this host) through the fallback provider.
+    use crate::runtime::ConvProvider;
+    let spec = crate::conv::ConvSpec::new(64, 64, 3, 1, 0);
+    let mut rng = Rng::new(42);
+    let mut input = crate::conv::Tensor::zeros(64, 58, 16);
+    rng.fill_uniform_f32(&mut input.data, -1.0, 1.0);
+    let mut weights = vec![0f32; spec.weight_len()];
+    rng.fill_uniform_f32(&mut weights, -1.0, 1.0);
+    let provider = crate::runtime::FallbackProvider;
+    let mut cmp_samples = Vec::new();
+    for _ in 0..100 {
+        let t0 = std::time::Instant::now();
+        let _ = provider.conv(&spec, &input, &weights)?;
+        cmp_samples.push(t0.elapsed().as_secs_f64());
+    }
+
+    let mut table = Table::new(
+        "Fig. 8 — shift-exponential fit of measured latencies",
+        &["series", "n", "min(=Nθ)", "mean", "fit μ/N", "KS", "KS(5% trim)"],
+    );
+    for (name, samples) in [("transmission 2MB", &tr_samples), ("conv subtask", &cmp_samples)] {
+        let fit = ShiftExp::fit(samples, 1.0);
+        // Virtualized 1-core hosts add scheduler spikes the RPi testbed
+        // does not have; the trimmed fit shows the bulk-distribution
+        // quality separately from the spike tail.
+        let trimmed = ShiftExp::fit_trimmed(samples, 1.0, 0.05);
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let keep = &sorted[..(sorted.len() * 95) / 100];
+        let s = Summary::from_slice(samples);
+        table.row(vec![
+            name.into(),
+            format!("{}", samples.len()),
+            format!("{:.3}ms", s.min() * 1e3),
+            format!("{:.3}ms", s.mean() * 1e3),
+            format!("{:.1}", fit.mu),
+            format!("{:.3}", fit.ks_statistic(samples)),
+            format!("{:.3}", trimmed.ks_statistic(keep)),
+        ]);
+    }
+    table.print();
+    println!(
+        "(paper Fig. 8: RPi/WiFi latencies fit shift-exponential well; on this \
+         virtualized host the spike tail inflates the raw KS — the 5%-trimmed \
+         column shows the bulk fit)"
+    );
+    Ok(())
+}
+
+// ====================================================================
+// Fig. 4: per-layer latency stacks, CoCoI vs uncoded, scenario-1 λ=0.5.
+// ====================================================================
+pub fn fig4(scale: Scale) -> Result<()> {
+    for name in ["vgg16", "resnet18"] {
+        let base = model_profile(name)?;
+        let model = zoo::model(name)?;
+        let mut rng = Rng::new(0xF16_4);
+        let scenario = Scenario::Straggling { lambda_tr: 0.5 };
+        let coc = simulate_model(
+            &model,
+            &base,
+            10,
+            MethodSim::CocoiKCirc,
+            scenario,
+            scale.trials,
+            &mut rng,
+        )?;
+        let unc = simulate_model(
+            &model,
+            &base,
+            10,
+            MethodSim::Uncoded,
+            scenario,
+            scale.trials,
+            &mut rng,
+        )?;
+        let mut table = Table::new(
+            &format!("Fig. 4 — {name}: per-layer latency, scenario-1 λ=0.5 (n=10)"),
+            &[
+                "layer",
+                "k0",
+                "enc+dec",
+                "workers",
+                "cocoi total",
+                "uncoded",
+                "coding %",
+            ],
+        );
+        let mut coding_shares = Vec::new();
+        for (i, (id, b)) in coc.per_layer.iter().enumerate() {
+            let coding = b.enc + b.dec;
+            let total = coding + b.workers;
+            let u = unc.per_layer.get(i).map(|(_, x)| x.workers).unwrap_or(0.0);
+            let share = 100.0 * coding / total;
+            coding_shares.push(share);
+            table.row(vec![
+                id.clone(),
+                format!("{}", coc.k_per_layer[i].1),
+                fmt_secs(coding),
+                fmt_secs(b.workers),
+                fmt_secs(total),
+                fmt_secs(u),
+                format!("{share:.1}%"),
+            ]);
+        }
+        table.print();
+        let lo = coding_shares.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = coding_shares.iter().cloned().fold(0.0, f64::max);
+        println!(
+            "encode/decode share per layer: {lo:.1}%–{hi:.1}% (paper: 2%–9%); \
+             CoCoI total {} vs uncoded {}",
+            fmt_secs(coc.mean()),
+            fmt_secs(unc.mean())
+        );
+    }
+    Ok(())
+}
+
+// ====================================================================
+// Table I: k* vs k° statistics under scenario-1.
+// ====================================================================
+pub fn table1(scale: Scale) -> Result<()> {
+    let lambdas = [0.2, 0.4, 0.6, 0.8, 1.0];
+    for name in ["vgg16", "resnet18"] {
+        let base = model_profile(name)?;
+        let model = zoo::model(name)?;
+        let mut table = Table::new(
+            &format!("Table I — {name}: k* vs k° under scenario-1 (n=10)"),
+            &[
+                "lambda_tr",
+                "max|k*-k0|",
+                "avg|k*-k0|",
+                "sum t(k0)-t(k*) (s)",
+            ],
+        );
+        for &lambda in &lambdas {
+            let p = scenario1_profile(&base, lambda);
+            let mut rng = Rng::new(0x7AB1E1 ^ (lambda * 10.0) as u64);
+            let plan = ModelPlan::build(&model, &p, 10, SplitPolicy::KCircle, &mut rng)?;
+            let mut max_gap = 0usize;
+            let mut sum_gap = 0usize;
+            let mut latency_gap = 0.0;
+            let mut n_layers = 0usize;
+            for c in plan.convs.iter().filter(|c| c.distributed) {
+                let k_circ = solve_k_circ(&c.dims, &p, 10).k;
+                let (k_star, est) =
+                    montecarlo::optimal_k_star(&c.dims, &p, 10, scale.mc_samples, &mut rng);
+                let gap = k_star.abs_diff(k_circ);
+                max_gap = max_gap.max(gap);
+                sum_gap += gap;
+                // t° − t*: extra expected latency from using k° instead of k*.
+                let t_star = est[k_star - 1];
+                let t_circ = est[(k_circ - 1).min(est.len() - 1)];
+                latency_gap += (t_circ - t_star).max(0.0);
+                n_layers += 1;
+            }
+            table.row(vec![
+                format!("{lambda}"),
+                format!("{max_gap}"),
+                format!("{:.2}", sum_gap as f64 / n_layers.max(1) as f64),
+                format!("{latency_gap:.2}"),
+            ]);
+        }
+        table.print();
+    }
+    println!("(paper: max gap 1, avg ~0.3–0.5, latency gap ≤ 1.3 s)");
+    Ok(())
+}
+
+// ====================================================================
+// Fig. 5: end-to-end latency vs λ_tr (scenario-1), all methods.
+// ====================================================================
+pub fn fig5(scale: Scale) -> Result<()> {
+    for name in ["vgg16", "resnet18"] {
+        let base = model_profile(name)?;
+        let model = zoo::model(name)?;
+        let mut table = Table::new(
+            &format!("Fig. 5 — {name}: inference latency vs λ_tr (scenario-1, n=10)"),
+            &["method", "0.0", "0.2", "0.4", "0.6", "0.8", "1.0"],
+        );
+        let lambdas = [0.0, 0.2, 0.4, 0.6, 0.8, 1.0];
+        let mut means = std::collections::BTreeMap::new();
+        for method in METHODS {
+            let mut cells = vec![method.label().to_string()];
+            for &lambda in &lambdas {
+                let mut rng = Rng::new(0xF165 ^ (lambda * 100.0) as u64);
+                let r = simulate_model(
+                    &model,
+                    &base,
+                    10,
+                    method,
+                    Scenario::Straggling { lambda_tr: lambda },
+                    scale.trials,
+                    &mut rng,
+                )?;
+                means.insert((method.label(), (lambda * 10.0) as i64), r.mean());
+                cells.push(fmt_secs(r.mean()));
+            }
+            table.row(cells);
+        }
+        table.print();
+        let unc = means[&("uncoded", 10)];
+        let coc = means[&("cocoi-k0", 10)];
+        println!(
+            "reduction vs uncoded at λ=1.0: {:.1}% (paper: up to 20.2%)",
+            100.0 * (1.0 - coc / unc)
+        );
+    }
+    Ok(())
+}
+
+// ====================================================================
+// Fig. 6: scenarios 2 and 3 (failures, + chronic straggler).
+// ====================================================================
+pub fn fig6(scale: Scale) -> Result<()> {
+    for name in ["vgg16", "resnet18"] {
+        let base = model_profile(name)?;
+        let model = zoo::model(name)?;
+        let scenarios: [(&str, fn(usize) -> Scenario); 2] = [
+            ("scenario-2", |n_f| Scenario::Failures { n_f }),
+            ("scenario-3", |n_f| Scenario::FailuresPlusStraggler {
+                n_f,
+                slowdown: 1.68,
+            }),
+        ];
+        for (scen_name, make) in scenarios {
+            let mut table = Table::new(
+                &format!("Fig. 6 — {name}: latency under {scen_name} (n=10)"),
+                &["method", "n_f=0", "n_f=1", "n_f=2"],
+            );
+            let mut means = std::collections::BTreeMap::new();
+            for method in METHODS {
+                let mut cells = vec![method.label().to_string()];
+                for n_f in 0..=2usize {
+                    let mut rng = Rng::new(0xF166 ^ n_f as u64);
+                    let r = simulate_model(
+                        &model,
+                        &base,
+                        10,
+                        method,
+                        make(n_f),
+                        scale.trials,
+                        &mut rng,
+                    )?;
+                    means.insert((method.label(), n_f), (r.mean(), r.std()));
+                    cells.push(format!("{}±{}", fmt_secs(r.mean()), fmt_secs(r.std())));
+                }
+                table.row(cells);
+            }
+            table.print();
+            let (u0, _) = means[&("uncoded", 0)];
+            let (u2, _) = means[&("uncoded", 2)];
+            let (c2, _) = means[&("cocoi-k0", 2)];
+            println!(
+                "uncoded degradation n_f 0→2: +{:.1}% (paper: 68.3–79.2%); \
+                 CoCoI vs uncoded at n_f=2: −{:.1}% (paper: up to 34.2% s2 / 26.5% s3)",
+                100.0 * (u2 / u0 - 1.0),
+                100.0 * (1.0 - c2 / u2)
+            );
+        }
+    }
+    Ok(())
+}
+
+// ====================================================================
+// Fig. 9: (a) |k*−k°| over (μ_tr, μ_cmp); (b) actual vs approx E[T(k)].
+// ====================================================================
+pub fn fig9(scale: Scale) -> Result<()> {
+    let dims = LayerDims::new(crate::conv::ConvSpec::new(128, 128, 3, 1, 1), 112, 112);
+    let n = 20;
+    let mut rng = Rng::new(0xF169);
+
+    // (a) grid heatmap.
+    let logspace = |lo: f64, hi: f64, steps: usize| -> Vec<f64> {
+        (0..steps)
+            .map(|i| lo * (hi / lo).powf(i as f64 / (steps - 1).max(1) as f64))
+            .collect()
+    };
+    let mut header = vec!["mu_tr\\mu_cmp".to_string()];
+    for &mu in &logspace(1e6, 1e10, scale.grid) {
+        header.push(format!("{mu:.0e}"));
+    }
+    let mut table = Table::new_owned(
+        "Fig. 9a — |k* − k°| over (μ_tr rows ↓, μ_cmp cols →), n=20",
+        header,
+    );
+    let mut worst = 0usize;
+    for &mu_tr in &logspace(1e6, 1e10, scale.grid) {
+        let mut cells = vec![format!("{mu_tr:.0e}")];
+        for &mu_cmp in &logspace(1e6, 1e10, scale.grid) {
+            let mut p = SystemProfile::paper_default();
+            p.mu_rec = mu_tr;
+            p.mu_sen = mu_tr;
+            p.mu_cmp = mu_cmp;
+            let k_circ = solve_k_circ(&dims, &p, n).k;
+            let (k_star, _) =
+                montecarlo::optimal_k_star(&dims, &p, n, scale.mc_samples / 4, &mut rng);
+            let gap = k_star.abs_diff(k_circ);
+            worst = worst.max(gap);
+            cells.push(format!("{gap}"));
+        }
+        table.row(cells);
+    }
+    table.print();
+    println!("worst gap on grid: {worst} (paper Fig. 9a: ≈0 in the strong-straggling region)");
+
+    // (b) actual (MC) vs approx L(k) curve at μ_tr=1e7, μ_cmp=1e8.
+    let mut p = SystemProfile::paper_default();
+    p.mu_rec = 1e7;
+    p.mu_sen = 1e7;
+    p.mu_cmp = 1e8;
+    let mut table = Table::new(
+        "Fig. 9b — E[T(k)]: actual (MC) vs approx L(k), n=20, μ_tr=1e7 μ_cmp=1e8",
+        &["k", "actual", "approx", "rel err"],
+    );
+    let mut max_rel: f64 = 0.0;
+    for k in (1..n).step_by(2) {
+        let actual =
+            montecarlo::expected_total_latency(&dims, &p, n, k, scale.mc_samples / 2, &mut rng);
+        let approx = l_integer(&dims, &p, n, k);
+        let rel = (actual - approx).abs() / actual;
+        max_rel = max_rel.max(rel);
+        table.row(vec![
+            format!("{k}"),
+            fmt_secs(actual),
+            fmt_secs(approx),
+            format!("{:.1}%", rel * 100.0),
+        ]);
+    }
+    table.print();
+    println!("max relative gap {:.1}% (paper: 'negligible')", max_rel * 100.0);
+    Ok(())
+}
+
+// ====================================================================
+// Fig. 10: impact of μ/θ on the optimal k (actual MC vs approx).
+// ====================================================================
+pub fn fig10(scale: Scale) -> Result<()> {
+    let dims = LayerDims::new(crate::conv::ConvSpec::new(128, 128, 3, 1, 1), 112, 112);
+    let base = SystemProfile::paper_default();
+    let mut rng = Rng::new(0xF170);
+    let sweeps: [(&str, Param, Vec<f64>); 4] = [
+        (
+            "mu_cmp",
+            Param::MuCmp,
+            vec![1e7, 1e8, 1e9, 1e10],
+        ),
+        (
+            "theta_cmp",
+            Param::ThetaCmp,
+            vec![1e-10, 1e-9, 1e-8, 1e-7],
+        ),
+        ("mu_tr", Param::MuTr, vec![1e6, 1e7, 1e8, 1e9]),
+        (
+            "theta_tr",
+            Param::ThetaTr,
+            vec![1e-9, 1e-8, 1e-7, 1e-6],
+        ),
+    ];
+    for (name, param, values) in sweeps {
+        let mut table = Table::new(
+            &format!("Fig. 10 — optimal k vs {name} (n=10 and n=20)"),
+            &["value", "k* n=10", "k0 n=10", "k* n=20", "k0 n=20"],
+        );
+        for &v in &values {
+            let p = param.apply(&base, v);
+            let mut cells = vec![format!("{v:.0e}")];
+            for n in [10usize, 20] {
+                let (k_star, _) =
+                    montecarlo::optimal_k_star(&dims, &p, n, scale.mc_samples / 4, &mut rng);
+                let k_circ = solve_k_circ(&dims, &p, n).k;
+                cells.push(format!("{k_star}"));
+                cells.push(format!("{k_circ}"));
+            }
+            // reorder: k* n10, k0 n10, k* n20, k0 n20 already in order
+            table.row(cells);
+        }
+        table.print();
+    }
+    println!(
+        "(Prop. 1: k increases in worker μ and θ; larger n ⇒ larger k. \
+         The k* and k° columns should move together.)"
+    );
+    Ok(())
+}
+
+// ====================================================================
+// §IV-C theory check: Prop. 2's ~21% at n=20, R=1 + margins.
+// ====================================================================
+pub fn theory() -> Result<()> {
+    use crate::latency::approx::{
+        coded_margin_expectation, prop2_k_sub, uncoded_margin_expectation, TheoryConsts,
+    };
+    let dims = LayerDims::new(crate::conv::ConvSpec::new(128, 128, 3, 1, 1), 112, 112);
+    let c = TheoryConsts::new(&dims);
+    let mut table = Table::new(
+        "Props. 2–3 — theoretical coded-vs-uncoded margin",
+        &["n", "R", "k_sub*", "E[Tc]", "E[Tu]", "reduction"],
+    );
+    for n in [10usize, 15, 20] {
+        for r_target in [0.5, 1.0] {
+            let mut p = SystemProfile::paper_default();
+            let ratio = r_target * c.h3(&p) / c.h2(&p);
+            p.theta_rec *= ratio;
+            p.theta_sen *= ratio;
+            p.theta_cmp *= ratio;
+            let k_sub = prop2_k_sub(n);
+            let coded = coded_margin_expectation(&c, &p, n, k_sub);
+            let uncoded = uncoded_margin_expectation(&c, &p, n);
+            table.row(vec![
+                format!("{n}"),
+                format!("{r_target}"),
+                format!("{k_sub:.2}"),
+                fmt_secs(coded),
+                fmt_secs(uncoded),
+                format!("{:.1}%", 100.0 * (1.0 - coded / uncoded)),
+            ]);
+        }
+    }
+    table.print();
+    println!("(paper §IV-C: n=20, R=1 ⇒ ≈21% reduction)");
+    Ok(())
+}

@@ -1,0 +1,140 @@
+//! Tiny bench harness (no criterion in the offline vendor set): warmup +
+//! timed iterations with mean/σ/min, plus an aligned-table printer used by
+//! every experiment driver.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Measure a closure: `warmup` untimed runs, then `iters` timed runs.
+pub struct BenchTimer {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchTimer {
+    fn default() -> Self {
+        BenchTimer {
+            warmup: 2,
+            iters: 10,
+        }
+    }
+}
+
+impl BenchTimer {
+    pub fn new(warmup: usize, iters: usize) -> BenchTimer {
+        BenchTimer { warmup, iters }
+    }
+
+    /// Returns per-iteration seconds.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Summary {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut s = Summary::new();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            s.push(t0.elapsed().as_secs_f64());
+        }
+        s
+    }
+
+    /// Report line in a criterion-ish format.
+    pub fn report(&self, name: &str, s: &Summary) {
+        println!(
+            "{name:<44} {:>10.3} ms ± {:>8.3} (min {:.3}, n={})",
+            s.mean() * 1e3,
+            s.std() * 1e3,
+            s.min() * 1e3,
+            s.len()
+        );
+    }
+}
+
+/// Aligned text table (the "same rows the paper reports" printer).
+pub struct Table {
+    pub title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn new_owned(title: &str, header: Vec<String>) -> Table {
+        Table {
+            title: title.to_string(),
+            header,
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        println!("\n=== {} ===", self.title);
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.header));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+/// Format seconds with adaptive precision.
+pub fn fmt_secs(t: f64) -> String {
+    if t >= 100.0 {
+        format!("{t:.0}s")
+    } else if t >= 1.0 {
+        format!("{t:.1}s")
+    } else {
+        format!("{:.1}ms", t * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_counts_iters() {
+        let mut count = 0;
+        let s = BenchTimer::new(1, 5).run(|| count += 1);
+        assert_eq!(count, 6);
+        assert_eq!(s.len(), 5);
+        assert!(s.mean() >= 0.0);
+    }
+
+    #[test]
+    fn table_formats() {
+        let mut t = Table::new("demo", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print(); // smoke: no panic
+        assert_eq!(fmt_secs(0.0123), "12.3ms");
+        assert_eq!(fmt_secs(12.3), "12.3s");
+    }
+}

@@ -1,0 +1,7 @@
+//! Shared experiment drivers: the code behind both `cargo bench` targets
+//! (one per paper table/figure) and the `cocoi experiment` CLI.
+
+pub mod harness;
+pub mod experiments;
+
+pub use harness::{BenchTimer, Table};

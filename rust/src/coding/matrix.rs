@@ -1,0 +1,344 @@
+//! Dense matrix substrate for the coding layer.
+//!
+//! Small, row-major `f64` matrices: Vandermonde construction, partial-pivot
+//! LU inversion (for the `k×k` decode submatrix `G_S`, eq. 4), and blocked
+//! application of coefficient matrices to wide `f32` data rows (the actual
+//! encode/decode hot loop — coefficients in f64, data in f32, accumulation
+//! in f64 for decode stability).
+
+use anyhow::{bail, Result};
+
+/// Row-major dense f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn identity(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Matrix {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
+        Matrix {
+            rows: r,
+            cols: c,
+            data: rows.concat(),
+        }
+    }
+
+    /// Vandermonde matrix over the given evaluation nodes:
+    /// row `i` = `[g_i^(k-1), g_i^(k-2), ..., g_i^0]` (paper eq. 3 layout).
+    pub fn vandermonde(nodes: &[f64], k: usize) -> Matrix {
+        let mut m = Matrix::zeros(nodes.len(), k);
+        for (i, &g) in nodes.iter().enumerate() {
+            let mut p = 1.0;
+            // Fill right-to-left: last column is g^0.
+            for j in (0..k).rev() {
+                m[(i, j)] = p;
+                p *= g;
+            }
+        }
+        m
+    }
+
+    /// Select a subset of rows (decode submatrix `G_S`).
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut m = Matrix::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            assert!(i < self.rows, "row index out of range");
+            m.data[r * self.cols..(r + 1) * self.cols]
+                .copy_from_slice(&self.data[i * self.cols..(i + 1) * self.cols]);
+        }
+        m
+    }
+
+    /// Plain matmul (small matrices only; the wide data path uses
+    /// [`apply_f32`]).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for l in 0..self.cols {
+                let a = self[(i, l)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] += a * other[(l, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Inverse via LU with partial pivoting. Errors on (near-)singular
+    /// input — the MDS property guarantees this never fires for valid
+    /// Vandermonde submatrices with distinct nodes.
+    pub fn inverse(&self) -> Result<Matrix> {
+        if self.rows != self.cols {
+            bail!("inverse of non-square {}x{}", self.rows, self.cols);
+        }
+        let n = self.rows;
+        // Augmented [A | I] Gauss-Jordan with partial pivoting.
+        let mut a = self.clone();
+        let mut inv = Matrix::identity(n);
+        for col in 0..n {
+            // Pivot: largest |a[r][col]| for r >= col.
+            let (pivot_row, pivot_val) = (col..n)
+                .map(|r| (r, a[(r, col)].abs()))
+                .max_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
+                .unwrap();
+            if pivot_val < 1e-12 {
+                bail!("matrix is singular (pivot {pivot_val:.3e} at column {col})");
+            }
+            if pivot_row != col {
+                a.swap_rows(pivot_row, col);
+                inv.swap_rows(pivot_row, col);
+            }
+            let p = a[(col, col)];
+            for j in 0..n {
+                a[(col, j)] /= p;
+                inv[(col, j)] /= p;
+            }
+            for r in 0..n {
+                if r == col {
+                    continue;
+                }
+                let f = a[(r, col)];
+                if f == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    a[(r, j)] -= f * a[(col, j)];
+                    inv[(r, j)] -= f * inv[(col, j)];
+                }
+            }
+        }
+        Ok(inv)
+    }
+
+    fn swap_rows(&mut self, r0: usize, r1: usize) {
+        if r0 == r1 {
+            return;
+        }
+        for j in 0..self.cols {
+            self.data.swap(r0 * self.cols + j, r1 * self.cols + j);
+        }
+    }
+
+    /// Max |a_ij| — used in conditioning sanity tests.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, &x| m.max(x.abs()))
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+/// Fast variant of [`apply_f32`]: f32 accumulation (axpy), ~2× faster on
+/// this core. Safe for the **encode** direction, where coefficients are
+/// Vandermonde powers in `[-1, 1]` and `k ≤ ~20` terms keep the rounding
+/// at ~1e-6 relative; the **decode** direction must stay in f64
+/// ([`apply_f32`]) because inverse-Vandermonde coefficients are large and
+/// alternating. §Perf in EXPERIMENTS.md has the before/after.
+pub fn apply_f32_fast(coeff: &Matrix, rows: &[&[f32]]) -> Vec<Vec<f32>> {
+    assert_eq!(coeff.cols, rows.len(), "coeff cols != row count");
+    let width = rows.first().map(|r| r.len()).unwrap_or(0);
+    assert!(rows.iter().all(|r| r.len() == width), "ragged data rows");
+    let mut out: Vec<Vec<f32>> = Vec::with_capacity(coeff.rows);
+    for i in 0..coeff.rows {
+        // First non-zero term writes (no zero-init read-modify pass)...
+        let first = (0..rows.len()).find(|&j| coeff[(i, j)] != 0.0);
+        let mut out_row = match first {
+            None => vec![0f32; width],
+            Some(j0) => {
+                let c = coeff[(i, j0)] as f32;
+                rows[j0].iter().map(|&x| c * x).collect()
+            }
+        };
+        // ...remaining terms accumulate (axpy).
+        if let Some(j0) = first {
+            for (j, row) in rows.iter().enumerate().skip(j0 + 1) {
+                let c = coeff[(i, j)] as f32;
+                if c == 0.0 {
+                    continue;
+                }
+                for (o, &x) in out_row.iter_mut().zip(*row) {
+                    *o += c * x;
+                }
+            }
+        }
+        out.push(out_row);
+    }
+    out
+}
+
+/// Apply a `p×k` coefficient matrix to `k` wide f32 data rows, producing
+/// `p` output rows of the same width. This is the encode/decode hot loop:
+/// `out[i] = sum_j coeff[i][j] * rows[j]`, accumulated in f64.
+///
+/// Blocked over the width so each pass stays in cache; the coefficient
+/// loop is innermost-hoisted (axpy style) so the compiler can vectorize.
+pub fn apply_f32(coeff: &Matrix, rows: &[&[f32]]) -> Vec<Vec<f32>> {
+    assert_eq!(coeff.cols, rows.len(), "coeff cols != row count");
+    let width = rows.first().map(|r| r.len()).unwrap_or(0);
+    assert!(rows.iter().all(|r| r.len() == width), "ragged data rows");
+
+    const BLOCK: usize = 4096;
+    let mut out = vec![vec![0f32; width]; coeff.rows];
+    let mut acc = vec![0f64; BLOCK.min(width.max(1))];
+    for start in (0..width).step_by(BLOCK) {
+        let end = (start + BLOCK).min(width);
+        let len = end - start;
+        for i in 0..coeff.rows {
+            let acc = &mut acc[..len];
+            acc.fill(0.0);
+            for (j, row) in rows.iter().enumerate() {
+                let c = coeff[(i, j)];
+                if c == 0.0 {
+                    continue;
+                }
+                let src = &row[start..end];
+                for (a, &x) in acc.iter_mut().zip(src) {
+                    *a += c * x as f64;
+                }
+            }
+            let dst = &mut out[i][start..end];
+            for (d, &a) in dst.iter_mut().zip(acc.iter()) {
+                *d = a as f32;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    #[test]
+    fn vandermonde_layout() {
+        let m = Matrix::vandermonde(&[2.0, 3.0], 3);
+        // row = [g^2, g^1, g^0]
+        assert_eq!(m.data, vec![4.0, 2.0, 1.0, 9.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn identity_inverse() {
+        let i = Matrix::identity(4);
+        assert_eq!(i.inverse().unwrap(), i);
+    }
+
+    #[test]
+    fn inverse_times_self_is_identity() {
+        let mut rng = Rng::new(99);
+        for n in [1usize, 2, 3, 5, 8] {
+            let mut m = Matrix::zeros(n, n);
+            for v in m.data.iter_mut() {
+                *v = rng.uniform_range(-1.0, 1.0);
+            }
+            // Diagonal dominance to guarantee invertibility.
+            for i in 0..n {
+                m[(i, i)] += n as f64;
+            }
+            let inv = m.inverse().unwrap();
+            let prod = m.matmul(&inv);
+            for i in 0..n {
+                for j in 0..n {
+                    let expect = if i == j { 1.0 } else { 0.0 };
+                    assert!(
+                        (prod[(i, j)] - expect).abs() < 1e-9,
+                        "prod[{i}][{j}]={}",
+                        prod[(i, j)]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn singular_rejected() {
+        let m = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(m.inverse().is_err());
+    }
+
+    #[test]
+    fn apply_f32_matches_naive() {
+        prop::check("apply_f32 == naive", 32, |rng| {
+            let k = 1 + rng.below(5);
+            let p = 1 + rng.below(5);
+            let w = 1 + rng.below(9000); // crosses the 4096 block boundary
+            let mut coeff = Matrix::zeros(p, k);
+            for v in coeff.data.iter_mut() {
+                *v = rng.uniform_range(-2.0, 2.0);
+            }
+            let rows: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..w).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect())
+                .collect();
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let out = apply_f32(&coeff, &refs);
+            for i in 0..p {
+                for x in 0..w.min(64) {
+                    let naive: f64 = (0..k).map(|j| coeff[(i, j)] * rows[j][x] as f64).sum();
+                    assert!(
+                        (out[i][x] as f64 - naive).abs() < 1e-4,
+                        "mismatch at ({i},{x})"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn vandermonde_submatrix_invertible_for_spread_nodes() {
+        // The node layout used by MdsCode: evenly spaced in [-1, 1].
+        let n = 10;
+        let k = 7;
+        let nodes: Vec<f64> = (0..n)
+            .map(|i| -1.0 + 2.0 * i as f64 / (n - 1) as f64)
+            .collect();
+        let g = Matrix::vandermonde(&nodes, k);
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let idx = rng.sample_distinct(n, k);
+            let gs = g.select_rows(&idx);
+            let inv = gs.inverse().expect("every k-row submatrix invertible");
+            let prod = gs.matmul(&inv);
+            for i in 0..k {
+                assert!((prod[(i, i)] - 1.0).abs() < 1e-6);
+            }
+        }
+    }
+}

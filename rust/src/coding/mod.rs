@@ -1,0 +1,155 @@
+//! Redundancy schemes: MDS (the CoCoI code), LT (App. G), replication,
+//! and uncoded — all behind one [`RedundancyScheme`] interface so the
+//! coordinator pipeline and the simulator treat them uniformly.
+//!
+//! All schemes operate on *flattened* partitions (`Vec<f32>` rows): the
+//! conv layer is linear in its input, so any linear combination of input
+//! partitions convolves to the same linear combination of output
+//! partitions — that is the property every scheme here exploits (and why
+//! the distributed subtask is the *pure* convolution: bias/activation are
+//! applied by the master after decode).
+
+pub mod lt;
+pub mod matrix;
+pub mod mds;
+pub mod replication;
+pub mod uncoded;
+
+pub use lt::LtCode;
+pub use mds::MdsCode;
+pub use replication::Replication;
+pub use uncoded::Uncoded;
+
+/// One encoded subtask produced by a scheme's `encode`.
+#[derive(Clone, Debug)]
+pub struct EncodedTask {
+    /// Scheme-local task id in `[0, num_subtasks)`.
+    pub id: usize,
+    /// Flattened encoded input partition.
+    pub payload: Vec<f32>,
+}
+
+/// Incremental decoder for one coded computation round.
+///
+/// The master feeds completed subtask outputs via [`Decoder::add`]; once it
+/// returns `true`, [`Decoder::decode`] recovers the `k` source outputs.
+pub trait Decoder: Send {
+    /// Feed the output of subtask `id`. Returns `true` once the source
+    /// outputs are recoverable.
+    fn add(&mut self, id: usize, output: Vec<f32>) -> bool;
+
+    /// Whether enough outputs have been gathered.
+    fn ready(&self) -> bool;
+
+    /// Recover the `k` source outputs, in source order. Panics or errors if
+    /// `!ready()`.
+    fn decode(&mut self) -> anyhow::Result<Vec<Vec<f32>>>;
+
+    /// FLOP count of the decode step (for the latency model / metrics).
+    fn decode_flops(&self, output_len: usize) -> f64;
+}
+
+/// A redundancy scheme: how `k` source partitions become `num_subtasks`
+/// dispatched payloads, and how outputs decode back.
+pub trait RedundancyScheme: Send + Sync {
+    /// Short name used in tables ("mds", "uncoded", "rep2", "lt").
+    fn name(&self) -> String;
+
+    /// Number of source partitions `k` the input must be split into.
+    fn source_count(&self) -> usize;
+
+    /// Number of subtasks dispatched to workers.
+    fn num_subtasks(&self) -> usize;
+
+    /// Minimum number of completed subtasks that can possibly decode
+    /// (used by the scheduler to size its first wait).
+    fn min_completions(&self) -> usize;
+
+    /// Encode `k` flattened source partitions into subtask payloads.
+    /// All sources must have equal length.
+    fn encode(&self, sources: &[Vec<f32>]) -> Vec<EncodedTask>;
+
+    /// After subtask `task_id` failed: must the master re-dispatch it for
+    /// the round to stay completable? `received` are task ids already
+    /// delivered, `outstanding` are dispatched-and-alive task ids
+    /// (excluding the failed one).
+    ///
+    /// Default (coded schemes): re-dispatch only when the pool of
+    /// received + outstanding can no longer reach `min_completions`.
+    fn needs_redispatch(
+        &self,
+        _task_id: usize,
+        received: &[usize],
+        outstanding: &[usize],
+    ) -> bool {
+        received.len() + outstanding.len() < self.min_completions()
+    }
+
+    /// FLOP count of the encode step (eq. 8 for MDS).
+    fn encode_flops(&self, input_len: usize) -> f64;
+
+    /// Fresh decoder for one round.
+    fn decoder(&self) -> Box<dyn Decoder>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    /// Every scheme must satisfy: encoding k random sources, completing a
+    /// random sufficient subset of subtasks through a *linear* map, then
+    /// decoding, recovers the mapped sources. The linear map stands in for
+    /// the convolution.
+    fn roundtrip_property(scheme: &dyn RedundancyScheme, rng: &mut Rng) {
+        let k = scheme.source_count();
+        let len = 1 + rng.below(64);
+        let sources: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..len).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect())
+            .collect();
+        let tasks = scheme.encode(&sources);
+        assert_eq!(tasks.len(), scheme.num_subtasks());
+
+        // Linear "computation": y = 2x (element-wise), keeps lengths equal.
+        let mut decoder = scheme.decoder();
+        let mut order: Vec<usize> = (0..tasks.len()).collect();
+        rng.shuffle(&mut order);
+        let mut done = false;
+        for &t in &order {
+            let out: Vec<f32> = tasks[t].payload.iter().map(|x| 2.0 * x).collect();
+            if decoder.add(tasks[t].id, out) {
+                done = true;
+                break;
+            }
+        }
+        assert!(done, "scheme {} never became decodable", scheme.name());
+        let decoded = decoder.decode().unwrap();
+        assert_eq!(decoded.len(), k);
+        for (d, s) in decoded.iter().zip(&sources) {
+            for (a, b) in d.iter().zip(s.iter()) {
+                assert!(
+                    (a - 2.0 * b).abs() < 1e-3,
+                    "scheme {} decode mismatch: {a} vs {}",
+                    scheme.name(),
+                    2.0 * b
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_schemes_roundtrip() {
+        prop::check("scheme roundtrips", 48, |rng| {
+            let n = 4 + rng.below(7); // 4..=10
+            let k = 1 + rng.below(n); // 1..=n
+            roundtrip_property(&MdsCode::new(n, k), rng);
+            roundtrip_property(&Uncoded::new(n), rng);
+            if n >= 2 {
+                roundtrip_property(&Replication::new(n), rng);
+            }
+            let kl = 1 + rng.below(2 * n);
+            roundtrip_property(&LtCode::new(n, kl, rng.next_u64()), rng);
+        });
+    }
+}

@@ -1,0 +1,153 @@
+//! Replication baseline (paper §V, "Replication" [15]).
+//!
+//! The task splits into `k = ⌊n/2⌋` pieces, each dispatched to two workers
+//! (the last piece gets a third copy when `n` is odd so every worker is
+//! used). The master takes the first copy of each piece — tolerant to one
+//! failure per replica pair, at 2× compute redundancy.
+
+use super::{Decoder, EncodedTask, RedundancyScheme};
+
+/// 2× replication scheme.
+#[derive(Clone, Debug)]
+pub struct Replication {
+    n: usize,
+    k: usize,
+}
+
+impl Replication {
+    pub fn new(n: usize) -> Replication {
+        assert!(n >= 2, "replication needs at least 2 workers");
+        Replication { n, k: n / 2 }
+    }
+
+    /// Source index computed from a subtask id: round-robin over sources.
+    pub fn source_of(&self, task_id: usize) -> usize {
+        task_id % self.k
+    }
+}
+
+impl RedundancyScheme for Replication {
+    fn name(&self) -> String {
+        format!("rep2({})", self.n)
+    }
+
+    fn source_count(&self) -> usize {
+        self.k
+    }
+
+    fn num_subtasks(&self) -> usize {
+        self.n
+    }
+
+    fn min_completions(&self) -> usize {
+        self.k
+    }
+
+    fn encode(&self, sources: &[Vec<f32>]) -> Vec<EncodedTask> {
+        assert_eq!(sources.len(), self.k);
+        (0..self.n)
+            .map(|id| EncodedTask {
+                id,
+                payload: sources[self.source_of(id)].clone(),
+            })
+            .collect()
+    }
+
+    fn encode_flops(&self, _input_len: usize) -> f64 {
+        0.0 // replication copies; no arithmetic
+    }
+
+    /// Re-dispatch only when the failed task's *source* has no received
+    /// copy and no alive outstanding replica.
+    fn needs_redispatch(
+        &self,
+        task_id: usize,
+        received: &[usize],
+        outstanding: &[usize],
+    ) -> bool {
+        let src = self.source_of(task_id);
+        let covered = received.iter().any(|&t| self.source_of(t) == src)
+            || outstanding.iter().any(|&t| self.source_of(t) == src);
+        !covered
+    }
+
+    fn decoder(&self) -> Box<dyn Decoder> {
+        Box::new(ReplicationDecoder {
+            k: self.k,
+            outputs: vec![None; self.k],
+            got: 0,
+        })
+    }
+}
+
+struct ReplicationDecoder {
+    k: usize,
+    outputs: Vec<Option<Vec<f32>>>,
+    got: usize,
+}
+
+impl Decoder for ReplicationDecoder {
+    fn add(&mut self, id: usize, output: Vec<f32>) -> bool {
+        let src = id % self.k;
+        if self.outputs[src].is_none() {
+            self.outputs[src] = Some(output);
+            self.got += 1;
+        }
+        self.ready()
+    }
+
+    fn ready(&self) -> bool {
+        self.got == self.k
+    }
+
+    fn decode(&mut self) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(self.ready(), "replication decoder is missing pieces");
+        Ok(self.outputs.iter_mut().map(|o| o.take().unwrap()).collect())
+    }
+
+    fn decode_flops(&self, _output_len: usize) -> f64 {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pairs_cover_all_sources() {
+        for n in 2..=11 {
+            let s = Replication::new(n);
+            let mut cover = vec![0usize; s.source_count()];
+            for id in 0..s.num_subtasks() {
+                cover[s.source_of(id)] += 1;
+            }
+            assert!(cover.iter().all(|&c| c >= 2), "n={n}: {cover:?}");
+        }
+    }
+
+    #[test]
+    fn one_copy_per_source_suffices() {
+        let s = Replication::new(6); // k = 3
+        let sources = vec![vec![1.0f32], vec![2.0], vec![3.0]];
+        let tasks = s.encode(&sources);
+        let mut d = s.decoder();
+        // Feed only replica ids 3, 4, 5 (the second copies).
+        assert!(!d.add(tasks[3].id, tasks[3].payload.clone()));
+        assert!(!d.add(tasks[4].id, tasks[4].payload.clone()));
+        assert!(d.add(tasks[5].id, tasks[5].payload.clone()));
+        assert_eq!(d.decode().unwrap(), sources);
+    }
+
+    #[test]
+    fn survives_one_failure_per_pair() {
+        let s = Replication::new(4); // k = 2, pairs {0,2},{1,3}
+        let sources = vec![vec![5.0f32], vec![7.0]];
+        let tasks = s.encode(&sources);
+        let mut d = s.decoder();
+        // Workers 2 and 1 "fail": first copies arrive from 0 and 3.
+        assert!(!d.add(tasks[0].id, tasks[0].payload.clone()));
+        assert!(d.add(tasks[3].id, tasks[3].payload.clone()));
+        assert_eq!(d.decode().unwrap(), sources);
+    }
+}

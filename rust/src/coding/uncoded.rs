@@ -1,0 +1,117 @@
+//! Uncoded baseline (paper §V, benchmark "Uncoded" [8]).
+//!
+//! The input splits into `n` pieces, one per worker, no redundancy; the
+//! master needs *all* `n` outputs. Device failures are handled above this
+//! layer by the coordinator's re-dispatch path (the paper's "re-assign to
+//! another worker" rule) — the scheme itself cannot tolerate any loss.
+
+use super::{Decoder, EncodedTask, RedundancyScheme};
+
+/// No-redundancy scheme: `k = n`, identity "code".
+#[derive(Clone, Debug)]
+pub struct Uncoded {
+    n: usize,
+}
+
+impl Uncoded {
+    pub fn new(n: usize) -> Uncoded {
+        assert!(n >= 1);
+        Uncoded { n }
+    }
+}
+
+impl RedundancyScheme for Uncoded {
+    fn name(&self) -> String {
+        format!("uncoded({})", self.n)
+    }
+
+    fn source_count(&self) -> usize {
+        self.n
+    }
+
+    fn num_subtasks(&self) -> usize {
+        self.n
+    }
+
+    fn min_completions(&self) -> usize {
+        self.n
+    }
+
+    fn encode(&self, sources: &[Vec<f32>]) -> Vec<EncodedTask> {
+        assert_eq!(sources.len(), self.n);
+        sources
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(id, payload)| EncodedTask { id, payload })
+            .collect()
+    }
+
+    fn encode_flops(&self, _input_len: usize) -> f64 {
+        0.0
+    }
+
+    /// Every piece is unique: a failed subtask must always be re-executed
+    /// (the paper's uncoded re-assignment rule, §V).
+    fn needs_redispatch(
+        &self,
+        task_id: usize,
+        received: &[usize],
+        _outstanding: &[usize],
+    ) -> bool {
+        !received.contains(&task_id)
+    }
+
+    fn decoder(&self) -> Box<dyn Decoder> {
+        Box::new(UncodedDecoder {
+            outputs: vec![None; self.n],
+            got: 0,
+        })
+    }
+}
+
+struct UncodedDecoder {
+    outputs: Vec<Option<Vec<f32>>>,
+    got: usize,
+}
+
+impl Decoder for UncodedDecoder {
+    fn add(&mut self, id: usize, output: Vec<f32>) -> bool {
+        if self.outputs[id].is_none() {
+            self.outputs[id] = Some(output);
+            self.got += 1;
+        }
+        self.ready()
+    }
+
+    fn ready(&self) -> bool {
+        self.got == self.outputs.len()
+    }
+
+    fn decode(&mut self) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(self.ready(), "uncoded decoder is missing outputs");
+        Ok(self.outputs.iter_mut().map(|o| o.take().unwrap()).collect())
+    }
+
+    fn decode_flops(&self, _output_len: usize) -> f64 {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn needs_every_output() {
+        let s = Uncoded::new(3);
+        let tasks = s.encode(&[vec![1.0], vec![2.0], vec![3.0]]);
+        let mut d = s.decoder();
+        assert!(!d.add(tasks[0].id, tasks[0].payload.clone()));
+        assert!(!d.add(tasks[2].id, tasks[2].payload.clone()));
+        assert!(d.decode().is_err());
+        assert!(d.add(tasks[1].id, tasks[1].payload.clone()));
+        let out = d.decode().unwrap();
+        assert_eq!(out, vec![vec![1.0], vec![2.0], vec![3.0]]);
+    }
+}

@@ -1,0 +1,125 @@
+//! im2col + GEMM: the shape-polymorphic conv execution path.
+//!
+//! `im2col` lowers the sliding-window convolution to a matrix product
+//! `W (C_O × C_I·K²) @ patches (C_I·K² × H_O·W_O)` — the same lowering the
+//! L1 Pallas GEMM kernel consumes, and the fallback pure-rust provider.
+
+use super::tensor::Tensor;
+
+/// Extract conv patches of a *padded* input into a `(C_I·K·K, H_O·W_O)`
+/// row-major matrix.
+pub fn im2col(input: &Tensor, k: usize, s: usize) -> Vec<f32> {
+    let h_o = (input.h - k) / s + 1;
+    let w_o = (input.w - k) / s + 1;
+    let rows = input.c * k * k;
+    let cols = h_o * w_o;
+    let mut out = vec![0.0f32; rows * cols];
+    for c in 0..input.c {
+        for ky in 0..k {
+            for kx in 0..k {
+                let row = (c * k + ky) * k + kx;
+                let dst = &mut out[row * cols..(row + 1) * cols];
+                for oy in 0..h_o {
+                    let iy = oy * s + ky;
+                    let src_base = (c * input.h + iy) * input.w + kx;
+                    let dst_base = oy * w_o;
+                    if s == 1 {
+                        // Contiguous fast path: stride-1 gather is a memcpy.
+                        dst[dst_base..dst_base + w_o]
+                            .copy_from_slice(&input.data[src_base..src_base + w_o]);
+                    } else {
+                        for ox in 0..w_o {
+                            dst[dst_base + ox] = input.data[src_base + ox * s];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Row-major GEMM: `C (m×n) = A (m×kk) · B (kk×n)`, f32.
+///
+/// ikj loop order with the innermost axpy over contiguous `B`/`C` rows —
+/// auto-vectorizes well and is the fallback hot loop when no PJRT artifact
+/// is available.
+pub fn gemm(a: &[f32], m: usize, kk: usize, b: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * kk, "A shape mismatch");
+    assert_eq!(b.len(), kk * n, "B shape mismatch");
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let a_row = &a[i * kk..(i + 1) * kk];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for (l, &aval) in a_row.iter().enumerate() {
+            if aval == 0.0 {
+                continue;
+            }
+            let b_row = &b[l * n..(l + 1) * n];
+            for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                *cv += aval * bv;
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    fn gemm_naive(a: &[f32], m: usize, kk: usize, b: &[f32], n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for l in 0..kk {
+                    acc += a[i * kk + l] * b[l * n + j];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        prop::check("gemm == naive", 32, |rng| {
+            let m = 1 + rng.below(8);
+            let kk = 1 + rng.below(16);
+            let n = 1 + rng.below(64);
+            let mut a = vec![0.0f32; m * kk];
+            let mut b = vec![0.0f32; kk * n];
+            rng.fill_uniform_f32(&mut a, -1.0, 1.0);
+            rng.fill_uniform_f32(&mut b, -1.0, 1.0);
+            let fast = gemm(&a, m, kk, &b, n);
+            let slow = gemm_naive(&a, m, kk, &b, n);
+            for (x, y) in fast.iter().zip(&slow) {
+                assert!((x - y).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn im2col_identity_kernel_geometry() {
+        // 1x1 kernel, stride 1: im2col is exactly the flattened input.
+        let mut rng = Rng::new(5);
+        let mut t = Tensor::zeros(3, 4, 5);
+        rng.fill_uniform_f32(&mut t.data, -1.0, 1.0);
+        let cols = im2col(&t, 1, 1);
+        assert_eq!(cols, t.data);
+    }
+
+    #[test]
+    fn im2col_strided_shapes() {
+        let t = Tensor::zeros(2, 7, 9);
+        let k = 3;
+        let s = 2;
+        let h_o = (7 - 3) / 2 + 1; // 3
+        let w_o = (9 - 3) / 2 + 1; // 4
+        let cols = im2col(&t, k, s);
+        assert_eq!(cols.len(), 2 * k * k * h_o * w_o);
+    }
+}

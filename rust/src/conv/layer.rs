@@ -1,0 +1,189 @@
+//! 2D convolution layer: configuration, output geometry, the paper's
+//! FLOP/byte scalings (eqs. 8–12), and reference CPU execution.
+
+use anyhow::{ensure, Result};
+
+use super::im2col;
+use super::tensor::Tensor;
+
+/// Configuration of a 2D conv layer (square kernel, equal stride on both
+/// dims — the paper's setting; `k_w`/`s_w` name the width-dimension values).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvSpec {
+    pub c_in: usize,
+    pub c_out: usize,
+    /// kernel_size `K_W` (square).
+    pub k_w: usize,
+    /// stride `S_W`.
+    pub s_w: usize,
+    /// symmetric zero padding.
+    pub pad: usize,
+}
+
+impl ConvSpec {
+    pub fn new(c_in: usize, c_out: usize, k_w: usize, s_w: usize, pad: usize) -> ConvSpec {
+        ConvSpec {
+            c_in,
+            c_out,
+            k_w,
+            s_w,
+            pad,
+        }
+    }
+
+    /// Output width for a *padded* input width (paper:
+    /// `W_O = floor((W_I − K_W + 1 − 1)/S_W) + 1` — standard conv arithmetic).
+    pub fn out_dim_padded(&self, in_dim_padded: usize) -> usize {
+        assert!(in_dim_padded >= self.k_w, "input smaller than kernel");
+        (in_dim_padded - self.k_w) / self.s_w + 1
+    }
+
+    /// Output width/height for an *unpadded* input dimension.
+    pub fn out_dim(&self, in_dim: usize) -> usize {
+        self.out_dim_padded(in_dim + 2 * self.pad)
+    }
+
+    /// Weight tensor element count `(C_O, C_I, K, K)`.
+    pub fn weight_len(&self) -> usize {
+        self.c_out * self.c_in * self.k_w * self.k_w
+    }
+
+    // ---- paper scalings (k-split versions live in conv::split) ---------
+
+    /// eq. (9): FLOPs of a conv producing `(C_O, H_O, W_O)`.
+    pub fn flops(&self, h_o: usize, w_o: usize) -> f64 {
+        (self.c_out * h_o * w_o) as f64 * 2.0 * (self.c_in * self.k_w * self.k_w) as f64
+    }
+
+    /// eq. (10): transmission bytes of an input partition `(C_I, H_I, W)`.
+    pub fn input_bytes(&self, h_i: usize, w: usize) -> f64 {
+        4.0 * (self.c_in * h_i * w) as f64
+    }
+
+    /// eq. (11): transmission bytes of an output partition `(C_O, H_O, W)`.
+    pub fn output_bytes(&self, h_o: usize, w: usize) -> f64 {
+        4.0 * (self.c_out * h_o * w) as f64
+    }
+
+    /// Reference convolution on an already-padded input: the *pure linear*
+    /// map distributed to workers (no bias / activation — see coding docs).
+    ///
+    /// Uses im2col + GEMM; the direct triple-loop lives in tests as an
+    /// oracle for this oracle.
+    pub fn conv_padded(&self, input: &Tensor, weights: &[f32]) -> Result<Tensor> {
+        ensure!(input.c == self.c_in, "input channels {} != {}", input.c, self.c_in);
+        ensure!(weights.len() == self.weight_len(), "bad weight length");
+        ensure!(
+            input.h >= self.k_w && input.w >= self.k_w,
+            "padded input {}x{} smaller than kernel {}",
+            input.h,
+            input.w,
+            self.k_w
+        );
+        let h_o = self.out_dim_padded(input.h);
+        let w_o = self.out_dim_padded(input.w);
+        let patches = im2col::im2col(input, self.k_w, self.s_w); // (CKK, HoWo)
+        let out = im2col::gemm(
+            weights,
+            self.c_out,
+            self.c_in * self.k_w * self.k_w,
+            &patches,
+            h_o * w_o,
+        );
+        Tensor::from_vec(self.c_out, h_o, w_o, out)
+    }
+
+    /// Full layer on an unpadded input: pad → conv → (+bias).
+    pub fn forward(&self, input: &Tensor, weights: &[f32], bias: Option<&[f32]>) -> Result<Tensor> {
+        let padded = input.pad(self.pad);
+        let mut out = self.conv_padded(&padded, weights)?;
+        if let Some(b) = bias {
+            out.add_bias_inplace(b);
+        }
+        Ok(out)
+    }
+}
+
+/// Direct (naive) convolution — test oracle for `conv_padded`.
+pub fn conv_direct(spec: &ConvSpec, input: &Tensor, weights: &[f32]) -> Tensor {
+    let h_o = spec.out_dim_padded(input.h);
+    let w_o = spec.out_dim_padded(input.w);
+    let mut out = Tensor::zeros(spec.c_out, h_o, w_o);
+    let kk = spec.k_w;
+    for co in 0..spec.c_out {
+        for oy in 0..h_o {
+            for ox in 0..w_o {
+                let mut acc = 0.0f32;
+                for ci in 0..spec.c_in {
+                    for ky in 0..kk {
+                        for kx in 0..kk {
+                            let iy = oy * spec.s_w + ky;
+                            let ix = ox * spec.s_w + kx;
+                            let wgt = weights[((co * spec.c_in + ci) * kk + ky) * kk + kx];
+                            acc += wgt * input.at(ci, iy, ix);
+                        }
+                    }
+                }
+                *out.at_mut(co, oy, ox) = acc;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn output_geometry() {
+        // VGG 3x3/s1/p1 preserves size.
+        let s = ConvSpec::new(3, 64, 3, 1, 1);
+        assert_eq!(s.out_dim(224), 224);
+        // ResNet stem: 7x7/s2/p3 on 224 -> 112.
+        let stem = ConvSpec::new(3, 64, 7, 2, 3);
+        assert_eq!(stem.out_dim(224), 112);
+        // 3x3/s2/p1 on 56 -> 28.
+        let down = ConvSpec::new(64, 128, 3, 2, 1);
+        assert_eq!(down.out_dim(56), 28);
+    }
+
+    #[test]
+    fn flops_formula() {
+        let s = ConvSpec::new(64, 128, 3, 1, 1);
+        // 2 * C_O*H_O*W_O * C_I*K^2
+        assert_eq!(s.flops(10, 10), 2.0 * (128 * 100) as f64 * (64 * 9) as f64);
+    }
+
+    #[test]
+    fn im2col_conv_matches_direct() {
+        prop::check("conv im2col == direct", 24, |rng| {
+            let c_in = 1 + rng.below(4);
+            let c_out = 1 + rng.below(5);
+            let k = [1, 3, 5][rng.below(3)];
+            let s = 1 + rng.below(2);
+            let spec = ConvSpec::new(c_in, c_out, k, s, 0);
+            let h = k + rng.below(6);
+            let w = k + rng.below(10);
+            let mut input = Tensor::zeros(c_in, h, w);
+            rng.fill_uniform_f32(&mut input.data, -1.0, 1.0);
+            let mut weights = vec![0.0f32; spec.weight_len()];
+            rng.fill_uniform_f32(&mut weights, -1.0, 1.0);
+            let fast = spec.conv_padded(&input, &weights).unwrap();
+            let slow = conv_direct(&spec, &input, &weights);
+            assert_eq!(fast.shape(), slow.shape());
+            assert!(fast.max_abs_diff(&slow) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn forward_applies_pad_and_bias() {
+        let spec = ConvSpec::new(1, 1, 3, 1, 1);
+        let input = Tensor::from_vec(1, 1, 1, vec![1.0]).unwrap();
+        let weights = vec![0.0, 0.0, 0.0, 0.0, 2.0, 0.0, 0.0, 0.0, 0.0];
+        let out = spec.forward(&input, &weights, Some(&[0.5])).unwrap();
+        assert_eq!(out.shape(), (1, 1, 1));
+        assert!((out.data[0] - 2.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,12 @@
+//! Convolution substrate: CHW tensors, conv-layer math (eqs. 8–12 FLOP
+//! scalings), the CoCoI width-split geometry (eqs. 1–2), and the
+//! im2col+GEMM execution path.
+
+pub mod im2col;
+pub mod layer;
+pub mod split;
+pub mod tensor;
+
+pub use layer::ConvSpec;
+pub use split::{SplitPlan, WidthRange};
+pub use tensor::Tensor;

@@ -1,0 +1,223 @@
+//! Width-dimension splitting of a conv layer (paper §II-B.1, eqs. 1–2).
+//!
+//! The output feature map is cut into `k` equal-width pieces; each piece's
+//! *input* range follows from the conv receptive field:
+//!
+//! ```text
+//! W_O^p(k) = ⌊W_O / k⌋                      (equal source pieces)
+//! W_I^p(k) = K_W + (W_O^p(k) − 1)·S_W       (eq. 1)
+//! a_I = a_O·S_W,   b_I = (b_O − 1)·S_W + K_W  (eq. 2)
+//! ```
+//!
+//! When `k ∤ W_O`, the trailing `W_O mod k` columns form a *remainder*
+//! piece the master computes locally (paper footnote 2) — it ships no
+//! bytes, so it is never the bottleneck.
+
+use anyhow::{ensure, Result};
+
+use super::layer::ConvSpec;
+
+/// Half-open width range `[start, end)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WidthRange {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl WidthRange {
+    pub fn width(&self) -> usize {
+        self.end - self.start
+    }
+}
+
+/// The full geometry of a `k`-way width split of one conv layer.
+#[derive(Clone, Debug)]
+pub struct SplitPlan {
+    pub k: usize,
+    /// Padded input width the plan was built for.
+    pub w_i: usize,
+    /// Full output width.
+    pub w_o: usize,
+    /// Width of each source piece's output, `⌊W_O/k⌋`.
+    pub w_o_p: usize,
+    /// Width of each source piece's input (eq. 1).
+    pub w_i_p: usize,
+    /// Output ranges of the `k` source pieces.
+    pub out_ranges: Vec<WidthRange>,
+    /// Input ranges (padded-input coordinates) of the `k` pieces (eq. 2).
+    pub in_ranges: Vec<WidthRange>,
+    /// Master-local remainder piece, if `k ∤ W_O`.
+    pub remainder_out: Option<WidthRange>,
+    pub remainder_in: Option<WidthRange>,
+}
+
+impl SplitPlan {
+    /// Build the split of a conv with padded input width `w_i` into `k`
+    /// source pieces. Requires `1 ≤ k ≤ W_O`.
+    pub fn new(spec: &ConvSpec, w_i: usize, k: usize) -> Result<SplitPlan> {
+        ensure!(w_i >= spec.k_w, "padded input narrower than kernel");
+        let w_o = spec.out_dim_padded(w_i);
+        ensure!(
+            k >= 1 && k <= w_o,
+            "k = {k} outside [1, W_O = {w_o}]"
+        );
+        let w_o_p = w_o / k;
+        let w_i_p = spec.k_w + (w_o_p - 1) * spec.s_w;
+
+        let in_range = |a_o: usize, b_o: usize| WidthRange {
+            start: a_o * spec.s_w,
+            end: (b_o - 1) * spec.s_w + spec.k_w,
+        };
+
+        let mut out_ranges = Vec::with_capacity(k);
+        let mut in_ranges = Vec::with_capacity(k);
+        for i in 0..k {
+            let (a_o, b_o) = (i * w_o_p, (i + 1) * w_o_p);
+            out_ranges.push(WidthRange { start: a_o, end: b_o });
+            in_ranges.push(in_range(a_o, b_o));
+        }
+
+        let rem = w_o % k;
+        let (remainder_out, remainder_in) = if rem > 0 {
+            let (a_o, b_o) = (k * w_o_p, w_o);
+            (
+                Some(WidthRange { start: a_o, end: b_o }),
+                Some(in_range(a_o, b_o)),
+            )
+        } else {
+            (None, None)
+        };
+
+        Ok(SplitPlan {
+            k,
+            w_i,
+            w_o,
+            w_o_p,
+            w_i_p,
+            out_ranges,
+            in_ranges,
+            remainder_out,
+            remainder_in,
+        })
+    }
+
+    /// Total input elements shipped per subtask (the `N^rec` scale basis).
+    pub fn subtask_input_width(&self) -> usize {
+        self.w_i_p
+    }
+
+    /// Adjacent pieces overlap on input when the receptive fields do
+    /// (`k·W_I^p ≥ W_I` — paper §II-B.1 note).
+    pub fn input_overlap(&self) -> isize {
+        self.k as isize * self.w_i_p as isize - self.w_i as isize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::tensor::Tensor;
+    use crate::util::prop;
+
+    #[test]
+    fn paper_figure2_example() {
+        // Fig. 2: 3x3 kernel, stride 1, n=3, k=2. A padded 8-wide input
+        // gives W_O = 6, so each piece outputs 3 columns from 5 input cols.
+        let spec = ConvSpec::new(1, 1, 3, 1, 0);
+        let plan = SplitPlan::new(&spec, 8, 2).unwrap();
+        assert_eq!(plan.w_o, 6);
+        assert_eq!(plan.w_o_p, 3);
+        assert_eq!(plan.w_i_p, 5); // K + (3-1)*1
+        assert_eq!(plan.in_ranges[0], WidthRange { start: 0, end: 5 });
+        assert_eq!(plan.in_ranges[1], WidthRange { start: 3, end: 8 });
+        assert!(plan.remainder_out.is_none());
+        assert_eq!(plan.input_overlap(), 2); // pieces share 2 columns
+    }
+
+    #[test]
+    fn ranges_partition_output_exactly() {
+        prop::check("split covers output", 128, |rng| {
+            let k_w = [1, 3, 5, 7][rng.below(4)];
+            let s_w = 1 + rng.below(2);
+            let spec = ConvSpec::new(1, 1, k_w, s_w, 0);
+            let w_i = k_w + rng.below(120);
+            let w_o = spec.out_dim_padded(w_i);
+            let k = 1 + rng.below(w_o.min(12));
+            let plan = SplitPlan::new(&spec, w_i, k).unwrap();
+
+            // Source pieces are equal width and contiguous from 0.
+            let mut cursor = 0;
+            for r in &plan.out_ranges {
+                assert_eq!(r.start, cursor);
+                assert_eq!(r.width(), plan.w_o_p);
+                cursor = r.end;
+            }
+            // Remainder (if any) completes [0, W_O).
+            if let Some(rem) = plan.remainder_out {
+                assert_eq!(rem.start, cursor);
+                assert_eq!(rem.end, plan.w_o);
+                assert!(rem.width() < k, "remainder width must be < k");
+            } else {
+                assert_eq!(cursor, plan.w_o);
+            }
+            // Input ranges stay in bounds and have width W_I^p (eq. 1).
+            for r in &plan.in_ranges {
+                assert!(r.end <= w_i);
+                assert_eq!(r.width(), plan.w_i_p);
+            }
+        });
+    }
+
+    /// The defining property (paper §II-B.1): convolving an input slice
+    /// over range (eq. 2) yields exactly the matching slice of the full
+    /// convolution output.
+    #[test]
+    fn piecewise_conv_equals_full_conv() {
+        prop::check("split conv == sliced conv", 32, |rng| {
+            let c_in = 1 + rng.below(3);
+            let c_out = 1 + rng.below(3);
+            let k_w = [1, 3, 5][rng.below(3)];
+            let s_w = 1 + rng.below(2);
+            let spec = ConvSpec::new(c_in, c_out, k_w, s_w, 0);
+            let h = k_w + rng.below(5);
+            let w_i = k_w + 1 + rng.below(40);
+            let w_o = spec.out_dim_padded(w_i);
+            let k = 1 + rng.below(w_o.min(6));
+            let plan = SplitPlan::new(&spec, w_i, k).unwrap();
+
+            let mut input = Tensor::zeros(c_in, h, w_i);
+            rng.fill_uniform_f32(&mut input.data, -1.0, 1.0);
+            let mut weights = vec![0.0f32; spec.weight_len()];
+            rng.fill_uniform_f32(&mut weights, -1.0, 1.0);
+            let full = spec.conv_padded(&input, &weights).unwrap();
+
+            let mut all_ranges: Vec<(WidthRange, WidthRange)> = plan
+                .in_ranges
+                .iter()
+                .copied()
+                .zip(plan.out_ranges.iter().copied())
+                .collect();
+            if let (Some(ri), Some(ro)) = (plan.remainder_in, plan.remainder_out) {
+                all_ranges.push((ri, ro));
+            }
+            for (ri, ro) in all_ranges {
+                let piece_in = input.slice_w(ri.start, ri.end);
+                let piece_out = spec.conv_padded(&piece_in, &weights).unwrap();
+                let expect = full.slice_w(ro.start, ro.end);
+                assert_eq!(piece_out.shape(), expect.shape());
+                assert!(
+                    piece_out.max_abs_diff(&expect) < 1e-4,
+                    "piece mismatch (k_w={k_w} s_w={s_w} k={k})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn rejects_bad_k() {
+        let spec = ConvSpec::new(1, 1, 3, 1, 0);
+        assert!(SplitPlan::new(&spec, 10, 0).is_err());
+        assert!(SplitPlan::new(&spec, 10, 9).is_err()); // W_O = 8
+        assert!(SplitPlan::new(&spec, 10, 8).is_ok());
+    }
+}

@@ -1,0 +1,217 @@
+//! Minimal CHW feature-map tensor (batch size is 1 throughout, as in the
+//! paper's sparse-edge-request setting, §II-B).
+
+use anyhow::{ensure, Result};
+
+/// A `(C, H, W)` f32 feature map, dense CHW layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(c: usize, h: usize, w: usize) -> Tensor {
+        Tensor {
+            c,
+            h,
+            w,
+            data: vec![0.0; c * h * w],
+        }
+    }
+
+    pub fn from_vec(c: usize, h: usize, w: usize, data: Vec<f32>) -> Result<Tensor> {
+        ensure!(
+            data.len() == c * h * w,
+            "shape ({c},{h},{w}) wants {} elements, got {}",
+            c * h * w,
+            data.len()
+        );
+        Ok(Tensor { c, h, w, data })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.c, self.h, self.w)
+    }
+
+    #[inline]
+    pub fn at(&self, c: usize, y: usize, x: usize) -> f32 {
+        self.data[(c * self.h + y) * self.w + x]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, c: usize, y: usize, x: usize) -> &mut f32 {
+        &mut self.data[(c * self.h + y) * self.w + x]
+    }
+
+    /// Zero-pad spatially by `p` on every side.
+    pub fn pad(&self, p: usize) -> Tensor {
+        if p == 0 {
+            return self.clone();
+        }
+        let mut out = Tensor::zeros(self.c, self.h + 2 * p, self.w + 2 * p);
+        for c in 0..self.c {
+            for y in 0..self.h {
+                let src = &self.data[(c * self.h + y) * self.w..][..self.w];
+                let base = (c * out.h + y + p) * out.w + p;
+                out.data[base..base + self.w].copy_from_slice(src);
+            }
+        }
+        out
+    }
+
+    /// Copy of columns `[a, b)` across all channels/rows — the width-slice
+    /// primitive behind input splitting (paper eq. 2 ranges).
+    pub fn slice_w(&self, a: usize, b: usize) -> Tensor {
+        assert!(a < b && b <= self.w, "slice [{a},{b}) of width {}", self.w);
+        let w = b - a;
+        let mut out = Tensor::zeros(self.c, self.h, w);
+        for c in 0..self.c {
+            for y in 0..self.h {
+                let src = &self.data[(c * self.h + y) * self.w + a..][..w];
+                let dst = &mut out.data[(c * self.h + y) * w..][..w];
+                dst.copy_from_slice(src);
+            }
+        }
+        out
+    }
+
+    /// Concatenate along width. All parts must agree on `(c, h)`.
+    pub fn concat_w(parts: &[Tensor]) -> Result<Tensor> {
+        ensure!(!parts.is_empty(), "concat of zero tensors");
+        let (c, h) = (parts[0].c, parts[0].h);
+        ensure!(
+            parts.iter().all(|p| p.c == c && p.h == h),
+            "concat_w with mismatched channel/height"
+        );
+        let w: usize = parts.iter().map(|p| p.w).sum();
+        let mut out = Tensor::zeros(c, h, w);
+        for ci in 0..c {
+            for y in 0..h {
+                let mut x0 = 0;
+                for p in parts {
+                    let src = &p.data[(ci * h + y) * p.w..][..p.w];
+                    let dst = &mut out.data[(ci * out.h + y) * out.w + x0..][..p.w];
+                    dst.copy_from_slice(src);
+                    x0 += p.w;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Flatten to a vector (row-major CHW — matches python `flatten`).
+    pub fn flatten(&self) -> Vec<f32> {
+        self.data.clone()
+    }
+
+    pub fn from_flat(c: usize, h: usize, w: usize, flat: Vec<f32>) -> Result<Tensor> {
+        Tensor::from_vec(c, h, w, flat)
+    }
+
+    /// Element-wise ReLU in place.
+    pub fn relu_inplace(&mut self) {
+        for v in self.data.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// Add a per-channel bias in place.
+    pub fn add_bias_inplace(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.c);
+        let plane = self.h * self.w;
+        for (c, &b) in bias.iter().enumerate() {
+            for v in &mut self.data[c * plane..(c + 1) * plane] {
+                *v += b;
+            }
+        }
+    }
+
+    /// Element-wise sum (ResNet skip connections).
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        ensure!(self.shape() == other.shape(), "add with mismatched shapes");
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Tensor::from_vec(self.c, self.h, self.w, data)
+    }
+
+    /// Max absolute difference vs another tensor (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn pad_places_content() {
+        let t = Tensor::from_vec(1, 2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let p = t.pad(1);
+        assert_eq!(p.shape(), (1, 4, 4));
+        assert_eq!(p.at(0, 0, 0), 0.0);
+        assert_eq!(p.at(0, 1, 1), 1.0);
+        assert_eq!(p.at(0, 2, 2), 4.0);
+        assert_eq!(p.at(0, 3, 3), 0.0);
+    }
+
+    #[test]
+    fn slice_concat_roundtrip() {
+        prop::check("slice_w/concat_w roundtrip", 64, |rng| {
+            let c = 1 + rng.below(4);
+            let h = 1 + rng.below(6);
+            let w = 2 + rng.below(20);
+            let mut t = Tensor::zeros(c, h, w);
+            rng.fill_uniform_f32(&mut t.data, -1.0, 1.0);
+            // Random cut points.
+            let cut = 1 + rng.below(w - 1);
+            let left = t.slice_w(0, cut);
+            let right = t.slice_w(cut, w);
+            let back = Tensor::concat_w(&[left, right]).unwrap();
+            assert_eq!(back, t);
+        });
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let t = Tensor::from_vec(2, 1, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let f = t.flatten();
+        let back = Tensor::from_flat(2, 1, 2, f).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn bias_and_relu() {
+        let mut t = Tensor::from_vec(2, 1, 2, vec![-1.0, 1.0, -2.0, 2.0]).unwrap();
+        t.add_bias_inplace(&[0.5, -0.5]);
+        t.relu_inplace();
+        assert_eq!(t.data, vec![0.0, 1.5, 0.0, 1.5]);
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        let a = Tensor::zeros(1, 2, 2);
+        let b = Tensor::zeros(1, 2, 3);
+        assert!(a.add(&b).is_err());
+        assert!(Tensor::from_vec(1, 2, 2, vec![0.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! Fault injection: the programmable stand-in for the paper's testbed
+//! manipulations (§V): slept devices / extra WiFi delay (scenario 1),
+//! per-round worker failures (scenario 2), and a chronic straggler
+//! (scenario 3).
+
+use std::collections::HashSet;
+
+use crate::util::Rng;
+
+/// Per-worker fault configuration, applied inside the worker loop.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerFaults {
+    /// Mean (seconds) of an exponential extra delay added before sending
+    /// each result — scenario 1's `Exp(λ_tr · T̄_tr)` transmission delay.
+    pub extra_send_delay_mean: f64,
+    /// Rounds in which this worker fails its subtask and signals the
+    /// master (scenario 2/3). A failed round costs the worker the time it
+    /// takes to *notice* (modelled as half the compute it completed).
+    pub fail_rounds: HashSet<u64>,
+    /// Compute slowdown factor (1.0 = nominal). The paper's
+    /// "high-probability straggler" runs at ≈1.68× (85.2 s vs 50.8 s).
+    pub cmp_slowdown: f64,
+}
+
+impl WorkerFaults {
+    pub fn none() -> WorkerFaults {
+        WorkerFaults {
+            cmp_slowdown: 1.0,
+            ..Default::default()
+        }
+    }
+
+    pub fn with_send_delay(mean: f64) -> WorkerFaults {
+        WorkerFaults {
+            extra_send_delay_mean: mean,
+            cmp_slowdown: 1.0,
+            ..Default::default()
+        }
+    }
+
+    pub fn fails_in(mut self, rounds: impl IntoIterator<Item = u64>) -> WorkerFaults {
+        self.fail_rounds.extend(rounds);
+        self
+    }
+
+    pub fn slowdown(mut self, factor: f64) -> WorkerFaults {
+        self.cmp_slowdown = factor;
+        self
+    }
+
+    /// Sample this round's extra send delay.
+    pub fn sample_send_delay(&self, rng: &mut Rng) -> f64 {
+        if self.extra_send_delay_mean <= 0.0 {
+            0.0
+        } else {
+            rng.exponential(1.0 / self.extra_send_delay_mean)
+        }
+    }
+
+    pub fn fails(&self, round: u64) -> bool {
+        self.fail_rounds.contains(&round)
+    }
+}
+
+/// Build per-worker fault plans for the three scenarios of §V.
+pub struct ScenarioFaults;
+
+impl ScenarioFaults {
+    /// Scenario 1: every worker gets exponential extra transmission delay
+    /// with mean `lambda_tr * mean_tr_seconds`.
+    pub fn straggling(n: usize, lambda_tr: f64, mean_tr_seconds: f64) -> Vec<WorkerFaults> {
+        (0..n)
+            .map(|_| WorkerFaults::with_send_delay(lambda_tr * mean_tr_seconds))
+            .collect()
+    }
+
+    /// Scenario 2: `n_f` distinct workers fail in each of `rounds` rounds
+    /// (fresh draw per round).
+    pub fn failures(n: usize, n_f: usize, rounds: u64, rng: &mut Rng) -> Vec<WorkerFaults> {
+        let mut faults: Vec<WorkerFaults> = (0..n).map(|_| WorkerFaults::none()).collect();
+        for round in 0..rounds {
+            for w in rng.sample_distinct(n, n_f.min(n)) {
+                faults[w].fail_rounds.insert(round);
+            }
+        }
+        faults
+    }
+
+    /// Scenario 3: scenario 2 plus worker 0 as a chronic ~1.68× straggler.
+    pub fn failures_plus_straggler(
+        n: usize,
+        n_f: usize,
+        rounds: u64,
+        rng: &mut Rng,
+    ) -> Vec<WorkerFaults> {
+        let mut faults = Self::failures(n, n_f, rounds, rng);
+        faults[0].cmp_slowdown = 1.68;
+        faults
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario2_fails_exactly_nf_per_round() {
+        let mut rng = Rng::new(4);
+        let faults = ScenarioFaults::failures(10, 2, 5, &mut rng);
+        for round in 0..5 {
+            let failing = faults.iter().filter(|f| f.fails(round)).count();
+            assert_eq!(failing, 2, "round {round}");
+        }
+    }
+
+    #[test]
+    fn send_delay_mean_close() {
+        let f = WorkerFaults::with_send_delay(0.02);
+        let mut rng = Rng::new(5);
+        let m: f64 = (0..20_000).map(|_| f.sample_send_delay(&mut rng)).sum::<f64>() / 20_000.0;
+        assert!((m - 0.02).abs() < 0.002, "m={m}");
+        assert_eq!(WorkerFaults::none().sample_send_delay(&mut rng), 0.0);
+    }
+
+    #[test]
+    fn scenario3_has_chronic_straggler() {
+        let mut rng = Rng::new(6);
+        let faults = ScenarioFaults::failures_plus_straggler(4, 1, 3, &mut rng);
+        assert!(faults[0].cmp_slowdown > 1.5);
+        assert!(faults[1..].iter().all(|f| f.cmp_slowdown == 1.0));
+    }
+}

@@ -1,0 +1,465 @@
+//! The CoCoI master: tracks inference, splits + encodes type-1 conv
+//! layers, dispatches encoded subtasks, decodes from the first `k`
+//! results, handles failure re-dispatch, and executes type-2 work
+//! locally (paper §II).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coding::{
+    LtCode, MdsCode, RedundancyScheme, Replication, Uncoded,
+};
+use crate::conv::{SplitPlan, Tensor};
+use crate::latency::SystemProfile;
+use crate::model::graph::execute_simple_op;
+use crate::model::{zoo, ModelPlan, ModelSpec, Op, WeightStore};
+use crate::planner::SplitPolicy;
+use crate::runtime::ConvProvider;
+use crate::transport::LinkPair;
+use crate::util::Rng;
+
+use super::messages::{FromWorker, ToWorker, WorkOrder};
+use super::metrics::{InferenceMetrics, LayerMetrics};
+
+/// Redundancy scheme selector (the §V method column).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchemeKind {
+    /// CoCoI: (n, k)-MDS with planner-chosen k.
+    Mds,
+    /// Uncoded [8]: k = n, re-dispatch on failure.
+    Uncoded,
+    /// Replication [15]: k = ⌊n/2⌋, two copies each.
+    Replication,
+    /// LtCoI-k_l: LT with finest split k_l = W_O.
+    LtFine,
+    /// LtCoI-k_s: LT with the planner's k (≤ n).
+    LtCoarse,
+}
+
+impl SchemeKind {
+    /// Instantiate for one layer round.
+    pub fn make(
+        &self,
+        n_workers: usize,
+        k_planned: usize,
+        w_o: usize,
+        seed: u64,
+    ) -> Box<dyn RedundancyScheme> {
+        match self {
+            SchemeKind::Mds => Box::new(MdsCode::new(n_workers, k_planned.min(n_workers))),
+            SchemeKind::Uncoded => Box::new(Uncoded::new(n_workers.min(w_o).max(1))),
+            SchemeKind::Replication => Box::new(Replication::new(n_workers.max(2))),
+            SchemeKind::LtFine => Box::new(LtCode::new(n_workers, w_o, seed)),
+            SchemeKind::LtCoarse => {
+                Box::new(LtCode::new(n_workers, k_planned.min(n_workers), seed))
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchemeKind::Mds => "cocoi-mds",
+            SchemeKind::Uncoded => "uncoded",
+            SchemeKind::Replication => "replication",
+            SchemeKind::LtFine => "ltcoi-kl",
+            SchemeKind::LtCoarse => "ltcoi-ks",
+        }
+    }
+}
+
+/// Master configuration.
+#[derive(Clone, Debug)]
+pub struct MasterConfig {
+    pub scheme: SchemeKind,
+    pub policy: SplitPolicy,
+    pub profile: SystemProfile,
+    pub weight_seed: u64,
+    pub seed: u64,
+    /// Per-round receive timeout before declaring the cluster wedged.
+    pub recv_timeout: Duration,
+}
+
+impl Default for MasterConfig {
+    fn default() -> Self {
+        MasterConfig {
+            scheme: SchemeKind::Mds,
+            policy: SplitPolicy::KCircle,
+            profile: SystemProfile::paper_default(),
+            weight_seed: 42,
+            seed: 7,
+            recv_timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// The master device.
+pub struct Master {
+    model: ModelSpec,
+    weights: WeightStore,
+    plan: ModelPlan,
+    config: MasterConfig,
+    provider: std::sync::Arc<dyn ConvProvider>,
+    worker_tx: Vec<Box<dyn crate::transport::FrameTx>>,
+    from_workers: mpsc::Receiver<(usize, FromWorker)>,
+    _readers: Vec<std::thread::JoinHandle<()>>,
+    round: u64,
+    rng: Rng,
+}
+
+impl Master {
+    /// Connect to `links` workers, load `model_name`, and plan splits.
+    pub fn new(
+        model_name: &str,
+        config: MasterConfig,
+        links: Vec<LinkPair>,
+        provider: std::sync::Arc<dyn ConvProvider>,
+    ) -> Result<Master> {
+        anyhow::ensure!(!links.is_empty(), "need at least one worker");
+        let model = zoo::model(model_name)?;
+        let weights = WeightStore::generate(&model, config.weight_seed)?;
+        let mut rng = Rng::new(config.seed);
+        let plan = ModelPlan::build(
+            &model,
+            &config.profile,
+            links.len(),
+            config.policy,
+            &mut rng,
+        )?;
+
+        // One reader thread per worker feeding a single channel.
+        let (agg_tx, from_workers) = mpsc::channel();
+        let mut worker_tx = Vec::new();
+        let mut readers = Vec::new();
+        for (i, (tx, mut rx)) in links.into_iter().enumerate() {
+            worker_tx.push(tx);
+            let agg = agg_tx.clone();
+            readers.push(
+                std::thread::Builder::new()
+                    .name(format!("rx-worker-{i}"))
+                    .spawn(move || {
+                        loop {
+                            match rx.recv() {
+                                Ok(Some(frame)) => match FromWorker::decode(&frame) {
+                                    Ok(msg) => {
+                                        if agg.send((i, msg)).is_err() {
+                                            break;
+                                        }
+                                    }
+                                    Err(e) => {
+                                        log::error!("worker {i}: bad frame: {e:#}");
+                                        break;
+                                    }
+                                },
+                                Ok(None) => break,
+                                Err(e) => {
+                                    log::error!("worker {i}: recv error: {e:#}");
+                                    break;
+                                }
+                            }
+                        }
+                    })?,
+            );
+        }
+
+        let mut master = Master {
+            model,
+            weights,
+            plan,
+            config,
+            provider,
+            worker_tx,
+            from_workers,
+            _readers: readers,
+            round: 0,
+            rng,
+        };
+        master.setup_workers(model_name)?;
+        Ok(master)
+    }
+
+    fn n_workers(&self) -> usize {
+        self.worker_tx.len()
+    }
+
+    pub fn plan(&self) -> &ModelPlan {
+        &self.plan
+    }
+
+    fn setup_workers(&mut self, model_name: &str) -> Result<()> {
+        let setup = ToWorker::Setup {
+            model: model_name.to_string(),
+            weight_seed: self.config.weight_seed,
+        }
+        .encode();
+        for tx in self.worker_tx.iter_mut() {
+            tx.send(&setup)?;
+        }
+        let mut ready = 0;
+        while ready < self.n_workers() {
+            match self
+                .from_workers
+                .recv_timeout(self.config.recv_timeout)
+                .context("waiting for worker Ready")?
+            {
+                (_, FromWorker::Ready) => ready += 1,
+                (i, other) => bail!("worker {i}: unexpected {other:?} during setup"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Run one full inference. Returns the network output and the
+    /// per-layer latency breakdown.
+    pub fn infer(&mut self, input: &Tensor) -> Result<(Tensor, InferenceMetrics)> {
+        let t_start = Instant::now();
+        let mut metrics = InferenceMetrics::default();
+        let mut values: std::collections::BTreeMap<String, Tensor> = Default::default();
+        values.insert("input".into(), input.clone());
+
+        let nodes = self.model.nodes.clone();
+        for node in &nodes {
+            let fetched: Vec<Tensor> = node
+                .inputs
+                .iter()
+                .map(|i| values.get(i).cloned().context("missing value"))
+                .collect::<Result<_>>()?;
+            let out = match &node.op {
+                Op::Conv { spec, relu } => {
+                    let spec = *spec;
+                    let relu = *relu;
+                    let dist = self
+                        .plan
+                        .conv(&node.id)
+                        .map(|c| (c.distributed, c.k))
+                        .unwrap_or((false, 1));
+                    if dist.0 {
+                        let (t, lm) = self.run_distributed_conv(
+                            &node.id,
+                            &spec,
+                            relu,
+                            dist.1,
+                            &fetched[0],
+                        )?;
+                        metrics.layers.push(lm);
+                        t
+                    } else {
+                        let t0 = Instant::now();
+                        let params = self.weights.get(&node.id)?.clone();
+                        let padded = fetched[0].pad(spec.pad);
+                        let mut t = self.provider.conv(&spec, &padded, &params.weights)?;
+                        t.add_bias_inplace(&params.bias);
+                        if relu {
+                            t.relu_inplace();
+                        }
+                        metrics.layers.push(LayerMetrics {
+                            node_id: node.id.clone(),
+                            k: 1,
+                            n_tasks: 0,
+                            distributed: false,
+                            t_local: t0.elapsed().as_secs_f64(),
+                            ..Default::default()
+                        });
+                        t
+                    }
+                }
+                _ => {
+                    let refs: Vec<&Tensor> = fetched.iter().collect();
+                    execute_simple_op(node, &refs, &self.weights)?
+                }
+            };
+            values.insert(node.id.clone(), out);
+        }
+        metrics.total_seconds = t_start.elapsed().as_secs_f64();
+        let last = nodes.last().unwrap();
+        Ok((values.remove(&last.id).unwrap(), metrics))
+    }
+
+    /// One coded-computation round (paper Fig. 1 workflow).
+    fn run_distributed_conv(
+        &mut self,
+        node_id: &str,
+        spec: &crate::conv::ConvSpec,
+        relu: bool,
+        k_planned: usize,
+        input: &Tensor,
+    ) -> Result<(Tensor, LayerMetrics)> {
+        self.round += 1;
+        let round = self.round;
+        let n = self.n_workers();
+        let mut lm = LayerMetrics {
+            node_id: node_id.to_string(),
+            distributed: true,
+            ..Default::default()
+        };
+
+        // -- input splitting phase ------------------------------------
+        let t0 = Instant::now();
+        let padded = input.pad(spec.pad);
+        let scheme = self
+            .config
+            .scheme
+            .make(n, k_planned, spec.out_dim_padded(padded.w), self.rng.next_u64());
+        let k = scheme.source_count();
+        lm.k = k;
+        let plan = SplitPlan::new(spec, padded.w, k)?;
+        let sources: Vec<Vec<f32>> = plan
+            .in_ranges
+            .iter()
+            .map(|r| padded.slice_w(r.start, r.end).flatten())
+            .collect();
+        lm.t_split = t0.elapsed().as_secs_f64();
+
+        // -- encoding phase --------------------------------------------
+        let t0 = Instant::now();
+        let tasks = scheme.encode(&sources);
+        lm.n_tasks = tasks.len();
+        lm.t_encode = t0.elapsed().as_secs_f64();
+
+        // -- execution phase (dispatch + master-local remainder) -------
+        let t0 = Instant::now();
+        let h_i = padded.h;
+        // Encode each dispatch frame exactly once (§Perf: the payload used
+        // to be cloned into a WorkOrder and re-serialized per dispatch);
+        // re-dispatch after a failure reuses the same frame bytes.
+        let frames: Vec<Vec<u8>> = tasks
+            .iter()
+            .map(|task| {
+                ToWorker::Work(WorkOrder {
+                    round,
+                    task_id: task.id as u32,
+                    node_id: node_id.to_string(),
+                    c_in: spec.c_in as u32,
+                    c_out: spec.c_out as u32,
+                    k_w: spec.k_w as u32,
+                    s_w: spec.s_w as u32,
+                    h: h_i as u32,
+                    w: plan.w_i_p as u32,
+                    data: task.payload.clone(),
+                })
+                .encode()
+            })
+            .collect();
+        let mut assigned_worker: Vec<usize> = Vec::with_capacity(tasks.len());
+        for (i, frame) in frames.iter().enumerate() {
+            let w = i % n;
+            self.worker_tx[w].send(frame)?;
+            assigned_worker.push(w);
+        }
+
+        // Master-local remainder piece (footnote 2) while workers run.
+        let t_local0 = Instant::now();
+        let params = self.weights.get(node_id)?.clone();
+        let remainder: Option<Tensor> = match (plan.remainder_in, plan.remainder_out) {
+            (Some(ri), Some(_)) => {
+                let piece = padded.slice_w(ri.start, ri.end);
+                Some(self.provider.conv(spec, &piece, &params.weights)?)
+            }
+            _ => None,
+        };
+        let mut t_local = t_local0.elapsed().as_secs_f64();
+
+        // -- collect until decodable -----------------------------------
+        let mut decoder = scheme.decoder();
+        let mut received: Vec<usize> = Vec::new();
+        let mut outstanding: Vec<usize> = (0..tasks.len()).collect();
+        let mut next_redispatch_worker = 0usize;
+        while !decoder.ready() {
+            if outstanding.is_empty() {
+                bail!(
+                    "layer {node_id}: no outstanding subtasks but decoder needs more \
+                     (received {} of {})",
+                    received.len(),
+                    scheme.min_completions()
+                );
+            }
+            let (wid, msg) = self
+                .from_workers
+                .recv_timeout(self.config.recv_timeout)
+                .with_context(|| format!("layer {node_id}: timed out waiting for workers"))?;
+            match msg {
+                FromWorker::Output {
+                    round: r,
+                    task_id,
+                    data,
+                    ..
+                } => {
+                    if r != round {
+                        lm.stale_results += 1;
+                        continue;
+                    }
+                    let task_id = task_id as usize;
+                    outstanding.retain(|&t| t != task_id);
+                    if decoder.add(task_id, data) {
+                        received.push(task_id);
+                        break;
+                    }
+                    received.push(task_id);
+                }
+                FromWorker::Failed { round: r, task_id } => {
+                    if r != round {
+                        lm.stale_results += 1;
+                        continue;
+                    }
+                    let task_id = task_id as usize;
+                    lm.failures += 1;
+                    outstanding.retain(|&t| t != task_id);
+                    if scheme.needs_redispatch(task_id, &received, &outstanding) {
+                        if lm.redispatches > 4 * tasks.len() {
+                            bail!("layer {node_id}: re-dispatch storm; giving up");
+                        }
+                        // Round-robin to a different worker than the one
+                        // that just failed.
+                        let mut target = next_redispatch_worker % n;
+                        if target == wid && n > 1 {
+                            target = (target + 1) % n;
+                        }
+                        next_redispatch_worker = target + 1;
+                        self.worker_tx[target].send(&frames[task_id])?;
+                        outstanding.push(task_id);
+                        lm.redispatches += 1;
+                        log::debug!(
+                            "layer {node_id}: task {task_id} failed on worker {wid}, \
+                             re-dispatched to {target}"
+                        );
+                    }
+                }
+                FromWorker::Ready => bail!("unexpected Ready from worker {wid}"),
+            }
+        }
+        lm.t_workers = t0.elapsed().as_secs_f64() - t_local;
+
+        // -- decoding phase ---------------------------------------------
+        let t0 = Instant::now();
+        let decoded = decoder.decode()?;
+        lm.t_decode = t0.elapsed().as_secs_f64();
+
+        // -- reassembly + bias/activation (master-local) -----------------
+        let t0 = Instant::now();
+        let h_o = spec.out_dim_padded(padded.h);
+        let mut pieces: Vec<Tensor> = decoded
+            .into_iter()
+            .map(|flat| Tensor::from_flat(spec.c_out, h_o, plan.w_o_p, flat))
+            .collect::<Result<_>>()?;
+        if let Some(rem) = remainder {
+            pieces.push(rem);
+        }
+        let mut out = Tensor::concat_w(&pieces)?;
+        out.add_bias_inplace(&params.bias);
+        if relu {
+            out.relu_inplace();
+        }
+        t_local += t0.elapsed().as_secs_f64();
+        lm.t_local = t_local;
+        Ok((out, lm))
+    }
+
+    /// Graceful shutdown (workers exit their loops).
+    pub fn shutdown(mut self) {
+        let frame = ToWorker::Shutdown.encode();
+        for tx in self.worker_tx.iter_mut() {
+            let _ = tx.send(&frame);
+        }
+    }
+}

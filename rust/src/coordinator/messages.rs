@@ -1,0 +1,243 @@
+//! Wire messages between master and workers, with the hand-rolled binary
+//! codec (see `transport::codec`).
+
+use anyhow::{bail, Result};
+
+use crate::conv::{ConvSpec, Tensor};
+use crate::transport::codec::{Decoder, Encoder};
+
+/// Master -> worker.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ToWorker {
+    /// Load a model: the worker regenerates the deterministic weights
+    /// (the paper's "preloaded weights") and stands by.
+    Setup { model: String, weight_seed: u64 },
+    /// Execute one encoded conv subtask.
+    Work(WorkOrder),
+    Shutdown,
+}
+
+/// One encoded subtask: the (already padded, already encoded) input
+/// partition plus which layer's preloaded weights to convolve it with.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkOrder {
+    /// Coded-computation round (one per distributed layer execution);
+    /// stale results from earlier rounds are discarded by the master.
+    pub round: u64,
+    /// Scheme-local subtask id.
+    pub task_id: u32,
+    /// Conv node whose weights to use.
+    pub node_id: String,
+    /// Conv geometry (pad is irrelevant: input arrives pre-padded).
+    pub c_in: u32,
+    pub c_out: u32,
+    pub k_w: u32,
+    pub s_w: u32,
+    /// Input partition shape + data.
+    pub h: u32,
+    pub w: u32,
+    pub data: Vec<f32>,
+}
+
+impl WorkOrder {
+    pub fn spec(&self) -> ConvSpec {
+        ConvSpec::new(
+            self.c_in as usize,
+            self.c_out as usize,
+            self.k_w as usize,
+            self.s_w as usize,
+            0,
+        )
+    }
+
+    pub fn input_tensor(&self) -> Result<Tensor> {
+        Tensor::from_vec(self.c_in as usize, self.h as usize, self.w as usize, self.data.clone())
+    }
+}
+
+/// Worker -> master.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FromWorker {
+    /// Setup done.
+    Ready,
+    /// Subtask output (flattened CHW).
+    Output {
+        round: u64,
+        task_id: u32,
+        c: u32,
+        h: u32,
+        w: u32,
+        data: Vec<f32>,
+    },
+    /// The worker failed this subtask and signals the master (paper §IV-C
+    /// uncoded failure model).
+    Failed { round: u64, task_id: u32 },
+}
+
+const TAG_SETUP: u8 = 1;
+const TAG_WORK: u8 = 2;
+const TAG_SHUTDOWN: u8 = 3;
+const TAG_READY: u8 = 11;
+const TAG_OUTPUT: u8 = 12;
+const TAG_FAILED: u8 = 13;
+
+impl ToWorker {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        match self {
+            ToWorker::Setup { model, weight_seed } => {
+                e.u8(TAG_SETUP).str(model).u64(*weight_seed);
+            }
+            ToWorker::Work(w) => {
+                e.u8(TAG_WORK)
+                    .u64(w.round)
+                    .u32(w.task_id)
+                    .str(&w.node_id)
+                    .u32(w.c_in)
+                    .u32(w.c_out)
+                    .u32(w.k_w)
+                    .u32(w.s_w)
+                    .u32(w.h)
+                    .u32(w.w)
+                    .f32s(&w.data);
+            }
+            ToWorker::Shutdown => {
+                e.u8(TAG_SHUTDOWN);
+            }
+        }
+        e.finish()
+    }
+
+    pub fn decode(frame: &[u8]) -> Result<ToWorker> {
+        let mut d = Decoder::new(frame);
+        let msg = match d.u8()? {
+            TAG_SETUP => ToWorker::Setup {
+                model: d.str()?,
+                weight_seed: d.u64()?,
+            },
+            TAG_WORK => ToWorker::Work(WorkOrder {
+                round: d.u64()?,
+                task_id: d.u32()?,
+                node_id: d.str()?,
+                c_in: d.u32()?,
+                c_out: d.u32()?,
+                k_w: d.u32()?,
+                s_w: d.u32()?,
+                h: d.u32()?,
+                w: d.u32()?,
+                data: d.f32s()?,
+            }),
+            TAG_SHUTDOWN => ToWorker::Shutdown,
+            t => bail!("unknown ToWorker tag {t}"),
+        };
+        d.done()?;
+        Ok(msg)
+    }
+}
+
+impl FromWorker {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        match self {
+            FromWorker::Ready => {
+                e.u8(TAG_READY);
+            }
+            FromWorker::Output {
+                round,
+                task_id,
+                c,
+                h,
+                w,
+                data,
+            } => {
+                e.u8(TAG_OUTPUT)
+                    .u64(*round)
+                    .u32(*task_id)
+                    .u32(*c)
+                    .u32(*h)
+                    .u32(*w)
+                    .f32s(data);
+            }
+            FromWorker::Failed { round, task_id } => {
+                e.u8(TAG_FAILED).u64(*round).u32(*task_id);
+            }
+        }
+        e.finish()
+    }
+
+    pub fn decode(frame: &[u8]) -> Result<FromWorker> {
+        let mut d = Decoder::new(frame);
+        let msg = match d.u8()? {
+            TAG_READY => FromWorker::Ready,
+            TAG_OUTPUT => FromWorker::Output {
+                round: d.u64()?,
+                task_id: d.u32()?,
+                c: d.u32()?,
+                h: d.u32()?,
+                w: d.u32()?,
+                data: d.f32s()?,
+            },
+            TAG_FAILED => FromWorker::Failed {
+                round: d.u64()?,
+                task_id: d.u32()?,
+            },
+            t => bail!("unknown FromWorker tag {t}"),
+        };
+        d.done()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn message_roundtrips() {
+        prop::check("message codec roundtrip", 48, |rng| {
+            let order = WorkOrder {
+                round: rng.next_u64(),
+                task_id: rng.below(100) as u32,
+                node_id: format!("conv{}", rng.below(20)),
+                c_in: 1 + rng.below(64) as u32,
+                c_out: 1 + rng.below(64) as u32,
+                k_w: 3,
+                s_w: 1 + rng.below(2) as u32,
+                h: 4,
+                w: 5,
+                data: (0..rng.below(500)).map(|_| rng.uniform() as f32).collect(),
+            };
+            for msg in [
+                ToWorker::Setup {
+                    model: "tinyvgg".into(),
+                    weight_seed: rng.next_u64(),
+                },
+                ToWorker::Work(order),
+                ToWorker::Shutdown,
+            ] {
+                assert_eq!(ToWorker::decode(&msg.encode()).unwrap(), msg);
+            }
+            for msg in [
+                FromWorker::Ready,
+                FromWorker::Output {
+                    round: 3,
+                    task_id: 1,
+                    c: 2,
+                    h: 3,
+                    w: 4,
+                    data: vec![1.0; 24],
+                },
+                FromWorker::Failed { round: 9, task_id: 7 },
+            ] {
+                assert_eq!(FromWorker::decode(&msg.encode()).unwrap(), msg);
+            }
+        });
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(ToWorker::decode(&[99, 1, 2]).is_err());
+        assert!(FromWorker::decode(&[]).is_err());
+    }
+}

@@ -1,0 +1,145 @@
+//! Per-phase latency metrics: the observable the whole paper is about.
+
+use crate::util::json::Json;
+
+/// Wall-clock breakdown of one distributed layer execution (Fig. 4's
+/// stacked bars: master enc/dec vs worker transmission+execution).
+#[derive(Clone, Debug, Default)]
+pub struct LayerMetrics {
+    pub node_id: String,
+    pub k: usize,
+    pub n_tasks: usize,
+    pub distributed: bool,
+    /// Seconds per phase.
+    pub t_split: f64,
+    pub t_encode: f64,
+    /// Dispatch -> k-th useful result received (the `T^w_{n:k}` analogue).
+    pub t_workers: f64,
+    pub t_decode: f64,
+    /// Master-local work: remainder piece + bias/activation (+ the whole
+    /// layer when `!distributed`).
+    pub t_local: f64,
+    pub failures: usize,
+    pub redispatches: usize,
+    pub stale_results: usize,
+}
+
+impl LayerMetrics {
+    pub fn total(&self) -> f64 {
+        self.t_split + self.t_encode + self.t_workers + self.t_decode + self.t_local
+    }
+
+    /// Master coding share (the paper's 2–9% encode/decode overhead).
+    pub fn coding_share(&self) -> f64 {
+        if self.total() == 0.0 {
+            0.0
+        } else {
+            (self.t_encode + self.t_decode) / self.total()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("node_id", Json::Str(self.node_id.clone())),
+            ("k", Json::Num(self.k as f64)),
+            ("n_tasks", Json::Num(self.n_tasks as f64)),
+            ("distributed", Json::Bool(self.distributed)),
+            ("t_split", Json::Num(self.t_split)),
+            ("t_encode", Json::Num(self.t_encode)),
+            ("t_workers", Json::Num(self.t_workers)),
+            ("t_decode", Json::Num(self.t_decode)),
+            ("t_local", Json::Num(self.t_local)),
+            ("failures", Json::Num(self.failures as f64)),
+            ("redispatches", Json::Num(self.redispatches as f64)),
+        ])
+    }
+}
+
+/// Whole-inference metrics.
+#[derive(Clone, Debug, Default)]
+pub struct InferenceMetrics {
+    pub layers: Vec<LayerMetrics>,
+    /// End-to-end wall time (includes type-2 layers).
+    pub total_seconds: f64,
+}
+
+impl InferenceMetrics {
+    pub fn distributed_layer_seconds(&self) -> f64 {
+        self.layers.iter().filter(|l| l.distributed).map(|l| l.total()).sum()
+    }
+
+    pub fn coding_seconds(&self) -> f64 {
+        self.layers.iter().map(|l| l.t_encode + l.t_decode).sum()
+    }
+
+    pub fn failures(&self) -> usize {
+        self.layers.iter().map(|l| l.failures).sum()
+    }
+
+    pub fn redispatches(&self) -> usize {
+        self.layers.iter().map(|l| l.redispatches).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("total_seconds", Json::Num(self.total_seconds)),
+            (
+                "layers",
+                Json::Arr(self.layers.iter().map(|l| l.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// A compact table for examples/CLI output.
+    pub fn table(&self) -> String {
+        let mut s = String::from(
+            "layer        k  dist   split    enc     workers  dec     local    total\n",
+        );
+        for l in &self.layers {
+            s.push_str(&format!(
+                "{:<12} {:<2} {:<5} {:>7.1} {:>7.1} {:>8.1} {:>7.1} {:>7.1} {:>8.1}  (ms)\n",
+                l.node_id,
+                l.k,
+                l.distributed,
+                l.t_split * 1e3,
+                l.t_encode * 1e3,
+                l.t_workers * 1e3,
+                l.t_decode * 1e3,
+                l.t_local * 1e3,
+                l.total() * 1e3,
+            ));
+        }
+        s.push_str(&format!("total: {:.1} ms\n", self.total_seconds * 1e3));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shares_and_totals() {
+        let l = LayerMetrics {
+            node_id: "conv2".into(),
+            k: 4,
+            n_tasks: 6,
+            distributed: true,
+            t_split: 0.01,
+            t_encode: 0.02,
+            t_workers: 0.9,
+            t_decode: 0.03,
+            t_local: 0.04,
+            ..Default::default()
+        };
+        assert!((l.total() - 1.0).abs() < 1e-12);
+        assert!((l.coding_share() - 0.05).abs() < 1e-12);
+        let m = InferenceMetrics {
+            layers: vec![l],
+            total_seconds: 1.2,
+        };
+        assert!((m.coding_seconds() - 0.05).abs() < 1e-12);
+        assert!(m.table().contains("conv2"));
+        assert!(m.to_json().to_string_compact().contains("t_encode"));
+    }
+}

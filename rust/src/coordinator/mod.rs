@@ -1,0 +1,178 @@
+//! The CoCoI coordinator (the paper's system contribution): master,
+//! workers, wire messages, fault injection, metrics, and the local pool.
+
+pub mod injector;
+pub mod master;
+pub mod messages;
+pub mod metrics;
+pub mod pool;
+pub mod worker;
+
+pub use injector::{ScenarioFaults, WorkerFaults};
+pub use master::{Master, MasterConfig, SchemeKind};
+pub use metrics::{InferenceMetrics, LayerMetrics};
+pub use pool::LocalCluster;
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::conv::Tensor;
+    use crate::model::graph::forward_local;
+    use crate::model::{zoo, WeightStore};
+    use crate::planner::SplitPolicy;
+    use crate::runtime::FallbackProvider;
+    use crate::util::Rng;
+
+    fn random_input(seed: u64) -> Tensor {
+        let mut t = Tensor::zeros(3, 56, 56);
+        Rng::new(seed).fill_uniform_f32(&mut t.data, -1.0, 1.0);
+        t
+    }
+
+    fn run_cluster(
+        scheme: SchemeKind,
+        n: usize,
+        faults: Vec<WorkerFaults>,
+        seed: u64,
+    ) -> (Tensor, InferenceMetrics) {
+        let config = MasterConfig {
+            scheme,
+            policy: SplitPolicy::Fixed(3),
+            ..Default::default()
+        };
+        let mut cluster = LocalCluster::spawn(
+            "tinyvgg",
+            n,
+            config,
+            Arc::new(FallbackProvider),
+            faults,
+        )
+        .unwrap();
+        let input = random_input(seed);
+        let result = cluster.master.infer(&input).unwrap();
+        cluster.shutdown().unwrap();
+        result
+    }
+
+    fn local_reference(seed: u64) -> Tensor {
+        let model = zoo::model("tinyvgg").unwrap();
+        let weights = WeightStore::generate(&model, 42).unwrap();
+        forward_local(&model, &weights, &random_input(seed)).unwrap()
+    }
+
+    /// THE system-level correctness statement: distributed coded inference
+    /// must reproduce local inference (paper §II-B.4 "O can be perfectly
+    /// restored ... keeping the inference quality unchanged").
+    #[test]
+    fn coded_inference_matches_local() {
+        let want = local_reference(11);
+        for scheme in [
+            SchemeKind::Mds,
+            SchemeKind::Uncoded,
+            SchemeKind::Replication,
+            SchemeKind::LtCoarse,
+        ] {
+            let (got, metrics) = run_cluster(
+                scheme,
+                4,
+                (0..4).map(|_| WorkerFaults::none()).collect(),
+                11,
+            );
+            assert_eq!(got.shape(), want.shape());
+            let err = got.max_abs_diff(&want);
+            assert!(
+                err < 2e-2,
+                "{:?}: distributed output differs from local by {err}",
+                scheme
+            );
+            assert!(metrics.layers.iter().any(|l| l.distributed));
+            assert_eq!(metrics.failures(), 0);
+        }
+    }
+
+    /// MDS redundancy absorbs failures with zero re-dispatch; uncoded must
+    /// re-dispatch every failed piece.
+    #[test]
+    fn failure_handling_per_scheme() {
+        let want = local_reference(13);
+        let n = 4;
+        // Worker 2 fails every distributed round (tinyvgg has 6 convs; use
+        // generous round coverage).
+        let faults = |victim: usize| -> Vec<WorkerFaults> {
+            (0..n)
+                .map(|i| {
+                    if i == victim {
+                        WorkerFaults::none().fails_in(0..64)
+                    } else {
+                        WorkerFaults::none()
+                    }
+                })
+                .collect()
+        };
+
+        let (got, metrics) = run_cluster(SchemeKind::Mds, n, faults(2), 13);
+        assert!(got.max_abs_diff(&want) < 2e-2);
+        assert!(metrics.failures() > 0);
+        assert_eq!(
+            metrics.redispatches(),
+            0,
+            "MDS with k=3, n=4 tolerates one failure without re-dispatch"
+        );
+
+        let (got, metrics) = run_cluster(SchemeKind::Uncoded, n, faults(1), 13);
+        assert!(got.max_abs_diff(&want) < 2e-2);
+        assert!(metrics.failures() > 0);
+        assert!(
+            metrics.redispatches() >= metrics.failures(),
+            "uncoded must re-execute every failed piece"
+        );
+    }
+
+    /// Replication tolerates the loss of one replica per pair.
+    #[test]
+    fn replication_survives_single_failure() {
+        let want = local_reference(17);
+        let n = 4;
+        let faults = (0..n)
+            .map(|i| {
+                if i == 3 {
+                    WorkerFaults::none().fails_in(0..64)
+                } else {
+                    WorkerFaults::none()
+                }
+            })
+            .collect();
+        let (got, metrics) = run_cluster(SchemeKind::Replication, n, faults, 17);
+        assert!(got.max_abs_diff(&want) < 2e-2);
+        assert!(metrics.failures() > 0);
+    }
+
+    /// tinyresnet exercises the DAG path (skip connections + downsamples).
+    #[test]
+    fn resnet_distributed_matches_local() {
+        let model = zoo::model("tinyresnet").unwrap();
+        let weights = WeightStore::generate(&model, 42).unwrap();
+        let input = random_input(19);
+        let want = forward_local(&model, &weights, &input).unwrap();
+
+        let config = MasterConfig {
+            scheme: SchemeKind::Mds,
+            policy: SplitPolicy::Fixed(2),
+            ..Default::default()
+        };
+        let mut cluster = LocalCluster::spawn(
+            "tinyresnet",
+            3,
+            config,
+            Arc::new(FallbackProvider),
+            (0..3).map(|_| WorkerFaults::none()).collect(),
+        )
+        .unwrap();
+        let (got, _) = cluster.master.infer(&input).unwrap();
+        cluster.shutdown().unwrap();
+        assert_eq!(got.shape(), want.shape());
+        assert!(got.max_abs_diff(&want) < 2e-2);
+    }
+}

@@ -1,0 +1,71 @@
+//! Local worker pool: spawn `n` in-process workers (threads) wired to a
+//! master via in-proc links — the single-binary analogue of the paper's
+//! 1 master + n Raspberry Pi workers.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::runtime::ConvProvider;
+use crate::transport::inproc;
+use crate::transport::split::{split_inproc, LinkPair};
+
+use super::injector::WorkerFaults;
+use super::master::{Master, MasterConfig};
+use super::worker::{run_worker, WorkerConfig};
+
+/// Handle keeping worker threads joinable.
+pub struct LocalCluster {
+    pub master: Master,
+    workers: Vec<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl LocalCluster {
+    /// Spawn `n` workers (threads) with the given provider and per-worker
+    /// faults, then start a master on `model_name`.
+    pub fn spawn(
+        model_name: &str,
+        n: usize,
+        config: MasterConfig,
+        provider: Arc<dyn ConvProvider>,
+        faults: Vec<WorkerFaults>,
+    ) -> Result<LocalCluster> {
+        anyhow::ensure!(faults.len() == n, "need one fault plan per worker");
+        let mut links: Vec<LinkPair> = Vec::new();
+        let mut workers = Vec::new();
+        for (i, f) in faults.into_iter().enumerate() {
+            let (master_side, worker_side) = inproc::pair();
+            let (mtx, mrx) = split_inproc(master_side);
+            links.push((Box::new(mtx), Box::new(mrx)));
+            let (wtx, wrx) = split_inproc(worker_side);
+            let provider = provider.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("worker-{i}"))
+                    .spawn(move || {
+                        run_worker(
+                            Box::new(wtx),
+                            Box::new(wrx),
+                            WorkerConfig {
+                                id: i,
+                                provider,
+                                faults: f,
+                                rng_seed: 0xC0C0 + i as u64,
+                            },
+                        )
+                    })?,
+            );
+        }
+        let master = Master::new(model_name, config, links, provider)?;
+        Ok(LocalCluster { master, workers })
+    }
+
+    /// Shut down master and join workers.
+    pub fn shutdown(self) -> Result<()> {
+        self.master.shutdown();
+        for w in self.workers {
+            w.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+        }
+        Ok(())
+    }
+}

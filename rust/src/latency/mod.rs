@@ -1,0 +1,12 @@
+//! The paper's latency model (§III): shift-exponential phase latencies
+//! (Def. 1), order-statistics expectations, the per-phase FLOP/byte
+//! scalings (eqs. 8–12), and the approximate objective `L(k)` (eq. 16)
+//! with the App. C/F theory quantities.
+
+pub mod approx;
+pub mod order_stats;
+pub mod phases;
+pub mod shift_exp;
+
+pub use phases::{LayerDims, SystemProfile};
+pub use shift_exp::ShiftExp;

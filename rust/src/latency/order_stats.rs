@@ -1,0 +1,79 @@
+//! Order statistics of shift-exponential samples (David & Nagaraja [25]).
+//!
+//! For `n` iid `SE(μ, θ, N)` variables, the k-th smallest has expectation
+//! `Nθ + (N/μ)(H_n − H_{n−k})` — the Rényi representation sums `n − i + 1`
+//! scaled spacings. The paper's `L(k)` replaces `H_n − H_{n−k}` with
+//! `ln(n/(n−k))`; both forms live here so the approximation error is
+//! testable.
+
+use super::shift_exp::ShiftExp;
+use crate::util::harmonic;
+
+/// Exact expectation of the k-th order statistic of `n` iid draws.
+pub fn expected_kth(dist: &ShiftExp, n: usize, k: usize) -> f64 {
+    assert!(k >= 1 && k <= n);
+    dist.shift() + (dist.n_scale / dist.mu) * (harmonic(n) - harmonic(n - k))
+}
+
+/// The paper's log approximation of `H_n − H_{n−k}` (diverges at `k = n`).
+pub fn log_factor(n: usize, k: usize) -> f64 {
+    assert!(k >= 1 && k < n);
+    ((n as f64) / ((n - k) as f64)).ln()
+}
+
+/// Exact harmonic factor `H_n − H_{n−k}` (finite for `k = n`).
+pub fn harmonic_factor(n: usize, k: usize) -> f64 {
+    assert!(k >= 1 && k <= n);
+    harmonic(n) - harmonic(n - k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn expected_kth_matches_simulation() {
+        let dist = ShiftExp::new(2.0, 0.3, 5.0);
+        let (n, k) = (10, 7);
+        let mut rng = Rng::new(31);
+        let trials = 60_000;
+        let mut total = 0.0;
+        let mut buf = vec![0.0f64; n];
+        for _ in 0..trials {
+            for b in buf.iter_mut() {
+                *b = dist.sample(&mut rng);
+            }
+            buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            total += buf[k - 1];
+        }
+        let mc = total / trials as f64;
+        let exact = expected_kth(&dist, n, k);
+        assert!((mc - exact).abs() / exact < 0.01, "mc={mc} exact={exact}");
+    }
+
+    #[test]
+    fn log_approximates_harmonic() {
+        // H_n − H_{n−k} is a right Riemann sum of ∫_{n−k}^{n} dx/x, so it
+        // *underestimates* ln(n/(n−k)), by less than 1/(n−k) − 1/n.
+        for n in [10usize, 20, 50] {
+            for k in 1..n {
+                let lg = log_factor(n, k);
+                let hm = harmonic_factor(n, k);
+                assert!(hm <= lg + 1e-12, "harmonic must underestimate log");
+                assert!(lg - hm < 1.0 / (n - k) as f64 - 1.0 / n as f64 + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn min_and_max_special_cases() {
+        let dist = ShiftExp::new(1.0, 0.0, 1.0);
+        // Min of n exps(1): 1/n.
+        let e_min = expected_kth(&dist, 8, 1);
+        assert!((e_min - 1.0 / 8.0).abs() < 1e-12);
+        // Max of n: H_n.
+        let e_max = expected_kth(&dist, 8, 8);
+        assert!((e_max - harmonic(8)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,145 @@
+//! Shift-exponential latency distribution (paper Definition 1) + MLE fit.
+//!
+//! `T ~ SE(μ, θ, N)`:  `F(t) = 1 − exp(−(μ/N)(t − Nθ))` for `t ≥ Nθ`.
+//! `N` is the operation scale (FLOPs or bytes), `θ` the per-unit minimum
+//! time, `μ` the straggler parameter (smaller μ ⇒ heavier tail). Mean is
+//! `N(θ + 1/μ)`.
+
+use crate::util::Rng;
+
+/// A shift-exponential distribution with explicit scale `n` (`N` in the
+/// paper; named `n_scale` here to avoid clashing with worker count `n`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShiftExp {
+    /// Straggler parameter μ (> 0); smaller ⇒ stronger straggling.
+    pub mu: f64,
+    /// Shift coefficient θ (≥ 0): minimum per-unit completion time.
+    pub theta: f64,
+    /// Operation scale `N` (FLOPs / bytes).
+    pub n_scale: f64,
+}
+
+impl ShiftExp {
+    pub fn new(mu: f64, theta: f64, n_scale: f64) -> ShiftExp {
+        assert!(mu > 0.0 && theta >= 0.0 && n_scale >= 0.0);
+        ShiftExp { mu, theta, n_scale }
+    }
+
+    /// Minimum possible value `Nθ`.
+    pub fn shift(&self) -> f64 {
+        self.n_scale * self.theta
+    }
+
+    /// CDF (eq. 7).
+    pub fn cdf(&self, t: f64) -> f64 {
+        if self.n_scale == 0.0 {
+            return if t >= 0.0 { 1.0 } else { 0.0 };
+        }
+        if t < self.shift() {
+            0.0
+        } else {
+            1.0 - (-(self.mu / self.n_scale) * (t - self.shift())).exp()
+        }
+    }
+
+    /// Mean `N(θ + 1/μ)`.
+    pub fn mean(&self) -> f64 {
+        self.n_scale * (self.theta + 1.0 / self.mu)
+    }
+
+    /// Draw one sample.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        if self.n_scale == 0.0 {
+            return 0.0;
+        }
+        self.shift() + rng.exponential(self.mu / self.n_scale)
+    }
+
+    /// MLE fit given samples of an operation with known scale `n_scale`:
+    /// `θ̂ = min(x)/N`, `μ̂ = N / mean(x − min)`. This is what the paper's
+    /// "prior test and fitting" step produces (App. B).
+    pub fn fit(samples: &[f64], n_scale: f64) -> ShiftExp {
+        assert!(samples.len() >= 2, "fit needs at least two samples");
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mean_excess =
+            samples.iter().map(|x| x - min).sum::<f64>() / samples.len() as f64;
+        // Guard against degenerate (all-equal) samples.
+        let mu = if mean_excess > 0.0 {
+            n_scale / mean_excess
+        } else {
+            1e12
+        };
+        ShiftExp::new(mu, min / n_scale, n_scale)
+    }
+
+    /// MLE fit with the top `trim_frac` of samples dropped first —
+    /// robust to scheduler spikes on virtualized hosts (the RPi testbed
+    /// the paper fits has no hypervisor noise).
+    pub fn fit_trimmed(samples: &[f64], n_scale: f64, trim_frac: f64) -> ShiftExp {
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let keep = ((s.len() as f64) * (1.0 - trim_frac)).ceil() as usize;
+        ShiftExp::fit(&s[..keep.clamp(2, s.len())], n_scale)
+    }
+
+    /// Kolmogorov–Smirnov statistic vs an empirical sample (fit quality,
+    /// used by the Fig. 8 reproduction).
+    pub fn ks_statistic(&self, samples: &[f64]) -> f64 {
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len() as f64;
+        s.iter()
+            .enumerate()
+            .map(|(i, &x)| {
+                let f = self.cdf(x);
+                let lo = i as f64 / n;
+                let hi = (i + 1) as f64 / n;
+                (f - lo).abs().max((f - hi).abs())
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_properties() {
+        let d = ShiftExp::new(2.0, 0.5, 10.0);
+        assert_eq!(d.cdf(4.9), 0.0); // below shift Nθ = 5
+        assert!(d.cdf(5.0).abs() < 1e-12);
+        assert!(d.cdf(1e9) > 0.999_999);
+        // Median above shift: shift + ln2 * N/μ.
+        let median = 5.0 + (10.0 / 2.0) * std::f64::consts::LN_2;
+        assert!((d.cdf(median) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sample_mean_matches() {
+        let d = ShiftExp::new(4.0, 0.25, 8.0);
+        let mut rng = Rng::new(17);
+        let m: f64 = (0..100_000).map(|_| d.sample(&mut rng)).sum::<f64>() / 100_000.0;
+        assert!((m - d.mean()).abs() / d.mean() < 0.02, "m={m} vs {}", d.mean());
+    }
+
+    #[test]
+    fn fit_recovers_parameters() {
+        let truth = ShiftExp::new(5.0, 0.1, 100.0);
+        let mut rng = Rng::new(23);
+        let samples: Vec<f64> = (0..20_000).map(|_| truth.sample(&mut rng)).collect();
+        let fit = ShiftExp::fit(&samples, 100.0);
+        assert!((fit.theta - truth.theta).abs() / truth.theta < 0.05, "theta={}", fit.theta);
+        assert!((fit.mu - truth.mu).abs() / truth.mu < 0.05, "mu={}", fit.mu);
+        // Good fit => small KS statistic.
+        assert!(fit.ks_statistic(&samples) < 0.02);
+    }
+
+    #[test]
+    fn zero_scale_is_instant() {
+        let d = ShiftExp::new(1.0, 1.0, 0.0);
+        let mut rng = Rng::new(1);
+        assert_eq!(d.sample(&mut rng), 0.0);
+        assert_eq!(d.mean(), 0.0);
+    }
+}

@@ -1,0 +1,45 @@
+//! # CoCoI — Distributed Coded Inference for Straggler Mitigation
+//!
+//! Reproduction of *"CoCoI: Distributed Coded Inference System for
+//! Straggler Mitigation"* (Liu, Huang, Tang; CS.DC 2025) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **Layer 1/2 (build time, python)** — Pallas conv/GEMM kernels inside a
+//!   JAX model, AOT-lowered to HLO text artifacts (`python/compile/`).
+//! * **Layer 3 (this crate)** — the CoCoI coordinator: width-wise input
+//!   splitting of 2D conv layers (eqs. 1–2 of the paper), `(n, k)`-MDS
+//!   encoding of input partitions (eq. 3), dispatch to `n` workers, decode
+//!   from the first `k` encoded outputs (eq. 4), plus the optimal-splitting
+//!   planner built on the shift-exponential latency model (§III–IV).
+//!
+//! Python never runs on the request path: the rust binary loads the AOT
+//! artifacts through PJRT (`runtime`) and coordinates everything itself.
+//!
+//! Crate map (one module per subsystem; see `DESIGN.md` for the inventory):
+//!
+//! * [`util`] — PRNG, statistics, JSON, logging, property-test substrate.
+//! * [`coding`] — MDS / LT / replication / uncoded redundancy schemes.
+//! * [`conv`] — NCHW tensors, conv-layer math, width splitting, im2col.
+//! * [`model`] — CNN graph representation, VGG16/ResNet18 zoo, weights.
+//! * [`latency`] — shift-exponential model, order statistics, `L(k)`.
+//! * [`planner`] — `k°`/`k*` solvers, sensitivity + theory (Props. 1–3).
+//! * [`runtime`] — PJRT executable cache + pure-rust fallback provider.
+//! * [`transport`] — in-proc and TCP transports with a binary codec.
+//! * [`coordinator`] — the master/worker pipeline with fault injection.
+//! * [`sim`] — calibrated discrete-event simulator for the paper figures.
+//! * [`bench`] — shared experiment drivers for `cargo bench` targets.
+
+pub mod bench;
+pub mod coding;
+pub mod conv;
+pub mod coordinator;
+pub mod latency;
+pub mod model;
+pub mod planner;
+pub mod runtime;
+pub mod sim;
+pub mod transport;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

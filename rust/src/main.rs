@@ -1,0 +1,298 @@
+//! `cocoi` — the CoCoI leader binary.
+//!
+//! Subcommands (hand-rolled arg parsing; no clap in the vendor set):
+//!
+//! ```text
+//! cocoi infer  --model tinyvgg --workers 4 [--scheme mds|uncoded|rep|lt-fine|lt-coarse]
+//!              [--k N] [--lambda-tr X] [--fail N] [--pjrt] [--runs R]
+//! cocoi worker --listen 0.0.0.0:9090 [--pjrt]      # TCP worker process
+//! cocoi infer  --tcp host:9090,host:9091 ...        # master over TCP
+//! cocoi plan   --model vgg16 --workers 10           # show the split plan
+//! cocoi experiment <fig4|fig5|fig6|fig7|fig8|fig9|fig10|table1|theory|all>
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use cocoi::bench::experiments as exp;
+use cocoi::conv::Tensor;
+use cocoi::coordinator::{
+    LocalCluster, MasterConfig, ScenarioFaults, SchemeKind, WorkerFaults,
+};
+use cocoi::latency::SystemProfile;
+use cocoi::model::zoo;
+use cocoi::planner::SplitPolicy;
+use cocoi::runtime::{ConvProvider, FallbackProvider, Manifest, PjrtProvider, PjrtService};
+use cocoi::transport::split::split_tcp;
+use cocoi::util::Rng;
+
+/// Minimal `--flag value` / `--flag` parser.
+struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let next_is_value = argv
+                    .get(i + 1)
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { flags, positional }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} {v}")),
+        }
+    }
+
+    fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} {v}")),
+        }
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+fn scheme_from_str(s: &str) -> Result<SchemeKind> {
+    Ok(match s {
+        "mds" | "cocoi" => SchemeKind::Mds,
+        "uncoded" => SchemeKind::Uncoded,
+        "rep" | "replication" => SchemeKind::Replication,
+        "lt-fine" | "lt-kl" => SchemeKind::LtFine,
+        "lt-coarse" | "lt-ks" => SchemeKind::LtCoarse,
+        other => bail!("unknown scheme '{other}'"),
+    })
+}
+
+/// Build the provider (+ keep the PJRT service alive if used).
+fn make_provider(use_pjrt: bool) -> Result<(Arc<dyn ConvProvider>, Option<PjrtService>)> {
+    if use_pjrt {
+        let service = PjrtService::spawn()?;
+        let manifest = Arc::new(Manifest::load_or_empty(
+            &cocoi::runtime::artifacts::default_dir(),
+        ));
+        let provider = Arc::new(PjrtProvider::new(service.handle(), manifest));
+        Ok((provider, Some(service)))
+    } else {
+        Ok((Arc::new(FallbackProvider), None))
+    }
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let model_name = args.get("model").unwrap_or("tinyvgg").to_string();
+    let n = args.get_usize("workers", 4)?;
+    let scheme = scheme_from_str(args.get("scheme").unwrap_or("mds"))?;
+    let runs = args.get_usize("runs", 1)?;
+    let lambda_tr = args.get_f64("lambda-tr", 0.0)?;
+    let n_f = args.get_usize("fail", 0)?;
+    let (provider, _service) = make_provider(args.has("pjrt"))?;
+
+    let mut rng = Rng::new(args.get_usize("seed", 1)? as u64);
+    let faults = if n_f > 0 {
+        ScenarioFaults::failures(n, n_f, 1024, &mut rng)
+    } else if lambda_tr > 0.0 {
+        // 5 ms mean transmission estimate for the injected delay scale.
+        ScenarioFaults::straggling(n, lambda_tr, 0.005)
+    } else {
+        (0..n).map(|_| WorkerFaults::none()).collect()
+    };
+
+    let config = MasterConfig {
+        scheme,
+        policy: match args.get("k") {
+            Some(k) => SplitPolicy::Fixed(k.parse()?),
+            None => SplitPolicy::KCircle,
+        },
+        ..Default::default()
+    };
+
+    if let Some(addrs) = args.get("tcp") {
+        // Remote workers over TCP.
+        let mut links: Vec<cocoi::transport::LinkPair> = Vec::new();
+        for addr in addrs.split(',') {
+            let stream = std::net::TcpStream::connect(addr.trim())
+                .with_context(|| format!("connecting to worker {addr}"))?;
+            let (tx, rx) = split_tcp(stream)?;
+            links.push((Box::new(tx), Box::new(rx)));
+        }
+        let mut master =
+            cocoi::coordinator::Master::new(&model_name, config, links, provider)?;
+        run_inferences(&mut master, &model_name, runs)?;
+        master.shutdown();
+        return Ok(());
+    }
+
+    let mut cluster = LocalCluster::spawn(&model_name, n, config, provider, faults)?;
+    run_inferences(&mut cluster.master, &model_name, runs)?;
+    cluster.shutdown()?;
+    Ok(())
+}
+
+fn run_inferences(
+    master: &mut cocoi::coordinator::Master,
+    model_name: &str,
+    runs: usize,
+) -> Result<()> {
+    let model = zoo::model(model_name)?;
+    let mut rng = Rng::new(99);
+    for run in 0..runs {
+        let mut input = Tensor::zeros(model.input.0, model.input.1, model.input.2);
+        rng.fill_uniform_f32(&mut input.data, -1.0, 1.0);
+        let (out, metrics) = master.infer(&input)?;
+        println!("run {run}: output shape {:?}", out.shape());
+        println!("{}", metrics.table());
+        println!(
+            "coding overhead {:.1}% of distributed-layer time; {} failures, {} redispatches",
+            100.0 * metrics.coding_seconds() / metrics.distributed_layer_seconds().max(1e-12),
+            metrics.failures(),
+            metrics.redispatches()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let listen = args.get("listen").unwrap_or("127.0.0.1:9090").to_string();
+    let (provider, _service) = make_provider(args.has("pjrt"))?;
+    cocoi::transport::tcp::serve(&listen, move |link| {
+        let provider = provider.clone();
+        let (tx, rx) = split_tcp(link.into_stream())?;
+        cocoi::coordinator::worker::run_worker(
+            Box::new(tx),
+            Box::new(rx),
+            cocoi::coordinator::worker::WorkerConfig {
+                id: 0,
+                provider,
+                faults: WorkerFaults::none(),
+                rng_seed: 0xDEC0DE,
+            },
+        )
+    })
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let model_name = args.get("model").unwrap_or("vgg16");
+    let n = args.get_usize("workers", 10)?;
+    let model = zoo::model(model_name)?;
+    let profile = SystemProfile::paper_default();
+    let mut rng = Rng::new(1);
+    let plan = cocoi::model::ModelPlan::build(
+        &model,
+        &profile,
+        n,
+        SplitPolicy::KCircle,
+        &mut rng,
+    )?;
+    println!("split plan for {model_name} with n={n} workers:");
+    println!(
+        "{:<12} {:>5} {:>6} {:>12} {:>12} {:>6}",
+        "layer", "k0", "type", "est local", "est dist", "gain"
+    );
+    for c in &plan.convs {
+        println!(
+            "{:<12} {:>5} {:>6} {:>11.2}s {:>11.2}s {:>5.1}%",
+            c.node_id,
+            c.k,
+            if c.distributed { "1" } else { "2" },
+            c.est_local,
+            c.est_distributed,
+            100.0 * (1.0 - c.est_distributed / c.est_local)
+        );
+    }
+    println!(
+        "estimated conv latency: {:.2}s ({} of {} layers distributed)",
+        plan.estimated_conv_latency(),
+        plan.type1_ids().len(),
+        plan.convs.len()
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let scale = if args.has("full") {
+        exp::Scale::full()
+    } else if args.has("quick") {
+        exp::Scale::quick()
+    } else {
+        exp::Scale::from_env()
+    };
+    match which {
+        "fig4" => exp::fig4(scale)?,
+        "fig5" => exp::fig5(scale)?,
+        "fig6" => exp::fig6(scale)?,
+        "fig7" => exp::fig7()?,
+        "fig8" => exp::fig8()?,
+        "fig9" => exp::fig9(scale)?,
+        "fig10" => exp::fig10(scale)?,
+        "table1" => exp::table1(scale)?,
+        "theory" => exp::theory()?,
+        "all" => {
+            exp::fig7()?;
+            exp::fig8()?;
+            exp::fig4(scale)?;
+            exp::table1(scale)?;
+            exp::fig5(scale)?;
+            exp::fig6(scale)?;
+            exp::fig9(scale)?;
+            exp::fig10(scale)?;
+            exp::theory()?;
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    cocoi::util::logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("infer") => cmd_infer(&args),
+        Some("worker") => cmd_worker(&args),
+        Some("plan") => cmd_plan(&args),
+        Some("experiment") => cmd_experiment(&args),
+        _ => {
+            eprintln!(
+                "usage: cocoi <infer|worker|plan|experiment> [flags]\n\
+                 see rust/src/main.rs header for the full flag list"
+            );
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Local (single-device) CNN execution — the reference the distributed
+//! pipeline must match bit-for-bit up to MDS round-off, and the master's
+//! executor for type-2 layers.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::conv::Tensor;
+
+use super::spec::{ModelSpec, Node, Op};
+use super::weights::WeightStore;
+
+/// Execute one non-conv op (the master-local type-2 work). Conv nodes are
+/// handled by the caller (locally via `ConvSpec::forward` or distributed).
+pub fn execute_simple_op(
+    node: &Node,
+    inputs: &[&Tensor],
+    weights: &WeightStore,
+) -> Result<Tensor> {
+    match &node.op {
+        Op::Conv { .. } => anyhow::bail!("conv node '{}' routed to simple-op executor", node.id),
+        Op::MaxPool { k, s, pad } => Ok(maxpool(inputs[0], *k, *s, *pad)),
+        Op::GlobalAvgPool => Ok(global_avg_pool(inputs[0])),
+        Op::Linear { c_in, c_out, relu } => {
+            let x = inputs[0];
+            ensure!(x.numel() == *c_in, "linear '{}' input mismatch", node.id);
+            let p = weights.get(&node.id)?;
+            let mut out = vec![0.0f32; *c_out];
+            for (o, out_v) in out.iter_mut().enumerate() {
+                let row = &p.weights[o * c_in..(o + 1) * c_in];
+                let mut acc = p.bias[o];
+                for (w, v) in row.iter().zip(&x.data) {
+                    acc += w * v;
+                }
+                *out_v = if *relu { acc.max(0.0) } else { acc };
+            }
+            Tensor::from_vec(*c_out, 1, 1, out)
+        }
+        Op::Add { relu } => {
+            let mut out = inputs[0].add(inputs[1])?;
+            if *relu {
+                out.relu_inplace();
+            }
+            Ok(out)
+        }
+        Op::Relu => {
+            let mut out = inputs[0].clone();
+            out.relu_inplace();
+            Ok(out)
+        }
+    }
+}
+
+/// Max pooling with optional symmetric zero padding (padding uses -inf
+/// semantics: padded cells never win the max — matches torch).
+pub fn maxpool(x: &Tensor, k: usize, s: usize, pad: usize) -> Tensor {
+    let h_o = (x.h + 2 * pad - k) / s + 1;
+    let w_o = (x.w + 2 * pad - k) / s + 1;
+    let mut out = Tensor::zeros(x.c, h_o, w_o);
+    for c in 0..x.c {
+        for oy in 0..h_o {
+            for ox in 0..w_o {
+                let mut m = f32::NEG_INFINITY;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let iy = (oy * s + ky) as isize - pad as isize;
+                        let ix = (ox * s + kx) as isize - pad as isize;
+                        if iy >= 0 && ix >= 0 && (iy as usize) < x.h && (ix as usize) < x.w {
+                            m = m.max(x.at(c, iy as usize, ix as usize));
+                        }
+                    }
+                }
+                *out.at_mut(c, oy, ox) = m;
+            }
+        }
+    }
+    out
+}
+
+/// Global average pooling to `(C, 1, 1)`.
+pub fn global_avg_pool(x: &Tensor) -> Tensor {
+    let plane = (x.h * x.w) as f32;
+    let data = (0..x.c)
+        .map(|c| {
+            x.data[c * x.h * x.w..(c + 1) * x.h * x.w]
+                .iter()
+                .sum::<f32>()
+                / plane
+        })
+        .collect();
+    Tensor::from_vec(x.c, 1, 1, data).unwrap()
+}
+
+/// Run the whole model locally (every layer on this device).
+pub fn forward_local(model: &ModelSpec, weights: &WeightStore, input: &Tensor) -> Result<Tensor> {
+    ensure!(
+        input.shape() == model.input,
+        "input shape {:?} != model input {:?}",
+        input.shape(),
+        model.input
+    );
+    let mut values: BTreeMap<&str, Tensor> = BTreeMap::new();
+    values.insert("input", input.clone());
+    for node in &model.nodes {
+        let fetched: Vec<&Tensor> = node
+            .inputs
+            .iter()
+            .map(|i| values.get(i.as_str()).context("missing value").unwrap())
+            .collect();
+        let out = match &node.op {
+            Op::Conv { spec, relu } => {
+                let p = weights.get(&node.id)?;
+                let mut t = spec.forward(fetched[0], &p.weights, Some(&p.bias))?;
+                if *relu {
+                    t.relu_inplace();
+                }
+                t
+            }
+            _ => execute_simple_op(node, &fetched, weights)?,
+        };
+        values.insert(node.id.as_str(), out);
+    }
+    let last = model.nodes.last().unwrap();
+    Ok(values.remove(last.id.as_str()).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::util::Rng;
+
+    #[test]
+    fn maxpool_basics() {
+        let x = Tensor::from_vec(1, 2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let p = maxpool(&x, 2, 2, 0);
+        assert_eq!(p.shape(), (1, 1, 1));
+        assert_eq!(p.data, vec![4.0]);
+        // Padding never wins over negatives.
+        let neg = Tensor::from_vec(1, 1, 1, vec![-5.0]).unwrap();
+        let padded = maxpool(&neg, 3, 1, 1);
+        assert_eq!(padded.data, vec![-5.0]);
+    }
+
+    #[test]
+    fn gap_means() {
+        let x = Tensor::from_vec(2, 1, 2, vec![1.0, 3.0, 10.0, 20.0]).unwrap();
+        let g = global_avg_pool(&x);
+        assert_eq!(g.data, vec![2.0, 15.0]);
+    }
+
+    #[test]
+    fn tinyvgg_forward_runs() {
+        let m = zoo::model("tinyvgg").unwrap();
+        let w = WeightStore::generate(&m, 3).unwrap();
+        let mut input = Tensor::zeros(3, 56, 56);
+        Rng::new(8).fill_uniform_f32(&mut input.data, -1.0, 1.0);
+        let out = forward_local(&m, &w, &input).unwrap();
+        assert_eq!(out.shape(), (10, 1, 1));
+        assert!(out.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn tinyresnet_forward_runs() {
+        let m = zoo::model("tinyresnet").unwrap();
+        let w = WeightStore::generate(&m, 3).unwrap();
+        let mut input = Tensor::zeros(3, 56, 56);
+        Rng::new(9).fill_uniform_f32(&mut input.data, -1.0, 1.0);
+        let out = forward_local(&m, &w, &input).unwrap();
+        assert_eq!(out.shape(), (10, 1, 1));
+        assert!(out.data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,13 @@
+//! CNN model layer: graph spec (`config/models.json` schema), the
+//! VGG16/ResNet18/Tiny zoo, deterministic weights, local execution, and
+//! the type-1/type-2 distribution plan.
+
+pub mod graph;
+pub mod plan;
+pub mod spec;
+pub mod weights;
+pub mod zoo;
+
+pub use plan::{ConvPlan, ModelPlan};
+pub use spec::{ModelSpec, Node, Op};
+pub use weights::{LayerParams, WeightStore};

@@ -1,0 +1,181 @@
+//! Execution planning: classify each conv layer as type-1 (distribute) or
+//! type-2 (master-local) and choose its split `k` (paper §II-A + App. A:
+//! "a layer is type-1 iff distributed execution can accelerate it").
+
+use anyhow::Result;
+
+use crate::latency::approx::l_integer;
+use crate::latency::phases::LayerDims;
+use crate::latency::SystemProfile;
+use crate::planner::{choose_k, SplitPolicy};
+use crate::util::Rng;
+
+use super::spec::{ModelSpec, Op};
+
+/// Planned treatment of one conv layer.
+#[derive(Clone, Debug)]
+pub struct ConvPlan {
+    pub node_id: String,
+    pub dims: LayerDims,
+    /// Distribute (type-1) or run on the master (type-2).
+    pub distributed: bool,
+    /// Chosen source-piece count (meaningful when `distributed`).
+    pub k: usize,
+    /// Estimated local latency (master executes the full layer).
+    pub est_local: f64,
+    /// Estimated distributed latency at the chosen `k`.
+    pub est_distributed: f64,
+}
+
+/// The whole-model execution plan.
+#[derive(Clone, Debug)]
+pub struct ModelPlan {
+    pub model_name: String,
+    pub n_workers: usize,
+    pub convs: Vec<ConvPlan>,
+}
+
+impl ModelPlan {
+    /// Build a plan: for each conv layer, pick `k` under `policy` and
+    /// distribute iff the estimated distributed latency beats local
+    /// master execution.
+    pub fn build(
+        model: &ModelSpec,
+        profile: &SystemProfile,
+        n_workers: usize,
+        policy: SplitPolicy,
+        rng: &mut Rng,
+    ) -> Result<ModelPlan> {
+        let mut convs = Vec::new();
+        for (node_id, spec, (_, in_h, in_w)) in model.conv_layers()? {
+            let dims = LayerDims::new(spec, in_h, in_w);
+            let k = choose_k(policy, &dims, profile, n_workers, rng);
+            let est_local = profile.local_conv_dist(dims.full_flops()).mean();
+            let est_distributed = l_integer(&dims, profile, n_workers, k);
+            let distributed = est_distributed < est_local;
+            convs.push(ConvPlan {
+                node_id,
+                dims,
+                distributed,
+                k,
+                est_local,
+                est_distributed,
+            });
+        }
+        Ok(ModelPlan {
+            model_name: model.name.clone(),
+            n_workers,
+            convs,
+        })
+    }
+
+    pub fn conv(&self, node_id: &str) -> Option<&ConvPlan> {
+        self.convs.iter().find(|c| c.node_id == node_id)
+    }
+
+    /// Ids of type-1 (distributed) layers — the paper's `L_d` set.
+    pub fn type1_ids(&self) -> Vec<&str> {
+        self.convs
+            .iter()
+            .filter(|c| c.distributed)
+            .map(|c| c.node_id.as_str())
+            .collect()
+    }
+
+    /// Estimated end-to-end conv latency of the plan (sum over layers).
+    pub fn estimated_conv_latency(&self) -> f64 {
+        self.convs
+            .iter()
+            .map(|c| {
+                if c.distributed {
+                    c.est_distributed
+                } else {
+                    c.est_local
+                }
+            })
+            .sum()
+    }
+}
+
+/// Total FLOPs of a model's conv layers vs everything else — App. A's
+/// ">99% of latency is convolution" bottleneck statement.
+pub fn conv_flop_share(model: &ModelSpec) -> Result<f64> {
+    let shapes = model.infer_shapes()?;
+    let mut conv = 0.0;
+    let mut other = 0.0;
+    for node in &model.nodes {
+        let out = shapes[&node.id];
+        match &node.op {
+            Op::Conv { spec, .. } => conv += spec.flops(out.1, out.2),
+            Op::Linear { c_in, c_out, .. } => other += 2.0 * (*c_in * *c_out) as f64,
+            Op::MaxPool { k, .. } => other += (out.0 * out.1 * out.2 * k * k) as f64,
+            Op::GlobalAvgPool | Op::Add { .. } | Op::Relu => {
+                other += (out.0 * out.1 * out.2) as f64
+            }
+        }
+    }
+    Ok(conv / (conv + other))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn conv_dominates_flops_appendix_a() {
+        // App. A: convolution is >99% of inference work on both CNNs.
+        for name in ["vgg16", "resnet18"] {
+            let m = zoo::model(name).unwrap();
+            let share = conv_flop_share(&m).unwrap();
+            assert!(share > 0.99, "{name}: conv share = {share}");
+        }
+    }
+
+    #[test]
+    fn plan_distributes_heavy_layers() {
+        let m = zoo::model("vgg16").unwrap();
+        let p = SystemProfile::paper_default();
+        let mut rng = Rng::new(1);
+        let plan = ModelPlan::build(&m, &p, 10, SplitPolicy::KCircle, &mut rng).unwrap();
+        assert_eq!(plan.convs.len(), 13);
+        // The big mid-network layers must be type-1 under an RPi-class
+        // profile; the paper found all but conv1 distributable for VGG16.
+        let t1 = plan.type1_ids();
+        assert!(t1.len() >= 10, "only {} type-1 layers: {t1:?}", t1.len());
+        for c in &plan.convs {
+            assert!(c.k >= 1 && c.k <= 10);
+        }
+    }
+
+    #[test]
+    fn resnet_downsample_convs_are_light() {
+        // The paper's App. A: some convs (1x1 downsamples) are type-2.
+        let m = zoo::model("resnet18").unwrap();
+        let p = SystemProfile::paper_default();
+        let mut rng = Rng::new(2);
+        let plan = ModelPlan::build(&m, &p, 10, SplitPolicy::KCircle, &mut rng).unwrap();
+        let one_by_one: Vec<&ConvPlan> = plan
+            .convs
+            .iter()
+            .filter(|c| c.dims.spec.k_w == 1)
+            .collect();
+        assert_eq!(one_by_one.len(), 3, "ResNet18 has 3 downsample 1x1 convs");
+        // Their per-FLOP weight is tiny; the planner may or may not
+        // distribute them, but the best possible gain from distributing a
+        // 1x1 downsample must be far below the best 3x3 gain.
+        let max_gain = |pred: &dyn Fn(&ConvPlan) -> bool| {
+            plan.convs
+                .iter()
+                .filter(|c| pred(c))
+                .map(|c| c.est_local - c.est_distributed)
+                .fold(f64::NEG_INFINITY, f64::max)
+        };
+        let best_3x3 = max_gain(&|c| c.dims.spec.k_w == 3);
+        let best_1x1 = max_gain(&|c| c.dims.spec.k_w == 1);
+        assert!(
+            best_3x3 > 10.0 * best_1x1.max(0.0),
+            "best 3x3 gain {best_3x3} vs best 1x1 gain {best_1x1}"
+        );
+    }
+}

@@ -1,0 +1,293 @@
+//! CNN graph representation: a flat, topologically-ordered node list
+//! (DAG — ResNet skip connections reference earlier nodes by id), parsed
+//! from the checked-in `config/models.json` that the python build layer
+//! reads too (single source of truth across languages).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::conv::ConvSpec;
+use crate::util::json::Json;
+
+/// One node of the CNN graph.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    /// 2D convolution (+ optional fused ReLU). Bias always present.
+    Conv { spec: ConvSpec, relu: bool },
+    /// Max pooling (square window).
+    MaxPool { k: usize, s: usize, pad: usize },
+    /// Global average pooling to `(C, 1, 1)`.
+    GlobalAvgPool,
+    /// Fully-connected on the flattened input (+ optional ReLU).
+    Linear { c_in: usize, c_out: usize, relu: bool },
+    /// Element-wise sum of two inputs (ResNet shortcut), then ReLU if set.
+    Add { relu: bool },
+    /// Standalone ReLU.
+    Relu,
+}
+
+/// A named node with its input edges (ids of earlier nodes, or `"input"`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Node {
+    pub id: String,
+    pub op: Op,
+    pub inputs: Vec<String>,
+}
+
+/// A CNN: input shape plus topologically ordered nodes; the last node is
+/// the output.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    /// `(C, H, W)` of the network input.
+    pub input: (usize, usize, usize),
+    pub nodes: Vec<Node>,
+}
+
+impl ModelSpec {
+    /// Parse one model object from the `config/models.json` schema.
+    pub fn from_json(j: &Json) -> Result<ModelSpec> {
+        let name = j.req_str("name")?.to_string();
+        let input = j.req_arr("input")?;
+        ensure!(input.len() == 3, "input shape must be [C, H, W]");
+        let shape = (
+            input[0].as_usize().context("input C")?,
+            input[1].as_usize().context("input H")?,
+            input[2].as_usize().context("input W")?,
+        );
+        let mut nodes = Vec::new();
+        for lj in j.req_arr("layers")? {
+            let id = lj.req_str("id")?.to_string();
+            let op_name = lj.req_str("op")?;
+            let relu = lj.get("relu").as_bool().unwrap_or(false);
+            let op = match op_name {
+                "conv" => Op::Conv {
+                    spec: ConvSpec::new(
+                        lj.req_usize("c_in")?,
+                        lj.req_usize("c_out")?,
+                        lj.req_usize("k")?,
+                        lj.req_usize("s")?,
+                        lj.req_usize("p")?,
+                    ),
+                    relu,
+                },
+                "maxpool" => Op::MaxPool {
+                    k: lj.req_usize("k")?,
+                    s: lj.req_usize("s")?,
+                    pad: lj.get("p").as_usize().unwrap_or(0),
+                },
+                "gap" => Op::GlobalAvgPool,
+                "linear" => Op::Linear {
+                    c_in: lj.req_usize("c_in")?,
+                    c_out: lj.req_usize("c_out")?,
+                    relu,
+                },
+                "add" => Op::Add { relu },
+                "relu" => Op::Relu,
+                other => bail!("unknown op '{other}' in layer '{id}'"),
+            };
+            let inputs: Vec<String> = lj
+                .req_arr("in")?
+                .iter()
+                .map(|x| x.as_str().map(str::to_string).context("input id"))
+                .collect::<Result<_>>()?;
+            nodes.push(Node { id, op, inputs });
+        }
+        let spec = ModelSpec {
+            name,
+            input: shape,
+            nodes,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Structural checks: unique ids, topologically ordered references,
+    /// correct arity per op.
+    pub fn validate(&self) -> Result<()> {
+        let mut seen: BTreeMap<&str, usize> = BTreeMap::new();
+        for (i, node) in self.nodes.iter().enumerate() {
+            ensure!(
+                !seen.contains_key(node.id.as_str()),
+                "duplicate node id '{}'",
+                node.id
+            );
+            let arity = match node.op {
+                Op::Add { .. } => 2,
+                _ => 1,
+            };
+            ensure!(
+                node.inputs.len() == arity,
+                "node '{}' wants {} inputs, has {}",
+                node.id,
+                arity,
+                node.inputs.len()
+            );
+            for input in &node.inputs {
+                ensure!(
+                    input == "input" || seen.contains_key(input.as_str()),
+                    "node '{}' references '{}' which is not defined earlier",
+                    node.id,
+                    input
+                );
+            }
+            seen.insert(&node.id, i);
+        }
+        ensure!(!self.nodes.is_empty(), "model '{}' has no nodes", self.name);
+        Ok(())
+    }
+
+    /// Shape inference: `(C, H, W)` produced by every node (Linear output
+    /// is reported as `(c_out, 1, 1)`).
+    pub fn infer_shapes(&self) -> Result<BTreeMap<String, (usize, usize, usize)>> {
+        let mut shapes: BTreeMap<String, (usize, usize, usize)> = BTreeMap::new();
+        shapes.insert("input".to_string(), self.input);
+        for node in &self.nodes {
+            let of = |name: &str| -> Result<(usize, usize, usize)> {
+                shapes
+                    .get(name)
+                    .copied()
+                    .with_context(|| format!("shape of '{name}'"))
+            };
+            let (c0, h0, w0) = of(&node.inputs[0])?;
+            let out = match &node.op {
+                Op::Conv { spec, .. } => {
+                    ensure!(
+                        c0 == spec.c_in,
+                        "node '{}': input channels {} != {}",
+                        node.id,
+                        c0,
+                        spec.c_in
+                    );
+                    (spec.c_out, spec.out_dim(h0), spec.out_dim(w0))
+                }
+                Op::MaxPool { k, s, pad } => {
+                    let dim = |d: usize| (d + 2 * pad - k) / s + 1;
+                    (c0, dim(h0), dim(w0))
+                }
+                Op::GlobalAvgPool => (c0, 1, 1),
+                Op::Linear { c_in, c_out, .. } => {
+                    ensure!(
+                        c0 * h0 * w0 == *c_in,
+                        "node '{}': flatten {}*{}*{} != c_in {}",
+                        node.id,
+                        c0,
+                        h0,
+                        w0,
+                        c_in
+                    );
+                    (*c_out, 1, 1)
+                }
+                Op::Add { .. } => {
+                    let s1 = of(&node.inputs[1])?;
+                    ensure!(
+                        (c0, h0, w0) == s1,
+                        "node '{}': add shapes differ {:?} vs {:?}",
+                        node.id,
+                        (c0, h0, w0),
+                        s1
+                    );
+                    (c0, h0, w0)
+                }
+                Op::Relu => (c0, h0, w0),
+            };
+            shapes.insert(node.id.clone(), out);
+        }
+        Ok(shapes)
+    }
+
+    /// Ids + conv specs + input shapes of all conv nodes (for the planner).
+    pub fn conv_layers(&self) -> Result<Vec<(String, ConvSpec, (usize, usize, usize))>> {
+        let shapes = self.infer_shapes()?;
+        let mut out = Vec::new();
+        for node in &self.nodes {
+            if let Op::Conv { spec, .. } = &node.op {
+                let in_shape = shapes[&node.inputs[0]];
+                out.push((node.id.clone(), *spec, in_shape));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parameter element counts per node id (weights + bias), for the
+    /// weight store.
+    pub fn param_lens(&self) -> Result<Vec<(String, usize, usize)>> {
+        let mut out = Vec::new();
+        for node in &self.nodes {
+            match &node.op {
+                Op::Conv { spec, .. } => {
+                    out.push((node.id.clone(), spec.weight_len(), spec.c_out))
+                }
+                Op::Linear { c_in, c_out, .. } => {
+                    out.push((node.id.clone(), c_in * c_out, *c_out))
+                }
+                _ => {}
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Parse every model in a `models.json` document.
+pub fn parse_models(doc: &Json) -> Result<Vec<ModelSpec>> {
+    doc.req_arr("models")?.iter().map(ModelSpec::from_json).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_json() -> Json {
+        Json::parse(
+            r#"{
+              "name": "t", "input": [3, 8, 8],
+              "layers": [
+                {"id": "c1", "op": "conv", "c_in": 3, "c_out": 4, "k": 3, "s": 1, "p": 1, "relu": true, "in": ["input"]},
+                {"id": "c2", "op": "conv", "c_in": 4, "c_out": 4, "k": 3, "s": 1, "p": 1, "in": ["c1"]},
+                {"id": "a", "op": "add", "relu": true, "in": ["c1", "c2"]},
+                {"id": "p", "op": "maxpool", "k": 2, "s": 2, "in": ["a"]},
+                {"id": "g", "op": "gap", "in": ["p"]},
+                {"id": "fc", "op": "linear", "c_in": 4, "c_out": 10, "in": ["g"]}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_and_shapes() {
+        let m = ModelSpec::from_json(&tiny_json()).unwrap();
+        let shapes = m.infer_shapes().unwrap();
+        assert_eq!(shapes["c1"], (4, 8, 8));
+        assert_eq!(shapes["a"], (4, 8, 8));
+        assert_eq!(shapes["p"], (4, 4, 4));
+        assert_eq!(shapes["g"], (4, 1, 1));
+        assert_eq!(shapes["fc"], (10, 1, 1));
+        assert_eq!(m.conv_layers().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn rejects_forward_reference() {
+        let j = Json::parse(
+            r#"{"name": "bad", "input": [1, 4, 4], "layers": [
+              {"id": "c1", "op": "conv", "c_in": 1, "c_out": 1, "k": 1, "s": 1, "p": 0, "in": ["c2"]},
+              {"id": "c2", "op": "conv", "c_in": 1, "c_out": 1, "k": 1, "s": 1, "p": 0, "in": ["input"]}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(ModelSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_channel_mismatch() {
+        let j = Json::parse(
+            r#"{"name": "bad", "input": [2, 4, 4], "layers": [
+              {"id": "c1", "op": "conv", "c_in": 3, "c_out": 1, "k": 1, "s": 1, "p": 0, "in": ["input"]}
+            ]}"#,
+        )
+        .unwrap();
+        let m = ModelSpec::from_json(&j).unwrap();
+        assert!(m.infer_shapes().is_err());
+    }
+}

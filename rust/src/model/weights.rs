@@ -1,0 +1,177 @@
+//! Deterministic weight store.
+//!
+//! Weights are generated from a seed derived from `(model, layer-id)` —
+//! every process (and every test) sees identical parameters without any
+//! file exchange. A simple binary format (`.cocow`) supports explicit
+//! save/load for the examples that want a weights file on disk.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::Rng;
+
+use super::spec::ModelSpec;
+
+/// Per-layer parameters: weight tensor (flattened) + bias vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerParams {
+    pub weights: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+/// All parameters of a model, keyed by node id.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WeightStore {
+    pub params: BTreeMap<String, LayerParams>,
+}
+
+/// Stable 64-bit hash of a string (FNV-1a) — seeds per-layer generators.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+impl WeightStore {
+    /// Deterministically initialize every parameterized layer of `model`.
+    /// He-style scaling: uniform in `±sqrt(3 / fan_in)`.
+    pub fn generate(model: &ModelSpec, seed: u64) -> Result<WeightStore> {
+        let mut params = BTreeMap::new();
+        for (id, w_len, b_len) in model.param_lens()? {
+            let mut rng = Rng::new(seed ^ fnv1a(&format!("{}/{}", model.name, id)));
+            let fan_in = (w_len / b_len.max(1)).max(1);
+            let bound = (3.0 / fan_in as f32).sqrt();
+            let mut weights = vec![0.0f32; w_len];
+            rng.fill_uniform_f32(&mut weights, -bound, bound);
+            let mut bias = vec![0.0f32; b_len];
+            rng.fill_uniform_f32(&mut bias, -0.05, 0.05);
+            params.insert(id, LayerParams { weights, bias });
+        }
+        Ok(WeightStore { params })
+    }
+
+    pub fn get(&self, id: &str) -> Result<&LayerParams> {
+        self.params
+            .get(id)
+            .with_context(|| format!("no parameters for layer '{id}'"))
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.params
+            .values()
+            .map(|p| p.weights.len() + p.bias.len())
+            .sum()
+    }
+
+    // ---- binary save/load (.cocow) --------------------------------------
+    // Format: magic "COCW1\n", then per layer:
+    //   u32 id_len, id bytes, u64 w_len, u64 b_len, f32 LE data.
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"COCW1\n")?;
+        for (id, p) in &self.params {
+            f.write_all(&(id.len() as u32).to_le_bytes())?;
+            f.write_all(id.as_bytes())?;
+            f.write_all(&(p.weights.len() as u64).to_le_bytes())?;
+            f.write_all(&(p.bias.len() as u64).to_le_bytes())?;
+            for v in &p.weights {
+                f.write_all(&v.to_le_bytes())?;
+            }
+            for v in &p.bias {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<WeightStore> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 6];
+        f.read_exact(&mut magic)?;
+        ensure!(&magic == b"COCW1\n", "bad weight file magic");
+        let mut params = BTreeMap::new();
+        loop {
+            let mut len4 = [0u8; 4];
+            match f.read_exact(&mut len4) {
+                Ok(()) => {}
+                Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+                Err(e) => bail!("reading weight file: {e}"),
+            }
+            let id_len = u32::from_le_bytes(len4) as usize;
+            ensure!(id_len < 4096, "implausible id length {id_len}");
+            let mut id_bytes = vec![0u8; id_len];
+            f.read_exact(&mut id_bytes)?;
+            let id = String::from_utf8(id_bytes).context("weight id utf8")?;
+            let mut len8 = [0u8; 8];
+            f.read_exact(&mut len8)?;
+            let w_len = u64::from_le_bytes(len8) as usize;
+            f.read_exact(&mut len8)?;
+            let b_len = u64::from_le_bytes(len8) as usize;
+            let read_f32s = |f: &mut dyn Read, n: usize| -> Result<Vec<f32>> {
+                let mut buf = vec![0u8; n * 4];
+                f.read_exact(&mut buf)?;
+                Ok(buf
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect())
+            };
+            let weights = read_f32s(&mut f, w_len)?;
+            let bias = read_f32s(&mut f, b_len)?;
+            params.insert(id, LayerParams { weights, bias });
+        }
+        Ok(WeightStore { params })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let m = zoo::model("tinyvgg").unwrap();
+        let a = WeightStore::generate(&m, 42).unwrap();
+        let b = WeightStore::generate(&m, 42).unwrap();
+        assert_eq!(a, b);
+        let c = WeightStore::generate(&m, 43).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let m = zoo::model("tinyresnet").unwrap();
+        let w = WeightStore::generate(&m, 7).unwrap();
+        let dir = std::env::temp_dir().join("cocoi_test_weights");
+        let path = dir.join("tinyresnet.cocow");
+        w.save(&path).unwrap();
+        let loaded = WeightStore::load(&path).unwrap();
+        assert_eq!(w, loaded);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn every_conv_and_linear_has_params() {
+        let m = zoo::model("tinyvgg").unwrap();
+        let w = WeightStore::generate(&m, 1).unwrap();
+        for (id, w_len, b_len) in m.param_lens().unwrap() {
+            let p = w.get(&id).unwrap();
+            assert_eq!(p.weights.len(), w_len);
+            assert_eq!(p.bias.len(), b_len);
+        }
+        assert!(w.num_params() > 10_000);
+    }
+}

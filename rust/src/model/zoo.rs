@@ -1,0 +1,98 @@
+//! Model zoo: VGG16 / ResNet18 (full-scale, for the latency model and DES
+//! figures) and TinyVGG / TinyResNet (executed end-to-end on this
+//! testbed). The canonical definition is `config/models.json` — shared
+//! with `python/compile/models_zoo.py` — and baked into the binary at
+//! compile time so the planner works without any filesystem setup.
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::spec::{parse_models, ModelSpec};
+
+/// The checked-in zoo document (see `tools/gen_models_json.py`).
+pub const MODELS_JSON: &str = include_str!("../../../config/models.json");
+
+/// All models in the zoo.
+pub fn all_models() -> Result<Vec<ModelSpec>> {
+    let doc = Json::parse(MODELS_JSON).context("parsing embedded models.json")?;
+    parse_models(&doc)
+}
+
+/// Look up one model by name.
+pub fn model(name: &str) -> Result<ModelSpec> {
+    all_models()?
+        .into_iter()
+        .find(|m| m.name == name)
+        .with_context(|| format!("unknown model '{name}' (see config/models.json)"))
+}
+
+/// Load a zoo document from an explicit path (overrides the embedded one).
+pub fn model_from_file(path: &std::path::Path, name: &str) -> Result<ModelSpec> {
+    let doc = Json::parse_file(path)?;
+    parse_models(&doc)?
+        .into_iter()
+        .find(|m| m.name == name)
+        .with_context(|| format!("model '{name}' not in {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_parses_and_validates() {
+        let models = all_models().unwrap();
+        let names: Vec<&str> = models.iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(names, vec!["vgg16", "resnet18", "tinyvgg", "tinyresnet"]);
+        for m in &models {
+            m.infer_shapes().unwrap();
+        }
+    }
+
+    #[test]
+    fn vgg16_structure_matches_paper() {
+        let m = model("vgg16").unwrap();
+        let convs = m.conv_layers().unwrap();
+        assert_eq!(convs.len(), 13, "VGG16 has 13 conv layers");
+        // All 3x3 stride 1 pad 1.
+        assert!(convs.iter().all(|(_, s, _)| s.k_w == 3 && s.s_w == 1 && s.pad == 1));
+        // Feature map halves five times: final conv input is 14x14.
+        let shapes = m.infer_shapes().unwrap();
+        assert_eq!(shapes["conv13"], (512, 14, 14));
+    }
+
+    #[test]
+    fn resnet18_structure_matches_paper() {
+        let m = model("resnet18").unwrap();
+        let convs = m.conv_layers().unwrap();
+        assert_eq!(convs.len(), 20, "ResNet18 table has 20 convs incl. downsamples");
+        let shapes = m.infer_shapes().unwrap();
+        // Stem: 224 -> 112, pool -> 56.
+        assert_eq!(shapes["conv1"], (64, 112, 112));
+        assert_eq!(shapes["pool1"], (64, 56, 56));
+        // Final stage produces 512x7x7.
+        let last_add = m
+            .nodes
+            .iter()
+            .rev()
+            .find(|n| matches!(n.op, super::super::spec::Op::Add { .. }))
+            .unwrap();
+        assert_eq!(shapes[&last_add.id], (512, 7, 7));
+        assert_eq!(shapes["fc"], (1000, 1, 1));
+    }
+
+    #[test]
+    fn tiny_models_are_small() {
+        for name in ["tinyvgg", "tinyresnet"] {
+            let m = model(name).unwrap();
+            let params: usize = m
+                .param_lens()
+                .unwrap()
+                .iter()
+                .map(|(_, w, b)| w + b)
+                .sum();
+            assert!(params < 2_000_000, "{name} has {params} params");
+        }
+    }
+}

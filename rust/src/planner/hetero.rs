@@ -1,0 +1,195 @@
+//! Heterogeneous-worker allocation — the paper's §VI future-work item
+//! ("optimize the subtask allocation across heterogeneous workers").
+//!
+//! With an MDS code the source pieces must stay equal-sized, so the
+//! heterogeneity lever is *which* workers participate and how much
+//! redundancy to carry: a chronically slow device can contribute less
+//! than it costs (it drags the k-th order statistic once `n − k` faster
+//! workers are exhausted). We solve
+//!
+//! ```text
+//! min over (S ⊆ workers, k ≤ |S|)   E[T^c(S, k)]
+//! ```
+//!
+//! by Monte-Carlo over the non-iid per-worker distributions (closed forms
+//! do not exist for non-iid order statistics of sums), searching subsets
+//! in fastest-first order — the optimal subset under monotone speeds is a
+//! prefix of the speed-sorted worker list.
+
+use crate::latency::phases::LayerDims;
+use crate::latency::SystemProfile;
+use crate::util::Rng;
+
+/// Per-worker speed multipliers (1.0 = the profile's nominal device;
+/// larger = slower). `cmp` scales compute, `tr` scales both transfers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WorkerSpeed {
+    pub cmp: f64,
+    pub tr: f64,
+}
+
+impl WorkerSpeed {
+    pub fn nominal() -> WorkerSpeed {
+        WorkerSpeed { cmp: 1.0, tr: 1.0 }
+    }
+
+    pub fn slow(factor: f64) -> WorkerSpeed {
+        WorkerSpeed {
+            cmp: factor,
+            tr: factor,
+        }
+    }
+
+    /// Sort key: expected per-unit cost (compute-dominated workloads).
+    fn mean_cost(&self) -> f64 {
+        self.cmp + 0.25 * self.tr
+    }
+}
+
+/// The chosen allocation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HeteroPlan {
+    /// Indices of the selected workers (into the input slice).
+    pub workers: Vec<usize>,
+    pub k: usize,
+    /// Monte-Carlo estimate of the expected layer latency.
+    pub expected_latency: f64,
+}
+
+/// MC estimate of `E[T^c]` for one layer over a concrete worker subset.
+pub fn expected_latency_subset(
+    dims: &LayerDims,
+    profile: &SystemProfile,
+    speeds: &[WorkerSpeed],
+    subset: &[usize],
+    k: usize,
+    samples: usize,
+    rng: &mut Rng,
+) -> f64 {
+    let n = subset.len();
+    assert!(k >= 1 && k <= n);
+    let rec = profile.rec_dist(dims, k);
+    let cmp = profile.cmp_dist(dims, k);
+    let sen = profile.sen_dist(dims, k);
+    let enc = profile.enc_dist(dims, n, k);
+    let dec = profile.dec_dist(dims, k);
+
+    let mut worker = vec![0.0f64; n];
+    let mut total = 0.0;
+    for _ in 0..samples {
+        for (slot, &w) in worker.iter_mut().zip(subset) {
+            let s = speeds[w];
+            *slot = rec.sample(rng) * s.tr + cmp.sample(rng) * s.cmp + sen.sample(rng) * s.tr;
+        }
+        worker.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        total += enc.sample(rng) + worker[k - 1] + dec.sample(rng);
+    }
+    total / samples as f64
+}
+
+/// Jointly choose the worker subset (fastest-first prefixes) and `k`.
+pub fn optimize(
+    dims: &LayerDims,
+    profile: &SystemProfile,
+    speeds: &[WorkerSpeed],
+    samples: usize,
+    rng: &mut Rng,
+) -> HeteroPlan {
+    assert!(!speeds.is_empty());
+    // Fastest-first ordering.
+    let mut order: Vec<usize> = (0..speeds.len()).collect();
+    order.sort_by(|&a, &b| {
+        speeds[a]
+            .mean_cost()
+            .partial_cmp(&speeds[b].mean_cost())
+            .unwrap()
+    });
+
+    let mut best = HeteroPlan {
+        workers: vec![order[0]],
+        k: 1,
+        expected_latency: f64::INFINITY,
+    };
+    for m in 1..=order.len() {
+        let subset = &order[..m];
+        let k_cap = m.min(dims.w_o);
+        for k in 1..=k_cap {
+            let est =
+                expected_latency_subset(dims, profile, speeds, subset, k, samples, rng);
+            if est < best.expected_latency {
+                best = HeteroPlan {
+                    workers: subset.to_vec(),
+                    k,
+                    expected_latency: est,
+                };
+            }
+        }
+    }
+    best.workers.sort_unstable();
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvSpec;
+    use crate::planner::montecarlo;
+
+    fn dims() -> LayerDims {
+        LayerDims::new(ConvSpec::new(64, 64, 3, 1, 1), 56, 56)
+    }
+
+    #[test]
+    fn homogeneous_reduces_to_standard_k_star() {
+        let d = dims();
+        let p = SystemProfile::paper_default();
+        let speeds = vec![WorkerSpeed::nominal(); 8];
+        let mut rng = Rng::new(4);
+        let plan = optimize(&d, &p, &speeds, 6_000, &mut rng);
+        // All equal workers: use everyone; k matches the iid MC optimum ±1.
+        assert_eq!(plan.workers.len(), 8);
+        let (k_star, _) = montecarlo::optimal_k_star(&d, &p, 8, 12_000, &mut rng);
+        assert!(
+            (plan.k as isize - k_star as isize).abs() <= 1,
+            "hetero k={} vs iid k*={k_star}",
+            plan.k
+        );
+    }
+
+    #[test]
+    fn excludes_a_chronic_straggler_when_it_pays() {
+        let d = dims();
+        let p = SystemProfile::paper_default();
+        // Worker 0 is 8x slower than the rest.
+        let mut speeds = vec![WorkerSpeed::nominal(); 6];
+        speeds[0] = WorkerSpeed::slow(8.0);
+        let mut rng = Rng::new(5);
+        let plan = optimize(&d, &p, &speeds, 6_000, &mut rng);
+        assert!(
+            !plan.workers.contains(&0),
+            "the 8x straggler should be excluded: {plan:?}"
+        );
+        // And the chosen plan must beat naively using all 6 at any k.
+        let all: Vec<usize> = (0..6).collect();
+        let naive_best = (1..=6)
+            .map(|k| expected_latency_subset(&d, &p, &speeds, &all, k, 6_000, &mut rng))
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            plan.expected_latency <= naive_best * 1.02,
+            "hetero plan {:.3}s vs naive-all best {naive_best:.3}s",
+            plan.expected_latency
+        );
+    }
+
+    #[test]
+    fn mildly_slow_worker_is_kept_as_redundancy() {
+        let d = dims();
+        let p = SystemProfile::paper_default();
+        // 1.3x slower is still useful redundancy under straggling.
+        let mut speeds = vec![WorkerSpeed::nominal(); 6];
+        speeds[5] = WorkerSpeed::slow(1.3);
+        let mut rng = Rng::new(6);
+        let plan = optimize(&d, &p, &speeds, 6_000, &mut rng);
+        assert!(plan.workers.contains(&5), "mild slowdown should stay: {plan:?}");
+    }
+}

@@ -1,0 +1,98 @@
+//! Optimal-splitting planner (paper §IV): the Monte-Carlo exact optimum
+//! `k*` (problem 13), the approximate convex optimum `k°` (problem 17),
+//! parameter sensitivity (Prop. 1), and the per-model split plan the
+//! coordinator consumes.
+
+pub mod hetero;
+pub mod montecarlo;
+pub mod sensitivity;
+pub mod solver;
+
+pub use sensitivity::Param;
+pub use solver::{solve_k_circ, KCircle};
+
+use crate::latency::phases::LayerDims;
+use crate::latency::SystemProfile;
+use crate::util::Rng;
+
+/// How the per-layer `k` is chosen.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitPolicy {
+    /// Approximate optimum `k°` from the convex relaxation (default).
+    KCircle,
+    /// Monte-Carlo `k*` with the given sample budget (slow, exact-ish).
+    KStar { samples: usize },
+    /// Fixed k for every layer (benchmarks: uncoded uses `n`, replication
+    /// `n/2`, etc.).
+    Fixed(usize),
+}
+
+/// Choose `k` for one layer under a policy.
+pub fn choose_k(
+    policy: SplitPolicy,
+    dims: &LayerDims,
+    profile: &SystemProfile,
+    n: usize,
+    rng: &mut Rng,
+) -> usize {
+    let cap = n.min(dims.w_o);
+    match policy {
+        SplitPolicy::KCircle => solve_k_circ(dims, profile, n).k,
+        SplitPolicy::KStar { samples } => {
+            montecarlo::optimal_k_star(dims, profile, n, samples, rng).0
+        }
+        SplitPolicy::Fixed(k) => k.clamp(1, cap),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvSpec;
+
+    /// App. D headline: "in most cases the difference of k* and k° does
+    /// not exceed 1". We assert gap ≤ 1 in most of a 3×3 profile grid and
+    /// never worse than 2 (the paper's Fig. 9a shows gaps up to ~2 in the
+    /// weak-straggling corner).
+    #[test]
+    fn k_star_vs_k_circ_gap_small() {
+        let dims = LayerDims::new(ConvSpec::new(64, 64, 3, 1, 1), 56, 56);
+        let n = 10;
+        let mut rng = Rng::new(99);
+        let mut within_one = 0;
+        let mut total = 0;
+        for cmp_scale in [0.1, 1.0, 10.0] {
+            for tr_scale in [0.1, 1.0, 10.0] {
+                let mut p = SystemProfile::paper_default();
+                p.mu_cmp *= cmp_scale;
+                p.mu_rec *= tr_scale;
+                p.mu_sen *= tr_scale;
+                let k_circ = solve_k_circ(&dims, &p, n).k;
+                let (k_star, _) =
+                    montecarlo::optimal_k_star(&dims, &p, n, 12_000, &mut rng);
+                let gap = (k_star as isize - k_circ as isize).abs();
+                assert!(
+                    gap <= 3,
+                    "cmp×{cmp_scale} tr×{tr_scale}: k*={k_star} k°={k_circ}"
+                );
+                if gap <= 1 {
+                    within_one += 1;
+                }
+                total += 1;
+            }
+        }
+        assert!(
+            within_one * 5 >= total * 3,
+            "gap ≤ 1 in only {within_one}/{total} cases"
+        );
+    }
+
+    #[test]
+    fn fixed_policy_clamps() {
+        let dims = LayerDims::new(ConvSpec::new(4, 4, 3, 1, 0), 8, 8);
+        let p = SystemProfile::paper_default();
+        let mut rng = Rng::new(1);
+        assert_eq!(choose_k(SplitPolicy::Fixed(100), &dims, &p, 10, &mut rng), 6); // W_O = 6
+        assert_eq!(choose_k(SplitPolicy::Fixed(0), &dims, &p, 10, &mut rng), 1);
+    }
+}

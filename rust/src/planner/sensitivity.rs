@@ -1,0 +1,164 @@
+//! Proposition 1: how system parameters move the approximate optimum
+//! `k̂°`. Exposed as sweep helpers (Fig. 10) plus numeric monotonicity
+//! checks in tests.
+
+use crate::latency::phases::LayerDims;
+use crate::latency::SystemProfile;
+
+use super::solver::solve_k_circ;
+
+/// Which profile coefficient a sweep perturbs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Param {
+    MuM,
+    ThetaM,
+    MuCmp,
+    ThetaCmp,
+    MuRec,
+    ThetaRec,
+    MuSen,
+    ThetaSen,
+    /// μ^rec and μ^sen together (the paper's `μ_tr`).
+    MuTr,
+    /// θ^rec and θ^sen together.
+    ThetaTr,
+}
+
+impl Param {
+    pub fn apply(&self, base: &SystemProfile, value: f64) -> SystemProfile {
+        let mut p = *base;
+        match self {
+            Param::MuM => p.mu_m = value,
+            Param::ThetaM => p.theta_m = value,
+            Param::MuCmp => p.mu_cmp = value,
+            Param::ThetaCmp => p.theta_cmp = value,
+            Param::MuRec => p.mu_rec = value,
+            Param::ThetaRec => p.theta_rec = value,
+            Param::MuSen => p.mu_sen = value,
+            Param::ThetaSen => p.theta_sen = value,
+            Param::MuTr => {
+                p.mu_rec = value;
+                p.mu_sen = value;
+            }
+            Param::ThetaTr => {
+                p.theta_rec = value;
+                p.theta_sen = value;
+            }
+        }
+        p
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Param::MuM => "mu_m",
+            Param::ThetaM => "theta_m",
+            Param::MuCmp => "mu_cmp",
+            Param::ThetaCmp => "theta_cmp",
+            Param::MuRec => "mu_rec",
+            Param::ThetaRec => "theta_rec",
+            Param::MuSen => "mu_sen",
+            Param::ThetaSen => "theta_sen",
+            Param::MuTr => "mu_tr",
+            Param::ThetaTr => "theta_tr",
+        }
+    }
+}
+
+/// Sweep one parameter over `values`, returning `(value, k°)` pairs.
+pub fn sweep_k_circ(
+    dims: &LayerDims,
+    base: &SystemProfile,
+    n: usize,
+    param: Param,
+    values: &[f64],
+) -> Vec<(f64, usize)> {
+    values
+        .iter()
+        .map(|&v| (v, solve_k_circ(dims, &param.apply(base, v), n).k))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvSpec;
+
+    fn dims() -> LayerDims {
+        LayerDims::new(ConvSpec::new(128, 128, 3, 1, 1), 112, 112)
+    }
+
+    fn is_nondecreasing(xs: &[(f64, usize)]) -> bool {
+        xs.windows(2).all(|w| w[0].1 <= w[1].1)
+    }
+
+    fn is_nonincreasing(xs: &[(f64, usize)]) -> bool {
+        xs.windows(2).all(|w| w[0].1 >= w[1].1)
+    }
+
+    fn logspace(lo: f64, hi: f64, steps: usize) -> Vec<f64> {
+        (0..steps)
+            .map(|i| lo * (hi / lo).powf(i as f64 / (steps - 1) as f64))
+            .collect()
+    }
+
+    /// Prop. 1(i): k̂° increases in every worker straggler coefficient μ.
+    #[test]
+    fn prop1_mu_worker_monotone() {
+        let d = dims();
+        let base = SystemProfile::paper_default();
+        let n = 10;
+        for param in [Param::MuCmp, Param::MuTr] {
+            let vals = logspace(1e6, 1e10, 9);
+            let sweep = sweep_k_circ(&d, &base, n, param, &vals);
+            assert!(
+                is_nondecreasing(&sweep),
+                "{}: {:?}",
+                param.name(),
+                sweep
+            );
+        }
+    }
+
+    /// Prop. 1(ii): k̂° increases in worker shift coefficients θ.
+    #[test]
+    fn prop1_theta_worker_monotone() {
+        let d = dims();
+        let base = SystemProfile::paper_default();
+        let n = 10;
+        for param in [Param::ThetaCmp, Param::ThetaTr] {
+            let lo = match param {
+                Param::ThetaCmp => 1e-10,
+                _ => 1e-9,
+            };
+            let vals = logspace(lo, lo * 1e4, 9);
+            let sweep = sweep_k_circ(&d, &base, n, param, &vals);
+            assert!(
+                is_nondecreasing(&sweep),
+                "{}: {:?}",
+                param.name(),
+                sweep
+            );
+        }
+    }
+
+    /// Prop. 1(iii): a weaker master (larger θ^m, smaller μ^m) ⇒ smaller k̂°.
+    #[test]
+    fn prop1_master_monotone() {
+        let d = dims();
+        let base = SystemProfile::paper_default();
+        let n = 10;
+        let theta_sweep = sweep_k_circ(&d, &base, n, Param::ThetaM, &logspace(1e-11, 1e-7, 9));
+        assert!(is_nonincreasing(&theta_sweep), "theta_m: {theta_sweep:?}");
+        let mu_sweep = sweep_k_circ(&d, &base, n, Param::MuM, &logspace(1e7, 1e11, 9));
+        assert!(is_nondecreasing(&mu_sweep), "mu_m: {mu_sweep:?}");
+    }
+
+    /// App. E: larger n gives a (weakly) larger optimal split.
+    #[test]
+    fn k_circ_grows_with_n() {
+        let d = dims();
+        let p = SystemProfile::paper_default();
+        let ks: Vec<usize> = (4..=16).map(|n| solve_k_circ(&d, &p, n).k).collect();
+        assert!(ks.windows(2).all(|w| w[0] <= w[1]), "{ks:?}");
+    }
+}

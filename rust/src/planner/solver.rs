@@ -1,0 +1,158 @@
+//! The approximate optimal splitting strategy `k°` (problem 17).
+//!
+//! Lemma 1 proves `L(k)` convex on `[1, n)`; the paper solves the relaxed
+//! problem with CVX and rounds. We golden-section-search the relaxation
+//! (no solver dependency) and compare `L(⌊k'⌋)` vs `L(⌈k'⌉)` — plus `L(n)`
+//! (the no-redundancy corner the relaxation excludes), so `k° = n` is
+//! still reachable when redundancy cannot pay for itself.
+
+use crate::latency::approx::{l_integer, l_relaxed};
+use crate::latency::phases::LayerDims;
+use crate::latency::SystemProfile;
+
+/// Result of the approximate solve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KCircle {
+    /// Relaxed optimum `k̂°` in `[1, n)`.
+    pub k_relaxed: f64,
+    /// Integer `k°` after rounding + the `k = n` corner check.
+    pub k: usize,
+    /// `L(k°)` under the integer (harmonic) form.
+    pub l_value: f64,
+}
+
+/// Golden-section minimization of a unimodal function on `[lo, hi]`.
+pub fn golden_section<F: Fn(f64) -> f64>(f: F, mut lo: f64, mut hi: f64, tol: f64) -> f64 {
+    const INV_PHI: f64 = 0.618_033_988_749_894_8;
+    let mut x1 = hi - INV_PHI * (hi - lo);
+    let mut x2 = lo + INV_PHI * (hi - lo);
+    let mut f1 = f(x1);
+    let mut f2 = f(x2);
+    while hi - lo > tol {
+        if f1 < f2 {
+            hi = x2;
+            x2 = x1;
+            f2 = f1;
+            x1 = hi - INV_PHI * (hi - lo);
+            f1 = f(x1);
+        } else {
+            lo = x1;
+            x1 = x2;
+            f1 = f2;
+            x2 = lo + INV_PHI * (hi - lo);
+            f2 = f(x2);
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Solve problem (17) for one layer: the approximate optimal `k°`.
+pub fn solve_k_circ(dims: &LayerDims, profile: &SystemProfile, n: usize) -> KCircle {
+    assert!(n >= 1);
+    let k_cap = n.min(dims.w_o); // cannot split finer than output columns
+    if k_cap == 1 || n < 3 {
+        // Degenerate: only k = 1 (or Lemma 1's n ≥ 3 premise fails —
+        // enumerate the handful of candidates directly).
+        let (k, l) = (1..=k_cap)
+            .map(|k| (k, l_integer(dims, profile, n, k)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        return KCircle {
+            k_relaxed: k as f64,
+            k,
+            l_value: l,
+        };
+    }
+
+    // Relaxed convex problem on [1, n): k' = argmin L(k).
+    let hi = (n as f64 - 1e-6).min(k_cap as f64);
+    let k_relaxed = golden_section(|k| l_relaxed(dims, profile, n, k), 1.0, hi, 1e-6);
+
+    // Integer rounding (⌊k'⌋ vs ⌈k'⌉), plus the k = n corner.
+    let mut candidates = vec![
+        (k_relaxed.floor() as usize).clamp(1, k_cap),
+        (k_relaxed.ceil() as usize).clamp(1, k_cap),
+    ];
+    if k_cap == n {
+        candidates.push(n);
+    }
+    candidates.sort_unstable();
+    candidates.dedup();
+    let (k, l_value) = candidates
+        .into_iter()
+        .map(|k| (k, l_integer(dims, profile, n, k)))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+
+    KCircle {
+        k_relaxed,
+        k,
+        l_value,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvSpec;
+
+    fn dims() -> LayerDims {
+        LayerDims::new(ConvSpec::new(64, 64, 3, 1, 1), 56, 56)
+    }
+
+    #[test]
+    fn golden_section_finds_parabola_min() {
+        let m = golden_section(|x| (x - 2.75).powi(2), 0.0, 10.0, 1e-9);
+        assert!((m - 2.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn k_circ_is_integer_argmin_of_l() {
+        // Rounded answer must beat every other integer k (convexity ⇒
+        // checking all k is a valid oracle).
+        let d = dims();
+        for scale in [0.05, 0.3, 1.0, 3.0, 20.0] {
+            let mut p = SystemProfile::paper_default();
+            p.mu_cmp *= scale;
+            p.mu_rec *= scale;
+            p.mu_sen *= scale;
+            let n = 10;
+            let sol = solve_k_circ(&d, &p, n);
+            let brute = (1..=n)
+                .map(|k| (k, l_integer(&d, &p, n, k)))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            assert_eq!(sol.k, brute.0, "scale={scale}: {sol:?} vs brute {brute:?}");
+        }
+    }
+
+    #[test]
+    fn heavy_straggling_pushes_k_down() {
+        let d = dims();
+        let n = 10;
+        let mut weak = SystemProfile::paper_default();
+        weak.mu_cmp *= 100.0;
+        weak.mu_rec *= 100.0;
+        weak.mu_sen *= 100.0; // almost deterministic workers
+        let mut heavy = SystemProfile::paper_default();
+        heavy.mu_cmp /= 100.0;
+        heavy.mu_rec /= 100.0;
+        heavy.mu_sen /= 100.0; // extreme straggling
+        let k_weak = solve_k_circ(&d, &weak, n).k;
+        let k_heavy = solve_k_circ(&d, &heavy, n).k;
+        assert!(
+            k_heavy < k_weak,
+            "heavy straggling should reduce k: {k_heavy} !< {k_weak}"
+        );
+    }
+
+    #[test]
+    fn narrow_output_caps_k() {
+        // A layer with 4 output columns cannot split more than 4 ways.
+        let d = LayerDims::new(ConvSpec::new(8, 8, 3, 1, 0), 6, 6);
+        assert_eq!(d.w_o, 4);
+        let p = SystemProfile::paper_default();
+        let sol = solve_k_circ(&d, &p, 10);
+        assert!(sol.k <= 4);
+    }
+}

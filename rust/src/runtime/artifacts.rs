@@ -1,0 +1,158 @@
+//! AOT artifact discovery: `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) mapped to typed entries, with shape-keyed
+//! lookup for conv subtasks.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape key identifying a conv-subtask artifact (layer-agnostic: two
+/// layers with the same geometry share one executable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ConvKey {
+    pub c_in: usize,
+    pub c_out: usize,
+    pub k_w: usize,
+    pub s_w: usize,
+    pub h_i: usize,
+    pub w_i_p: usize,
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub enum Artifact {
+    ConvSubtask { key: ConvKey, file: PathBuf },
+    GemmTile { m: usize, k: usize, n: usize, file: PathBuf },
+    Encode { n: usize, k: usize, m_len: usize, file: PathBuf },
+}
+
+/// Parsed manifest with lookup indices.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub conv: BTreeMap<ConvKey, PathBuf>,
+    pub gemm: Vec<(usize, usize, usize, PathBuf)>,
+    pub encode: Vec<(usize, usize, usize, PathBuf)>,
+}
+
+/// Artifact directory: `$COCOI_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("COCOI_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`. Missing manifest is an error — callers
+    /// that want graceful degradation use [`Manifest::load_or_empty`].
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let doc = Json::parse_file(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let mut m = Manifest {
+            dir: dir.to_path_buf(),
+            ..Default::default()
+        };
+        for a in doc.req_arr("artifacts")? {
+            let file = dir.join(a.req_str("file")?);
+            match a.req_str("kind")? {
+                "conv_subtask" => {
+                    let key = ConvKey {
+                        c_in: a.req_usize("c_in")?,
+                        c_out: a.req_usize("c_out")?,
+                        k_w: a.req_usize("k_w")?,
+                        s_w: a.req_usize("s_w")?,
+                        h_i: a.req_usize("h_i")?,
+                        w_i_p: a.req_usize("w_i_p")?,
+                    };
+                    m.conv.insert(key, file);
+                }
+                "gemm_tile" => m.gemm.push((
+                    a.req_usize("m")?,
+                    a.req_usize("k")?,
+                    a.req_usize("n")?,
+                    file,
+                )),
+                "encode" => m.encode.push((
+                    a.req_usize("n")?,
+                    a.req_usize("k")?,
+                    a.req_usize("m_len")?,
+                    file,
+                )),
+                other => anyhow::bail!("unknown artifact kind '{other}'"),
+            }
+        }
+        Ok(m)
+    }
+
+    /// Load if present; empty manifest (pure-rust fallback only) if not.
+    pub fn load_or_empty(dir: &Path) -> Manifest {
+        match Self::load(dir) {
+            Ok(m) => m,
+            Err(e) => {
+                log::warn!("no artifact manifest ({e:#}); using fallback provider only");
+                Manifest {
+                    dir: dir.to_path_buf(),
+                    ..Default::default()
+                }
+            }
+        }
+    }
+
+    pub fn conv_artifact(&self, key: &ConvKey) -> Option<&PathBuf> {
+        self.conv.get(key)
+    }
+
+    /// Largest gemm tile (the provider pads up to it).
+    pub fn best_gemm_tile(&self) -> Option<(usize, usize, usize, &PathBuf)> {
+        self.gemm
+            .iter()
+            .max_by_key(|(m, k, n, _)| m * k * n)
+            .map(|(m, k, n, p)| (*m, *k, *n, p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_synthetic_manifest() {
+        let dir = std::env::temp_dir().join("cocoi_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "n_workers": 6, "artifacts": [
+              {"kind": "conv_subtask", "name": "c", "file": "c.hlo.txt",
+               "c_in": 3, "c_out": 8, "k_w": 3, "s_w": 1, "h_i": 10, "w_i_p": 7,
+               "h_o": 8, "w_o_p": 5, "uses": []},
+              {"kind": "gemm_tile", "name": "g", "file": "g.hlo.txt",
+               "m": 128, "k": 128, "n": 128},
+              {"kind": "encode", "name": "e", "file": "e.hlo.txt",
+               "n": 6, "k": 3, "m_len": 8192}
+            ]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let key = ConvKey {
+            c_in: 3,
+            c_out: 8,
+            k_w: 3,
+            s_w: 1,
+            h_i: 10,
+            w_i_p: 7,
+        };
+        assert!(m.conv_artifact(&key).is_some());
+        assert_eq!(m.best_gemm_tile().unwrap().0, 128);
+        assert_eq!(m.encode.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_degrades_to_empty() {
+        let m = Manifest::load_or_empty(Path::new("/nonexistent/xyz"));
+        assert!(m.conv.is_empty());
+    }
+}

@@ -1,0 +1,11 @@
+//! Runtime: loads the python-AOT HLO-text artifacts through PJRT and
+//! exposes conv execution providers to the coordinator. Python never runs
+//! here — the rust binary is self-contained once `artifacts/` exists.
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod provider;
+
+pub use artifacts::{ConvKey, Manifest};
+pub use pjrt::{PjrtHandle, PjrtService, RuntimeStats};
+pub use provider::{ConvProvider, FallbackProvider, PjrtProvider};

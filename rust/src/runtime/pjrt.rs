@@ -1,0 +1,215 @@
+//! PJRT runtime service.
+//!
+//! The `xla` crate's client/executable wrappers hold raw C++ pointers and
+//! are not `Send`; a dedicated **service thread** owns the `PjRtClient`
+//! and the compiled-executable cache, and worker threads talk to it
+//! through a channel. On this 1-core testbed PJRT executions serialize
+//! anyway, so the service thread costs nothing and keeps ownership sound.
+//!
+//! Artifacts are HLO *text* (`HloModuleProto::from_text_file`), compiled
+//! on first use and cached by path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+
+use anyhow::{Context, Result};
+
+/// A request: run artifact at `path` with the given f32 inputs.
+struct ExecRequest {
+    path: PathBuf,
+    /// (shape, row-major f32 data) per parameter.
+    inputs: Vec<(Vec<usize>, Vec<f32>)>,
+    reply: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+enum Msg {
+    Exec(ExecRequest),
+    /// Pre-compile an artifact (warm the cache).
+    Warm(PathBuf, mpsc::Sender<Result<()>>),
+    Stats(mpsc::Sender<RuntimeStats>),
+    Shutdown,
+}
+
+/// Counters exposed for metrics/tests.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub cache_hits: u64,
+}
+
+/// Cloneable handle to the PJRT service thread.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: mpsc::Sender<Msg>,
+}
+
+/// The service thread plus its join guard.
+pub struct PjrtService {
+    handle: PjrtHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PjrtService {
+    /// Spawn the service thread (creates the CPU PJRT client inside it).
+    pub fn spawn() -> Result<PjrtService> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || service_main(rx, ready_tx))
+            .context("spawning pjrt service thread")?;
+        ready_rx
+            .recv()
+            .context("pjrt service thread died during init")??;
+        Ok(PjrtService {
+            handle: PjrtHandle { tx },
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> PjrtHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl PjrtHandle {
+    /// Execute an artifact: inputs are (shape, data) pairs in parameter
+    /// order; returns the flattened f32 output (artifacts return a
+    /// 1-tuple — `return_tuple=True` at lowering).
+    pub fn execute(&self, path: &Path, inputs: Vec<(Vec<usize>, Vec<f32>)>) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Exec(ExecRequest {
+                path: path.to_path_buf(),
+                inputs,
+                reply,
+            }))
+            .map_err(|_| anyhow::anyhow!("pjrt service is gone"))?;
+        rx.recv().context("pjrt service dropped the reply")?
+    }
+
+    /// Compile (and cache) an artifact without executing it.
+    pub fn warm(&self, path: &Path) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Warm(path.to_path_buf(), reply))
+            .map_err(|_| anyhow::anyhow!("pjrt service is gone"))?;
+        rx.recv().context("pjrt service dropped the reply")?
+    }
+
+    pub fn stats(&self) -> Result<RuntimeStats> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Stats(reply))
+            .map_err(|_| anyhow::anyhow!("pjrt service is gone"))?;
+        Ok(rx.recv()?)
+    }
+}
+
+fn service_main(rx: mpsc::Receiver<Msg>, ready: mpsc::Sender<Result<()>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow::anyhow!("creating PJRT CPU client: {e}")));
+            return;
+        }
+    };
+    log::info!(
+        "pjrt service up: platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    );
+    let mut cache: HashMap<PathBuf, xla::PjRtLoadedExecutable> = HashMap::new();
+    let mut stats = RuntimeStats::default();
+
+    let compile =
+        |cache: &mut HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+         stats: &mut RuntimeStats,
+         path: &PathBuf|
+         -> Result<()> {
+            if cache.contains_key(path) {
+                stats.cache_hits += 1;
+                return Ok(());
+            }
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {}: {e}", path.display()))?;
+            stats.compiles += 1;
+            log::debug!(
+                "compiled {} in {:.1} ms",
+                path.display(),
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+            cache.insert(path.clone(), exe);
+            Ok(())
+        };
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Warm(path, reply) => {
+                let _ = reply.send(compile(&mut cache, &mut stats, &path));
+            }
+            Msg::Stats(reply) => {
+                let _ = reply.send(stats);
+            }
+            Msg::Exec(req) => {
+                let result = (|| -> Result<Vec<f32>> {
+                    compile(&mut cache, &mut stats, &req.path)?;
+                    let exe = cache.get(&req.path).unwrap();
+                    let literals: Vec<xla::Literal> = req
+                        .inputs
+                        .iter()
+                        .map(|(shape, data)| {
+                            let bytes: &[u8] = unsafe {
+                                std::slice::from_raw_parts(
+                                    data.as_ptr() as *const u8,
+                                    data.len() * 4,
+                                )
+                            };
+                            xla::Literal::create_from_shape_and_untyped_data(
+                                xla::ElementType::F32,
+                                shape,
+                                bytes,
+                            )
+                            .map_err(|e| anyhow::anyhow!("building literal: {e}"))
+                        })
+                        .collect::<Result<_>>()?;
+                    let out = exe
+                        .execute::<xla::Literal>(&literals)
+                        .map_err(|e| anyhow::anyhow!("executing {}: {e}", req.path.display()))?;
+                    stats.executions += 1;
+                    let lit = out[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow::anyhow!("fetching output: {e}"))?;
+                    let inner = lit
+                        .to_tuple1()
+                        .map_err(|e| anyhow::anyhow!("untupling output: {e}"))?;
+                    inner
+                        .to_vec::<f32>()
+                        .map_err(|e| anyhow::anyhow!("reading output: {e}"))
+                })();
+                let _ = req.reply.send(result);
+            }
+        }
+    }
+    log::info!("pjrt service shutting down ({stats:?})");
+}

@@ -1,0 +1,208 @@
+//! Conv execution providers: how a worker actually runs its subtask.
+//!
+//! * [`FallbackProvider`] — pure-rust im2col + GEMM. Always available
+//!   (`cargo test` needs no artifacts), and the master's executor for
+//!   remainder pieces and type-2 layers.
+//! * [`PjrtProvider`] — the production path: per-shape **fused** AOT
+//!   artifacts through the PJRT service; shape-polymorphic **tile** GEMM
+//!   artifacts when no fused artifact matches; falls back to pure rust as
+//!   the last resort (logged, counted).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::conv::im2col;
+use crate::conv::{ConvSpec, Tensor};
+
+use super::artifacts::{ConvKey, Manifest};
+use super::pjrt::PjrtHandle;
+
+/// Uniform interface: valid conv of an already-padded input partition
+/// (pure linear map — no bias/activation; see coding docs).
+pub trait ConvProvider: Send + Sync {
+    fn conv(&self, spec: &ConvSpec, input: &Tensor, weights: &[f32]) -> Result<Tensor>;
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust provider (im2col + blocked GEMM).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FallbackProvider;
+
+impl ConvProvider for FallbackProvider {
+    fn conv(&self, spec: &ConvSpec, input: &Tensor, weights: &[f32]) -> Result<Tensor> {
+        spec.conv_padded(input, weights)
+    }
+
+    fn name(&self) -> &'static str {
+        "fallback"
+    }
+}
+
+/// Which execution path a `PjrtProvider` call took (metrics/tests).
+#[derive(Debug, Default)]
+pub struct ProviderStats {
+    pub fused: AtomicU64,
+    pub tiled: AtomicU64,
+    pub fallback: AtomicU64,
+}
+
+/// PJRT-backed provider with fused → tiled → fallback ladder.
+pub struct PjrtProvider {
+    handle: PjrtHandle,
+    manifest: Arc<Manifest>,
+    pub stats: Arc<ProviderStats>,
+}
+
+impl PjrtProvider {
+    pub fn new(handle: PjrtHandle, manifest: Arc<Manifest>) -> PjrtProvider {
+        PjrtProvider {
+            handle,
+            manifest,
+            stats: Arc::new(ProviderStats::default()),
+        }
+    }
+
+    fn try_fused(&self, spec: &ConvSpec, input: &Tensor, weights: &[f32]) -> Option<Result<Tensor>> {
+        let key = ConvKey {
+            c_in: spec.c_in,
+            c_out: spec.c_out,
+            k_w: spec.k_w,
+            s_w: spec.s_w,
+            h_i: input.h,
+            w_i_p: input.w,
+        };
+        let path = self.manifest.conv_artifact(&key)?;
+        let h_o = spec.out_dim_padded(input.h);
+        let w_o = spec.out_dim_padded(input.w);
+        let result = self
+            .handle
+            .execute(
+                path,
+                vec![
+                    (vec![input.c, input.h, input.w], input.data.clone()),
+                    (
+                        vec![spec.c_out, spec.c_in, spec.k_w, spec.k_w],
+                        weights.to_vec(),
+                    ),
+                ],
+            )
+            .and_then(|flat| Tensor::from_vec(spec.c_out, h_o, w_o, flat));
+        Some(result)
+    }
+
+    /// Shape-polymorphic path: rust im2col + padding to the artifact's
+    /// fixed GEMM tile, accumulating tiles in rust.
+    fn try_tiled(&self, spec: &ConvSpec, input: &Tensor, weights: &[f32]) -> Option<Result<Tensor>> {
+        let (tm, tk, tn, path) = self.manifest.best_gemm_tile()?;
+        let h_o = spec.out_dim_padded(input.h);
+        let w_o = spec.out_dim_padded(input.w);
+        let m = spec.c_out;
+        let kk = spec.c_in * spec.k_w * spec.k_w;
+        let n = h_o * w_o;
+        let patches = im2col::im2col(input, spec.k_w, spec.s_w); // (kk, n)
+
+        let pad_to = |x: usize, t: usize| x.div_ceil(t) * t;
+        let (pm, pk, pn) = (pad_to(m, tm), pad_to(kk, tk), pad_to(n, tn));
+        // Tile-padded copies (row-major).
+        let mut a = vec![0f32; pm * pk];
+        for i in 0..m {
+            a[i * pk..i * pk + kk].copy_from_slice(&weights[i * kk..(i + 1) * kk]);
+        }
+        let mut b = vec![0f32; pk * pn];
+        for i in 0..kk {
+            b[i * pn..i * pn + n].copy_from_slice(&patches[i * n..(i + 1) * n]);
+        }
+
+        let mut c = vec![0f32; pm * pn];
+        let result = (|| -> Result<()> {
+            for bi in 0..pm / tm {
+                for bj in 0..pn / tn {
+                    let mut acc = vec![0f32; tm * tn];
+                    for bl in 0..pk / tk {
+                        // Gather tiles.
+                        let mut at = vec![0f32; tm * tk];
+                        for r in 0..tm {
+                            let src = (bi * tm + r) * pk + bl * tk;
+                            at[r * tk..(r + 1) * tk].copy_from_slice(&a[src..src + tk]);
+                        }
+                        let mut bt = vec![0f32; tk * tn];
+                        for r in 0..tk {
+                            let src = (bl * tk + r) * pn + bj * tn;
+                            bt[r * tn..(r + 1) * tn].copy_from_slice(&b[src..src + tn]);
+                        }
+                        let out = self.handle.execute(
+                            path,
+                            vec![(vec![tm, tk], at), (vec![tk, tn], bt)],
+                        )?;
+                        for (av, ov) in acc.iter_mut().zip(&out) {
+                            *av += ov;
+                        }
+                    }
+                    for r in 0..tm {
+                        let dst = (bi * tm + r) * pn + bj * tn;
+                        c[dst..dst + tn].copy_from_slice(&acc[r * tn..(r + 1) * tn]);
+                    }
+                }
+            }
+            Ok(())
+        })();
+        if let Err(e) = result {
+            return Some(Err(e));
+        }
+        // Strip padding.
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            out[i * n..(i + 1) * n].copy_from_slice(&c[i * pn..i * pn + n]);
+        }
+        Some(Tensor::from_vec(spec.c_out, h_o, w_o, out))
+    }
+}
+
+impl ConvProvider for PjrtProvider {
+    fn conv(&self, spec: &ConvSpec, input: &Tensor, weights: &[f32]) -> Result<Tensor> {
+        if let Some(r) = self.try_fused(spec, input, weights) {
+            self.stats.fused.fetch_add(1, Ordering::Relaxed);
+            return r;
+        }
+        if let Some(r) = self.try_tiled(spec, input, weights) {
+            self.stats.tiled.fetch_add(1, Ordering::Relaxed);
+            return r;
+        }
+        log::debug!(
+            "no artifact for conv {}x{} k{} s{} h{} w{}; pure-rust fallback",
+            spec.c_in,
+            spec.c_out,
+            spec.k_w,
+            spec.s_w,
+            input.h,
+            input.w
+        );
+        self.stats.fallback.fetch_add(1, Ordering::Relaxed);
+        FallbackProvider.conv(spec, input, weights)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn fallback_matches_direct() {
+        let spec = ConvSpec::new(3, 5, 3, 1, 0);
+        let mut rng = Rng::new(2);
+        let mut input = Tensor::zeros(3, 8, 11);
+        rng.fill_uniform_f32(&mut input.data, -1.0, 1.0);
+        let mut w = vec![0f32; spec.weight_len()];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        let out = FallbackProvider.conv(&spec, &input, &w).unwrap();
+        let direct = crate::conv::layer::conv_direct(&spec, &input, &w);
+        assert!(out.max_abs_diff(&direct) < 1e-4);
+    }
+}

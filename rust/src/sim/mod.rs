@@ -1,0 +1,13 @@
+//! Calibrated latency simulator.
+//!
+//! The paper's figures run VGG16/ResNet18 on 10 Raspberry Pis 20 times per
+//! point; this testbed is one CPU core, so the figure-scale sweeps replay
+//! the §III latency model (validated against the real execution path at
+//! tiny scale — see EXPERIMENTS.md §Calibration) instead of wall-clock
+//! executing 50-second inferences. Scenario semantics follow §V exactly.
+
+pub mod runner;
+pub mod scenario;
+
+pub use runner::{simulate_model, MethodSim, ModelSimResult};
+pub use scenario::Scenario;

@@ -1,0 +1,87 @@
+//! The three evaluation scenarios of §V.
+
+use crate::util::Rng;
+
+/// Which testbed manipulation is active.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Scenario {
+    /// No manipulation (the `n_f = 0` baseline of Fig. 6).
+    None,
+    /// Scenario 1: extra exponential transmission delay with mean
+    /// `lambda_tr × T̄_tr` added to every worker's round trip.
+    Straggling { lambda_tr: f64 },
+    /// Scenario 2: `n_f` random workers fail in each execution round.
+    Failures { n_f: usize },
+    /// Scenario 3: scenario 2 plus worker 0 as a chronic straggler whose
+    /// compute runs `slowdown`× slower (paper observes ≈1.68×).
+    FailuresPlusStraggler { n_f: usize, slowdown: f64 },
+}
+
+impl Scenario {
+    pub fn n_f(&self) -> usize {
+        match self {
+            Scenario::Failures { n_f } | Scenario::FailuresPlusStraggler { n_f, .. } => *n_f,
+            _ => 0,
+        }
+    }
+
+    pub fn lambda_tr(&self) -> f64 {
+        match self {
+            Scenario::Straggling { lambda_tr } => *lambda_tr,
+            _ => 0.0,
+        }
+    }
+
+    /// Per-round failing-worker draw.
+    pub fn draw_failures(&self, n: usize, rng: &mut Rng) -> Vec<usize> {
+        let n_f = self.n_f().min(n.saturating_sub(1));
+        if n_f == 0 {
+            Vec::new()
+        } else {
+            rng.sample_distinct(n, n_f)
+        }
+    }
+
+    /// Compute slowdown of worker `i`.
+    pub fn cmp_slowdown(&self, worker: usize) -> f64 {
+        match self {
+            Scenario::FailuresPlusStraggler { slowdown, .. } if worker == 0 => *slowdown,
+            _ => 1.0,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Scenario::None => "none".into(),
+            Scenario::Straggling { lambda_tr } => format!("s1(lambda={lambda_tr})"),
+            Scenario::Failures { n_f } => format!("s2(n_f={n_f})"),
+            Scenario::FailuresPlusStraggler { n_f, slowdown } => {
+                format!("s3(n_f={n_f},x{slowdown})")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draws_respect_nf() {
+        let mut rng = Rng::new(3);
+        let s = Scenario::Failures { n_f: 2 };
+        for _ in 0..20 {
+            let f = s.draw_failures(10, &mut rng);
+            assert_eq!(f.len(), 2);
+            assert!(f[0] != f[1]);
+        }
+        assert!(Scenario::None.draw_failures(10, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn chronic_straggler_only_worker_zero() {
+        let s = Scenario::FailuresPlusStraggler { n_f: 1, slowdown: 1.68 };
+        assert_eq!(s.cmp_slowdown(0), 1.68);
+        assert_eq!(s.cmp_slowdown(3), 1.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Hand-rolled binary codec for coordinator messages (no `serde` in the
+//! offline vendor set). Little-endian, length-prefixed containers.
+
+use anyhow::{bail, ensure, Result};
+
+/// Byte-stream writer with the primitives our messages need.
+#[derive(Default)]
+pub struct Encoder {
+    buf: Vec<u8>,
+}
+
+impl Encoder {
+    pub fn new() -> Encoder {
+        Encoder { buf: Vec::new() }
+    }
+
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn usize(&mut self, v: usize) -> &mut Self {
+        self.u64(v as u64)
+    }
+
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+        self
+    }
+
+    pub fn f32s(&mut self, xs: &[f32]) -> &mut Self {
+        self.u64(xs.len() as u64);
+        // Bulk copy — the payload path (feature-map partitions) is hot.
+        let bytes =
+            unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
+        self.buf.extend_from_slice(bytes);
+        self
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Matching reader.
+pub struct Decoder<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn new(buf: &'a [u8]) -> Decoder<'a> {
+        Decoder { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.buf.len(), "short message");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        ensure!(len < 1 << 20, "implausible string length");
+        Ok(String::from_utf8(self.take(len)?.to_vec())?)
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let len = self.u64()? as usize;
+        ensure!(len < 1 << 32, "implausible f32 vector length");
+        let bytes = self.take(len * 4)?;
+        let mut out = vec![0f32; len];
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                bytes.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                bytes.len(),
+            );
+        }
+        Ok(out)
+    }
+
+    pub fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} trailing bytes", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn primitive_roundtrip() {
+        prop::check("codec roundtrip", 64, |rng| {
+            let a = rng.next_u64();
+            let b = rng.uniform();
+            let s: String = (0..rng.below(20))
+                .map(|_| char::from(b'a' + rng.below(26) as u8))
+                .collect();
+            let xs: Vec<f32> = (0..rng.below(1000))
+                .map(|_| rng.uniform() as f32)
+                .collect();
+            let mut e = Encoder::new();
+            e.u64(a).f64(b).str(&s).f32s(&xs).u8(7);
+            let bytes = e.finish();
+            let mut d = Decoder::new(&bytes);
+            assert_eq!(d.u64().unwrap(), a);
+            assert_eq!(d.f64().unwrap(), b);
+            assert_eq!(d.str().unwrap(), s);
+            assert_eq!(d.f32s().unwrap(), xs);
+            assert_eq!(d.u8().unwrap(), 7);
+            d.done().unwrap();
+        });
+    }
+
+    #[test]
+    fn short_input_errors() {
+        let mut d = Decoder::new(&[1, 2]);
+        assert!(d.u64().is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! In-process transport: a pair of mpsc channels per worker, with an
+//! optional per-byte + fixed delay injector emulating the testbed's
+//! wireless link (delays are applied on the *receiving* side so the
+//! sender never blocks, like a buffered NIC).
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::Link;
+
+/// Wall-clock delay model for one direction of a link.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DelayModel {
+    /// Seconds per byte (1/bandwidth).
+    pub per_byte: f64,
+    /// Fixed floor per frame (propagation).
+    pub fixed: f64,
+}
+
+impl DelayModel {
+    pub fn delay_for(&self, bytes: usize) -> Duration {
+        Duration::from_secs_f64(self.fixed + self.per_byte * bytes as f64)
+    }
+}
+
+/// One endpoint of an in-process duplex link.
+pub struct InprocLink {
+    tx: mpsc::Sender<Vec<u8>>,
+    rx: mpsc::Receiver<Vec<u8>>,
+    /// Delay applied to *incoming* frames.
+    pub rx_delay: DelayModel,
+}
+
+impl InprocLink {
+    /// Decompose into raw parts (see `transport::split`).
+    pub fn into_parts(
+        self,
+    ) -> (mpsc::Sender<Vec<u8>>, mpsc::Receiver<Vec<u8>>, DelayModel) {
+        (self.tx, self.rx, self.rx_delay)
+    }
+}
+
+/// Create a connected (master-side, worker-side) pair.
+pub fn pair() -> (InprocLink, InprocLink) {
+    let (a_tx, b_rx) = mpsc::channel();
+    let (b_tx, a_rx) = mpsc::channel();
+    (
+        InprocLink {
+            tx: a_tx,
+            rx: a_rx,
+            rx_delay: DelayModel::default(),
+        },
+        InprocLink {
+            tx: b_tx,
+            rx: b_rx,
+            rx_delay: DelayModel::default(),
+        },
+    )
+}
+
+impl Link for InprocLink {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        self.tx
+            .send(frame.to_vec())
+            .map_err(|_| anyhow::anyhow!("peer closed"))
+    }
+
+    fn recv(&mut self) -> Result<Option<Vec<u8>>> {
+        match self.rx.recv() {
+            Ok(frame) => {
+                let d = self.rx_delay.delay_for(frame.len());
+                if !d.is_zero() {
+                    std::thread::sleep(d);
+                }
+                Ok(Some(frame))
+            }
+            Err(_) => Ok(None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let (mut a, mut b) = pair();
+        a.send(b"hello").unwrap();
+        assert_eq!(b.recv().unwrap().unwrap(), b"hello");
+        b.send(b"world").unwrap();
+        assert_eq!(a.recv().unwrap().unwrap(), b"world");
+    }
+
+    #[test]
+    fn close_detected() {
+        let (a, mut b) = pair();
+        drop(a);
+        assert!(b.recv().unwrap().is_none());
+    }
+
+    #[test]
+    fn delay_applies() {
+        let (mut a, mut b) = pair();
+        b.rx_delay = DelayModel {
+            per_byte: 0.0,
+            fixed: 0.05,
+        };
+        a.send(b"x").unwrap();
+        let t0 = std::time::Instant::now();
+        b.recv().unwrap().unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(45));
+    }
+}

@@ -1,0 +1,24 @@
+//! Transports: how master and workers exchange frames.
+//!
+//! * [`inproc`] — channel-based duplex links inside one process, with an
+//!   optional wall-clock delay injector (the testbed's "manually slept
+//!   devices" / added WiFi delay, §V scenario 1).
+//! * [`tcp`] — length-prefixed frames over TCP for true multi-process
+//!   deployment (`cocoi worker` / `cocoi infer --workers tcp:...`).
+
+pub mod codec;
+pub mod inproc;
+pub mod split;
+pub mod tcp;
+
+pub use split::{FrameRx, FrameTx, LinkPair};
+
+use anyhow::Result;
+
+/// A duplex, blocking frame link. Frames are opaque byte vectors
+/// (encoded coordinator messages).
+pub trait Link: Send {
+    fn send(&mut self, frame: &[u8]) -> Result<()>;
+    /// Blocking receive; `Ok(None)` means the peer closed down.
+    fn recv(&mut self) -> Result<Option<Vec<u8>>>;
+}

@@ -1,0 +1,114 @@
+//! Splitting a duplex link into independently-owned send/recv halves —
+//! the master runs one reader thread per worker, so the halves must move
+//! to different threads.
+
+use std::net::TcpStream;
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+use super::inproc::{DelayModel, InprocLink};
+use super::tcp::TcpLink;
+#[allow(unused_imports)]
+use super::Link; // trait methods on TcpLink
+
+pub trait FrameTx: Send {
+    fn send(&mut self, frame: &[u8]) -> Result<()>;
+}
+
+pub trait FrameRx: Send {
+    /// Blocking receive; `Ok(None)` = peer closed.
+    fn recv(&mut self) -> Result<Option<Vec<u8>>>;
+}
+
+// ---- in-proc halves ------------------------------------------------------
+
+pub struct InprocTx(pub(crate) mpsc::Sender<Vec<u8>>);
+pub struct InprocRx {
+    pub(crate) rx: mpsc::Receiver<Vec<u8>>,
+    pub(crate) delay: DelayModel,
+}
+
+impl FrameTx for InprocTx {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        self.0
+            .send(frame.to_vec())
+            .map_err(|_| anyhow::anyhow!("peer closed"))
+    }
+}
+
+impl FrameRx for InprocRx {
+    fn recv(&mut self) -> Result<Option<Vec<u8>>> {
+        match self.rx.recv() {
+            Ok(frame) => {
+                let d = self.delay.delay_for(frame.len());
+                if !d.is_zero() {
+                    std::thread::sleep(d);
+                }
+                Ok(Some(frame))
+            }
+            Err(_) => Ok(None),
+        }
+    }
+}
+
+/// Split an in-proc link into owned halves.
+pub fn split_inproc(link: InprocLink) -> (InprocTx, InprocRx) {
+    let (tx, rx, delay) = link.into_parts();
+    (InprocTx(tx), InprocRx { rx, delay })
+}
+
+// ---- tcp halves ----------------------------------------------------------
+
+pub struct TcpTx(TcpLink);
+pub struct TcpRx(TcpLink);
+
+impl FrameTx for TcpTx {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        self.0.send(frame)
+    }
+}
+
+impl FrameRx for TcpRx {
+    fn recv(&mut self) -> Result<Option<Vec<u8>>> {
+        self.0.recv()
+    }
+}
+
+/// Split a TCP link via `try_clone` (kernel-level duplex).
+pub fn split_tcp(stream: TcpStream) -> Result<(TcpTx, TcpRx)> {
+    let clone = stream.try_clone()?;
+    Ok((
+        TcpTx(TcpLink::from_stream(clone)),
+        TcpRx(TcpLink::from_stream(stream)),
+    ))
+}
+
+/// Boxed pair used by the master.
+pub type LinkPair = (Box<dyn FrameTx>, Box<dyn FrameRx>);
+
+/// Convenience: a connected in-proc (master-pair, worker-link) with a
+/// receive-delay model on the worker->master direction.
+pub fn inproc_pair_with_delay(master_rx_delay: DelayModel) -> (LinkPair, InprocLink) {
+    let (mut master_side, worker_side) = super::inproc::pair();
+    master_side.rx_delay = master_rx_delay;
+    let (tx, rx) = split_inproc(master_side);
+    ((Box::new(tx), Box::new(rx)), worker_side)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_halves_work_across_threads() {
+        let ((mut tx, mut rx), mut worker) = inproc_pair_with_delay(DelayModel::default());
+        let t = std::thread::spawn(move || {
+            let got = worker.recv().unwrap().unwrap();
+            worker.send(&got).unwrap();
+        });
+        tx.send(b"ping").unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap(), b"ping");
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,101 @@
+//! TCP transport: 4-byte little-endian length prefix + payload per frame.
+//! Used by the `cocoi worker --listen` / `--workers tcp:` deployment mode,
+//! the closest analogue of the paper's WiFi testbed.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+use anyhow::{Context, Result};
+
+use super::Link;
+
+/// Frame cap (a full VGG16 conv1 partition is ~13 MB; 256 MB is generous).
+const MAX_FRAME: u32 = 256 << 20;
+
+/// A TCP frame link.
+pub struct TcpLink {
+    stream: TcpStream,
+}
+
+impl TcpLink {
+    pub fn connect(addr: &str) -> Result<TcpLink> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(TcpLink { stream })
+    }
+
+    pub fn from_stream(stream: TcpStream) -> TcpLink {
+        stream.set_nodelay(true).ok();
+        TcpLink { stream }
+    }
+
+    /// Recover the raw stream (e.g. to re-split into tx/rx halves).
+    pub fn into_stream(self) -> TcpStream {
+        self.stream
+    }
+}
+
+impl Link for TcpLink {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        let len = frame.len() as u32;
+        anyhow::ensure!(len <= MAX_FRAME, "frame too large: {len}");
+        self.stream.write_all(&len.to_le_bytes())?;
+        self.stream.write_all(frame)?;
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Option<Vec<u8>>> {
+        let mut len4 = [0u8; 4];
+        match self.stream.read_exact(&mut len4) {
+            Ok(()) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::UnexpectedEof
+                    || e.kind() == std::io::ErrorKind::ConnectionReset =>
+            {
+                return Ok(None)
+            }
+            Err(e) => return Err(e.into()),
+        }
+        let len = u32::from_le_bytes(len4);
+        anyhow::ensure!(len <= MAX_FRAME, "peer announced oversized frame: {len}");
+        let mut buf = vec![0u8; len as usize];
+        self.stream.read_exact(&mut buf)?;
+        Ok(Some(buf))
+    }
+}
+
+/// Accept loop helper: bind and yield one `TcpLink` per connection.
+pub fn serve<F: FnMut(TcpLink) -> Result<()>>(addr: &str, mut handler: F) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    log::info!("worker listening on {}", listener.local_addr()?);
+    for stream in listener.incoming() {
+        handler(TcpLink::from_stream(stream?))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tcp_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut link = TcpLink::from_stream(stream);
+            let got = link.recv().unwrap().unwrap();
+            link.send(&got).unwrap(); // echo
+            assert!(link.recv().unwrap().is_none()); // peer closes
+        });
+        let mut client = TcpLink::connect(&addr.to_string()).unwrap();
+        let payload: Vec<u8> = (0..100_000).map(|i| (i % 251) as u8).collect();
+        client.send(&payload).unwrap();
+        assert_eq!(client.recv().unwrap().unwrap(), payload);
+        drop(client);
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,66 @@
+//! Tiny `log`-facade backend: stderr, level from `COCOI_LOG` (error..trace).
+//!
+//! No `env_logger` in the vendor set; this is the subset we need — leveled,
+//! timestamped (relative to process start) lines on stderr.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger {
+    level: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.elapsed();
+        eprintln!(
+            "[{:>9.3}s {:<5} {}] {}",
+            t.as_secs_f64(),
+            record.level(),
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent). Level defaults to `info`; override with
+/// `COCOI_LOG=trace|debug|info|warn|error|off`.
+pub fn init() {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let level = match std::env::var("COCOI_LOG").as_deref() {
+        Ok("trace") => log::LevelFilter::Trace,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("error") => log::LevelFilter::Error,
+        Ok("off") => log::LevelFilter::Off,
+        _ => log::LevelFilter::Info,
+    };
+    let _ = log::set_boxed_logger(Box::new(StderrLogger { level }));
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke line");
+    }
+}

@@ -1,0 +1,51 @@
+//! Shared substrates: PRNG, statistics, JSON, logging, property testing.
+//!
+//! These exist because the offline vendor set ships no `rand`, `serde`,
+//! `criterion`, or `proptest`; each submodule is a small, tested,
+//! dependency-free replacement (see DESIGN.md §3).
+
+pub mod json;
+pub mod logger;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+
+/// Harmonic number `H_m = sum_{i=1..m} 1/i`, with `H_0 = 0`.
+///
+/// Order-statistics expectations of exponentials are differences of
+/// harmonic numbers (David & Nagaraja [25]); used throughout `latency`.
+pub fn harmonic(m: usize) -> f64 {
+    // Exact summation is fine for the m <= 10^4 range the planner touches.
+    (1..=m).map(|i| 1.0 / i as f64).sum()
+}
+
+/// `ceil(a / b)` for positive integers.
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harmonic_basics() {
+        assert_eq!(harmonic(0), 0.0);
+        assert!((harmonic(1) - 1.0).abs() < 1e-12);
+        assert!((harmonic(2) - 1.5).abs() < 1e-12);
+        // H_n ~ ln n + gamma
+        let n = 100_000;
+        let approx = (n as f64).ln() + 0.577_215_664_901_532_9;
+        assert!((harmonic(n) - approx).abs() < 1e-4);
+    }
+
+    #[test]
+    fn div_ceil_basics() {
+        assert_eq!(div_ceil(10, 3), 4);
+        assert_eq!(div_ceil(9, 3), 3);
+        assert_eq!(div_ceil(1, 10), 1);
+    }
+}

@@ -1,0 +1,60 @@
+//! Minimal property-testing substrate (no `proptest` in the vendor set).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` seeded RNGs; on failure
+//! it reports the failing seed so the case can be replayed exactly. The
+//! seed base can be pinned with `COCOI_PROP_SEED` for reproduction.
+//!
+//! This is deliberately tiny: no shrinking, but deterministic seeds make
+//! failures replayable, which is what matters for CI debugging.
+
+use super::rng::Rng;
+
+/// Number of cases to run per property (default; override per call site).
+pub const DEFAULT_CASES: usize = 128;
+
+/// Run `f` for `cases` deterministic random cases. Panics with the seed on
+/// the first failing case.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: usize, mut f: F) {
+    let base = std::env::var("COCOI_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xC0C0_1D5E);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed on case {case} (replay with COCOI_PROP_SEED={base} \
+                 case seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 32, |rng| {
+            count += 1;
+            let x = rng.uniform();
+            assert!((0.0..1.0).contains(&x));
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 4, |_| panic!("boom"));
+    }
+}

@@ -1,0 +1,209 @@
+//! Edge-case and failure-injection coverage beyond the per-module suites:
+//! extreme split choices, remainder pieces, maximum tolerable failures,
+//! fuzzed wire inputs, and straggler wall-clock effects.
+
+use std::sync::Arc;
+
+use cocoi::conv::{ConvSpec, SplitPlan, Tensor};
+use cocoi::coordinator::{
+    LocalCluster, MasterConfig, SchemeKind, WorkerFaults,
+};
+use cocoi::coordinator::messages::{FromWorker, ToWorker};
+use cocoi::model::graph::forward_local;
+use cocoi::model::{zoo, WeightStore};
+use cocoi::planner::SplitPolicy;
+use cocoi::runtime::FallbackProvider;
+use cocoi::util::json::Json;
+use cocoi::util::Rng;
+
+fn reference(model_name: &str, seed: u64) -> (Tensor, Tensor) {
+    let model = zoo::model(model_name).unwrap();
+    let weights = WeightStore::generate(&model, 42).unwrap();
+    let mut input = Tensor::zeros(model.input.0, model.input.1, model.input.2);
+    Rng::new(seed).fill_uniform_f32(&mut input.data, -1.0, 1.0);
+    let out = forward_local(&model, &weights, &input).unwrap();
+    (input, out)
+}
+
+fn run(
+    model_name: &str,
+    scheme: SchemeKind,
+    n: usize,
+    k: usize,
+    faults: Vec<WorkerFaults>,
+    input: &Tensor,
+) -> (Tensor, cocoi::coordinator::InferenceMetrics) {
+    let config = MasterConfig {
+        scheme,
+        policy: SplitPolicy::Fixed(k),
+        ..Default::default()
+    };
+    let mut cluster =
+        LocalCluster::spawn(model_name, n, config, Arc::new(FallbackProvider), faults).unwrap();
+    let result = cluster.master.infer(input).unwrap();
+    cluster.shutdown().unwrap();
+    result
+}
+
+/// k = 1: every worker convolves the whole input; any single completion
+/// decodes (full redundancy).
+#[test]
+fn k_equals_one_full_redundancy() {
+    let (input, want) = reference("tinyvgg", 41);
+    let faults = vec![
+        WorkerFaults::none().fails_in(0..64),
+        WorkerFaults::none().fails_in(0..64),
+        WorkerFaults::none(), // only worker 2 alive
+    ];
+    let (got, metrics) = run("tinyvgg", SchemeKind::Mds, 3, 1, faults, &input);
+    assert!(got.max_abs_diff(&want) < 2e-2);
+    // The healthy worker's output may win the race before the failure
+    // signals arrive, so `failures()` can legitimately read 0 — the
+    // invariant is zero re-dispatch and a correct answer.
+    assert_eq!(metrics.redispatches(), 0, "k=1 tolerates n-1 failures");
+}
+
+/// Maximum tolerable simultaneous failures: n − k workers dead forever.
+#[test]
+fn exactly_r_failures_absorbed() {
+    let (input, want) = reference("tinyvgg", 43);
+    let n = 5;
+    let k = 2; // r = 3
+    let faults: Vec<WorkerFaults> = (0..n)
+        .map(|i| {
+            if i < 3 {
+                WorkerFaults::none().fails_in(0..64)
+            } else {
+                WorkerFaults::none()
+            }
+        })
+        .collect();
+    let (got, metrics) = run("tinyvgg", SchemeKind::Mds, n, k, faults, &input);
+    assert!(got.max_abs_diff(&want) < 2e-2);
+    assert_eq!(metrics.redispatches(), 0, "r = 3 absorbs 3 failures");
+}
+
+/// One more failure than redundancy: the master must re-dispatch and
+/// still produce the right answer.
+#[test]
+fn r_plus_one_failures_force_redispatch() {
+    let (input, want) = reference("tinyvgg", 47);
+    let n = 4;
+    let k = 3; // r = 1, two failing workers
+    let faults: Vec<WorkerFaults> = (0..n)
+        .map(|i| {
+            if i < 2 {
+                WorkerFaults::none().fails_in(0..2) // fail only first rounds
+            } else {
+                WorkerFaults::none()
+            }
+        })
+        .collect();
+    let (got, metrics) = run("tinyvgg", SchemeKind::Mds, n, k, faults, &input);
+    assert!(got.max_abs_diff(&want) < 2e-2);
+    assert!(metrics.redispatches() > 0, "must have re-dispatched");
+}
+
+/// Remainder handling: k that does not divide W_O exercises the
+/// master-local remainder piece (footnote 2).
+#[test]
+fn remainder_piece_correct() {
+    // tinyvgg conv5/conv6 have W_O = 14; k = 4 leaves remainder 2.
+    let (input, want) = reference("tinyvgg", 53);
+    let (got, _) = run(
+        "tinyvgg",
+        SchemeKind::Mds,
+        5,
+        4,
+        (0..5).map(|_| WorkerFaults::none()).collect(),
+        &input,
+    );
+    assert!(got.max_abs_diff(&want) < 2e-2);
+    // Geometry-level check too.
+    let spec = ConvSpec::new(1, 1, 3, 1, 1);
+    let plan = SplitPlan::new(&spec, 16, 3).unwrap(); // W_O = 14, k = 3
+    let rem = plan.remainder_out.expect("14 % 3 != 0");
+    assert_eq!(rem.width(), 14 % 3);
+}
+
+/// LT coding under failures: rateless redundancy absorbs a dead worker.
+#[test]
+fn lt_survives_failure() {
+    let (input, want) = reference("tinyvgg", 59);
+    let n = 4;
+    let faults: Vec<WorkerFaults> = (0..n)
+        .map(|i| {
+            if i == 0 {
+                WorkerFaults::none().fails_in(0..64)
+            } else {
+                WorkerFaults::none()
+            }
+        })
+        .collect();
+    let (got, metrics) = run("tinyvgg", SchemeKind::LtCoarse, n, 3, faults, &input);
+    assert!(got.max_abs_diff(&want) < 2e-2);
+    assert!(metrics.failures() > 0);
+}
+
+/// Chronic straggler slows the straggler path but never corrupts output.
+#[test]
+fn chronic_straggler_correctness() {
+    let (input, want) = reference("tinyresnet", 61);
+    let n = 4;
+    let mut faults: Vec<WorkerFaults> = (0..n).map(|_| WorkerFaults::none()).collect();
+    faults[0] = WorkerFaults::none().slowdown(3.0);
+    let (got, _) = run("tinyresnet", SchemeKind::Mds, n, 3, faults, &input);
+    assert!(got.max_abs_diff(&want) < 2e-2);
+}
+
+/// Wire-format fuzz: random bytes must error, never panic.
+#[test]
+fn message_decode_fuzz() {
+    let mut rng = Rng::new(0xF422);
+    for _ in 0..2000 {
+        let len = rng.below(64);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let _ = ToWorker::decode(&bytes); // Result either way; no panic
+        let _ = FromWorker::decode(&bytes);
+    }
+}
+
+/// JSON parser fuzz: random printable garbage must error, never panic.
+#[test]
+fn json_parse_fuzz() {
+    let mut rng = Rng::new(0xF423);
+    let alphabet: Vec<char> = r#"{}[]",:0123456789.eE+-truefalsnl \u"#.chars().collect();
+    for _ in 0..2000 {
+        let len = rng.below(40);
+        let s: String = (0..len).map(|_| alphabet[rng.below(alphabet.len())]).collect();
+        let _ = Json::parse(&s);
+    }
+}
+
+/// Tensors with w == kernel width (minimum splittable geometry).
+#[test]
+fn minimum_width_layers() {
+    let spec = ConvSpec::new(2, 3, 3, 1, 0);
+    let plan = SplitPlan::new(&spec, 3, 1).unwrap(); // W_O = 1, only k = 1
+    assert_eq!(plan.w_o, 1);
+    assert_eq!(plan.w_i_p, 3);
+    assert!(SplitPlan::new(&spec, 3, 2).is_err());
+}
+
+/// Scenario-1 injection measurably delays real execution.
+#[test]
+fn straggler_injection_costs_wall_clock() {
+    let (input, _) = reference("tinyvgg", 67);
+    let t = |faults: Vec<WorkerFaults>| {
+        let t0 = std::time::Instant::now();
+        let _ = run("tinyvgg", SchemeKind::Uncoded, 3, 3, faults, &input);
+        t0.elapsed().as_secs_f64()
+    };
+    let fast = t((0..3).map(|_| WorkerFaults::none()).collect());
+    // 150 ms mean extra delay per subtask, uncoded waits for all.
+    let slow = t((0..3).map(|_| WorkerFaults::with_send_delay(0.15)).collect());
+    assert!(
+        slow > fast + 0.15,
+        "injection had no effect: fast={fast:.3}s slow={slow:.3}s"
+    );
+}

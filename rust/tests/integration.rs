@@ -1,0 +1,210 @@
+//! Cross-module integration tests: the python-AOT → PJRT → coordinator
+//! round trip, the TCP deployment path, and end-to-end distributed
+//! inference through real artifacts.
+//!
+//! Tests that need `artifacts/` (built by `make artifacts`) skip with a
+//! message when it is absent so plain `cargo test` stays green.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use cocoi::conv::{ConvSpec, Tensor};
+use cocoi::coordinator::worker::{run_worker, WorkerConfig};
+use cocoi::coordinator::{LocalCluster, MasterConfig, SchemeKind, WorkerFaults};
+use cocoi::model::graph::forward_local;
+use cocoi::model::{zoo, WeightStore};
+use cocoi::planner::SplitPolicy;
+use cocoi::runtime::{ConvProvider, FallbackProvider, Manifest, PjrtProvider, PjrtService};
+use cocoi::transport::split::split_tcp;
+use cocoi::util::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var("COCOI_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+/// The AOT bridge: a fused conv artifact must reproduce the pure-rust
+/// conv on random inputs.
+#[test]
+fn pjrt_fused_conv_matches_fallback() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Arc::new(Manifest::load(&dir).unwrap());
+    let service = PjrtService::spawn().unwrap();
+    let provider = PjrtProvider::new(service.handle(), manifest.clone());
+
+    let mut rng = Rng::new(123);
+    let mut checked = 0;
+    for (key, _) in manifest.conv.iter().take(6) {
+        let spec = ConvSpec::new(key.c_in, key.c_out, key.k_w, key.s_w, 0);
+        let mut input = Tensor::zeros(key.c_in, key.h_i, key.w_i_p);
+        rng.fill_uniform_f32(&mut input.data, -1.0, 1.0);
+        let mut weights = vec![0f32; spec.weight_len()];
+        rng.fill_uniform_f32(&mut weights, -0.5, 0.5);
+
+        let via_pjrt = provider.conv(&spec, &input, &weights).unwrap();
+        let via_rust = FallbackProvider.conv(&spec, &input, &weights).unwrap();
+        assert_eq!(via_pjrt.shape(), via_rust.shape());
+        let err = via_pjrt.max_abs_diff(&via_rust);
+        assert!(err < 1e-3, "artifact {key:?} differs from fallback by {err}");
+        checked += 1;
+    }
+    assert!(checked > 0);
+    assert!(provider.stats.fused.load(std::sync::atomic::Ordering::Relaxed) >= checked);
+}
+
+/// The shape-polymorphic GEMM-tile path must agree with the fallback for
+/// a shape that has NO fused artifact.
+#[test]
+fn pjrt_tile_provider_matches_fallback() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Arc::new(Manifest::load(&dir).unwrap());
+    let service = PjrtService::spawn().unwrap();
+    let provider = PjrtProvider::new(service.handle(), manifest);
+
+    // Odd shape not in the manifest (h_i = 23).
+    let spec = ConvSpec::new(5, 7, 3, 1, 0);
+    let mut rng = Rng::new(321);
+    let mut input = Tensor::zeros(5, 23, 19);
+    rng.fill_uniform_f32(&mut input.data, -1.0, 1.0);
+    let mut weights = vec![0f32; spec.weight_len()];
+    rng.fill_uniform_f32(&mut weights, -0.5, 0.5);
+
+    let got = provider.conv(&spec, &input, &weights).unwrap();
+    let want = FallbackProvider.conv(&spec, &input, &weights).unwrap();
+    assert!(got.max_abs_diff(&want) < 1e-3);
+    assert_eq!(
+        provider.stats.tiled.load(std::sync::atomic::Ordering::Relaxed),
+        1,
+        "must have taken the tiled path"
+    );
+}
+
+/// Full distributed inference where every worker executes through PJRT
+/// artifacts — the end-to-end three-layer claim.
+#[test]
+fn distributed_inference_via_pjrt_matches_local() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Arc::new(Manifest::load(&dir).unwrap());
+    let service = PjrtService::spawn().unwrap();
+    let provider: Arc<dyn ConvProvider> =
+        Arc::new(PjrtProvider::new(service.handle(), manifest));
+
+    let model = zoo::model("tinyvgg").unwrap();
+    let weights = WeightStore::generate(&model, 42).unwrap();
+    let mut input = Tensor::zeros(3, 56, 56);
+    Rng::new(5).fill_uniform_f32(&mut input.data, -1.0, 1.0);
+    let want = forward_local(&model, &weights, &input).unwrap();
+
+    let config = MasterConfig {
+        scheme: SchemeKind::Mds,
+        policy: SplitPolicy::Fixed(3),
+        ..Default::default()
+    };
+    let mut cluster = LocalCluster::spawn(
+        "tinyvgg",
+        4,
+        config,
+        provider,
+        (0..4).map(|_| WorkerFaults::none()).collect(),
+    )
+    .unwrap();
+    let (got, metrics) = cluster.master.infer(&input).unwrap();
+    cluster.shutdown().unwrap();
+
+    assert_eq!(got.shape(), want.shape());
+    let err = got.max_abs_diff(&want);
+    assert!(err < 2e-2, "PJRT distributed differs from local by {err}");
+    assert!(metrics.layers.iter().any(|l| l.distributed));
+}
+
+/// TCP deployment: master and worker over a real socket.
+#[test]
+fn tcp_worker_end_to_end() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let worker_thread = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let (tx, rx) = split_tcp(stream).unwrap();
+        run_worker(
+            Box::new(tx),
+            Box::new(rx),
+            WorkerConfig {
+                id: 0,
+                provider: Arc::new(FallbackProvider),
+                faults: WorkerFaults::none(),
+                rng_seed: 1,
+            },
+        )
+        .unwrap();
+    });
+
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let (tx, rx) = split_tcp(stream).unwrap();
+    let config = MasterConfig {
+        scheme: SchemeKind::Mds,
+        policy: SplitPolicy::Fixed(1),
+        ..Default::default()
+    };
+    let mut master = cocoi::coordinator::Master::new(
+        "tinyvgg",
+        config,
+        vec![(Box::new(tx), Box::new(rx))],
+        Arc::new(FallbackProvider),
+    )
+    .unwrap();
+
+    let model = zoo::model("tinyvgg").unwrap();
+    let weights = WeightStore::generate(&model, 42).unwrap();
+    let mut input = Tensor::zeros(3, 56, 56);
+    Rng::new(77).fill_uniform_f32(&mut input.data, -1.0, 1.0);
+    let want = forward_local(&model, &weights, &input).unwrap();
+    let (got, _) = master.infer(&input).unwrap();
+    master.shutdown();
+    worker_thread.join().unwrap();
+
+    assert!(got.max_abs_diff(&want) < 2e-2);
+}
+
+/// Property-style: distributed == local across schemes, split sizes, and
+/// worker counts (beyond the fixed cases in the unit suite).
+#[test]
+fn distributed_matches_local_across_configs() {
+    let model = zoo::model("tinyresnet").unwrap();
+    let weights = WeightStore::generate(&model, 42).unwrap();
+    let mut rng = Rng::new(31);
+    for (scheme, n, k) in [
+        (SchemeKind::Mds, 2, 1),
+        (SchemeKind::Mds, 5, 4),
+        (SchemeKind::Uncoded, 3, 3),
+        (SchemeKind::Replication, 5, 2),
+        (SchemeKind::LtCoarse, 3, 2),
+    ] {
+        let mut input = Tensor::zeros(3, 56, 56);
+        rng.fill_uniform_f32(&mut input.data, -1.0, 1.0);
+        let want = forward_local(&model, &weights, &input).unwrap();
+        let config = MasterConfig {
+            scheme,
+            policy: SplitPolicy::Fixed(k),
+            ..Default::default()
+        };
+        let mut cluster = LocalCluster::spawn(
+            "tinyresnet",
+            n,
+            config,
+            Arc::new(FallbackProvider),
+            (0..n).map(|_| WorkerFaults::none()).collect(),
+        )
+        .unwrap();
+        let (got, _) = cluster.master.infer(&input).unwrap();
+        cluster.shutdown().unwrap();
+        let err = got.max_abs_diff(&want);
+        assert!(err < 2e-2, "{scheme:?} n={n} k={k}: err {err}");
+    }
+}

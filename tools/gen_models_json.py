@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""Generate config/models.json — the cross-language model zoo.
+
+Run once (checked-in output); both rust (model::zoo) and python
+(compile/models_zoo.py) parse the result. Regenerate with:
+    python tools/gen_models_json.py > config/models.json
+"""
+import json
+import sys
+
+
+def vgg(name, input_hw, cfg, num_classes, fc_width):
+    """VGG-style: cfg is a list of ints (conv out-channels) and 'M' (pool)."""
+    layers = []
+    prev = "input"
+    c_in = 3
+    idx = 0
+    for v in cfg:
+        if v == "M":
+            lid = f"pool{idx}"
+            layers.append({"id": lid, "op": "maxpool", "k": 2, "s": 2, "in": [prev]})
+            prev = lid
+        else:
+            idx += 1
+            lid = f"conv{idx}"
+            layers.append({
+                "id": lid, "op": "conv", "c_in": c_in, "c_out": v,
+                "k": 3, "s": 1, "p": 1, "relu": True, "in": [prev],
+            })
+            prev = lid
+            c_in = v
+    # Classifier: GAP keeps the zoo weight counts manageable (torch VGG
+    # uses 3 massive FC layers; the paper's experiments never distribute
+    # them — they are type-2 either way).
+    layers.append({"id": "gap", "op": "gap", "in": [prev]})
+    layers.append({"id": "fc1", "op": "linear", "c_in": c_in, "c_out": fc_width,
+                   "relu": True, "in": ["gap"]})
+    layers.append({"id": "fc2", "op": "linear", "c_in": fc_width,
+                   "c_out": num_classes, "in": ["fc1"]})
+    return {"name": name, "input": [3, input_hw, input_hw], "layers": layers}
+
+
+def resnet(name, input_hw, widths, blocks, num_classes, stem_k=7, stem_s=2, stem_p=3,
+           stem_pool=True):
+    """ResNet with BasicBlocks: widths per stage, blocks per stage."""
+    layers = []
+    conv_idx = 0
+
+    def conv(c_in, c_out, k, s, p, relu, src):
+        nonlocal conv_idx
+        conv_idx += 1
+        lid = f"conv{conv_idx}"
+        layers.append({"id": lid, "op": "conv", "c_in": c_in, "c_out": c_out,
+                       "k": k, "s": s, "p": p, "relu": relu, "in": [src]})
+        return lid
+
+    prev = conv(3, widths[0], stem_k, stem_s, stem_p, True, "input")
+    if stem_pool:
+        layers.append({"id": "pool1", "op": "maxpool", "k": 3, "s": 2, "p": 1,
+                       "in": [prev]})
+        prev = "pool1"
+    c_in = widths[0]
+    for stage, (w, nb) in enumerate(zip(widths, blocks)):
+        for b in range(nb):
+            stride = 2 if (stage > 0 and b == 0) else 1
+            identity = prev
+            x = conv(c_in, w, 3, stride, 1, True, prev)
+            x = conv(w, w, 3, 1, 1, False, x)
+            if stride != 1 or c_in != w:
+                identity = conv(c_in, w, 1, stride, 0, False, identity)
+            aid = f"add{stage+1}_{b+1}"
+            layers.append({"id": aid, "op": "add", "relu": True, "in": [x, identity]})
+            prev = aid
+            c_in = w
+    layers.append({"id": "gap", "op": "gap", "in": [prev]})
+    layers.append({"id": "fc", "op": "linear", "c_in": c_in, "c_out": num_classes,
+                   "in": ["gap"]})
+    return {"name": name, "input": [3, input_hw, input_hw], "layers": layers}
+
+
+MODELS = {
+    "models": [
+        # Full-scale configs (latency model / planner / DES figures).
+        vgg("vgg16", 224,
+            [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+             512, 512, 512, "M", 512, 512, 512, "M"],
+            1000, 4096),
+        resnet("resnet18", 224, [64, 128, 256, 512], [2, 2, 2, 2], 1000),
+        # Scaled configs actually executed end-to-end on this testbed.
+        vgg("tinyvgg", 56,
+            [32, 32, "M", 64, 64, "M", 128, 128, "M"],
+            10, 128),
+        resnet("tinyresnet", 56, [16, 32, 64], [1, 1, 1], 10,
+               stem_k=3, stem_s=1, stem_p=1, stem_pool=False),
+    ]
+}
+
+if __name__ == "__main__":
+    json.dump(MODELS, sys.stdout, indent=1)
+    sys.stdout.write("\n")
