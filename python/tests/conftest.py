@@ -1,0 +1,20 @@
+"""Test-collection guard: make `compile` importable without an installed
+package, and skip the jax/hypothesis suites gracefully when those heavy
+deps are absent (CI runners and the rust-only dev container)."""
+
+import importlib.util
+import os
+import sys
+
+sys.path.insert(0, os.path.normpath(os.path.join(os.path.dirname(__file__), "..")))
+
+collect_ignore = []
+
+_HAVE_JAX = importlib.util.find_spec("jax") is not None
+_HAVE_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+if not _HAVE_JAX:
+    # All three L1/L2 suites import jax at module level.
+    collect_ignore += ["test_aot.py", "test_kernels.py", "test_model.py"]
+elif not _HAVE_HYPOTHESIS:
+    collect_ignore += ["test_kernels.py"]

@@ -94,5 +94,10 @@ fn main() -> anyhow::Result<()> {
         "(1-core host: worker compute serializes, so healthy-case distribution \
          shows overhead; the straggle/failure columns show the coded advantage)"
     );
+
+    // -- multi-request throughput: round-barrier vs pipelined engine ----
+    // (same driver as `cocoi experiment throughput`, on this bench's
+    // larger pool + provider)
+    cocoi::bench::experiments::throughput_with(n, prov.clone(), prov_name, 8)?;
     Ok(())
 }

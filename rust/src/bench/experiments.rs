@@ -550,6 +550,93 @@ pub fn fig10(scale: Scale) -> Result<()> {
 }
 
 // ====================================================================
+// §Pipelining: multi-request throughput on the *real* coordinator,
+// round-barrier vs pipelined engine (the PR-1 tentpole measurement).
+// ====================================================================
+pub fn throughput(scale: Scale) -> Result<()> {
+    use crate::runtime::FallbackProvider;
+    throughput_with(
+        4,
+        std::sync::Arc::new(FallbackProvider),
+        "fallback",
+        scale.trials.clamp(4, 16),
+    )
+}
+
+/// The throughput measurement itself, parameterized so bench drivers
+/// (`bench_e2e`) can run it with their own pool size / provider.
+pub fn throughput_with(
+    n: usize,
+    provider: std::sync::Arc<dyn crate::runtime::ConvProvider>,
+    prov_name: &str,
+    batch: usize,
+) -> Result<()> {
+    use crate::coordinator::{
+        ExecMode, LocalCluster, MasterConfig, ScenarioFaults, SchemeKind, WorkerFaults,
+    };
+
+    // k < n so MDS keeps redundancy on every pool size.
+    let k = (n - 1).min(4).max(1);
+    let mut table = Table::new(
+        &format!(
+            "Throughput — tinyvgg, n={n} in-proc workers, k={k}, batch={batch} \
+             requests, provider={prov_name}"
+        ),
+        &["scheme", "faults", "barrier", "pipelined", "speedup"],
+    );
+    let healthy = || (0..n).map(|_| WorkerFaults::none()).collect::<Vec<_>>();
+    let cases: [(SchemeKind, &str, Vec<WorkerFaults>); 3] = [
+        (SchemeKind::Mds, "none", healthy()),
+        // 10 ms mean extra send delay per subtask: the regime where
+        // cancelling stragglers pays off.
+        (SchemeKind::Mds, "straggle λ=0.5", ScenarioFaults::straggling(n, 0.5, 0.010)),
+        (SchemeKind::Uncoded, "none", healthy()),
+    ];
+    for (scheme, faults_name, faults) in cases {
+        let mut run = |mode: ExecMode| -> Result<f64> {
+            let config = MasterConfig {
+                scheme,
+                policy: SplitPolicy::Fixed(k),
+                mode,
+                ..Default::default()
+            };
+            let mut cluster =
+                LocalCluster::spawn("tinyvgg", n, config, provider.clone(), faults.clone())?;
+            let mut rng = Rng::new(42);
+            let inputs: Vec<crate::conv::Tensor> = (0..batch)
+                .map(|_| {
+                    let mut t = crate::conv::Tensor::zeros(3, 56, 56);
+                    rng.fill_uniform_f32(&mut t.data, -1.0, 1.0);
+                    t
+                })
+                .collect();
+            let _ = cluster.master.infer(&inputs[0])?; // warmup
+            let t0 = std::time::Instant::now();
+            let _ = cluster.master.infer_batch(&inputs)?;
+            let dt = t0.elapsed().as_secs_f64();
+            cluster.shutdown()?;
+            Ok(dt)
+        };
+        let barrier = run(ExecMode::RoundBarrier)?;
+        let pipe = run(ExecMode::Pipelined)?;
+        table.row(vec![
+            scheme.name().to_string(),
+            faults_name.to_string(),
+            format!("{:.0}ms ({:.1} req/s)", barrier * 1e3, batch as f64 / barrier),
+            format!("{:.0}ms ({:.1} req/s)", pipe * 1e3, batch as f64 / pipe),
+            format!("{:.2}x", barrier / pipe),
+        ]);
+    }
+    table.print();
+    println!(
+        "(pipelined engine: requests multiplexed over the pool, decode \
+         overlapped with other requests' compute, stragglers cancelled; \
+         identical outputs to the barrier path — see rust/tests/pipeline.rs)"
+    );
+    Ok(())
+}
+
+// ====================================================================
 // §IV-C theory check: Prop. 2's ~21% at n=20, R=1 + margins.
 // ====================================================================
 pub fn theory() -> Result<()> {

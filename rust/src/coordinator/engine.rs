@@ -1,0 +1,358 @@
+//! The pipelined execution engine.
+//!
+//! The round-barrier path (`Master::infer`) dispatches layer ℓ, blocks
+//! until it decodes, then starts layer ℓ+1 — workers sit idle while the
+//! master decodes/re-encodes, and exactly one request is served at a
+//! time. This engine removes both stalls:
+//!
+//! * several inference requests are in flight at once, each advancing
+//!   through the model graph independently;
+//! * a distributed conv dispatches its encoded subtasks to the
+//!   *least-loaded* workers and yields back to the event loop instead of
+//!   blocking, so other requests' rounds keep the pool busy while this
+//!   one waits, decodes, or re-encodes;
+//! * the moment a round has its first `k` results, its outstanding
+//!   straggler subtasks are cancelled ([`ToWorker::Cancel`]) so the
+//!   per-worker queues (see `coordinator::worker`) drop them and free
+//!   capacity for the next wave.
+//!
+//! A single request's latency is still bounded by its layer dependency
+//! chain, so the speedup materialises as multi-request throughput — see
+//! the `throughput` experiment in `bench::experiments` and the
+//! `bench_e2e` driver.
+
+use std::collections::{BTreeMap, HashMap};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coding;
+use crate::conv::Tensor;
+use crate::model::{Node, Op};
+
+use super::master::{assemble_output, Master, PreparedRound};
+use super::messages::{FromWorker, ToWorker};
+use super::metrics::InferenceMetrics;
+
+/// One request's progress through the model graph.
+struct RequestState {
+    values: BTreeMap<String, Tensor>,
+    /// Next node to execute (all earlier nodes are in `values`).
+    node_idx: usize,
+    metrics: InferenceMetrics,
+    t_start: Instant,
+    output: Option<Tensor>,
+}
+
+/// One in-flight coded round: a distributed conv of one request whose
+/// subtasks are out on the pool.
+struct ActiveRound {
+    request: usize,
+    relu: bool,
+    pr: PreparedRound,
+    decoder: Box<dyn coding::Decoder>,
+    remainder: Option<Tensor>,
+    received: Vec<usize>,
+    outstanding: Vec<usize>,
+    /// task id -> worker currently holding it (for cancel accounting).
+    assigned: Vec<usize>,
+    t_dispatch: Instant,
+    /// Master-local seconds already spent (remainder conv).
+    t_local: f64,
+}
+
+/// Least-loaded worker, lowest index on ties; avoids `avoid` when there
+/// is a choice (re-dispatch should not go back to the failing worker).
+fn pick_worker(load: &[usize], avoid: Option<usize>) -> usize {
+    let mut best = usize::MAX;
+    let mut best_w = 0;
+    for (w, &l) in load.iter().enumerate() {
+        if Some(w) == avoid && load.len() > 1 {
+            continue;
+        }
+        if l < best {
+            best = l;
+            best_w = w;
+        }
+    }
+    best_w
+}
+
+impl Master {
+    /// Pipelined batch inference: every input in flight at once,
+    /// multiplexed over the shared worker pool. Results come back in
+    /// input order.
+    pub(super) fn infer_pipelined(
+        &mut self,
+        inputs: &[Tensor],
+    ) -> Result<Vec<(Tensor, InferenceMetrics)>> {
+        anyhow::ensure!(!inputs.is_empty(), "empty inference batch");
+        let nodes = self.model.nodes.clone();
+        let mut worker_load = vec![0usize; self.n_workers()];
+        let mut rounds: HashMap<u64, ActiveRound> = HashMap::new();
+        let mut reqs: Vec<RequestState> = inputs
+            .iter()
+            .map(|input| {
+                let mut values = BTreeMap::new();
+                values.insert("input".to_string(), input.clone());
+                RequestState {
+                    values,
+                    node_idx: 0,
+                    metrics: InferenceMetrics::default(),
+                    t_start: Instant::now(),
+                    output: None,
+                }
+            })
+            .collect();
+
+        // Launch: run every request up to its first distributed round.
+        for r in 0..reqs.len() {
+            self.advance_request(r, &nodes, &mut reqs, &mut rounds, &mut worker_load)?;
+        }
+
+        while reqs.iter().any(|r| r.output.is_none()) {
+            // Liveness: a round with nothing outstanding can never decode.
+            for ar in rounds.values() {
+                if ar.outstanding.is_empty() && !ar.decoder.ready() {
+                    bail!(
+                        "layer {} (request {}): no outstanding subtasks but decoder \
+                         needs more (received {} of {})",
+                        ar.pr.lm.node_id,
+                        ar.request,
+                        ar.received.len(),
+                        ar.pr.scheme.min_completions()
+                    );
+                }
+            }
+            let (wid, msg) = self
+                .from_workers
+                .recv_timeout(self.config.recv_timeout)
+                .context("pipelined engine: timed out waiting for workers")?;
+            // Every dispatched subtask yields exactly one reply (Output,
+            // Failed, or Skipped after a cancel), so the worker's load
+            // charge is released here — at reply time, never earlier. A
+            // cancelled-but-already-executing subtask therefore keeps its
+            // worker charged until the stale Output actually arrives,
+            // which is what keeps the straggler off the next wave's
+            // least-loaded placement.
+            if !matches!(msg, FromWorker::Ready) {
+                worker_load[wid] = worker_load[wid].saturating_sub(1);
+            }
+            match msg {
+                FromWorker::Output {
+                    round, task_id, data, ..
+                } => {
+                    let task_id = task_id as usize;
+                    let ready = {
+                        let Some(ar) = rounds.get_mut(&round) else {
+                            continue; // stale: round decoded + cancelled earlier
+                        };
+                        ar.outstanding.retain(|&t| t != task_id);
+                        if ar.decoder.add(task_id, data) {
+                            true
+                        } else {
+                            ar.received.push(task_id);
+                            false
+                        }
+                    };
+                    if ready {
+                        let ar = rounds.remove(&round).unwrap();
+                        self.finish_round(ar, &nodes, &mut reqs, &mut rounds, &mut worker_load)?;
+                    }
+                }
+                FromWorker::Skipped { round, task_id } => {
+                    // Normally stale by construction (Cancel is only sent
+                    // after a round decoded). Defensively unblock the
+                    // round if one ever arrives live.
+                    if let Some(ar) = rounds.get_mut(&round) {
+                        ar.outstanding.retain(|&t| t != task_id as usize);
+                    }
+                }
+                FromWorker::Failed { round, task_id } => {
+                    let task_id = task_id as usize;
+                    let Some(ar) = rounds.get_mut(&round) else {
+                        continue;
+                    };
+                    ar.pr.lm.failures += 1;
+                    ar.outstanding.retain(|&t| t != task_id);
+                    if ar
+                        .pr
+                        .scheme
+                        .needs_redispatch(task_id, &ar.received, &ar.outstanding)
+                    {
+                        if ar.pr.lm.redispatches > 4 * ar.pr.frames.len() {
+                            bail!(
+                                "layer {}: re-dispatch storm; giving up",
+                                ar.pr.lm.node_id
+                            );
+                        }
+                        let target = pick_worker(&worker_load, Some(wid));
+                        self.worker_tx[target].send(&ar.pr.frames[task_id])?;
+                        worker_load[target] += 1;
+                        ar.assigned[task_id] = target;
+                        ar.outstanding.push(task_id);
+                        ar.pr.lm.redispatches += 1;
+                        log::debug!(
+                            "pipeline: task {task_id} of round {round} failed on \
+                             worker {wid}, re-dispatched to {target}"
+                        );
+                    }
+                }
+                FromWorker::Ready => bail!("unexpected Ready from worker {wid}"),
+            }
+        }
+
+        Ok(reqs
+            .into_iter()
+            .map(|mut r| (r.output.take().unwrap(), r.metrics))
+            .collect())
+    }
+
+    /// Execute `reqs[req]` forward from its cursor: type-2/simple ops run
+    /// locally; the first distributed conv dispatches a round and yields.
+    fn advance_request(
+        &mut self,
+        req: usize,
+        nodes: &[Node],
+        reqs: &mut [RequestState],
+        rounds: &mut HashMap<u64, ActiveRound>,
+        worker_load: &mut [usize],
+    ) -> Result<()> {
+        loop {
+            if reqs[req].node_idx >= nodes.len() {
+                if reqs[req].output.is_none() {
+                    let last = nodes.last().unwrap();
+                    let out = reqs[req]
+                        .values
+                        .remove(&last.id)
+                        .context("missing model output")?;
+                    reqs[req].metrics.total_seconds =
+                        reqs[req].t_start.elapsed().as_secs_f64();
+                    reqs[req].output = Some(out);
+                }
+                return Ok(());
+            }
+            let node = &nodes[reqs[req].node_idx];
+            let fetched: Vec<Tensor> = node
+                .inputs
+                .iter()
+                .map(|i| reqs[req].values.get(i).cloned().context("missing value"))
+                .collect::<Result<_>>()?;
+            match &node.op {
+                Op::Conv { spec, relu } => {
+                    let spec = *spec;
+                    let relu = *relu;
+                    let dist = self
+                        .plan
+                        .conv(&node.id)
+                        .map(|c| (c.distributed, c.k))
+                        .unwrap_or((false, 1));
+                    if dist.0 {
+                        let pr = self.prepare_round(
+                            req as u32,
+                            &node.id,
+                            &spec,
+                            dist.1,
+                            &fetched[0],
+                        )?;
+                        let t_dispatch = Instant::now();
+                        // Spread the round's shards over *distinct* workers
+                        // (the MDS resilience model assumes one shard per
+                        // device), least-loaded first; wrap only when a
+                        // scheme issues more subtasks than workers (LT).
+                        let mut order: Vec<usize> = (0..worker_load.len()).collect();
+                        order.sort_by_key(|&w| (worker_load[w], w));
+                        let mut assigned = vec![0usize; pr.frames.len()];
+                        for (t, frame) in pr.frames.iter().enumerate() {
+                            let w = order[t % order.len()];
+                            self.worker_tx[w].send(frame)?;
+                            worker_load[w] += 1;
+                            assigned[t] = w;
+                        }
+                        // Master-local remainder piece while workers run.
+                        let t0 = Instant::now();
+                        let remainder = match &pr.remainder_input {
+                            Some(piece) => {
+                                Some(self.provider.conv(&spec, piece, &pr.params.weights)?)
+                            }
+                            None => None,
+                        };
+                        let t_local = t0.elapsed().as_secs_f64();
+                        let outstanding: Vec<usize> = (0..pr.frames.len()).collect();
+                        let decoder = pr.scheme.decoder();
+                        rounds.insert(
+                            pr.round,
+                            ActiveRound {
+                                request: req,
+                                relu,
+                                pr,
+                                decoder,
+                                remainder,
+                                received: Vec::new(),
+                                outstanding,
+                                assigned,
+                                t_dispatch,
+                                t_local,
+                            },
+                        );
+                        return Ok(()); // yield: event loop resumes us
+                    }
+                    let out = self.run_local_node(node, &fetched, &mut reqs[req].metrics)?;
+                    reqs[req].values.insert(node.id.clone(), out);
+                    reqs[req].node_idx += 1;
+                }
+                _ => {
+                    let out = self.run_local_node(node, &fetched, &mut reqs[req].metrics)?;
+                    reqs[req].values.insert(node.id.clone(), out);
+                    reqs[req].node_idx += 1;
+                }
+            }
+        }
+    }
+
+    /// A round just became decodable: cancel stragglers, decode,
+    /// reassemble, and advance the owning request.
+    fn finish_round(
+        &mut self,
+        mut ar: ActiveRound,
+        nodes: &[Node],
+        reqs: &mut [RequestState],
+        rounds: &mut HashMap<u64, ActiveRound>,
+        worker_load: &mut [usize],
+    ) -> Result<()> {
+        // Cancel outstanding stragglers so worker queues drop them. Their
+        // load charges are NOT released here: each cancelled subtask
+        // still produces exactly one reply (a Skipped ack for queued
+        // work, a stale Output for work already executing), and the
+        // charge is released when that reply arrives.
+        if !ar.outstanding.is_empty() {
+            let frame = ToWorker::Cancel { round: ar.pr.round }.encode();
+            let mut notified = vec![false; worker_load.len()];
+            for &t in &ar.outstanding {
+                let w = ar.assigned[t];
+                if !notified[w] {
+                    notified[w] = true;
+                    self.worker_tx[w].send(&frame)?;
+                }
+            }
+            ar.pr.lm.cancelled += ar.outstanding.len();
+            ar.outstanding.clear();
+        }
+        ar.pr.lm.t_workers = ar.t_dispatch.elapsed().as_secs_f64() - ar.t_local;
+
+        let t0 = Instant::now();
+        let decoded = ar.decoder.decode()?;
+        ar.pr.lm.t_decode = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let out = assemble_output(&ar.pr, decoded, ar.remainder.take(), ar.relu)?;
+        ar.pr.lm.t_local = ar.t_local + t0.elapsed().as_secs_f64();
+
+        let req = ar.request;
+        let node_id = nodes[reqs[req].node_idx].id.clone();
+        reqs[req].metrics.layers.push(ar.pr.lm.clone());
+        reqs[req].values.insert(node_id, out);
+        reqs[req].node_idx += 1;
+        self.advance_request(req, nodes, reqs, rounds, worker_load)
+    }
+}

@@ -14,7 +14,7 @@ use crate::coding::{
 use crate::conv::{SplitPlan, Tensor};
 use crate::latency::SystemProfile;
 use crate::model::graph::execute_simple_op;
-use crate::model::{zoo, ModelPlan, ModelSpec, Op, WeightStore};
+use crate::model::{zoo, ModelPlan, ModelSpec, Node, Op, WeightStore};
 use crate::planner::SplitPolicy;
 use crate::runtime::ConvProvider;
 use crate::transport::LinkPair;
@@ -69,6 +69,19 @@ impl SchemeKind {
     }
 }
 
+/// How the master schedules coded rounds over the worker pool.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Strict round barrier (the paper's workflow): one request at a
+    /// time; layer ℓ fully decodes before layer ℓ+1 dispatches.
+    #[default]
+    RoundBarrier,
+    /// Pipelined engine (`coordinator::engine`): multiple requests in
+    /// flight over the shared pool, per-round straggler cancellation,
+    /// decode overlapped with other requests' worker execution.
+    Pipelined,
+}
+
 /// Master configuration.
 #[derive(Clone, Debug)]
 pub struct MasterConfig {
@@ -79,6 +92,9 @@ pub struct MasterConfig {
     pub seed: u64,
     /// Per-round receive timeout before declaring the cluster wedged.
     pub recv_timeout: Duration,
+    /// Execution engine (see [`ExecMode`]); benchmarks toggle this to
+    /// compare the pipeline against the round barrier.
+    pub mode: ExecMode,
 }
 
 impl Default for MasterConfig {
@@ -90,22 +106,64 @@ impl Default for MasterConfig {
             weight_seed: 42,
             seed: 7,
             recv_timeout: Duration::from_secs(120),
+            mode: ExecMode::RoundBarrier,
         }
     }
 }
 
 /// The master device.
 pub struct Master {
-    model: ModelSpec,
-    weights: WeightStore,
-    plan: ModelPlan,
-    config: MasterConfig,
-    provider: std::sync::Arc<dyn ConvProvider>,
-    worker_tx: Vec<Box<dyn crate::transport::FrameTx>>,
-    from_workers: mpsc::Receiver<(usize, FromWorker)>,
+    pub(super) model: ModelSpec,
+    pub(super) weights: WeightStore,
+    pub(super) plan: ModelPlan,
+    pub(super) config: MasterConfig,
+    pub(super) provider: std::sync::Arc<dyn ConvProvider>,
+    pub(super) worker_tx: Vec<Box<dyn crate::transport::FrameTx>>,
+    pub(super) from_workers: mpsc::Receiver<(usize, FromWorker)>,
     _readers: Vec<std::thread::JoinHandle<()>>,
-    round: u64,
-    rng: Rng,
+    pub(super) round: u64,
+    pub(super) rng: Rng,
+}
+
+/// A distributed layer round after split + encode, frames ready to send.
+/// Shared between the round-barrier path and the pipelined engine so the
+/// two produce identical encodings (and therefore identical outputs).
+pub(super) struct PreparedRound {
+    pub(super) round: u64,
+    pub(super) scheme: Box<dyn RedundancyScheme>,
+    /// Pre-encoded dispatch frames, one per subtask; re-dispatch after a
+    /// failure reuses the same bytes.
+    pub(super) frames: Vec<Vec<u8>>,
+    /// Master-local remainder slice (footnote 2); convolved *after*
+    /// dispatch so workers start first.
+    pub(super) remainder_input: Option<Tensor>,
+    pub(super) params: crate::model::LayerParams,
+    pub(super) c_out: usize,
+    pub(super) h_o: usize,
+    pub(super) w_o_p: usize,
+    pub(super) lm: LayerMetrics,
+}
+
+/// Decode results + remainder -> the layer's output tensor.
+pub(super) fn assemble_output(
+    pr: &PreparedRound,
+    decoded: Vec<Vec<f32>>,
+    remainder: Option<Tensor>,
+    relu: bool,
+) -> Result<Tensor> {
+    let mut pieces: Vec<Tensor> = decoded
+        .into_iter()
+        .map(|flat| Tensor::from_flat(pr.c_out, pr.h_o, pr.w_o_p, flat))
+        .collect::<Result<_>>()?;
+    if let Some(rem) = remainder {
+        pieces.push(rem);
+    }
+    let mut out = Tensor::concat_w(&pieces)?;
+    out.add_bias_inplace(&pr.params.bias);
+    if relu {
+        out.relu_inplace();
+    }
+    Ok(out)
 }
 
 impl Master {
@@ -179,7 +237,7 @@ impl Master {
         Ok(master)
     }
 
-    fn n_workers(&self) -> usize {
+    pub(super) fn n_workers(&self) -> usize {
         self.worker_tx.len()
     }
 
@@ -210,9 +268,26 @@ impl Master {
         Ok(())
     }
 
+    /// Run a batch of inferences. [`ExecMode::RoundBarrier`] serves them
+    /// one at a time (the comparison baseline); [`ExecMode::Pipelined`]
+    /// multiplexes all of them over the worker pool (`engine.rs`).
+    pub fn infer_batch(
+        &mut self,
+        inputs: &[Tensor],
+    ) -> Result<Vec<(Tensor, InferenceMetrics)>> {
+        match self.config.mode {
+            ExecMode::RoundBarrier => inputs.iter().map(|i| self.infer(i)).collect(),
+            ExecMode::Pipelined => self.infer_pipelined(inputs),
+        }
+    }
+
     /// Run one full inference. Returns the network output and the
     /// per-layer latency breakdown.
     pub fn infer(&mut self, input: &Tensor) -> Result<(Tensor, InferenceMetrics)> {
+        if self.config.mode == ExecMode::Pipelined {
+            let mut out = self.infer_pipelined(std::slice::from_ref(input))?;
+            return Ok(out.pop().unwrap());
+        }
         let t_start = Instant::now();
         let mut metrics = InferenceMetrics::default();
         let mut values: std::collections::BTreeMap<String, Tensor> = Default::default();
@@ -245,29 +320,10 @@ impl Master {
                         metrics.layers.push(lm);
                         t
                     } else {
-                        let t0 = Instant::now();
-                        let params = self.weights.get(&node.id)?.clone();
-                        let padded = fetched[0].pad(spec.pad);
-                        let mut t = self.provider.conv(&spec, &padded, &params.weights)?;
-                        t.add_bias_inplace(&params.bias);
-                        if relu {
-                            t.relu_inplace();
-                        }
-                        metrics.layers.push(LayerMetrics {
-                            node_id: node.id.clone(),
-                            k: 1,
-                            n_tasks: 0,
-                            distributed: false,
-                            t_local: t0.elapsed().as_secs_f64(),
-                            ..Default::default()
-                        });
-                        t
+                        self.run_local_node(node, &fetched, &mut metrics)?
                     }
                 }
-                _ => {
-                    let refs: Vec<&Tensor> = fetched.iter().collect();
-                    execute_simple_op(node, &refs, &self.weights)?
-                }
+                _ => self.run_local_node(node, &fetched, &mut metrics)?,
             };
             values.insert(node.id.clone(), out);
         }
@@ -276,15 +332,53 @@ impl Master {
         Ok((values.remove(&last.id).unwrap(), metrics))
     }
 
-    /// One coded-computation round (paper Fig. 1 workflow).
-    fn run_distributed_conv(
+    /// Execute one non-distributed node on the master: a local (type-2)
+    /// conv with bias/activation, or any simple op. Shared by the
+    /// round-barrier path and the pipelined engine so the two cannot
+    /// diverge on local-layer semantics.
+    pub(super) fn run_local_node(
+        &self,
+        node: &Node,
+        fetched: &[Tensor],
+        metrics: &mut InferenceMetrics,
+    ) -> Result<Tensor> {
+        match &node.op {
+            Op::Conv { spec, relu } => {
+                let t0 = Instant::now();
+                let params = self.weights.get(&node.id)?.clone();
+                let padded = fetched[0].pad(spec.pad);
+                let mut t = self.provider.conv(spec, &padded, &params.weights)?;
+                t.add_bias_inplace(&params.bias);
+                if *relu {
+                    t.relu_inplace();
+                }
+                metrics.layers.push(LayerMetrics {
+                    node_id: node.id.clone(),
+                    k: 1,
+                    n_tasks: 0,
+                    distributed: false,
+                    t_local: t0.elapsed().as_secs_f64(),
+                    ..Default::default()
+                });
+                Ok(t)
+            }
+            _ => {
+                let refs: Vec<&Tensor> = fetched.iter().collect();
+                execute_simple_op(node, &refs, &self.weights)
+            }
+        }
+    }
+
+    /// Split + encode one distributed layer into a [`PreparedRound`].
+    /// `request` tags the dispatch frames (0 on the round-barrier path).
+    pub(super) fn prepare_round(
         &mut self,
+        request: u32,
         node_id: &str,
         spec: &crate::conv::ConvSpec,
-        relu: bool,
         k_planned: usize,
         input: &Tensor,
-    ) -> Result<(Tensor, LayerMetrics)> {
+    ) -> Result<PreparedRound> {
         self.round += 1;
         let round = self.round;
         let n = self.n_workers();
@@ -315,10 +409,6 @@ impl Master {
         let t0 = Instant::now();
         let tasks = scheme.encode(&sources);
         lm.n_tasks = tasks.len();
-        lm.t_encode = t0.elapsed().as_secs_f64();
-
-        // -- execution phase (dispatch + master-local remainder) -------
-        let t0 = Instant::now();
         let h_i = padded.h;
         // Encode each dispatch frame exactly once (§Perf: the payload used
         // to be cloned into a WorkOrder and re-serialized per dispatch);
@@ -328,6 +418,7 @@ impl Master {
             .map(|task| {
                 ToWorker::Work(WorkOrder {
                     round,
+                    request,
                     task_id: task.id as u32,
                     node_id: node_id.to_string(),
                     c_in: spec.c_in as u32,
@@ -341,29 +432,59 @@ impl Master {
                 .encode()
             })
             .collect();
-        let mut assigned_worker: Vec<usize> = Vec::with_capacity(tasks.len());
-        for (i, frame) in frames.iter().enumerate() {
-            let w = i % n;
-            self.worker_tx[w].send(frame)?;
-            assigned_worker.push(w);
+        lm.t_encode = t0.elapsed().as_secs_f64();
+
+        let remainder_input = match (plan.remainder_in, plan.remainder_out) {
+            (Some(ri), Some(_)) => Some(padded.slice_w(ri.start, ri.end)),
+            _ => None,
+        };
+        let params = self.weights.get(node_id)?.clone();
+        Ok(PreparedRound {
+            round,
+            scheme,
+            frames,
+            remainder_input,
+            params,
+            c_out: spec.c_out,
+            h_o: spec.out_dim_padded(padded.h),
+            w_o_p: plan.w_o_p,
+            lm,
+        })
+    }
+
+    /// One coded-computation round (paper Fig. 1 workflow), blocking
+    /// until this layer decodes — the round-barrier execution path.
+    fn run_distributed_conv(
+        &mut self,
+        node_id: &str,
+        spec: &crate::conv::ConvSpec,
+        relu: bool,
+        k_planned: usize,
+        input: &Tensor,
+    ) -> Result<(Tensor, LayerMetrics)> {
+        let n = self.n_workers();
+        let mut pr = self.prepare_round(0, node_id, spec, k_planned, input)?;
+        let round = pr.round;
+        let mut lm = std::mem::take(&mut pr.lm);
+
+        // -- execution phase (dispatch + master-local remainder) -------
+        let t0 = Instant::now();
+        for (i, frame) in pr.frames.iter().enumerate() {
+            self.worker_tx[i % n].send(frame)?;
         }
 
         // Master-local remainder piece (footnote 2) while workers run.
         let t_local0 = Instant::now();
-        let params = self.weights.get(node_id)?.clone();
-        let remainder: Option<Tensor> = match (plan.remainder_in, plan.remainder_out) {
-            (Some(ri), Some(_)) => {
-                let piece = padded.slice_w(ri.start, ri.end);
-                Some(self.provider.conv(spec, &piece, &params.weights)?)
-            }
-            _ => None,
+        let remainder: Option<Tensor> = match &pr.remainder_input {
+            Some(piece) => Some(self.provider.conv(spec, piece, &pr.params.weights)?),
+            None => None,
         };
         let mut t_local = t_local0.elapsed().as_secs_f64();
 
         // -- collect until decodable -----------------------------------
-        let mut decoder = scheme.decoder();
+        let mut decoder = pr.scheme.decoder();
         let mut received: Vec<usize> = Vec::new();
-        let mut outstanding: Vec<usize> = (0..tasks.len()).collect();
+        let mut outstanding: Vec<usize> = (0..pr.frames.len()).collect();
         let mut next_redispatch_worker = 0usize;
         while !decoder.ready() {
             if outstanding.is_empty() {
@@ -371,7 +492,7 @@ impl Master {
                     "layer {node_id}: no outstanding subtasks but decoder needs more \
                      (received {} of {})",
                     received.len(),
-                    scheme.min_completions()
+                    pr.scheme.min_completions()
                 );
             }
             let (wid, msg) = self
@@ -405,8 +526,8 @@ impl Master {
                     let task_id = task_id as usize;
                     lm.failures += 1;
                     outstanding.retain(|&t| t != task_id);
-                    if scheme.needs_redispatch(task_id, &received, &outstanding) {
-                        if lm.redispatches > 4 * tasks.len() {
+                    if pr.scheme.needs_redispatch(task_id, &received, &outstanding) {
+                        if lm.redispatches > 4 * pr.frames.len() {
                             bail!("layer {node_id}: re-dispatch storm; giving up");
                         }
                         // Round-robin to a different worker than the one
@@ -416,7 +537,7 @@ impl Master {
                             target = (target + 1) % n;
                         }
                         next_redispatch_worker = target + 1;
-                        self.worker_tx[target].send(&frames[task_id])?;
+                        self.worker_tx[target].send(&pr.frames[task_id])?;
                         outstanding.push(task_id);
                         lm.redispatches += 1;
                         log::debug!(
@@ -424,6 +545,12 @@ impl Master {
                              re-dispatched to {target}"
                         );
                     }
+                }
+                FromWorker::Skipped { .. } => {
+                    // Only the pipelined engine cancels rounds; a skip
+                    // reaching the barrier path is a leftover from an
+                    // earlier pipelined batch on this master.
+                    lm.stale_results += 1;
                 }
                 FromWorker::Ready => bail!("unexpected Ready from worker {wid}"),
             }
@@ -437,19 +564,7 @@ impl Master {
 
         // -- reassembly + bias/activation (master-local) -----------------
         let t0 = Instant::now();
-        let h_o = spec.out_dim_padded(padded.h);
-        let mut pieces: Vec<Tensor> = decoded
-            .into_iter()
-            .map(|flat| Tensor::from_flat(spec.c_out, h_o, plan.w_o_p, flat))
-            .collect::<Result<_>>()?;
-        if let Some(rem) = remainder {
-            pieces.push(rem);
-        }
-        let mut out = Tensor::concat_w(&pieces)?;
-        out.add_bias_inplace(&params.bias);
-        if relu {
-            out.relu_inplace();
-        }
+        let out = assemble_output(&pr, decoded, remainder, relu)?;
         t_local += t0.elapsed().as_secs_f64();
         lm.t_local = t_local;
         Ok((out, lm))

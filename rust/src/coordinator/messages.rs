@@ -14,6 +14,9 @@ pub enum ToWorker {
     Setup { model: String, weight_seed: u64 },
     /// Execute one encoded conv subtask.
     Work(WorkOrder),
+    /// Drop any queued (not yet started) subtasks of this round: the
+    /// master has already decoded it, so straggler results are useless.
+    Cancel { round: u64 },
     Shutdown,
 }
 
@@ -21,9 +24,13 @@ pub enum ToWorker {
 /// partition plus which layer's preloaded weights to convolve it with.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkOrder {
-    /// Coded-computation round (one per distributed layer execution);
-    /// stale results from earlier rounds are discarded by the master.
+    /// Coded-computation round (one per distributed layer execution,
+    /// unique across concurrent requests); the master routes results and
+    /// discards stale ones by this id.
     pub round: u64,
+    /// Inference request this subtask belongs to (pipelined engine tag;
+    /// always 0 on the round-barrier path).
+    pub request: u32,
     /// Scheme-local subtask id.
     pub task_id: u32,
     /// Conv node whose weights to use.
@@ -72,14 +79,21 @@ pub enum FromWorker {
     /// The worker failed this subtask and signals the master (paper §IV-C
     /// uncoded failure model).
     Failed { round: u64, task_id: u32 },
+    /// The worker dropped this queued subtask because its round was
+    /// cancelled. Every dispatched subtask yields exactly one reply
+    /// (Output / Failed / Skipped), which is what keeps the master's
+    /// per-worker load accounting exact.
+    Skipped { round: u64, task_id: u32 },
 }
 
 const TAG_SETUP: u8 = 1;
 const TAG_WORK: u8 = 2;
 const TAG_SHUTDOWN: u8 = 3;
+const TAG_CANCEL: u8 = 4;
 const TAG_READY: u8 = 11;
 const TAG_OUTPUT: u8 = 12;
 const TAG_FAILED: u8 = 13;
+const TAG_SKIPPED: u8 = 14;
 
 impl ToWorker {
     pub fn encode(&self) -> Vec<u8> {
@@ -89,8 +103,11 @@ impl ToWorker {
                 e.u8(TAG_SETUP).str(model).u64(*weight_seed);
             }
             ToWorker::Work(w) => {
+                // Pre-size: the payload dominates the frame.
+                e.reserve(64 + w.node_id.len() + 4 * w.data.len());
                 e.u8(TAG_WORK)
                     .u64(w.round)
+                    .u32(w.request)
                     .u32(w.task_id)
                     .str(&w.node_id)
                     .u32(w.c_in)
@@ -100,6 +117,9 @@ impl ToWorker {
                     .u32(w.h)
                     .u32(w.w)
                     .f32s(&w.data);
+            }
+            ToWorker::Cancel { round } => {
+                e.u8(TAG_CANCEL).u64(*round);
             }
             ToWorker::Shutdown => {
                 e.u8(TAG_SHUTDOWN);
@@ -117,6 +137,7 @@ impl ToWorker {
             },
             TAG_WORK => ToWorker::Work(WorkOrder {
                 round: d.u64()?,
+                request: d.u32()?,
                 task_id: d.u32()?,
                 node_id: d.str()?,
                 c_in: d.u32()?,
@@ -127,6 +148,7 @@ impl ToWorker {
                 w: d.u32()?,
                 data: d.f32s()?,
             }),
+            TAG_CANCEL => ToWorker::Cancel { round: d.u64()? },
             TAG_SHUTDOWN => ToWorker::Shutdown,
             t => bail!("unknown ToWorker tag {t}"),
         };
@@ -161,6 +183,9 @@ impl FromWorker {
             FromWorker::Failed { round, task_id } => {
                 e.u8(TAG_FAILED).u64(*round).u32(*task_id);
             }
+            FromWorker::Skipped { round, task_id } => {
+                e.u8(TAG_SKIPPED).u64(*round).u32(*task_id);
+            }
         }
         e.finish()
     }
@@ -181,6 +206,10 @@ impl FromWorker {
                 round: d.u64()?,
                 task_id: d.u32()?,
             },
+            TAG_SKIPPED => FromWorker::Skipped {
+                round: d.u64()?,
+                task_id: d.u32()?,
+            },
             t => bail!("unknown FromWorker tag {t}"),
         };
         d.done()?;
@@ -198,6 +227,7 @@ mod tests {
         prop::check("message codec roundtrip", 48, |rng| {
             let order = WorkOrder {
                 round: rng.next_u64(),
+                request: rng.below(8) as u32,
                 task_id: rng.below(100) as u32,
                 node_id: format!("conv{}", rng.below(20)),
                 c_in: 1 + rng.below(64) as u32,
@@ -214,6 +244,7 @@ mod tests {
                     weight_seed: rng.next_u64(),
                 },
                 ToWorker::Work(order),
+                ToWorker::Cancel { round: rng.next_u64() },
                 ToWorker::Shutdown,
             ] {
                 assert_eq!(ToWorker::decode(&msg.encode()).unwrap(), msg);
@@ -229,6 +260,7 @@ mod tests {
                     data: vec![1.0; 24],
                 },
                 FromWorker::Failed { round: 9, task_id: 7 },
+                FromWorker::Skipped { round: 11, task_id: 3 },
             ] {
                 assert_eq!(FromWorker::decode(&msg.encode()).unwrap(), msg);
             }

@@ -22,6 +22,9 @@ pub struct LayerMetrics {
     pub failures: usize,
     pub redispatches: usize,
     pub stale_results: usize,
+    /// Straggler subtasks cancelled after the round decoded (pipelined
+    /// engine only; the round-barrier path lets them finish as stale).
+    pub cancelled: usize,
 }
 
 impl LayerMetrics {
@@ -51,6 +54,7 @@ impl LayerMetrics {
             ("t_local", Json::Num(self.t_local)),
             ("failures", Json::Num(self.failures as f64)),
             ("redispatches", Json::Num(self.redispatches as f64)),
+            ("cancelled", Json::Num(self.cancelled as f64)),
         ])
     }
 }
@@ -78,6 +82,10 @@ impl InferenceMetrics {
 
     pub fn redispatches(&self) -> usize {
         self.layers.iter().map(|l| l.redispatches).sum()
+    }
+
+    pub fn cancelled(&self) -> usize {
+        self.layers.iter().map(|l| l.cancelled).sum()
     }
 
     pub fn to_json(&self) -> Json {

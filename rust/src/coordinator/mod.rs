@@ -1,6 +1,7 @@
 //! The CoCoI coordinator (the paper's system contribution): master,
 //! workers, wire messages, fault injection, metrics, and the local pool.
 
+pub mod engine;
 pub mod injector;
 pub mod master;
 pub mod messages;
@@ -9,7 +10,7 @@ pub mod pool;
 pub mod worker;
 
 pub use injector::{ScenarioFaults, WorkerFaults};
-pub use master::{Master, MasterConfig, SchemeKind};
+pub use master::{ExecMode, Master, MasterConfig, SchemeKind};
 pub use metrics::{InferenceMetrics, LayerMetrics};
 pub use pool::LocalCluster;
 

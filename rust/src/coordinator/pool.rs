@@ -1,6 +1,11 @@
 //! Local worker pool: spawn `n` in-process workers (threads) wired to a
 //! master via in-proc links — the single-binary analogue of the paper's
 //! 1 master + n Raspberry Pi workers.
+//!
+//! Each spawned worker runs its own work queue + cancel set (see
+//! `coordinator::worker`), so the pool serves both execution modes:
+//! round-barrier [`Master::infer`] and the pipelined
+//! [`Master::infer_batch`] with straggler cancellation.
 
 use std::sync::Arc;
 

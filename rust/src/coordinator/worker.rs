@@ -2,8 +2,16 @@
 //! preloaded layer weights through a [`ConvProvider`], send results back.
 //! One `run_worker` call per device (thread in in-proc mode, process in
 //! TCP mode).
+//!
+//! Each worker owns a *work queue*: a reader thread drains the link as
+//! frames arrive — even while a conv is executing — so a [`ToWorker::Cancel`]
+//! from the master (round already decoded elsewhere) immediately marks
+//! queued subtasks of that round as dead instead of waiting behind them
+//! in the transport FIFO. That is what frees straggler capacity for the
+//! pipelined engine's next wave.
 
-use std::sync::Arc;
+use std::collections::{BTreeMap, HashSet};
+use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -33,13 +41,58 @@ pub fn run_worker(
 ) -> Result<()> {
     let mut rng = Rng::new(config.rng_seed);
     let mut weights: Option<(String, WeightStore)> = None;
-    let mut specs: std::collections::BTreeMap<String, crate::conv::ConvSpec> =
-        Default::default();
+    let mut specs: BTreeMap<String, crate::conv::ConvSpec> = Default::default();
 
-    while let Some(frame) = rx.recv()? {
-        match ToWorker::decode(&frame)? {
-            ToWorker::Shutdown => break,
-            ToWorker::Setup { model, weight_seed } => {
+    // Reader thread: link frames -> in-memory work queue + cancel set.
+    let (queue_tx, queue) = mpsc::channel::<Result<ToWorker>>();
+    let cancelled: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
+    let cancel_set = cancelled.clone();
+    let reader = std::thread::Builder::new()
+        .name(format!("worker-{}-rx", config.id))
+        .spawn(move || loop {
+            match rx.recv() {
+                Ok(Some(frame)) => match ToWorker::decode(&frame) {
+                    Ok(ToWorker::Cancel { round }) => {
+                        let mut set = cancel_set.lock().unwrap();
+                        // Round ids only grow; bound the set so a
+                        // long-lived worker never accumulates forever.
+                        // Un-cancelling is harmless: the master ignores
+                        // stale outputs.
+                        if set.len() > 4096 {
+                            set.clear();
+                        }
+                        set.insert(round);
+                    }
+                    Ok(msg) => {
+                        let stop = matches!(msg, ToWorker::Shutdown);
+                        if queue_tx.send(Ok(msg)).is_err() || stop {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = queue_tx.send(Err(e));
+                        break;
+                    }
+                },
+                Ok(None) => break, // peer closed
+                Err(e) => {
+                    let _ = queue_tx.send(Err(e));
+                    break;
+                }
+            }
+        })?;
+
+    let mut result = Ok(());
+    while let Ok(msg) = queue.recv() {
+        match msg {
+            Err(e) => {
+                result = Err(e);
+                break;
+            }
+            Ok(ToWorker::Shutdown) => break,
+            // Cancels are absorbed by the reader; tolerate one anyway.
+            Ok(ToWorker::Cancel { .. }) => {}
+            Ok(ToWorker::Setup { model, weight_seed }) => {
                 let spec = zoo::model(&model)?;
                 let store = WeightStore::generate(&spec, weight_seed)?;
                 specs = spec
@@ -53,8 +106,33 @@ pub fn run_worker(
                     break; // master gone mid-setup
                 }
             }
-            ToWorker::Work(order) => {
-                let reply = execute_order(&order, &weights, &specs, &config, &mut rng)?;
+            Ok(ToWorker::Work(order)) => {
+                if cancelled.lock().unwrap().contains(&order.round) {
+                    log::debug!(
+                        "worker {}: skipping cancelled round {} task {}",
+                        config.id,
+                        order.round,
+                        order.task_id
+                    );
+                    // Ack the drop: the master keeps its per-worker load
+                    // accounting exact by counting one reply per subtask.
+                    let skipped = FromWorker::Skipped {
+                        round: order.round,
+                        task_id: order.task_id,
+                    };
+                    if tx.send(&skipped.encode()).is_err() {
+                        break;
+                    }
+                    continue;
+                }
+                let reply = match execute_order(&order, &weights, &specs, &config, &mut rng)
+                {
+                    Ok(r) => r,
+                    Err(e) => {
+                        result = Err(e);
+                        break;
+                    }
+                };
                 // A failed send means the master has shut down while this
                 // worker was draining queued (e.g. rateless LT) subtasks —
                 // a normal exit, not an error.
@@ -65,7 +143,10 @@ pub fn run_worker(
             }
         }
     }
-    Ok(())
+    // Don't join: the reader may be blocked in recv() until the master
+    // drops its link end; it exits on its own then.
+    drop(reader);
+    result
 }
 
 fn execute_order(
@@ -176,6 +257,7 @@ mod tests {
         // conv1 of tinyvgg: 3 -> 32, 3x3 s1. Send a small padded slice.
         let order = WorkOrder {
             round: 0,
+            request: 0,
             task_id: 5,
             node_id: "conv1".into(),
             c_in: 3,
@@ -215,6 +297,7 @@ mod tests {
         rx.recv().unwrap().unwrap(); // Ready
         let order = WorkOrder {
             round: 0,
+            request: 0,
             task_id: 2,
             node_id: "conv1".into(),
             c_in: 3,
@@ -241,6 +324,53 @@ mod tests {
         handle.join().unwrap();
     }
 
+    /// A `Cancel` that reaches the worker before a queued `Work` of the
+    /// same round makes the worker skip it: only the later round answers.
+    #[test]
+    fn cancelled_round_is_skipped() {
+        let (mut tx, mut rx, handle) = spawn_test_worker(WorkerFaults::none());
+        tx.send(
+            &ToWorker::Setup {
+                model: "tinyvgg".into(),
+                weight_seed: 42,
+            }
+            .encode(),
+        )
+        .unwrap();
+        rx.recv().unwrap().unwrap(); // Ready
+        let order = WorkOrder {
+            round: 5,
+            request: 0,
+            task_id: 1,
+            node_id: "conv1".into(),
+            c_in: 3,
+            c_out: 32,
+            k_w: 3,
+            s_w: 1,
+            h: 10,
+            w: 7,
+            data: vec![0.25; 3 * 10 * 7],
+        };
+        // Cancel round 5 first (FIFO: reader records it before the work
+        // is dequeued), then send round-5 work and round-6 work.
+        tx.send(&ToWorker::Cancel { round: 5 }.encode()).unwrap();
+        tx.send(&ToWorker::Work(order.clone()).encode()).unwrap();
+        let order6 = WorkOrder { round: 6, ..order };
+        tx.send(&ToWorker::Work(order6).encode()).unwrap();
+        // Round 5's subtask is dropped from the queue and acked as
+        // Skipped; only round 6 produces an Output.
+        assert_eq!(
+            FromWorker::decode(&rx.recv().unwrap().unwrap()).unwrap(),
+            FromWorker::Skipped { round: 5, task_id: 1 }
+        );
+        match FromWorker::decode(&rx.recv().unwrap().unwrap()).unwrap() {
+            FromWorker::Output { round, .. } => assert_eq!(round, 6),
+            other => panic!("expected round-6 output, got {other:?}"),
+        }
+        tx.send(&ToWorker::Shutdown.encode()).unwrap();
+        handle.join().unwrap();
+    }
+
     #[test]
     fn work_before_setup_is_error() {
         let (master_side, worker_side) = inproc::pair();
@@ -260,6 +390,7 @@ mod tests {
         });
         let order = WorkOrder {
             round: 0,
+            request: 0,
             task_id: 0,
             node_id: "conv1".into(),
             c_in: 1,

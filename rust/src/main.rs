@@ -4,11 +4,11 @@
 //!
 //! ```text
 //! cocoi infer  --model tinyvgg --workers 4 [--scheme mds|uncoded|rep|lt-fine|lt-coarse]
-//!              [--k N] [--lambda-tr X] [--fail N] [--pjrt] [--runs R]
+//!              [--k N] [--lambda-tr X] [--fail N] [--pjrt] [--runs R] [--pipeline]
 //! cocoi worker --listen 0.0.0.0:9090 [--pjrt]      # TCP worker process
 //! cocoi infer  --tcp host:9090,host:9091 ...        # master over TCP
 //! cocoi plan   --model vgg16 --workers 10           # show the split plan
-//! cocoi experiment <fig4|fig5|fig6|fig7|fig8|fig9|fig10|table1|theory|all>
+//! cocoi experiment <fig4|fig5|fig6|fig7|fig8|fig9|fig10|table1|theory|throughput|all>
 //! ```
 
 use std::collections::BTreeMap;
@@ -19,7 +19,7 @@ use anyhow::{bail, Context, Result};
 use cocoi::bench::experiments as exp;
 use cocoi::conv::Tensor;
 use cocoi::coordinator::{
-    LocalCluster, MasterConfig, ScenarioFaults, SchemeKind, WorkerFaults,
+    ExecMode, LocalCluster, MasterConfig, ScenarioFaults, SchemeKind, WorkerFaults,
 };
 use cocoi::latency::SystemProfile;
 use cocoi::model::zoo;
@@ -133,6 +133,11 @@ fn cmd_infer(args: &Args) -> Result<()> {
         policy: match args.get("k") {
             Some(k) => SplitPolicy::Fixed(k.parse()?),
             None => SplitPolicy::KCircle,
+        },
+        mode: if args.has("pipeline") {
+            ExecMode::Pipelined
+        } else {
+            ExecMode::RoundBarrier
         },
         ..Default::default()
     };
@@ -262,6 +267,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "fig10" => exp::fig10(scale)?,
         "table1" => exp::table1(scale)?,
         "theory" => exp::theory()?,
+        "throughput" => exp::throughput(scale)?,
         "all" => {
             exp::fig7()?;
             exp::fig8()?;
@@ -272,6 +278,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             exp::fig9(scale)?;
             exp::fig10(scale)?;
             exp::theory()?;
+            exp::throughput(scale)?;
         }
         other => bail!("unknown experiment '{other}'"),
     }

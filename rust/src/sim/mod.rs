@@ -9,5 +9,5 @@
 pub mod runner;
 pub mod scenario;
 
-pub use runner::{simulate_model, MethodSim, ModelSimResult};
+pub use runner::{simulate_model, simulate_serving, MethodSim, ModelSimResult};
 pub use scenario::Scenario;

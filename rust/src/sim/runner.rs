@@ -299,20 +299,48 @@ fn trial_lt(
     (enc, workers, dec)
 }
 
-/// Simulate `trials` inferences of `model` under one method + scenario.
-pub fn simulate_model(
+/// One layer draw under `method`: (enc, workers, dec) seconds.
+#[allow(clippy::too_many_arguments)]
+fn draw_layer(
+    method: MethodSim,
+    dims: &LayerDims,
+    k: usize,
+    profile: &SystemProfile,
+    n: usize,
+    scenario: &Scenario,
+    lt_cache: &mut LtOverheadCache,
+    rng: &mut Rng,
+) -> (f64, f64, f64) {
+    match method {
+        MethodSim::CocoiKStar { .. } | MethodSim::CocoiKCirc => {
+            trial_mds_like(dims, profile, n, k, Needed::KOfN(k), true, scenario, rng)
+        }
+        MethodSim::Uncoded => {
+            trial_mds_like(dims, profile, n, k, Needed::All, false, scenario, rng)
+        }
+        MethodSim::Replication => {
+            trial_mds_like(dims, profile, n, k, Needed::PerSource(k), false, scenario, rng)
+        }
+        MethodSim::LtFine | MethodSim::LtCoarse => {
+            let budget = 2 * k + 16;
+            trial_lt(dims, profile, n, k, budget, lt_cache, scenario, rng)
+        }
+    }
+}
+
+/// Per-layer `k` choice + the (method-independent) master-local mean for
+/// the type-2 layers. Shared by the single-inference and serving sims.
+fn plan_layers(
     model: &ModelSpec,
     profile: &SystemProfile,
     n: usize,
     method: MethodSim,
-    scenario: Scenario,
-    trials: usize,
+    scenario: &Scenario,
     rng: &mut Rng,
-) -> Result<ModelSimResult> {
+) -> Result<(Vec<(String, LayerDims, usize)>, f64)> {
     // Type-1 classification is shared across methods (App. A): use the
     // default plan.
     let plan = ModelPlan::build(model, profile, n, SplitPolicy::KCircle, rng)?;
-    let mut lt_cache = LtOverheadCache::new();
 
     // Per-layer k choice for this method.
     let mut layer_cfg: Vec<(String, LayerDims, usize)> = Vec::new();
@@ -338,7 +366,7 @@ pub fn simulate_model(
                                 k,
                                 Needed::KOfN(k),
                                 true,
-                                &scenario,
+                                scenario,
                                 rng,
                             );
                             e + w + d
@@ -366,48 +394,29 @@ pub fn simulate_model(
         .filter(|c| !c.distributed)
         .map(|c| profile.local_conv_dist(c.dims.full_flops()).mean())
         .sum();
+    Ok((layer_cfg, local_mean))
+}
+
+/// Simulate `trials` inferences of `model` under one method + scenario.
+pub fn simulate_model(
+    model: &ModelSpec,
+    profile: &SystemProfile,
+    n: usize,
+    method: MethodSim,
+    scenario: Scenario,
+    trials: usize,
+    rng: &mut Rng,
+) -> Result<ModelSimResult> {
+    let (layer_cfg, local_mean) = plan_layers(model, profile, n, method, &scenario, rng)?;
+    let mut lt_cache = LtOverheadCache::new();
 
     let mut trials_out = Vec::with_capacity(trials);
     let mut sums: Vec<LayerBreakdown> = vec![LayerBreakdown::default(); layer_cfg.len()];
     for _ in 0..trials {
         let mut total = local_mean;
         for (li, (_, dims, k)) in layer_cfg.iter().enumerate() {
-            let (enc, workers, dec) = match method {
-                MethodSim::CocoiKStar { .. } | MethodSim::CocoiKCirc => trial_mds_like(
-                    dims,
-                    profile,
-                    n,
-                    *k,
-                    Needed::KOfN(*k),
-                    true,
-                    &scenario,
-                    rng,
-                ),
-                MethodSim::Uncoded => trial_mds_like(
-                    dims,
-                    profile,
-                    n,
-                    *k,
-                    Needed::All,
-                    false,
-                    &scenario,
-                    rng,
-                ),
-                MethodSim::Replication => trial_mds_like(
-                    dims,
-                    profile,
-                    n,
-                    *k,
-                    Needed::PerSource(*k),
-                    false,
-                    &scenario,
-                    rng,
-                ),
-                MethodSim::LtFine | MethodSim::LtCoarse => {
-                    let budget = 2 * *k + 16;
-                    trial_lt(dims, profile, n, *k, budget, &mut lt_cache, &scenario, rng)
-                }
-            };
+            let (enc, workers, dec) =
+                draw_layer(method, dims, *k, profile, n, &scenario, &mut lt_cache, rng);
             sums[li].enc += enc;
             sums[li].workers += workers;
             sums[li].dec += dec;
@@ -419,6 +428,156 @@ pub fn simulate_model(
     let tf = trials.max(1) as f64;
     Ok(ModelSimResult {
         method: method.label().to_string(),
+        scenario: scenario.label(),
+        trials: trials_out,
+        per_layer: layer_cfg
+            .iter()
+            .zip(&sums)
+            .map(|((id, _, _), s)| {
+                (
+                    id.clone(),
+                    LayerBreakdown {
+                        enc: s.enc / tf,
+                        workers: s.workers / tf,
+                        dec: s.dec / tf,
+                    },
+                )
+            })
+            .collect(),
+        k_per_layer: layer_cfg.iter().map(|(id, _, k)| (id.clone(), *k)).collect(),
+    })
+}
+
+/// Earliest-ready-first list schedule over two single-server resources:
+/// the master (encode/decode/type-2 work) and the worker pool (a coded
+/// round spreads its shards over *all* n workers, so concurrent rounds
+/// contend for the pool rather than overlapping freely). The pipelined
+/// gain is therefore hiding master work behind other requests' pool
+/// phases — exactly what the real engine does — not fictitious extra
+/// worker capacity. `ops[r]` = chain of `(master_seconds, pool_seconds)`
+/// pairs executed strictly in order within a request. Returns the
+/// makespan.
+fn schedule_master_pool(ops: &[Vec<(f64, f64)>]) -> f64 {
+    let mut ready = vec![0.0f64; ops.len()];
+    let mut idx = vec![0usize; ops.len()];
+    let mut phase = vec![0u8; ops.len()]; // 0 = master op next, 1 = pool op next
+    let mut master_free = 0.0f64;
+    let mut pool_free = 0.0f64;
+    let mut makespan = 0.0f64;
+    loop {
+        let mut pick: Option<usize> = None;
+        for r in 0..ops.len() {
+            if idx[r] < ops[r].len() && pick.map_or(true, |p| ready[r] < ready[p]) {
+                pick = Some(r);
+            }
+        }
+        let Some(r) = pick else { break };
+        let (m, w) = ops[r][idx[r]];
+        if phase[r] == 0 {
+            let end = master_free.max(ready[r]) + m;
+            master_free = end;
+            ready[r] = end;
+            phase[r] = 1;
+            makespan = makespan.max(end);
+        } else {
+            if w > 0.0 {
+                let end = pool_free.max(ready[r]) + w;
+                pool_free = end;
+                ready[r] = end;
+                makespan = makespan.max(end);
+            }
+            phase[r] = 0;
+            idx[r] += 1;
+        }
+    }
+    makespan
+}
+
+/// Serving-scale simulation: `n_requests` concurrent inferences of one
+/// model under a method + scenario, served either by the round-barrier
+/// engine (strictly sequential: the master idles through every worker
+/// phase) or by the pipelined engine (master encode/decode overlaps other
+/// requests' worker phases). `trials` makespans are returned; phase times
+/// are drawn exactly like [`simulate_model`], so a fixed seed gives a
+/// bitwise-reproducible trace.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_serving(
+    model: &ModelSpec,
+    profile: &SystemProfile,
+    n: usize,
+    method: MethodSim,
+    scenario: Scenario,
+    n_requests: usize,
+    pipelined: bool,
+    trials: usize,
+    rng: &mut Rng,
+) -> Result<ModelSimResult> {
+    anyhow::ensure!(n_requests >= 1, "need at least one request");
+    let (layer_cfg, local_mean) = plan_layers(model, profile, n, method, &scenario, rng)?;
+    let mut lt_cache = LtOverheadCache::new();
+
+    let mut trials_out = Vec::with_capacity(trials);
+    let mut sums: Vec<LayerBreakdown> = vec![LayerBreakdown::default(); layer_cfg.len()];
+    for _ in 0..trials {
+        // Draw every request's phase times first, in a fixed order, so
+        // the trace does not depend on the scheduling policy.
+        let draws: Vec<Vec<(f64, f64, f64)>> = (0..n_requests)
+            .map(|_| {
+                layer_cfg
+                    .iter()
+                    .map(|(_, dims, k)| {
+                        draw_layer(method, dims, *k, profile, n, &scenario, &mut lt_cache, rng)
+                    })
+                    .collect()
+            })
+            .collect();
+        for layers in &draws {
+            for (li, (e, w, d)) in layers.iter().enumerate() {
+                sums[li].enc += e;
+                sums[li].workers += w;
+                sums[li].dec += d;
+            }
+        }
+        let makespan = if pipelined {
+            // Chain per request: [local + enc_0] ~workers_0~ [dec_0 +
+            // enc_1] ~workers_1~ ... [dec_last].
+            let ops: Vec<Vec<(f64, f64)>> = draws
+                .iter()
+                .map(|layers| {
+                    let l = layers.len();
+                    let mut chain = Vec::with_capacity(l + 1);
+                    for i in 0..l {
+                        let m = if i == 0 {
+                            local_mean + layers[0].0
+                        } else {
+                            layers[i - 1].2 + layers[i].0
+                        };
+                        chain.push((m, layers[i].1));
+                    }
+                    chain.push((if l == 0 { local_mean } else { layers[l - 1].2 }, 0.0));
+                    chain
+                })
+                .collect();
+            schedule_master_pool(&ops)
+        } else {
+            // Round barrier: nothing overlaps; the makespan is the sum.
+            local_mean * n_requests as f64
+                + draws
+                    .iter()
+                    .flat_map(|layers| layers.iter())
+                    .map(|(e, w, d)| e + w + d)
+                    .sum::<f64>()
+        };
+        trials_out.push(makespan);
+    }
+
+    let tf = (trials.max(1) * n_requests) as f64;
+    Ok(ModelSimResult {
+        method: format!(
+            "{}+{}",
+            method.label(),
+            if pipelined { "pipelined" } else { "barrier" }
+        ),
         scenario: scenario.label(),
         trials: trials_out,
         per_layer: layer_cfg
@@ -499,6 +658,65 @@ mod tests {
             unc_blowup > coc_blowup,
             "uncoded blowup {unc_blowup:.2} vs cocoi {coc_blowup:.2}"
         );
+    }
+
+    /// The pipelined engine can only hide master work behind worker
+    /// phases, never add time: per-trial makespans are ≤ the barrier's
+    /// (same seed ⇒ identical phase draws), and strictly better on mean.
+    #[test]
+    fn pipelined_serving_never_slower_than_barrier() {
+        let model = zoo::model("vgg16").unwrap();
+        let p = SystemProfile::paper_default();
+        for scenario in [Scenario::None, Scenario::Failures { n_f: 1 }] {
+            let run = |pipelined: bool| {
+                let mut rng = Rng::new(11);
+                simulate_serving(
+                    &model,
+                    &p,
+                    10,
+                    MethodSim::CocoiKCirc,
+                    scenario,
+                    4,
+                    pipelined,
+                    6,
+                    &mut rng,
+                )
+                .unwrap()
+            };
+            let barrier = run(false);
+            let pipe = run(true);
+            for (b, q) in barrier.trials.iter().zip(&pipe.trials) {
+                assert!(q <= &(b * (1.0 + 1e-9)), "pipelined {q} > barrier {b}");
+            }
+            assert!(pipe.mean() < barrier.mean());
+        }
+    }
+
+    /// Degenerate serving case: one request, pipelined == barrier totals.
+    #[test]
+    fn single_request_serving_matches_sum() {
+        let model = zoo::model("vgg16").unwrap();
+        let p = SystemProfile::paper_default();
+        let run = |pipelined: bool| {
+            let mut rng = Rng::new(5);
+            simulate_serving(
+                &model,
+                &p,
+                10,
+                MethodSim::CocoiKCirc,
+                Scenario::None,
+                1,
+                pipelined,
+                4,
+                &mut rng,
+            )
+            .unwrap()
+        };
+        let barrier = run(false);
+        let pipe = run(true);
+        for (b, q) in barrier.trials.iter().zip(&pipe.trials) {
+            assert!((b - q).abs() < 1e-9, "barrier {b} vs pipelined {q}");
+        }
     }
 
     #[test]

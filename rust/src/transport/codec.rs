@@ -14,6 +14,13 @@ impl Encoder {
         Encoder { buf: Vec::new() }
     }
 
+    /// Pre-size the buffer for a known payload (hot dispatch path: one
+    /// allocation per frame instead of grow-by-doubling).
+    pub fn reserve(&mut self, additional: usize) -> &mut Self {
+        self.buf.reserve(additional);
+        self
+    }
+
     pub fn u8(&mut self, v: u8) -> &mut Self {
         self.buf.push(v);
         self
@@ -152,6 +159,16 @@ mod tests {
             assert_eq!(d.u8().unwrap(), 7);
             d.done().unwrap();
         });
+    }
+
+    #[test]
+    fn reserve_does_not_change_encoding() {
+        let mut a = Encoder::new();
+        a.u32(7).str("x").f32s(&[1.0, 2.0]);
+        let mut b = Encoder::new();
+        b.reserve(128);
+        b.u32(7).str("x").f32s(&[1.0, 2.0]);
+        assert_eq!(a.finish(), b.finish());
     }
 
     #[test]

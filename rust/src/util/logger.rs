@@ -4,11 +4,10 @@
 //! timestamped (relative to process start) lines on stderr.
 
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
-use once_cell::sync::Lazy;
-
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
 static INSTALLED: AtomicBool = AtomicBool::new(false);
 
 struct StderrLogger {
@@ -24,7 +23,7 @@ impl log::Log for StderrLogger {
         if !self.enabled(record.metadata()) {
             return;
         }
-        let t = START.elapsed();
+        let t = START.get_or_init(Instant::now).elapsed();
         eprintln!(
             "[{:>9.3}s {:<5} {}] {}",
             t.as_secs_f64(),
@@ -43,6 +42,7 @@ pub fn init() {
     if INSTALLED.swap(true, Ordering::SeqCst) {
         return;
     }
+    let _ = START.get_or_init(Instant::now); // anchor t=0 at install time
     let level = match std::env::var("COCOI_LOG").as_deref() {
         Ok("trace") => log::LevelFilter::Trace,
         Ok("debug") => log::LevelFilter::Debug,

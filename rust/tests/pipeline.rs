@@ -1,0 +1,289 @@
+//! Coordinator-pipeline suite: the pipelined engine must produce the
+//! same inference outputs as the round-barrier path (and as pure local
+//! execution), under healthy pools, failures, and stragglers, for
+//! single requests and multiplexed batches. Runs without `artifacts/`.
+
+use std::sync::Arc;
+
+use cocoi::conv::Tensor;
+use cocoi::coordinator::{
+    ExecMode, LocalCluster, MasterConfig, SchemeKind, WorkerFaults,
+};
+use cocoi::model::graph::forward_local;
+use cocoi::model::{zoo, WeightStore};
+use cocoi::planner::SplitPolicy;
+use cocoi::runtime::FallbackProvider;
+use cocoi::util::Rng;
+
+fn inputs_for(model_name: &str, count: usize, seed: u64) -> Vec<Tensor> {
+    let model = zoo::model(model_name).unwrap();
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            let mut t = Tensor::zeros(model.input.0, model.input.1, model.input.2);
+            rng.fill_uniform_f32(&mut t.data, -1.0, 1.0);
+            t
+        })
+        .collect()
+}
+
+fn local_refs(model_name: &str, inputs: &[Tensor]) -> Vec<Tensor> {
+    let model = zoo::model(model_name).unwrap();
+    let weights = WeightStore::generate(&model, 42).unwrap();
+    inputs
+        .iter()
+        .map(|i| forward_local(&model, &weights, i).unwrap())
+        .collect()
+}
+
+fn run_batch(
+    model_name: &str,
+    scheme: SchemeKind,
+    mode: ExecMode,
+    n: usize,
+    k: usize,
+    faults: Vec<WorkerFaults>,
+    inputs: &[Tensor],
+) -> Vec<(Tensor, cocoi::coordinator::InferenceMetrics)> {
+    let config = MasterConfig {
+        scheme,
+        policy: SplitPolicy::Fixed(k),
+        mode,
+        ..Default::default()
+    };
+    let mut cluster =
+        LocalCluster::spawn(model_name, n, config, Arc::new(FallbackProvider), faults)
+            .unwrap();
+    let out = cluster.master.infer_batch(inputs).unwrap();
+    cluster.shutdown().unwrap();
+    out
+}
+
+/// Single request: the pipelined engine must agree with the round-barrier
+/// path (same seed, same weights) and with local inference.
+#[test]
+fn pipelined_single_request_matches_barrier() {
+    let inputs = inputs_for("tinyvgg", 1, 101);
+    let want = local_refs("tinyvgg", &inputs);
+    let healthy = |n: usize| (0..n).map(|_| WorkerFaults::none()).collect::<Vec<_>>();
+    let barrier = run_batch(
+        "tinyvgg",
+        SchemeKind::Mds,
+        ExecMode::RoundBarrier,
+        4,
+        3,
+        healthy(4),
+        &inputs,
+    );
+    let pipe = run_batch(
+        "tinyvgg",
+        SchemeKind::Mds,
+        ExecMode::Pipelined,
+        4,
+        3,
+        healthy(4),
+        &inputs,
+    );
+    assert_eq!(barrier.len(), 1);
+    assert_eq!(pipe.len(), 1);
+    // Both correct vs local...
+    assert!(barrier[0].0.max_abs_diff(&want[0]) < 2e-2);
+    assert!(pipe[0].0.max_abs_diff(&want[0]) < 2e-2);
+    // ...and equal to each other up to MDS decode round-off (which
+    // k-subset wins the race is timing-dependent; all subsets decode the
+    // same values modulo float error).
+    let gap = pipe[0].0.max_abs_diff(&barrier[0].0);
+    assert!(gap < 2e-2, "modes disagree by {gap}");
+    assert!(pipe[0].1.layers.iter().any(|l| l.distributed));
+}
+
+/// With the uncoded scheme the decode is an exact passthrough of all n
+/// pieces regardless of arrival order, so the two engines must produce
+/// *bitwise identical* outputs on the same seed.
+#[test]
+fn pipelined_uncoded_bitwise_identical_to_barrier() {
+    let inputs = inputs_for("tinyvgg", 2, 808);
+    let healthy = (0..3).map(|_| WorkerFaults::none()).collect::<Vec<_>>();
+    let barrier = run_batch(
+        "tinyvgg",
+        SchemeKind::Uncoded,
+        ExecMode::RoundBarrier,
+        3,
+        3,
+        healthy.clone(),
+        &inputs,
+    );
+    let pipe = run_batch(
+        "tinyvgg",
+        SchemeKind::Uncoded,
+        ExecMode::Pipelined,
+        3,
+        3,
+        healthy,
+        &inputs,
+    );
+    for (i, ((b, _), (p, _))) in barrier.iter().zip(&pipe).enumerate() {
+        assert_eq!(b.shape(), p.shape());
+        assert_eq!(
+            b.data, p.data,
+            "request {i}: engines diverged on deterministic decode"
+        );
+    }
+}
+
+/// A multiplexed batch: every response must match its own local
+/// reference (no cross-request mixups) for MDS and replication.
+#[test]
+fn pipelined_batch_matches_local() {
+    for (scheme, n, k) in [(SchemeKind::Mds, 4, 3), (SchemeKind::Replication, 4, 2)] {
+        let inputs = inputs_for("tinyvgg", 4, 202);
+        let want = local_refs("tinyvgg", &inputs);
+        let faults = (0..n).map(|_| WorkerFaults::none()).collect();
+        let got = run_batch("tinyvgg", scheme, ExecMode::Pipelined, n, k, faults, &inputs);
+        assert_eq!(got.len(), inputs.len());
+        for (i, ((out, metrics), want)) in got.iter().zip(&want).enumerate() {
+            let err = out.max_abs_diff(want);
+            assert!(err < 2e-2, "{scheme:?} request {i}: err {err}");
+            assert!(metrics.layers.iter().any(|l| l.distributed));
+            assert!(metrics.total_seconds > 0.0);
+        }
+    }
+}
+
+/// The DAG model (skip connections) through the pipelined engine.
+#[test]
+fn pipelined_resnet_batch_matches_local() {
+    let inputs = inputs_for("tinyresnet", 3, 303);
+    let want = local_refs("tinyresnet", &inputs);
+    let faults = (0..3).map(|_| WorkerFaults::none()).collect();
+    let got = run_batch(
+        "tinyresnet",
+        SchemeKind::Mds,
+        ExecMode::Pipelined,
+        3,
+        2,
+        faults,
+        &inputs,
+    );
+    for ((out, _), want) in got.iter().zip(&want) {
+        assert!(out.max_abs_diff(want) < 2e-2);
+    }
+}
+
+/// MDS redundancy absorbs a permanently failing worker in pipelined mode
+/// without re-dispatch; outputs stay correct for the whole batch.
+#[test]
+fn pipelined_batch_survives_failures() {
+    let n = 4;
+    let inputs = inputs_for("tinyvgg", 3, 404);
+    let want = local_refs("tinyvgg", &inputs);
+    let faults: Vec<WorkerFaults> = (0..n)
+        .map(|i| {
+            if i == 2 {
+                WorkerFaults::none().fails_in(0..1024)
+            } else {
+                WorkerFaults::none()
+            }
+        })
+        .collect();
+    let got = run_batch(
+        "tinyvgg",
+        SchemeKind::Mds,
+        ExecMode::Pipelined,
+        n,
+        3,
+        faults,
+        &inputs,
+    );
+    let mut failures = 0;
+    for (i, ((out, metrics), want)) in got.iter().zip(&want).enumerate() {
+        let err = out.max_abs_diff(want);
+        assert!(err < 2e-2, "request {i}: err {err}");
+        failures += metrics.failures();
+        assert_eq!(metrics.redispatches(), 0, "k=3, n=4 absorbs one failure");
+    }
+    assert!(failures > 0, "the failing worker must have been observed");
+}
+
+/// Uncoded needs every piece: a failing worker forces re-dispatch, and
+/// the pipelined engine must still deliver correct batch results.
+#[test]
+fn pipelined_uncoded_redispatches_and_recovers() {
+    let n = 3;
+    let inputs = inputs_for("tinyvgg", 2, 505);
+    let want = local_refs("tinyvgg", &inputs);
+    let faults: Vec<WorkerFaults> = (0..n)
+        .map(|i| {
+            if i == 0 {
+                WorkerFaults::none().fails_in(0..4)
+            } else {
+                WorkerFaults::none()
+            }
+        })
+        .collect();
+    let got = run_batch(
+        "tinyvgg",
+        SchemeKind::Uncoded,
+        ExecMode::Pipelined,
+        n,
+        3,
+        faults,
+        &inputs,
+    );
+    let mut redispatches = 0;
+    for ((out, metrics), want) in got.iter().zip(&want) {
+        assert!(out.max_abs_diff(want) < 2e-2);
+        redispatches += metrics.redispatches();
+    }
+    assert!(redispatches > 0, "uncoded must re-execute failed pieces");
+}
+
+/// A chronic straggler slows one worker; the engine cancels its stale
+/// subtasks after each decode and the batch still completes correctly.
+#[test]
+fn pipelined_straggler_cancelled_not_corrupting() {
+    let n = 4;
+    let inputs = inputs_for("tinyvgg", 3, 606);
+    let want = local_refs("tinyvgg", &inputs);
+    let mut faults: Vec<WorkerFaults> = (0..n).map(|_| WorkerFaults::none()).collect();
+    faults[0] = WorkerFaults::with_send_delay(0.05);
+    let got = run_batch(
+        "tinyvgg",
+        SchemeKind::Mds,
+        ExecMode::Pipelined,
+        n,
+        3,
+        faults,
+        &inputs,
+    );
+    for ((out, _), want) in got.iter().zip(&want) {
+        assert!(out.max_abs_diff(want) < 2e-2);
+    }
+    // With a 50 ms delay on worker 0's sends and 6 distributed layers x 3
+    // requests racing, at least one round should decode before the
+    // straggler reports, i.e. some subtask gets cancelled.
+    let cancelled: usize = got.iter().map(|(_, m)| m.cancelled()).sum();
+    assert!(cancelled > 0, "expected straggler cancellations");
+}
+
+/// Barrier-mode infer_batch == sequential infer (sanity of the baseline
+/// the throughput experiment compares against).
+#[test]
+fn barrier_batch_equals_sequential_infers() {
+    let inputs = inputs_for("tinyvgg", 2, 707);
+    let want = local_refs("tinyvgg", &inputs);
+    let faults = (0..4).map(|_| WorkerFaults::none()).collect();
+    let got = run_batch(
+        "tinyvgg",
+        SchemeKind::Mds,
+        ExecMode::RoundBarrier,
+        4,
+        3,
+        faults,
+        &inputs,
+    );
+    assert_eq!(got.len(), 2);
+    for ((out, _), want) in got.iter().zip(&want) {
+        assert!(out.max_abs_diff(want) < 2e-2);
+    }
+}

@@ -1,0 +1,200 @@
+//! Property tests for the coding layer (satellite of PR 1): for random
+//! `(n, k)` and random shard data, encode → drop any `n − k` shards →
+//! decode must reconstruct the input — exactly for replication/uncoded,
+//! within 1e-3 for MDS, and with high probability for rateless LT. Plus
+//! a conditioning regression pinning `Matrix::inverse` error growth on
+//! the evenly-spaced Vandermonde nodes MDS actually uses.
+
+use cocoi::coding::matrix::Matrix;
+use cocoi::coding::{Decoder, LtCode, MdsCode, RedundancyScheme, Replication, Uncoded};
+use cocoi::util::prop;
+use cocoi::util::Rng;
+
+fn random_sources(k: usize, len: usize, rng: &mut Rng) -> Vec<Vec<f32>> {
+    (0..k)
+        .map(|_| (0..len).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect())
+        .collect()
+}
+
+/// MDS: any `k` of the `n` encoded shards reconstruct the sources within
+/// 1e-3 (drop a random `n − k`-subset each case).
+#[test]
+fn mds_encode_drop_decode_reconstructs() {
+    prop::check("mds drop n-k", 64, |rng| {
+        let n = 2 + rng.below(9); // 2..=10
+        let k = 1 + rng.below(n); // 1..=n
+        let len = 1 + rng.below(96);
+        let code = MdsCode::new(n, k);
+        let sources = random_sources(k, len, rng);
+        let tasks = code.encode(&sources);
+        assert_eq!(tasks.len(), n);
+
+        // Keep a random k-subset == drop a random (n-k)-subset.
+        let keep = rng.sample_distinct(n, k);
+        let mut dec = code.decoder();
+        let mut ready = false;
+        for &t in &keep {
+            ready = dec.add(tasks[t].id, tasks[t].payload.clone());
+        }
+        assert!(ready, "k shards must decode (n={n} k={k})");
+        let decoded = dec.decode().unwrap();
+        assert_eq!(decoded.len(), k);
+        for (d, s) in decoded.iter().zip(&sources) {
+            for (a, b) in d.iter().zip(s.iter()) {
+                assert!(
+                    (a - b).abs() < 1e-3,
+                    "mds(n={n},k={k}) decode {a} != {b}"
+                );
+            }
+        }
+    });
+}
+
+/// Replication: drop one replica of every source (the maximum loss the
+/// scheme tolerates); reconstruction is bit-exact.
+#[test]
+fn replication_drop_one_replica_per_source_exact() {
+    prop::check("replication drop replicas", 64, |rng| {
+        let n = 2 + rng.below(9); // 2..=10
+        let code = Replication::new(n);
+        let k = code.source_count();
+        let len = 1 + rng.below(64);
+        let sources = random_sources(k, len, rng);
+        let tasks = code.encode(&sources);
+
+        // For each source pick exactly one surviving replica at random.
+        let mut dec = code.decoder();
+        let mut ready = false;
+        for src in 0..k {
+            let replicas: Vec<usize> = (0..tasks.len()).filter(|t| t % k == src).collect();
+            let survivor = replicas[rng.below(replicas.len())];
+            ready = dec.add(tasks[survivor].id, tasks[survivor].payload.clone());
+        }
+        assert!(ready);
+        let decoded = dec.decode().unwrap();
+        assert_eq!(decoded, sources, "replication must be exact");
+    });
+}
+
+/// Uncoded: k = n, nothing can be dropped; the identity "code" is exact.
+#[test]
+fn uncoded_roundtrip_exact() {
+    prop::check("uncoded roundtrip", 48, |rng| {
+        let n = 1 + rng.below(10);
+        let code = Uncoded::new(n);
+        let sources = random_sources(n, 1 + rng.below(64), rng);
+        let tasks = code.encode(&sources);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut dec = code.decoder();
+        let mut ready = false;
+        for &t in &order {
+            ready = dec.add(tasks[t].id, tasks[t].payload.clone());
+        }
+        assert!(ready, "all n shards present");
+        assert_eq!(dec.decode().unwrap(), sources);
+    });
+}
+
+/// LT is rateless: with its default budget (2k + 16 symbols) a random
+/// arrival order reaches rank k with high probability; when it does, the
+/// GE decode reconstructs within 1e-3. A small deficient-rank rate is
+/// inherent to LT, so failures are counted, not forbidden.
+#[test]
+fn lt_decodes_with_high_probability() {
+    let cases = 48;
+    let mut deficient = 0usize;
+    prop::check("lt overhead decode", cases, |rng| {
+        let n = 2 + rng.below(7); // workers, reporting only
+        let k = 1 + rng.below(12);
+        let len = 1 + rng.below(48);
+        let code = LtCode::new(n, k, rng.next_u64());
+        let sources = random_sources(k, len, rng);
+        let tasks = code.encode(&sources);
+        assert!(tasks.len() >= 2 * k, "rateless overhead budget");
+
+        let mut order: Vec<usize> = (0..tasks.len()).collect();
+        rng.shuffle(&mut order);
+        let mut dec = code.decoder();
+        let mut ready = false;
+        for &t in &order {
+            if dec.add(tasks[t].id, tasks[t].payload.clone()) {
+                ready = true;
+                break;
+            }
+        }
+        if !ready {
+            deficient += 1;
+            return;
+        }
+        let decoded = dec.decode().unwrap();
+        for (d, s) in decoded.iter().zip(&sources) {
+            for (a, b) in d.iter().zip(s.iter()) {
+                assert!((a - b).abs() < 1e-3, "lt(k={k}) decode {a} != {b}");
+            }
+        }
+    });
+    assert!(
+        deficient * 10 <= cases,
+        "LT rank-deficiency rate too high: {deficient}/{cases}"
+    );
+}
+
+/// Conditioning regression: the inversion residual ‖G_S·G_S⁻¹ − I‖_max of
+/// full-size Vandermonde systems on MdsCode's evenly-spaced nodes grows
+/// with n but must stay under the pinned ceilings (float Vandermonde with
+/// *integer* nodes would blow through these around k ≈ 8 — the spread
+/// node layout is the mitigation this test protects).
+#[test]
+fn vandermonde_inverse_error_growth_pinned() {
+    let ceilings = [(4usize, 1e-11f64), (8, 1e-9), (12, 1e-7), (16, 1e-5), (20, 1e-4)];
+    let mut residuals = Vec::new();
+    for &(n, ceiling) in &ceilings {
+        let g = Matrix::vandermonde(&MdsCode::nodes(n), n);
+        let inv = g.inverse().expect("full Vandermonde invertible");
+        let prod = g.matmul(&inv);
+        let mut res = 0.0f64;
+        for i in 0..n {
+            for j in 0..n {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                res = res.max((prod[(i, j)] - expect).abs());
+            }
+        }
+        assert!(
+            res < ceiling,
+            "n={n}: inverse residual {res:.3e} exceeds pinned ceiling {ceiling:.0e}"
+        );
+        residuals.push(res);
+    }
+    // Growth regression: the largest system must be measurably worse
+    // conditioned than the smallest (if this stops holding, the node
+    // layout changed — re-pin the ceilings).
+    assert!(
+        residuals[residuals.len() - 1] > residuals[0],
+        "residuals no longer grow with n: {residuals:?}"
+    );
+}
+
+/// Random k-subsets of MDS rows stay invertible and decode-accurate at
+/// the paper's largest scale (n = 20).
+#[test]
+fn mds_paper_scale_subsets_stay_conditioned() {
+    let n = 20;
+    let mut rng = Rng::new(0x5EED);
+    for k in [4usize, 8, 12, 16] {
+        let g = Matrix::vandermonde(&MdsCode::nodes(n), k);
+        for _ in 0..20 {
+            let idx = rng.sample_distinct(n, k);
+            let gs = g.select_rows(&idx);
+            let inv = gs.inverse().expect("k-subset invertible");
+            let prod = gs.matmul(&inv);
+            for i in 0..k {
+                assert!(
+                    (prod[(i, i)] - 1.0).abs() < 1e-4,
+                    "n={n} k={k}: diagonal {:.3e}",
+                    prod[(i, i)]
+                );
+            }
+        }
+    }
+}

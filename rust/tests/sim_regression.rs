@@ -1,0 +1,133 @@
+//! Deterministic sim regressions (satellite of PR 1): fixed-seed runs of
+//! all three `sim::Scenario` variants must produce bitwise-identical
+//! latency traces across repeated runs, and MDS must not lose to uncoded
+//! under failures — for both the per-request simulator and the pipelined
+//! serving simulator. No `artifacts/` required.
+
+use cocoi::latency::SystemProfile;
+use cocoi::model::zoo;
+use cocoi::sim::{simulate_model, simulate_serving, MethodSim, Scenario};
+use cocoi::util::Rng;
+
+const N: usize = 10;
+const TRIALS: usize = 8;
+
+fn scenarios() -> [Scenario; 3] {
+    [
+        Scenario::Straggling { lambda_tr: 0.5 },
+        Scenario::Failures { n_f: 2 },
+        Scenario::FailuresPlusStraggler { n_f: 1, slowdown: 1.68 },
+    ]
+}
+
+fn trace(method: MethodSim, scenario: Scenario, seed: u64) -> Vec<f64> {
+    let model = zoo::model("vgg16").unwrap();
+    let p = SystemProfile::paper_default();
+    let mut rng = Rng::new(seed);
+    simulate_model(&model, &p, N, method, scenario, TRIALS, &mut rng)
+        .unwrap()
+        .trials
+}
+
+fn serving_trace(method: MethodSim, scenario: Scenario, pipelined: bool, seed: u64) -> Vec<f64> {
+    let model = zoo::model("vgg16").unwrap();
+    let p = SystemProfile::paper_default();
+    let mut rng = Rng::new(seed);
+    simulate_serving(&model, &p, N, method, scenario, 4, pipelined, TRIALS, &mut rng)
+        .unwrap()
+        .trials
+}
+
+fn assert_bitwise_equal(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: trace lengths differ");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: trial {i} differs ({x} vs {y})"
+        );
+    }
+}
+
+/// Same seed ⇒ bitwise-identical latency trace, for every scenario.
+#[test]
+fn fixed_seed_traces_are_reproducible() {
+    for scenario in scenarios() {
+        for method in [MethodSim::CocoiKCirc, MethodSim::Uncoded] {
+            let a = trace(method, scenario, 42);
+            let b = trace(method, scenario, 42);
+            assert_bitwise_equal(&a, &b, &format!("{method:?}/{scenario:?}"));
+            assert!(a.iter().all(|t| t.is_finite() && *t > 0.0));
+        }
+    }
+}
+
+/// Different seeds must actually change the draws (guards against a
+/// simulator that ignores its RNG and trivially passes the test above).
+#[test]
+fn different_seeds_differ() {
+    let a = trace(MethodSim::CocoiKCirc, Scenario::Failures { n_f: 2 }, 1);
+    let b = trace(MethodSim::CocoiKCirc, Scenario::Failures { n_f: 2 }, 2);
+    assert_ne!(a, b);
+}
+
+/// Under worker failures, coded MDS must not be slower than uncoded:
+/// uncoded re-executes every lost piece, MDS absorbs up to n − k.
+#[test]
+fn mds_not_slower_than_uncoded_under_failures() {
+    for n_f in [1usize, 2] {
+        let scenario = Scenario::Failures { n_f };
+        let mds = trace(MethodSim::CocoiKCirc, scenario, 7);
+        let unc = trace(MethodSim::Uncoded, scenario, 7);
+        let mds_mean = mds.iter().sum::<f64>() / mds.len() as f64;
+        let unc_mean = unc.iter().sum::<f64>() / unc.len() as f64;
+        assert!(
+            mds_mean <= unc_mean,
+            "n_f={n_f}: mds {mds_mean:.2}s > uncoded {unc_mean:.2}s"
+        );
+    }
+}
+
+/// The same two regressions hold with the pipelined serving engine.
+#[test]
+fn pipelined_serving_traces_are_reproducible() {
+    for scenario in scenarios() {
+        let a = serving_trace(MethodSim::CocoiKCirc, scenario, true, 42);
+        let b = serving_trace(MethodSim::CocoiKCirc, scenario, true, 42);
+        assert_bitwise_equal(&a, &b, &format!("serving/{scenario:?}"));
+        assert!(a.iter().all(|t| t.is_finite() && *t > 0.0));
+    }
+}
+
+#[test]
+fn pipelined_serving_mds_not_slower_than_uncoded_under_failures() {
+    let scenario = Scenario::Failures { n_f: 2 };
+    let mds = serving_trace(MethodSim::CocoiKCirc, scenario, true, 9);
+    let unc = serving_trace(MethodSim::Uncoded, scenario, true, 9);
+    let mds_mean = mds.iter().sum::<f64>() / mds.len() as f64;
+    let unc_mean = unc.iter().sum::<f64>() / unc.len() as f64;
+    assert!(
+        mds_mean <= unc_mean,
+        "pipelined serving: mds {mds_mean:.2}s > uncoded {unc_mean:.2}s"
+    );
+}
+
+/// Pipelining helps (or at worst ties) the barrier for a multi-request
+/// load, per-trial, at identical phase draws — and never changes the
+/// per-request phase statistics themselves.
+#[test]
+fn pipelined_serving_beats_barrier_per_trial() {
+    for scenario in scenarios() {
+        let pipe = serving_trace(MethodSim::CocoiKCirc, scenario, true, 21);
+        let barrier = serving_trace(MethodSim::CocoiKCirc, scenario, false, 21);
+        for (p, b) in pipe.iter().zip(&barrier) {
+            assert!(
+                *p <= b * (1.0 + 1e-9),
+                "{scenario:?}: pipelined {p:.3}s > barrier {b:.3}s"
+            );
+        }
+        let pm = pipe.iter().sum::<f64>() / pipe.len() as f64;
+        let bm = barrier.iter().sum::<f64>() / barrier.len() as f64;
+        assert!(pm < bm, "{scenario:?}: no pipelining gain ({pm:.3} vs {bm:.3})");
+    }
+}
