@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         };
         let mut cluster =
-            LocalCluster::spawn("tinyvgg", n, config, Arc::new(FallbackProvider), faults)?;
+            LocalCluster::spawn("tinyvgg", n, config, Arc::new(FallbackProvider::new()), faults)?;
         let t0 = std::time::Instant::now();
         let (out, metrics) = cluster.master.infer(&input)?;
         let dt = t0.elapsed().as_secs_f64();

@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
         "tinyvgg",
         4,
         config,
-        Arc::new(FallbackProvider),
+        Arc::new(FallbackProvider::new()),
         (0..4).map(|_| WorkerFaults::none()).collect(),
     )?;
 

@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
     } else {
         println!("provider: pure-rust fallback (run `make artifacts` for the PJRT path)");
         _service = None;
-        Arc::new(FallbackProvider)
+        Arc::new(FallbackProvider::new())
     };
 
     // Mild real straggling on every worker.

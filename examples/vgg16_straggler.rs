@@ -31,7 +31,7 @@ fn wall_clock_run(scheme: SchemeKind, lambda_tr: f64, runs: usize) -> anyhow::Re
         ..Default::default()
     };
     let mut cluster =
-        LocalCluster::spawn("tinyvgg", n, config, Arc::new(FallbackProvider), faults)?;
+        LocalCluster::spawn("tinyvgg", n, config, Arc::new(FallbackProvider::new()), faults)?;
     let mut rng = Rng::new(3);
     let mut s = Summary::new();
     for _ in 0..runs {

@@ -4,7 +4,8 @@
 
 use std::sync::Arc;
 
-use cocoi::bench::harness::{BenchTimer, Table};
+use cocoi::bench::harness::{BenchJson, BenchTimer, Table};
+use cocoi::util::json::Json;
 use cocoi::conv::Tensor;
 use cocoi::coordinator::{
     LocalCluster, MasterConfig, ScenarioFaults, SchemeKind, WorkerFaults,
@@ -13,7 +14,7 @@ use cocoi::planner::SplitPolicy;
 use cocoi::runtime::{ConvProvider, FallbackProvider, Manifest, PjrtProvider, PjrtService};
 use cocoi::util::Rng;
 
-fn provider() -> (Arc<dyn ConvProvider>, Option<PjrtService>, &'static str) {
+fn provider(pool: usize) -> (Arc<dyn ConvProvider>, Option<PjrtService>, &'static str) {
     let dir = cocoi::runtime::artifacts::default_dir();
     if dir.join("manifest.json").exists() {
         let service = PjrtService::spawn().expect("pjrt service");
@@ -24,7 +25,9 @@ fn provider() -> (Arc<dyn ConvProvider>, Option<PjrtService>, &'static str) {
             "pjrt",
         )
     } else {
-        (Arc::new(FallbackProvider), None, "fallback")
+        // `pool` in-proc workers share this host: split the kernel
+        // thread budget so the wall-clock comparison stays clean.
+        (Arc::new(FallbackProvider::for_pool(pool)), None, "fallback")
     }
 }
 
@@ -54,14 +57,18 @@ fn bench_case(
 
 fn main() -> anyhow::Result<()> {
     cocoi::util::logger::init();
-    let (prov, _service, prov_name) = provider();
     let n = 6;
+    let (prov, _service, prov_name) = provider(n);
     let iters = 5;
 
     let mut table = Table::new(
         &format!("E2E: tinyvgg inference wall-clock, n={n}, provider={prov_name}"),
         &["scheme", "healthy", "straggling λ=0.5", "n_f=2 failures"],
     );
+    let mut json = BenchJson::new("e2e");
+    json.set("provider", Json::Str(prov_name.to_string()));
+    json.set_num("workers", n as f64);
+    json.set_num("iters", iters as f64);
     for scheme in [SchemeKind::Mds, SchemeKind::Uncoded, SchemeKind::Replication] {
         let healthy = bench_case(
             prov.clone(),
@@ -88,8 +95,20 @@ fn main() -> anyhow::Result<()> {
             format!("{:.0}ms", straggle * 1e3),
             format!("{:.0}ms", failures * 1e3),
         ]);
+        json.set(
+            scheme.name(),
+            Json::obj(vec![
+                ("healthy_mean_s", Json::Num(healthy)),
+                ("straggle_mean_s", Json::Num(straggle)),
+                ("failures_mean_s", Json::Num(failures)),
+            ]),
+        );
     }
     table.print();
+    match json.write() {
+        Ok(path) => println!("machine-readable results -> {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_e2e.json: {e:#}"),
+    }
     println!(
         "(1-core host: worker compute serializes, so healthy-case distribution \
          shows overhead; the straggle/failure columns show the coded advantage)"

@@ -1,0 +1,16 @@
+//! GEMM kernel benchmark: the scalar ikj oracle vs the tiled
+//! multithreaded packed kernel (`conv::gemm`) on VGG-sized shapes.
+//!
+//! Prints the comparison table, verifies bitwise determinism across
+//! thread counts, and writes `BENCH_gemm.json` (see `bench::harness::
+//! BenchJson`) so the repo's perf trajectory accumulates run over run.
+//!
+//! ```text
+//! cargo bench --bench bench_gemm                 # default scale
+//! COCOI_BENCH_SCALE=quick cargo bench --bench bench_gemm
+//! ```
+
+fn main() -> anyhow::Result<()> {
+    cocoi::util::logger::init();
+    cocoi::bench::experiments::gemm(cocoi::bench::experiments::Scale::from_env())
+}

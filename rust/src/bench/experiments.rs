@@ -17,7 +17,7 @@ use crate::sim::{simulate_model, MethodSim, Scenario};
 use crate::util::stats::Summary;
 use crate::util::Rng;
 
-use super::harness::{fmt_secs, Table};
+use super::harness::{fmt_secs, BenchJson, BenchTimer, Table};
 
 /// Fold scenario-1's extra `Exp(λ_tr · T̄_tr)` transmission delay into the
 /// profile: each transmission phase's exponential part grows by
@@ -171,7 +171,7 @@ pub fn fig8() -> Result<()> {
     rng.fill_uniform_f32(&mut input.data, -1.0, 1.0);
     let mut weights = vec![0f32; spec.weight_len()];
     rng.fill_uniform_f32(&mut weights, -1.0, 1.0);
-    let provider = crate::runtime::FallbackProvider;
+    let provider = crate::runtime::FallbackProvider::new();
     let mut cmp_samples = Vec::new();
     for _ in 0..100 {
         let t0 = std::time::Instant::now();
@@ -550,14 +550,111 @@ pub fn fig10(scale: Scale) -> Result<()> {
 }
 
 // ====================================================================
+// §Compute backbone: the tiled multithreaded GEMM kernel vs the scalar
+// oracle on VGG-sized shapes. Emits BENCH_gemm.json (perf trajectory).
+// ====================================================================
+pub fn gemm(scale: Scale) -> Result<()> {
+    use crate::conv::gemm::gemm_tiled;
+    use crate::conv::im2col;
+    use crate::util::json::Json;
+
+    let threads = crate::util::threads::default_threads();
+    let iters = if scale.trials <= 8 { 3 } else { 5 };
+    let timer = BenchTimer::new(1, iters);
+    // (m, kk, n) = (C_O, C_I·K², H_O·W_O) of VGG-shaped conv GEMMs, plus
+    // one deliberately remainder-heavy shape.
+    let shapes: [(usize, usize, usize, &str); 5] = [
+        (64, 27, 50176, "3->64 k3 @224^2"),
+        (64, 576, 12544, "64->64 k3 @112^2"),
+        (256, 1152, 3136, "128->256 k3 @56^2"),
+        (512, 4608, 196, "512->512 k3 @14^2"),
+        (33, 301, 523, "odd remainders"),
+    ];
+    let mut table = Table::new(
+        &format!("GEMM kernel — scalar oracle vs tiled (threads={threads})"),
+        &["shape", "scalar", "tiled(1T)", &format!("tiled({threads}T)"), "speedup", "GFLOP/s", "bitwise"],
+    );
+    let mut json = BenchJson::new("gemm");
+    json.set_num("iters", iters as f64);
+    let mut rng = Rng::new(0x6E77);
+    let mut worst_speedup = f64::INFINITY;
+    for (m, kk, n, label) in shapes {
+        let mut a = vec![0.0f32; m * kk];
+        let mut b = vec![0.0f32; kk * n];
+        rng.fill_uniform_f32(&mut a, -1.0, 1.0);
+        rng.fill_uniform_f32(&mut b, -1.0, 1.0);
+
+        // Determinism gate first: the multithreaded kernel must be
+        // bitwise identical at every thread count.
+        let c1 = gemm_tiled(&a, m, kk, &b, n, 1);
+        let bitwise = [2usize, 4]
+            .iter()
+            .all(|&t| gemm_tiled(&a, m, kk, &b, n, t) == c1);
+        anyhow::ensure!(bitwise, "tiled kernel diverged across thread counts ({label})");
+        // Accuracy gate vs the scalar oracle (different summation order).
+        let oracle = im2col::gemm(&a, m, kk, &b, n);
+        let tol = 1e-5 * (kk as f32).max(16.0);
+        for (x, y) in c1.iter().zip(&oracle) {
+            anyhow::ensure!((x - y).abs() < tol, "tiled kernel off oracle ({label})");
+        }
+
+        let s_scalar = timer.run(|| {
+            let _ = im2col::gemm(&a, m, kk, &b, n);
+        });
+        let s_tiled1 = timer.run(|| {
+            let _ = gemm_tiled(&a, m, kk, &b, n, 1);
+        });
+        let s_tiled = timer.run(|| {
+            let _ = gemm_tiled(&a, m, kk, &b, n, threads);
+        });
+        let flops = 2.0 * (m * kk * n) as f64;
+        let speedup = s_scalar.mean() / s_tiled.mean();
+        worst_speedup = worst_speedup.min(speedup);
+        table.row(vec![
+            format!("{m}x{kk} @ {kk}x{n} ({label})"),
+            format!("{:.1}ms", s_scalar.mean() * 1e3),
+            format!("{:.1}ms", s_tiled1.mean() * 1e3),
+            format!("{:.1}ms", s_tiled.mean() * 1e3),
+            format!("{speedup:.2}x"),
+            format!("{:.2}", flops / s_tiled.mean() / 1e9),
+            "yes".to_string(),
+        ]);
+        json.set(
+            &format!("m{m}_k{kk}_n{n}"),
+            Json::obj(vec![
+                ("label", Json::Str(label.to_string())),
+                ("scalar", BenchJson::summary_json(&s_scalar)),
+                ("tiled_1t", BenchJson::summary_json(&s_tiled1)),
+                ("tiled_nt", BenchJson::summary_json(&s_tiled)),
+                ("threads", Json::Num(threads as f64)),
+                ("speedup_vs_scalar", Json::Num(speedup)),
+                ("gflops_nt", Json::Num(flops / s_tiled.mean() / 1e9)),
+                ("bitwise_across_threads", Json::Bool(bitwise)),
+            ]),
+        );
+    }
+    table.print();
+    json.set_num("worst_speedup_vs_scalar", worst_speedup);
+    let path = json.write()?;
+    println!(
+        "worst tiled({threads}T) speedup vs scalar: {worst_speedup:.2}x \
+         (acceptance: >= 2x on a >= 4-core host); results -> {}",
+        path.display()
+    );
+    Ok(())
+}
+
+// ====================================================================
 // §Pipelining: multi-request throughput on the *real* coordinator,
 // round-barrier vs pipelined engine (the PR-1 tentpole measurement).
 // ====================================================================
 pub fn throughput(scale: Scale) -> Result<()> {
     use crate::runtime::FallbackProvider;
+    // for_pool: 4 in-proc workers share this host's cores — splitting
+    // the kernel-thread budget keeps the latency comparison clean.
     throughput_with(
         4,
-        std::sync::Arc::new(FallbackProvider),
+        std::sync::Arc::new(FallbackProvider::for_pool(4)),
         "fallback",
         scale.trials.clamp(4, 16),
     )

@@ -1,9 +1,14 @@
 //! Tiny bench harness (no criterion in the offline vendor set): warmup +
-//! timed iterations with mean/σ/min, plus an aligned-table printer used by
-//! every experiment driver.
+//! timed iterations with mean/σ/min, an aligned-table printer used by
+//! every experiment driver, and [`BenchJson`] — the machine-readable
+//! `BENCH_<name>.json` emitter that accumulates the repo's perf
+//! trajectory run over run.
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// Measure a closure: `warmup` untimed runs, then `iters` timed runs.
@@ -105,6 +110,80 @@ impl Table {
     }
 }
 
+/// Machine-readable benchmark record. Every bench/experiment driver can
+/// dump its numbers as `BENCH_<name>.json` next to the human-readable
+/// table, so perf changes are diffable run over run (CI uploads the
+/// files as workflow artifacts).
+///
+/// Output directory: `$COCOI_BENCH_OUT` if set, else the current dir.
+pub struct BenchJson {
+    name: String,
+    fields: BTreeMap<String, Json>,
+}
+
+impl BenchJson {
+    pub fn new(name: &str) -> BenchJson {
+        let mut fields = BTreeMap::new();
+        fields.insert("bench".to_string(), Json::Str(name.to_string()));
+        fields.insert("schema_version".to_string(), Json::Num(1.0));
+        fields.insert(
+            "unix_time".to_string(),
+            Json::Num(
+                std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .map(|d| d.as_secs() as f64)
+                    .unwrap_or(0.0),
+            ),
+        );
+        fields.insert(
+            "host_threads".to_string(),
+            Json::Num(crate::util::threads::default_threads() as f64),
+        );
+        BenchJson {
+            name: name.to_string(),
+            fields,
+        }
+    }
+
+    /// Record an arbitrary value under `key` (last write wins).
+    pub fn set(&mut self, key: &str, value: Json) {
+        self.fields.insert(key.to_string(), value);
+    }
+
+    pub fn set_num(&mut self, key: &str, x: f64) {
+        self.set(key, Json::Num(x));
+    }
+
+    /// Record a timing summary (seconds) under `key`.
+    pub fn summary_json(s: &Summary) -> Json {
+        Json::obj(vec![
+            ("mean_s", Json::Num(s.mean())),
+            ("std_s", Json::Num(s.std())),
+            ("min_s", Json::Num(s.min())),
+            ("n", Json::Num(s.len() as f64)),
+        ])
+    }
+
+    /// Where [`BenchJson::write`] will put the file.
+    pub fn path(&self) -> PathBuf {
+        let dir = std::env::var("COCOI_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+        PathBuf::from(dir).join(format!("BENCH_{}.json", self.name))
+    }
+
+    /// Write `BENCH_<name>.json` into `$COCOI_BENCH_OUT` (or the current
+    /// dir); returns the path written.
+    pub fn write(&self) -> anyhow::Result<PathBuf> {
+        self.write_to(&self.path())
+    }
+
+    /// Write to an explicit path (tests use this so they never have to
+    /// mutate the process-global environment).
+    pub fn write_to(&self, path: &std::path::Path) -> anyhow::Result<PathBuf> {
+        Json::Obj(self.fields.clone()).write_file(path)?;
+        Ok(path.to_path_buf())
+    }
+}
+
 /// Format seconds with adaptive precision.
 pub fn fmt_secs(t: f64) -> String {
     if t >= 100.0 {
@@ -136,5 +215,24 @@ mod tests {
         t.print(); // smoke: no panic
         assert_eq!(fmt_secs(0.0123), "12.3ms");
         assert_eq!(fmt_secs(12.3), "12.3s");
+    }
+
+    #[test]
+    fn bench_json_roundtrips() {
+        use crate::util::json::Json;
+        let mut bj = BenchJson::new("selftest");
+        bj.set_num("speedup", 2.5);
+        bj.set("case", BenchJson::summary_json(&Summary::from_slice(&[0.5, 1.5])));
+        // Explicit target path: no process-global env mutation in tests.
+        let dir = std::env::temp_dir().join("cocoi_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = bj.write_to(&dir.join("BENCH_selftest.json")).unwrap();
+        assert_eq!(path.file_name().unwrap(), "BENCH_selftest.json");
+        let v = Json::parse_file(&path).unwrap();
+        assert_eq!(v.req_str("bench").unwrap(), "selftest");
+        assert!((v.req_f64("speedup").unwrap() - 2.5).abs() < 1e-12);
+        assert!((v.get("case").req_f64("mean_s").unwrap() - 1.0).abs() < 1e-12);
+        assert!(bj.path().file_name().unwrap().to_str().unwrap().starts_with("BENCH_"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

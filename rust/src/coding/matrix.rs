@@ -165,41 +165,152 @@ impl std::ops::IndexMut<(usize, usize)> for Matrix {
     }
 }
 
+/// Column block width shared by every apply path. Fixed — independent of
+/// thread count — so each output element's summation order (and
+/// therefore the bitwise result) is identical whether the apply runs
+/// sequentially or chunk-parallel over any number of threads.
+const BLOCK: usize = 4096;
+
+/// Minimum total output elements (`p × width`) before spawning scoped
+/// threads pays for itself. Depends only on the shape.
+const PAR_ELEMS_MIN: usize = 1 << 17;
+
+/// One output row × one column chunk, f32 axpy accumulation (encode
+/// direction). First non-zero term writes, later terms accumulate —
+/// identical arithmetic to the historical unchunked loop.
+fn apply_row_f32(coeff: &Matrix, rows: &[&[f32]], i: usize, start: usize, dst: &mut [f32]) {
+    let len = dst.len();
+    let mut wrote = false;
+    for (j, row) in rows.iter().enumerate() {
+        let c = coeff[(i, j)];
+        if c == 0.0 {
+            continue;
+        }
+        let c = c as f32;
+        let src = &row[start..start + len];
+        if wrote {
+            for (d, &x) in dst.iter_mut().zip(src) {
+                *d += c * x;
+            }
+        } else {
+            for (d, &x) in dst.iter_mut().zip(src) {
+                *d = c * x;
+            }
+            wrote = true;
+        }
+    }
+    if !wrote {
+        dst.fill(0.0);
+    }
+}
+
+/// One output row × one column chunk, f64 accumulation (decode
+/// direction). `acc` must hold at least `dst.len()` slots.
+fn apply_row_f64(coeff: &Matrix, rows: &[&[f32]], i: usize, start: usize, dst: &mut [f32], acc: &mut [f64]) {
+    let len = dst.len();
+    let acc = &mut acc[..len];
+    acc.fill(0.0);
+    for (j, row) in rows.iter().enumerate() {
+        let c = coeff[(i, j)];
+        if c == 0.0 {
+            continue;
+        }
+        let src = &row[start..start + len];
+        for (a, &x) in acc.iter_mut().zip(src) {
+            *a += c * x as f64;
+        }
+    }
+    for (d, &a) in dst.iter_mut().zip(acc.iter()) {
+        *d = a as f32;
+    }
+}
+
+/// Drive the chunked apply over `out`, parallel when the shape warrants
+/// it. Chunk boundaries are fixed at [`BLOCK`] columns regardless of
+/// thread count; threads take disjoint contiguous chunk ranges, so the
+/// result is bitwise identical at any thread count.
+fn apply_chunked(coeff: &Matrix, rows: &[&[f32]], out: &mut [Vec<f32>], threads: usize, f64_acc: bool) {
+    let width = rows.first().map(|r| r.len()).unwrap_or(0);
+    if width == 0 || out.is_empty() {
+        return;
+    }
+    let threads = if threads == 0 {
+        crate::util::threads::default_threads()
+    } else {
+        threads
+    };
+    let nchunks = width.div_ceil(BLOCK);
+    let t = threads.min(nchunks);
+    if t <= 1 || out.len() * width < PAR_ELEMS_MIN {
+        let mut acc = if f64_acc { vec![0f64; BLOCK.min(width)] } else { Vec::new() };
+        for ci in 0..nchunks {
+            let start = ci * BLOCK;
+            let len = BLOCK.min(width - start);
+            for (i, out_row) in out.iter_mut().enumerate() {
+                let dst = &mut out_row[start..start + len];
+                if f64_acc {
+                    apply_row_f64(coeff, rows, i, start, dst, &mut acc);
+                } else {
+                    apply_row_f32(coeff, rows, i, start, dst);
+                }
+            }
+        }
+        return;
+    }
+    // Group each chunk's per-row slices, then hand contiguous chunk
+    // ranges to scoped threads.
+    let p = out.len();
+    let mut groups: Vec<Vec<&mut [f32]>> = (0..nchunks).map(|_| Vec::with_capacity(p)).collect();
+    for row in out.iter_mut() {
+        for (ci, chunk) in row.chunks_mut(BLOCK).enumerate() {
+            groups[ci].push(chunk);
+        }
+    }
+    let per = nchunks.div_ceil(t);
+    std::thread::scope(|s| {
+        let mut rest = groups;
+        let mut ci0 = 0usize;
+        while !rest.is_empty() {
+            let take = per.min(rest.len());
+            let batch: Vec<Vec<&mut [f32]>> = rest.drain(..take).collect();
+            let start0 = ci0 * BLOCK;
+            ci0 += take;
+            s.spawn(move || {
+                let mut acc = if f64_acc { vec![0f64; BLOCK] } else { Vec::new() };
+                for (bi, chunk_rows) in batch.into_iter().enumerate() {
+                    let start = start0 + bi * BLOCK;
+                    for (i, dst) in chunk_rows.into_iter().enumerate() {
+                        if f64_acc {
+                            apply_row_f64(coeff, rows, i, start, dst, &mut acc);
+                        } else {
+                            apply_row_f32(coeff, rows, i, start, dst);
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
 /// Fast variant of [`apply_f32`]: f32 accumulation (axpy), ~2× faster on
 /// this core. Safe for the **encode** direction, where coefficients are
 /// Vandermonde powers in `[-1, 1]` and `k ≤ ~20` terms keep the rounding
 /// at ~1e-6 relative; the **decode** direction must stay in f64
 /// ([`apply_f32`]) because inverse-Vandermonde coefficients are large and
-/// alternating. §Perf in EXPERIMENTS.md has the before/after.
+/// alternating. Long rows are chunk-parallelized over the default thread
+/// pool (see [`apply_f32_fast_threads`]). §Perf in EXPERIMENTS.md.
 pub fn apply_f32_fast(coeff: &Matrix, rows: &[&[f32]]) -> Vec<Vec<f32>> {
+    apply_f32_fast_threads(coeff, rows, 0)
+}
+
+/// [`apply_f32_fast`] with an explicit thread count (`0` = default).
+/// Bitwise identical results at any thread count.
+pub fn apply_f32_fast_threads(coeff: &Matrix, rows: &[&[f32]], threads: usize) -> Vec<Vec<f32>> {
     assert_eq!(coeff.cols, rows.len(), "coeff cols != row count");
     let width = rows.first().map(|r| r.len()).unwrap_or(0);
     assert!(rows.iter().all(|r| r.len() == width), "ragged data rows");
-    let mut out: Vec<Vec<f32>> = Vec::with_capacity(coeff.rows);
-    for i in 0..coeff.rows {
-        // First non-zero term writes (no zero-init read-modify pass)...
-        let first = (0..rows.len()).find(|&j| coeff[(i, j)] != 0.0);
-        let mut out_row = match first {
-            None => vec![0f32; width],
-            Some(j0) => {
-                let c = coeff[(i, j0)] as f32;
-                rows[j0].iter().map(|&x| c * x).collect()
-            }
-        };
-        // ...remaining terms accumulate (axpy).
-        if let Some(j0) = first {
-            for (j, row) in rows.iter().enumerate().skip(j0 + 1) {
-                let c = coeff[(i, j)] as f32;
-                if c == 0.0 {
-                    continue;
-                }
-                for (o, &x) in out_row.iter_mut().zip(*row) {
-                    *o += c * x;
-                }
-            }
-        }
-        out.push(out_row);
-    }
+    let mut out = vec![vec![0f32; width]; coeff.rows];
+    apply_chunked(coeff, rows, &mut out, threads, false);
     out
 }
 
@@ -207,38 +318,20 @@ pub fn apply_f32_fast(coeff: &Matrix, rows: &[&[f32]]) -> Vec<Vec<f32>> {
 /// `p` output rows of the same width. This is the encode/decode hot loop:
 /// `out[i] = sum_j coeff[i][j] * rows[j]`, accumulated in f64.
 ///
-/// Blocked over the width so each pass stays in cache; the coefficient
-/// loop is innermost-hoisted (axpy style) so the compiler can vectorize.
+/// Blocked over the width ([`BLOCK`] columns) so each pass stays in
+/// cache, with the blocks spread over scoped threads for long feature
+/// rows — same bits at any thread count.
 pub fn apply_f32(coeff: &Matrix, rows: &[&[f32]]) -> Vec<Vec<f32>> {
+    apply_f32_threads(coeff, rows, 0)
+}
+
+/// [`apply_f32`] with an explicit thread count (`0` = default).
+pub fn apply_f32_threads(coeff: &Matrix, rows: &[&[f32]], threads: usize) -> Vec<Vec<f32>> {
     assert_eq!(coeff.cols, rows.len(), "coeff cols != row count");
     let width = rows.first().map(|r| r.len()).unwrap_or(0);
     assert!(rows.iter().all(|r| r.len() == width), "ragged data rows");
-
-    const BLOCK: usize = 4096;
     let mut out = vec![vec![0f32; width]; coeff.rows];
-    let mut acc = vec![0f64; BLOCK.min(width.max(1))];
-    for start in (0..width).step_by(BLOCK) {
-        let end = (start + BLOCK).min(width);
-        let len = end - start;
-        for i in 0..coeff.rows {
-            let acc = &mut acc[..len];
-            acc.fill(0.0);
-            for (j, row) in rows.iter().enumerate() {
-                let c = coeff[(i, j)];
-                if c == 0.0 {
-                    continue;
-                }
-                let src = &row[start..end];
-                for (a, &x) in acc.iter_mut().zip(src) {
-                    *a += c * x as f64;
-                }
-            }
-            let dst = &mut out[i][start..end];
-            for (d, &a) in dst.iter_mut().zip(acc.iter()) {
-                *d = a as f32;
-            }
-        }
-    }
+    apply_chunked(coeff, rows, &mut out, threads, true);
     out
 }
 
@@ -319,6 +412,48 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn apply_threads_bitwise_identical() {
+        // Wide enough to cross several 4096-column blocks and clear the
+        // parallelism gate (p * width >= 2^17).
+        let mut rng = Rng::new(0xAB17);
+        let (p, k, w) = (6, 5, 6 * 4096 + 123); // p·w clears PAR_ELEMS_MIN
+        let mut coeff = Matrix::zeros(p, k);
+        for v in coeff.data.iter_mut() {
+            *v = rng.uniform_range(-3.0, 3.0);
+        }
+        coeff[(2, 1)] = 0.0; // exercise the sparsity skip
+        coeff[(4, 0)] = 0.0;
+        let rows: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..w).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let seq = apply_f32_threads(&coeff, &refs, 1);
+        for t in [2, 3, 8] {
+            assert_eq!(seq, apply_f32_threads(&coeff, &refs, t), "f64 path t={t}");
+        }
+        let seq_fast = apply_f32_fast_threads(&coeff, &refs, 1);
+        for t in [2, 3, 8] {
+            assert_eq!(
+                seq_fast,
+                apply_f32_fast_threads(&coeff, &refs, t),
+                "f32 path t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn apply_fast_zero_row_and_short_rows() {
+        // An all-zero coefficient row must produce an all-zero output row,
+        // and sub-block widths stay on the sequential path.
+        let coeff = Matrix::from_rows(&[vec![0.0, 0.0], vec![2.0, -1.0]]);
+        let rows: Vec<Vec<f32>> = vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]];
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let out = apply_f32_fast(&coeff, &refs);
+        assert_eq!(out[0], vec![0.0, 0.0, 0.0]);
+        assert_eq!(out[1], vec![-2.0, -1.0, 0.0]);
     }
 
     #[test]

@@ -1,0 +1,470 @@
+//! Cache-blocked, register-tiled, multithreaded f32 GEMM — the compute
+//! backbone behind every conv subtask a CoCoI worker executes.
+//!
+//! The scalar ikj loop in [`super::im2col::gemm`] stays as the test
+//! oracle; this module is the production path:
+//!
+//! * **Packing** — `A` (the weight matrix) is repacked into `MR`-row
+//!   panels, `B` (the im2col patches) into `NR`-column panels, both
+//!   blocked along `k` in [`KC`]-deep slabs, so the micro-kernel streams
+//!   contiguous memory only.
+//! * **Register tiling** — the micro-kernel keeps an `MR×NR` accumulator
+//!   tile in registers across the whole `KC` slab (LLVM auto-vectorizes
+//!   the inner `NR` loop; no intrinsics, no dependencies).
+//! * **Threading** — `std::thread::scope` splits output *row panels*
+//!   over threads (B packing splits *k slabs*). Every output element is
+//!   owned by exactly one thread and its summation order is fixed by the
+//!   `KC` blocking alone, so results are **bitwise identical across
+//!   thread counts** — asserted in `rust/tests/gemm_kernel.rs`.
+//! * **Scratch reuse** — [`Scratch`] owns the im2col buffer and both
+//!   packed panels; steady-state subtask execution reuses them
+//!   call-over-call (only the output tensor, which is moved into the
+//!   reply frame, is freshly allocated). [`PackedA`] lets layer weights
+//!   be packed once at model-load time (see `runtime::provider::
+//!   ConvProvider::prepack`) instead of per subtask.
+
+use anyhow::{ensure, Result};
+
+use crate::util::threads::default_threads;
+
+use super::im2col;
+use super::layer::ConvSpec;
+use super::tensor::Tensor;
+
+/// Micro-tile rows (A panel height).
+pub const MR: usize = 4;
+/// Micro-tile columns (B panel width).
+pub const NR: usize = 8;
+/// k-dimension cache block. Fixed regardless of thread count so the f32
+/// summation order — and therefore the bitwise result — never depends on
+/// parallelism.
+pub const KC: usize = 256;
+
+/// Below this many FLOPs the kernel stays single-threaded (spawning
+/// costs more than it buys). Depends only on the shape, never on the
+/// configured thread count, and the arithmetic is identical either way.
+const PAR_FLOPS_MIN: usize = 1 << 21;
+
+/// Reusable buffers for the im2col + packed-GEMM conv path. All buffers
+/// grow to the high-water mark and are fully overwritten on every use,
+/// so reuse cannot perturb results.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    im2col: Vec<f32>,
+    packed_a: Vec<f32>,
+    packed_b: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+}
+
+/// Weights of one layer packed into the kernel's A-panel layout
+/// (`MR`-row panels within `KC` slabs, zero-padded to whole panels).
+#[derive(Clone, Debug)]
+pub struct PackedA {
+    m: usize,
+    k: usize,
+    data: Vec<f32>,
+}
+
+impl PackedA {
+    /// Pack a row-major `m×k` matrix.
+    pub fn pack(a: &[f32], m: usize, k: usize) -> PackedA {
+        let mut data = Vec::new();
+        pack_a_into(a, m, k, &mut data);
+        PackedA { m, k, data }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+}
+
+fn grow(buf: &mut Vec<f32>, len: usize) {
+    if buf.len() != len {
+        buf.resize(len, 0.0);
+    }
+}
+
+/// Pack row-major `A (m×k)` into panel layout inside `out` (resized to
+/// exactly `ceil(m/MR)·MR·k`). Layout: `KC` slabs outermost, then one
+/// `MR×lc` panel per row group, column-major within the panel.
+fn pack_a_into(a: &[f32], m: usize, kk: usize, out: &mut Vec<f32>) {
+    assert_eq!(a.len(), m * kk, "A shape mismatch");
+    let m_panels = m.div_ceil(MR);
+    grow(out, m_panels * MR * kk);
+    let nb_k = kk.div_ceil(KC);
+    let mut off = 0;
+    for pc in 0..nb_k {
+        let l0 = pc * KC;
+        let lc = KC.min(kk - l0);
+        for ip in 0..m_panels {
+            let panel = &mut out[off..off + MR * lc];
+            for l in 0..lc {
+                for i in 0..MR {
+                    let row = ip * MR + i;
+                    panel[l * MR + i] = if row < m { a[row * kk + l0 + l] } else { 0.0 };
+                }
+            }
+            off += MR * lc;
+        }
+    }
+}
+
+/// Pack one `KC` slab of row-major `B (k×n)` into `NR`-column panels.
+fn pack_b_block(b: &[f32], n: usize, l0: usize, lc: usize, strips: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), strips * NR * lc);
+    for jr in 0..strips {
+        let j0 = jr * NR;
+        let nr_eff = NR.min(n - j0);
+        let panel = &mut out[jr * NR * lc..][..NR * lc];
+        for l in 0..lc {
+            let src = &b[(l0 + l) * n + j0..][..nr_eff];
+            let dst = &mut panel[l * NR..][..NR];
+            dst[..nr_eff].copy_from_slice(src);
+            dst[nr_eff..].fill(0.0);
+        }
+    }
+}
+
+/// Pack all of `B` into `out`, slabs parallelized over up to `threads`
+/// scoped threads. Pure data movement: thread count cannot affect the
+/// packed bytes.
+fn pack_b_into(b: &[f32], kk: usize, n: usize, out: &mut Vec<f32>, threads: usize) {
+    let strips = n.div_ceil(NR);
+    grow(out, strips * NR * kk);
+    let nb_k = kk.div_ceil(KC);
+    let t = threads.clamp(1, nb_k.max(1));
+    if t <= 1 {
+        let mut rest: &mut [f32] = out;
+        for pc in 0..nb_k {
+            let lc = KC.min(kk - pc * KC);
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(strips * NR * lc);
+            rest = tail;
+            pack_b_block(b, n, pc * KC, lc, strips, chunk);
+        }
+        return;
+    }
+    let mut chunks: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(nb_k);
+    let mut rest: &mut [f32] = out;
+    for pc in 0..nb_k {
+        let lc = KC.min(kk - pc * KC);
+        let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(strips * NR * lc);
+        rest = tail;
+        chunks.push((pc * KC, lc, chunk));
+    }
+    let per = nb_k.div_ceil(t);
+    std::thread::scope(|s| {
+        let mut rest = chunks;
+        while !rest.is_empty() {
+            let batch: Vec<_> = rest.drain(..per.min(rest.len())).collect();
+            s.spawn(move || {
+                for (l0, lc, chunk) in batch {
+                    pack_b_block(b, n, l0, lc, strips, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// `MR×NR` register-tile update over one packed `KC` slab.
+#[inline(always)]
+fn micro_kernel(ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for (a, b) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        for i in 0..MR {
+            let ai = a[i];
+            let acc_row = &mut acc[i];
+            for (c, &bv) in acc_row.iter_mut().zip(b) {
+                *c += ai * bv;
+            }
+        }
+    }
+}
+
+/// Compute output row panels `[ip0, ip1)` into `c_chunk` (the contiguous
+/// row slice `[ip0·MR, min(ip1·MR, m)) × n` of C). Each thread of the
+/// parallel path owns one such disjoint chunk.
+fn compute_rows(
+    ip0: usize,
+    ip1: usize,
+    m: usize,
+    kk: usize,
+    n: usize,
+    pa: &[f32],
+    pb: &[f32],
+    c_chunk: &mut [f32],
+) {
+    let m_panels = m.div_ceil(MR);
+    let strips = n.div_ceil(NR);
+    let rows = (ip1 * MR).min(m) - ip0 * MR;
+    debug_assert_eq!(c_chunk.len(), rows * n);
+    let nb_k = kk.div_ceil(KC);
+    for pc in 0..nb_k {
+        let l0 = pc * KC;
+        let lc = KC.min(kk - l0);
+        let a_block = &pa[m_panels * MR * l0..][..m_panels * MR * lc];
+        let b_block = &pb[strips * NR * l0..][..strips * NR * lc];
+        for jr in 0..strips {
+            let bp = &b_block[jr * NR * lc..][..NR * lc];
+            let j0 = jr * NR;
+            let nr_eff = NR.min(n - j0);
+            for ip in ip0..ip1 {
+                let ap = &a_block[ip * MR * lc..][..MR * lc];
+                let mut acc = [[0f32; NR]; MR];
+                micro_kernel(ap, bp, &mut acc);
+                let mr_eff = MR.min(m - ip * MR);
+                for (i, acc_row) in acc.iter().enumerate().take(mr_eff) {
+                    let dst = &mut c_chunk[((ip - ip0) * MR + i) * n + j0..][..nr_eff];
+                    for (d, &v) in dst.iter_mut().zip(&acc_row[..nr_eff]) {
+                        *d += v;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Core entry: `C (m×n) = packed_A · B (k×n)` with caller-owned packed-B
+/// scratch. `threads == 0` means [`default_threads`]. Results are
+/// bitwise identical for every thread count (see module docs).
+pub fn gemm_packed_slices(
+    m: usize,
+    kk: usize,
+    pa: &[f32],
+    b: &[f32],
+    n: usize,
+    c: &mut [f32],
+    threads: usize,
+    packed_b: &mut Vec<f32>,
+) {
+    assert_eq!(pa.len(), m.div_ceil(MR) * MR * kk, "packed A shape mismatch");
+    assert_eq!(b.len(), kk * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    c.fill(0.0);
+    if m == 0 || kk == 0 || n == 0 {
+        return;
+    }
+    let threads = if threads == 0 { default_threads() } else { threads };
+    let flops = 2usize
+        .saturating_mul(m)
+        .saturating_mul(kk)
+        .saturating_mul(n);
+    let par = threads > 1 && flops >= PAR_FLOPS_MIN;
+    let strips = n.div_ceil(NR);
+    pack_b_into(b, kk, n, packed_b, if par { threads } else { 1 });
+    let pb: &[f32] = &packed_b[..strips * NR * kk];
+    let m_panels = m.div_ceil(MR);
+    let comp_threads = if par { threads.min(m_panels) } else { 1 };
+    if comp_threads <= 1 {
+        compute_rows(0, m_panels, m, kk, n, pa, pb, c);
+        return;
+    }
+    let per = m_panels.div_ceil(comp_threads);
+    std::thread::scope(|s| {
+        let mut rest: &mut [f32] = c;
+        let mut ip0 = 0usize;
+        while ip0 < m_panels {
+            let ip1 = (ip0 + per).min(m_panels);
+            let rows = (ip1 * MR).min(m) - ip0 * MR;
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(rows * n);
+            rest = tail;
+            s.spawn(move || compute_rows(ip0, ip1, m, kk, n, pa, pb, chunk));
+            ip0 = ip1;
+        }
+    });
+}
+
+/// `C = A·B` with a pre-packed A (weights packed once at load time).
+pub fn gemm_packed(pa: &PackedA, b: &[f32], n: usize, c: &mut [f32], threads: usize, scratch: &mut Scratch) {
+    gemm_packed_slices(pa.m, pa.k, &pa.data, b, n, c, threads, &mut scratch.packed_b);
+}
+
+/// Convenience one-shot: pack A, allocate C, multiply. Bench/test entry.
+pub fn gemm_tiled(a: &[f32], m: usize, kk: usize, b: &[f32], n: usize, threads: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * kk, "A shape mismatch");
+    assert_eq!(b.len(), kk * n, "B shape mismatch");
+    let pa = PackedA::pack(a, m, kk);
+    let mut c = vec![0f32; m * n];
+    let mut packed_b = Vec::new();
+    gemm_packed_slices(m, kk, &pa.data, b, n, &mut c, threads, &mut packed_b);
+    c
+}
+
+/// Tiled-kernel conv of an already-padded input: im2col into scratch,
+/// pack weights into scratch, multiply. Same contract as
+/// [`ConvSpec::conv_padded`] (the scalar oracle).
+pub fn conv_padded_tiled(
+    spec: &ConvSpec,
+    input: &Tensor,
+    weights: &[f32],
+    threads: usize,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
+    spec.check_padded_input(input)?;
+    ensure!(weights.len() == spec.weight_len(), "bad weight length");
+    let h_o = spec.out_dim_padded(input.h);
+    let w_o = spec.out_dim_padded(input.w);
+    let (m, kk, n) = (spec.c_out, spec.c_in * spec.k_w * spec.k_w, h_o * w_o);
+    let Scratch {
+        im2col: col_buf,
+        packed_a,
+        packed_b,
+    } = scratch;
+    im2col::im2col_into(input, spec.k_w, spec.s_w, col_buf);
+    pack_a_into(weights, m, kk, packed_a);
+    let mut out = vec![0f32; m * n];
+    gemm_packed_slices(m, kk, &packed_a[..], &col_buf[..kk * n], n, &mut out, threads, packed_b);
+    Tensor::from_vec(m, h_o, w_o, out)
+}
+
+/// Tiled-kernel conv against weights packed once at load time — the
+/// steady-state worker path (no per-subtask weight packing).
+pub fn conv_padded_packed(
+    spec: &ConvSpec,
+    input: &Tensor,
+    pa: &PackedA,
+    threads: usize,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
+    spec.check_padded_input(input)?;
+    let kk = spec.c_in * spec.k_w * spec.k_w;
+    ensure!(
+        pa.m == spec.c_out && pa.k == kk,
+        "packed weights {}x{} do not match conv {}x{}",
+        pa.m,
+        pa.k,
+        spec.c_out,
+        kk
+    );
+    let h_o = spec.out_dim_padded(input.h);
+    let w_o = spec.out_dim_padded(input.w);
+    let n = h_o * w_o;
+    let Scratch {
+        im2col: col_buf,
+        packed_b,
+        ..
+    } = scratch;
+    im2col::im2col_into(input, spec.k_w, spec.s_w, col_buf);
+    let mut out = vec![0f32; pa.m * n];
+    gemm_packed_slices(pa.m, kk, &pa.data, &col_buf[..kk * n], n, &mut out, threads, packed_b);
+    Tensor::from_vec(pa.m, h_o, w_o, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    fn gemm_f64(a: &[f32], m: usize, kk: usize, b: &[f32], n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for l in 0..kk {
+                    acc += a[i * kk + l] as f64 * b[l * n + j] as f64;
+                }
+                c[i * n + j] = acc as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn tiled_matches_f64_oracle_on_random_shapes() {
+        prop::check("tiled gemm == f64 oracle", 24, |rng| {
+            let m = 1 + rng.below(20);
+            let kk = 1 + rng.below(300); // crosses the KC boundary
+            let n = 1 + rng.below(64);
+            let mut a = vec![0.0f32; m * kk];
+            let mut b = vec![0.0f32; kk * n];
+            rng.fill_uniform_f32(&mut a, -1.0, 1.0);
+            rng.fill_uniform_f32(&mut b, -1.0, 1.0);
+            let got = gemm_tiled(&a, m, kk, &b, n, 1 + rng.below(4));
+            let want = gemm_f64(&a, m, kk, &b, n);
+            let tol = 1e-5 * (kk as f32).max(16.0);
+            for (x, y) in got.iter().zip(&want) {
+                assert!((x - y).abs() < tol, "{x} vs {y} (m={m} kk={kk} n={n})");
+            }
+        });
+    }
+
+    #[test]
+    fn bitwise_identical_across_thread_counts() {
+        let mut rng = Rng::new(0x6E44);
+        // Big enough to clear PAR_FLOPS_MIN; odd sizes exercise every
+        // remainder path.
+        let (m, kk, n) = (33, 300, 523);
+        let mut a = vec![0.0f32; m * kk];
+        let mut b = vec![0.0f32; kk * n];
+        rng.fill_uniform_f32(&mut a, -1.0, 1.0);
+        rng.fill_uniform_f32(&mut b, -1.0, 1.0);
+        let c1 = gemm_tiled(&a, m, kk, &b, n, 1);
+        for t in [2, 3, 4, 8] {
+            assert_eq!(c1, gemm_tiled(&a, m, kk, &b, n, t), "threads={t}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bitwise_stable() {
+        let mut rng = Rng::new(0x5C3A);
+        let spec = ConvSpec::new(5, 7, 3, 1, 0);
+        let mut input = Tensor::zeros(5, 12, 9);
+        rng.fill_uniform_f32(&mut input.data, -1.0, 1.0);
+        let mut w = vec![0f32; spec.weight_len()];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        let mut scratch = Scratch::new();
+        let first = conv_padded_tiled(&spec, &input, &w, 2, &mut scratch).unwrap();
+        // Dirty the scratch with a different geometry, then repeat.
+        let other = ConvSpec::new(2, 3, 5, 2, 0);
+        let mut oin = Tensor::zeros(2, 20, 17);
+        rng.fill_uniform_f32(&mut oin.data, -1.0, 1.0);
+        let mut ow = vec![0f32; other.weight_len()];
+        rng.fill_uniform_f32(&mut ow, -1.0, 1.0);
+        conv_padded_tiled(&other, &oin, &ow, 2, &mut scratch).unwrap();
+        let again = conv_padded_tiled(&spec, &input, &w, 2, &mut scratch).unwrap();
+        assert_eq!(first.data, again.data);
+    }
+
+    #[test]
+    fn prepacked_matches_unpacked_bitwise() {
+        let mut rng = Rng::new(0x9A7);
+        let spec = ConvSpec::new(6, 10, 3, 1, 0);
+        let mut input = Tensor::zeros(6, 14, 11);
+        rng.fill_uniform_f32(&mut input.data, -1.0, 1.0);
+        let mut w = vec![0f32; spec.weight_len()];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        let mut scratch = Scratch::new();
+        let unpacked = conv_padded_tiled(&spec, &input, &w, 2, &mut scratch).unwrap();
+        let pa = PackedA::pack(&w, spec.c_out, spec.c_in * 9);
+        let packed = conv_padded_packed(&spec, &input, &pa, 2, &mut scratch).unwrap();
+        assert_eq!(unpacked.data, packed.data);
+        // Shape-mismatched pack is rejected.
+        let wrong = ConvSpec::new(6, 11, 3, 1, 0);
+        assert!(conv_padded_packed(&wrong, &input, &pa, 2, &mut scratch).is_err());
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        // 1×k @ k×1 and thin strips — exercise single-panel paths.
+        for (m, kk, n) in [(1, 577, 1), (1, 1, 1), (3, 2, 17), (9, 1, 40)] {
+            let mut rng = Rng::new((m * 31 + kk * 7 + n) as u64);
+            let mut a = vec![0.0f32; m * kk];
+            let mut b = vec![0.0f32; kk * n];
+            rng.fill_uniform_f32(&mut a, -1.0, 1.0);
+            rng.fill_uniform_f32(&mut b, -1.0, 1.0);
+            let got = gemm_tiled(&a, m, kk, &b, n, 4);
+            let want = gemm_f64(&a, m, kk, &b, n);
+            for (x, y) in got.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-3);
+            }
+        }
+    }
+}

@@ -9,11 +9,28 @@ use super::tensor::Tensor;
 /// Extract conv patches of a *padded* input into a `(C_I·K·K, H_O·W_O)`
 /// row-major matrix.
 pub fn im2col(input: &Tensor, k: usize, s: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    im2col_into(input, k, s, &mut out);
+    out
+}
+
+/// [`im2col`] into a reusable buffer (resized to exactly the patch
+/// matrix; every element is overwritten, so buffer reuse is safe).
+pub fn im2col_into(input: &Tensor, k: usize, s: usize, out: &mut Vec<f32>) {
     let h_o = (input.h - k) / s + 1;
     let w_o = (input.w - k) / s + 1;
     let rows = input.c * k * k;
     let cols = h_o * w_o;
-    let mut out = vec![0.0f32; rows * cols];
+    if out.len() != rows * cols {
+        out.resize(rows * cols, 0.0);
+    }
+    // 1×1 stride-1 fast path: the patch matrix *is* the flattened input
+    // (geometry proven by `im2col_identity_kernel_geometry`); skip the
+    // loop nest entirely.
+    if k == 1 && s == 1 {
+        out.copy_from_slice(&input.data);
+        return;
+    }
     for c in 0..input.c {
         for ky in 0..k {
             for kx in 0..k {
@@ -36,14 +53,16 @@ pub fn im2col(input: &Tensor, k: usize, s: usize) -> Vec<f32> {
             }
         }
     }
-    out
 }
 
 /// Row-major GEMM: `C (m×n) = A (m×kk) · B (kk×n)`, f32.
 ///
-/// ikj loop order with the innermost axpy over contiguous `B`/`C` rows —
-/// auto-vectorizes well and is the fallback hot loop when no PJRT artifact
-/// is available.
+/// ikj loop order with the innermost axpy over contiguous `B`/`C` rows.
+/// This is the **scalar test oracle** for the tiled multithreaded kernel
+/// in [`super::gemm`] (the production path). Dense weights make a
+/// zero-skip branch pure overhead here — sparsity-aware skipping lives
+/// only in `coding::matrix`, where coefficient matrices really are
+/// sparse.
 pub fn gemm(a: &[f32], m: usize, kk: usize, b: &[f32], n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * kk, "A shape mismatch");
     assert_eq!(b.len(), kk * n, "B shape mismatch");
@@ -52,9 +71,6 @@ pub fn gemm(a: &[f32], m: usize, kk: usize, b: &[f32], n: usize) -> Vec<f32> {
         let a_row = &a[i * kk..(i + 1) * kk];
         let c_row = &mut c[i * n..(i + 1) * n];
         for (l, &aval) in a_row.iter().enumerate() {
-            if aval == 0.0 {
-                continue;
-            }
             let b_row = &b[l * n..(l + 1) * n];
             for (cv, &bv) in c_row.iter_mut().zip(b_row) {
                 *cv += aval * bv;

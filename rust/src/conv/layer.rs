@@ -65,14 +65,11 @@ impl ConvSpec {
         4.0 * (self.c_out * h_o * w) as f64
     }
 
-    /// Reference convolution on an already-padded input: the *pure linear*
-    /// map distributed to workers (no bias / activation — see coding docs).
-    ///
-    /// Uses im2col + GEMM; the direct triple-loop lives in tests as an
-    /// oracle for this oracle.
-    pub fn conv_padded(&self, input: &Tensor, weights: &[f32]) -> Result<Tensor> {
+    /// Shared validity checks for a conv over an already-padded input —
+    /// used by both the scalar oracle below and the tiled kernel paths
+    /// in [`super::gemm`].
+    pub(crate) fn check_padded_input(&self, input: &Tensor) -> Result<()> {
         ensure!(input.c == self.c_in, "input channels {} != {}", input.c, self.c_in);
-        ensure!(weights.len() == self.weight_len(), "bad weight length");
         ensure!(
             input.h >= self.k_w && input.w >= self.k_w,
             "padded input {}x{} smaller than kernel {}",
@@ -80,6 +77,19 @@ impl ConvSpec {
             input.w,
             self.k_w
         );
+        Ok(())
+    }
+
+    /// Reference convolution on an already-padded input: the *pure linear*
+    /// map distributed to workers (no bias / activation — see coding docs).
+    ///
+    /// Uses im2col + the scalar GEMM oracle; the production path is the
+    /// tiled multithreaded kernel in [`super::gemm`] (via
+    /// `runtime::FallbackProvider`). The direct triple-loop lives in
+    /// tests as an oracle for this oracle.
+    pub fn conv_padded(&self, input: &Tensor, weights: &[f32]) -> Result<Tensor> {
+        self.check_padded_input(input)?;
+        ensure!(weights.len() == self.weight_len(), "bad weight length");
         let h_o = self.out_dim_padded(input.h);
         let w_o = self.out_dim_padded(input.w);
         let patches = im2col::im2col(input, self.k_w, self.s_w); // (CKK, HoWo)

@@ -2,11 +2,13 @@
 //! scalings), the CoCoI width-split geometry (eqs. 1–2), and the
 //! im2col+GEMM execution path.
 
+pub mod gemm;
 pub mod im2col;
 pub mod layer;
 pub mod split;
 pub mod tensor;
 
+pub use gemm::{PackedA, Scratch};
 pub use layer::ConvSpec;
 pub use split::{SplitPlan, WidthRange};
 pub use tensor::Tensor;

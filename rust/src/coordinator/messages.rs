@@ -47,6 +47,15 @@ pub struct WorkOrder {
 }
 
 impl WorkOrder {
+    /// Exact byte length of this order's encoded `ToWorker::Work` frame
+    /// (tag + fixed header + node id + payload). Lets the master's
+    /// dispatch encode allocate each frame exactly once with zero slack
+    /// — these frames are cached for re-dispatch, so over-reservation
+    /// would stay alive for the whole round.
+    pub fn encoded_len(&self) -> usize {
+        1 + 8 + 4 + 4 + (4 + self.node_id.len()) + 6 * 4 + (8 + 4 * self.data.len())
+    }
+
     pub fn spec(&self) -> ConvSpec {
         ConvSpec::new(
             self.c_in as usize,
@@ -97,14 +106,17 @@ const TAG_SKIPPED: u8 = 14;
 
 impl ToWorker {
     pub fn encode(&self) -> Vec<u8> {
-        let mut e = Encoder::new();
+        // Work frames (the dispatch hot path) get an exact-capacity
+        // buffer; the other variants are tiny.
+        let mut e = match self {
+            ToWorker::Work(w) => Encoder::with_capacity(w.encoded_len()),
+            _ => Encoder::new(),
+        };
         match self {
             ToWorker::Setup { model, weight_seed } => {
                 e.u8(TAG_SETUP).str(model).u64(*weight_seed);
             }
             ToWorker::Work(w) => {
-                // Pre-size: the payload dominates the frame.
-                e.reserve(64 + w.node_id.len() + 4 * w.data.len());
                 e.u8(TAG_WORK)
                     .u64(w.round)
                     .u32(w.request)
@@ -124,6 +136,9 @@ impl ToWorker {
             ToWorker::Shutdown => {
                 e.u8(TAG_SHUTDOWN);
             }
+        }
+        if let ToWorker::Work(w) = self {
+            debug_assert_eq!(e.len(), w.encoded_len(), "encoded_len out of sync");
         }
         e.finish()
     }
@@ -159,7 +174,12 @@ impl ToWorker {
 
 impl FromWorker {
     pub fn encode(&self) -> Vec<u8> {
-        let mut e = Encoder::new();
+        // Output frames (the reply hot path) get an exact-capacity
+        // buffer: tag(1) + round(8) + task(4) + c/h/w(12) + len(8) + data.
+        let mut e = match self {
+            FromWorker::Output { data, .. } => Encoder::with_capacity(33 + 4 * data.len()),
+            _ => Encoder::new(),
+        };
         match self {
             FromWorker::Ready => {
                 e.u8(TAG_READY);
@@ -271,5 +291,34 @@ mod tests {
     fn garbage_rejected() {
         assert!(ToWorker::decode(&[99, 1, 2]).is_err());
         assert!(FromWorker::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn work_frame_length_is_exact() {
+        let order = WorkOrder {
+            round: 3,
+            request: 1,
+            task_id: 2,
+            node_id: "conv_x".into(),
+            c_in: 3,
+            c_out: 8,
+            k_w: 3,
+            s_w: 1,
+            h: 6,
+            w: 7,
+            data: vec![0.5; 97],
+        };
+        let frame = ToWorker::Work(order.clone()).encode();
+        assert_eq!(frame.len(), order.encoded_len());
+        // Output frames likewise match their reserved capacity formula.
+        let reply = FromWorker::Output {
+            round: 3,
+            task_id: 2,
+            c: 8,
+            h: 4,
+            w: 5,
+            data: vec![1.0; 160],
+        };
+        assert_eq!(reply.encode().len(), 33 + 4 * 160);
     }
 }

@@ -47,7 +47,7 @@ mod tests {
             "tinyvgg",
             n,
             config,
-            Arc::new(FallbackProvider),
+            Arc::new(FallbackProvider::new()),
             faults,
         )
         .unwrap();
@@ -167,7 +167,7 @@ mod tests {
             "tinyresnet",
             3,
             config,
-            Arc::new(FallbackProvider),
+            Arc::new(FallbackProvider::new()),
             (0..3).map(|_| WorkerFaults::none()).collect(),
         )
         .unwrap();

@@ -1,7 +1,10 @@
 //! Worker runtime: receive encoded subtasks, convolve them with the
 //! preloaded layer weights through a [`ConvProvider`], send results back.
 //! One `run_worker` call per device (thread in in-proc mode, process in
-//! TCP mode).
+//! TCP mode). Layer weights are pre-packed into the kernel's layout at
+//! `Setup` time and every conv runs through a reusable [`Scratch`]
+//! arena, so steady-state subtask execution avoids per-call packing and
+//! buffer allocation.
 //!
 //! Each worker owns a *work queue*: a reader thread drains the link as
 //! frames arrive — even while a conv is executing — so a [`ToWorker::Cancel`]
@@ -16,7 +19,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use anyhow::{Context, Result};
 
 use crate::model::{zoo, WeightStore};
-use crate::runtime::ConvProvider;
+use crate::runtime::{ConvProvider, PackedWeights, Scratch};
 use crate::transport::{FrameRx, FrameTx};
 use crate::util::Rng;
 
@@ -42,6 +45,11 @@ pub fn run_worker(
     let mut rng = Rng::new(config.rng_seed);
     let mut weights: Option<(String, WeightStore)> = None;
     let mut specs: BTreeMap<String, crate::conv::ConvSpec> = Default::default();
+    // Weights packed once at Setup into the kernel's execute-ready layout
+    // (per layer), plus a reusable scratch arena: steady-state subtask
+    // execution does no im2col/packing (re)allocation at all.
+    let mut packed: BTreeMap<String, PackedWeights> = Default::default();
+    let mut scratch = Scratch::new();
 
     // Reader thread: link frames -> in-memory work queue + cancel set.
     let (queue_tx, queue) = mpsc::channel::<Result<ToWorker>>();
@@ -100,8 +108,24 @@ pub fn run_worker(
                     .into_iter()
                     .map(|(id, s, _)| (id, s))
                     .collect();
+                // Pre-pack every conv layer's weights now (the paper's
+                // "preloaded weights" step) so no subtask pays for it.
+                packed = specs
+                    .iter()
+                    .filter_map(|(id, s)| {
+                        let params = store.get(id).ok()?;
+                        config
+                            .provider
+                            .prepack(s, &params.weights)
+                            .map(|pa| (id.clone(), pa))
+                    })
+                    .collect();
                 weights = Some((model.clone(), store));
-                log::debug!("worker {}: loaded {model}", config.id);
+                log::debug!(
+                    "worker {}: loaded {model} ({} layers prepacked)",
+                    config.id,
+                    packed.len()
+                );
                 if tx.send(&FromWorker::Ready.encode()).is_err() {
                     break; // master gone mid-setup
                 }
@@ -125,8 +149,15 @@ pub fn run_worker(
                     }
                     continue;
                 }
-                let reply = match execute_order(&order, &weights, &specs, &config, &mut rng)
-                {
+                let reply = match execute_order(
+                    &order,
+                    &weights,
+                    &specs,
+                    &packed,
+                    &mut scratch,
+                    &config,
+                    &mut rng,
+                ) {
                     Ok(r) => r,
                     Err(e) => {
                         result = Err(e);
@@ -153,6 +184,8 @@ fn execute_order(
     order: &WorkOrder,
     weights: &Option<(String, WeightStore)>,
     specs: &std::collections::BTreeMap<String, crate::conv::ConvSpec>,
+    packed: &std::collections::BTreeMap<String, PackedWeights>,
+    scratch: &mut Scratch,
     config: &WorkerConfig,
     rng: &mut Rng,
 ) -> Result<FromWorker> {
@@ -188,7 +221,17 @@ fn execute_order(
         });
     }
 
-    let out = config.provider.conv(&spec, &input, &params.weights)?;
+    // Steady-state execution path: prepacked weights when Setup packed
+    // this layer, caller-owned scratch either way (zero per-subtask
+    // im2col/panel allocation once buffers reach their high-water mark).
+    let out = match packed.get(&order.node_id) {
+        Some(pa) => config
+            .provider
+            .conv_prepacked(&spec, &input, &params.weights, pa, scratch)?,
+        None => config
+            .provider
+            .conv_scratch(&spec, &input, &params.weights, scratch)?,
+    };
 
     // Chronic straggler: stretch compute wall-time by (slowdown − 1)×.
     if config.faults.cmp_slowdown > 1.0 {
@@ -230,7 +273,7 @@ mod tests {
                 Box::new(wrx),
                 WorkerConfig {
                     id: 0,
-                    provider: Arc::new(FallbackProvider),
+                    provider: Arc::new(FallbackProvider::new()),
                     faults,
                     rng_seed: 1,
                 },
@@ -382,7 +425,7 @@ mod tests {
                 Box::new(wrx),
                 WorkerConfig {
                     id: 0,
-                    provider: Arc::new(FallbackProvider),
+                    provider: Arc::new(FallbackProvider::new()),
                     faults: WorkerFaults::none(),
                     rng_seed: 1,
                 },

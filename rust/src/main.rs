@@ -5,11 +5,15 @@
 //! ```text
 //! cocoi infer  --model tinyvgg --workers 4 [--scheme mds|uncoded|rep|lt-fine|lt-coarse]
 //!              [--k N] [--lambda-tr X] [--fail N] [--pjrt] [--runs R] [--pipeline]
-//! cocoi worker --listen 0.0.0.0:9090 [--pjrt]      # TCP worker process
+//!              [--threads T]                        # GEMM kernel threads (0 = auto)
+//! cocoi worker --listen 0.0.0.0:9090 [--pjrt] [--threads T]   # TCP worker process
 //! cocoi infer  --tcp host:9090,host:9091 ...        # master over TCP
 //! cocoi plan   --model vgg16 --workers 10           # show the split plan
-//! cocoi experiment <fig4|fig5|fig6|fig7|fig8|fig9|fig10|table1|theory|throughput|all>
+//! cocoi experiment <gemm|fig4|fig5|fig6|fig7|fig8|fig9|fig10|table1|theory|throughput|all>
 //! ```
+//!
+//! `--threads` (or the `COCOI_THREADS` env var) caps the tiled GEMM
+//! kernel's threads; results are bitwise identical at any setting.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -96,7 +100,11 @@ fn scheme_from_str(s: &str) -> Result<SchemeKind> {
 }
 
 /// Build the provider (+ keep the PJRT service alive if used).
-fn make_provider(use_pjrt: bool) -> Result<(Arc<dyn ConvProvider>, Option<PjrtService>)> {
+/// `threads` configures the pure-rust tiled GEMM kernel (0 = auto).
+fn make_provider(
+    use_pjrt: bool,
+    threads: usize,
+) -> Result<(Arc<dyn ConvProvider>, Option<PjrtService>)> {
     if use_pjrt {
         let service = PjrtService::spawn()?;
         let manifest = Arc::new(Manifest::load_or_empty(
@@ -105,7 +113,7 @@ fn make_provider(use_pjrt: bool) -> Result<(Arc<dyn ConvProvider>, Option<PjrtSe
         let provider = Arc::new(PjrtProvider::new(service.handle(), manifest));
         Ok((provider, Some(service)))
     } else {
-        Ok((Arc::new(FallbackProvider), None))
+        Ok((Arc::new(FallbackProvider::with_threads(threads)), None))
     }
 }
 
@@ -116,7 +124,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let runs = args.get_usize("runs", 1)?;
     let lambda_tr = args.get_f64("lambda-tr", 0.0)?;
     let n_f = args.get_usize("fail", 0)?;
-    let (provider, _service) = make_provider(args.has("pjrt"))?;
+    let (provider, _service) = make_provider(args.has("pjrt"), args.get_usize("threads", 0)?)?;
 
     let mut rng = Rng::new(args.get_usize("seed", 1)? as u64);
     let faults = if n_f > 0 {
@@ -189,7 +197,7 @@ fn run_inferences(
 
 fn cmd_worker(args: &Args) -> Result<()> {
     let listen = args.get("listen").unwrap_or("127.0.0.1:9090").to_string();
-    let (provider, _service) = make_provider(args.has("pjrt"))?;
+    let (provider, _service) = make_provider(args.has("pjrt"), args.get_usize("threads", 0)?)?;
     cocoi::transport::tcp::serve(&listen, move |link| {
         let provider = provider.clone();
         let (tx, rx) = split_tcp(link.into_stream())?;
@@ -258,6 +266,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         exp::Scale::from_env()
     };
     match which {
+        "gemm" => exp::gemm(scale)?,
         "fig4" => exp::fig4(scale)?,
         "fig5" => exp::fig5(scale)?,
         "fig6" => exp::fig6(scale)?,
@@ -269,6 +278,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "theory" => exp::theory()?,
         "throughput" => exp::throughput(scale)?,
         "all" => {
+            exp::gemm(scale)?;
             exp::fig7()?;
             exp::fig8()?;
             exp::fig4(scale)?;

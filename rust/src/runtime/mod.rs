@@ -8,4 +8,6 @@ pub mod provider;
 
 pub use artifacts::{ConvKey, Manifest};
 pub use pjrt::{PjrtHandle, PjrtService, RuntimeStats};
-pub use provider::{ConvProvider, FallbackProvider, PjrtProvider};
+pub use provider::{ConvProvider, FallbackProvider, PackedWeights, PjrtProvider};
+
+pub use crate::conv::Scratch;

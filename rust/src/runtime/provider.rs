@@ -13,30 +13,145 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::conv::gemm::{self, PackedA, Scratch};
 use crate::conv::im2col;
 use crate::conv::{ConvSpec, Tensor};
 
 use super::artifacts::{ConvKey, Manifest};
 use super::pjrt::PjrtHandle;
 
+/// A layer's weights in a provider-specific execute-ready layout (for
+/// the tiled kernel: the packed A-panel format).
+pub type PackedWeights = PackedA;
+
 /// Uniform interface: valid conv of an already-padded input partition
 /// (pure linear map — no bias/activation; see coding docs).
+///
+/// The three optional hooks let long-lived executors (the worker loop)
+/// amortize work: `prepack` converts a layer's weights into an
+/// execute-ready layout once at model-load time; `conv_scratch` /
+/// `conv_prepacked` run against a caller-owned [`Scratch`] arena so
+/// steady-state subtask execution reuses its buffers instead of
+/// reallocating per call. Defaults delegate to `conv`, so providers
+/// without a packed format need nothing extra.
 pub trait ConvProvider: Send + Sync {
     fn conv(&self, spec: &ConvSpec, input: &Tensor, weights: &[f32]) -> Result<Tensor>;
     fn name(&self) -> &'static str;
+
+    /// Pre-pack a layer's weights at model-load time. `None` means this
+    /// provider has no packed format (callers fall back to `conv_scratch`).
+    fn prepack(&self, _spec: &ConvSpec, _weights: &[f32]) -> Option<PackedWeights> {
+        None
+    }
+
+    /// Conv with a caller-owned scratch arena (buffer reuse across calls).
+    fn conv_scratch(
+        &self,
+        spec: &ConvSpec,
+        input: &Tensor,
+        weights: &[f32],
+        _scratch: &mut Scratch,
+    ) -> Result<Tensor> {
+        self.conv(spec, input, weights)
+    }
+
+    /// Conv against weights prepacked by [`ConvProvider::prepack`];
+    /// `weights` stays available as the unpacked fallback.
+    fn conv_prepacked(
+        &self,
+        spec: &ConvSpec,
+        input: &Tensor,
+        weights: &[f32],
+        _packed: &PackedWeights,
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
+        self.conv_scratch(spec, input, weights, scratch)
+    }
 }
 
-/// Pure-rust provider (im2col + blocked GEMM).
+/// Pure-rust provider: im2col + the tiled multithreaded packed GEMM
+/// kernel (`conv::gemm`). Always available (`cargo test` needs no
+/// artifacts), and the master's executor for remainder pieces and
+/// type-2 layers.
 #[derive(Clone, Copy, Debug, Default)]
-pub struct FallbackProvider;
+pub struct FallbackProvider {
+    /// Kernel threads per conv; 0 = `util::threads::default_threads()`
+    /// (the `COCOI_THREADS` env var, else `available_parallelism`).
+    /// Thread count never changes results — the kernel is bitwise
+    /// deterministic across thread counts.
+    threads: usize,
+}
+
+impl FallbackProvider {
+    /// Default thread configuration (auto).
+    pub fn new() -> FallbackProvider {
+        FallbackProvider::default()
+    }
+
+    /// Explicit kernel thread count (0 = auto).
+    pub fn with_threads(threads: usize) -> FallbackProvider {
+        FallbackProvider { threads }
+    }
+
+    /// Provider for an in-proc pool of `n` workers sharing this host:
+    /// splits the default thread budget evenly so concurrent worker
+    /// convs don't oversubscribe the machine and skew latency
+    /// measurements. A real deployment (one worker per device) wants
+    /// the full budget — use [`FallbackProvider::new`] there.
+    pub fn for_pool(n: usize) -> FallbackProvider {
+        let per = (crate::util::threads::default_threads() / n.max(1)).max(1);
+        FallbackProvider { threads: per }
+    }
+
+    /// Resolved kernel thread count.
+    pub fn threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::util::threads::default_threads()
+        } else {
+            self.threads
+        }
+    }
+}
 
 impl ConvProvider for FallbackProvider {
     fn conv(&self, spec: &ConvSpec, input: &Tensor, weights: &[f32]) -> Result<Tensor> {
-        spec.conv_padded(input, weights)
+        let mut scratch = Scratch::new();
+        self.conv_scratch(spec, input, weights, &mut scratch)
     }
 
     fn name(&self) -> &'static str {
         "fallback"
+    }
+
+    fn prepack(&self, spec: &ConvSpec, weights: &[f32]) -> Option<PackedWeights> {
+        (weights.len() == spec.weight_len())
+            .then(|| PackedA::pack(weights, spec.c_out, spec.c_in * spec.k_w * spec.k_w))
+    }
+
+    fn conv_scratch(
+        &self,
+        spec: &ConvSpec,
+        input: &Tensor,
+        weights: &[f32],
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
+        gemm::conv_padded_tiled(spec, input, weights, self.threads(), scratch)
+    }
+
+    fn conv_prepacked(
+        &self,
+        spec: &ConvSpec,
+        input: &Tensor,
+        weights: &[f32],
+        packed: &PackedWeights,
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
+        if packed.m() != spec.c_out || packed.k() != spec.c_in * spec.k_w * spec.k_w {
+            // Shape drift (e.g. a wire spec diverging from the preloaded
+            // layer): fall back to the unpacked path rather than erroring.
+            return self.conv_scratch(spec, input, weights, scratch);
+        }
+        gemm::conv_padded_packed(spec, input, packed, self.threads(), scratch)
     }
 }
 
@@ -180,7 +295,7 @@ impl ConvProvider for PjrtProvider {
             input.w
         );
         self.stats.fallback.fetch_add(1, Ordering::Relaxed);
-        FallbackProvider.conv(spec, input, weights)
+        FallbackProvider::new().conv(spec, input, weights)
     }
 
     fn name(&self) -> &'static str {
@@ -201,8 +316,28 @@ mod tests {
         rng.fill_uniform_f32(&mut input.data, -1.0, 1.0);
         let mut w = vec![0f32; spec.weight_len()];
         rng.fill_uniform_f32(&mut w, -1.0, 1.0);
-        let out = FallbackProvider.conv(&spec, &input, &w).unwrap();
+        let out = FallbackProvider::new().conv(&spec, &input, &w).unwrap();
         let direct = crate::conv::layer::conv_direct(&spec, &input, &w);
         assert!(out.max_abs_diff(&direct) < 1e-4);
+    }
+
+    #[test]
+    fn scratch_and_prepacked_paths_agree_bitwise() {
+        let spec = ConvSpec::new(4, 9, 3, 1, 0);
+        let mut rng = Rng::new(8);
+        let mut input = Tensor::zeros(4, 9, 13);
+        rng.fill_uniform_f32(&mut input.data, -1.0, 1.0);
+        let mut w = vec![0f32; spec.weight_len()];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        let p = FallbackProvider::with_threads(2);
+        let plain = p.conv(&spec, &input, &w).unwrap();
+        let mut scratch = crate::conv::Scratch::new();
+        let scratched = p.conv_scratch(&spec, &input, &w, &mut scratch).unwrap();
+        let packed = p.prepack(&spec, &w).unwrap();
+        let prepacked = p
+            .conv_prepacked(&spec, &input, &w, &packed, &mut scratch)
+            .unwrap();
+        assert_eq!(plain.data, scratched.data);
+        assert_eq!(plain.data, prepacked.data);
     }
 }

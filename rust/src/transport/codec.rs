@@ -14,11 +14,31 @@ impl Encoder {
         Encoder { buf: Vec::new() }
     }
 
+    /// Exact-capacity constructor for the hot dispatch paths: when the
+    /// frame length is known up front (see `WorkOrder::encoded_len`),
+    /// the buffer is allocated once with zero slack — no grow-by-
+    /// doubling, and no over-reserve kept alive by the master's
+    /// re-dispatch frame cache.
+    pub fn with_capacity(capacity: usize) -> Encoder {
+        Encoder {
+            buf: Vec::with_capacity(capacity),
+        }
+    }
+
     /// Pre-size the buffer for a known payload (hot dispatch path: one
     /// allocation per frame instead of grow-by-doubling).
     pub fn reserve(&mut self, additional: usize) -> &mut Self {
         self.buf.reserve(additional);
         self
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
     }
 
     pub fn u8(&mut self, v: u8) -> &mut Self {
@@ -110,8 +130,17 @@ impl<'a> Decoder<'a> {
     }
 
     pub fn f32s(&mut self) -> Result<Vec<f32>> {
-        let len = self.u64()? as usize;
-        ensure!(len < 1 << 32, "implausible f32 vector length");
+        let len = self.u64()?;
+        // Validate against the remaining buffer *before* the multiply and
+        // the allocation: a malformed frame must not trigger a multi-GiB
+        // reservation (the old `len < 1 << 32` check admitted a 16 GiB
+        // request) or a usize overflow on 32-bit hosts.
+        let remaining = (self.buf.len() - self.pos) as u64;
+        ensure!(
+            len.checked_mul(4).is_some_and(|bytes| bytes <= remaining),
+            "f32 vector length {len} exceeds the {remaining} remaining bytes"
+        );
+        let len = len as usize;
         let bytes = self.take(len * 4)?;
         let mut out = vec![0f32; len];
         unsafe {
@@ -175,5 +204,35 @@ mod tests {
     fn short_input_errors() {
         let mut d = Decoder::new(&[1, 2]);
         assert!(d.u64().is_err());
+    }
+
+    #[test]
+    fn with_capacity_does_not_change_encoding() {
+        let mut a = Encoder::new();
+        a.u32(7).str("x").f32s(&[1.0, 2.0]);
+        let mut b = Encoder::with_capacity(64);
+        b.u32(7).str("x").f32s(&[1.0, 2.0]);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn oversized_f32s_length_rejected_before_alloc() {
+        // A 16 GiB-style claim (admitted by the old `len < 1 << 32` check).
+        let mut e = Encoder::new();
+        e.u64((1u64 << 32) - 1);
+        assert!(Decoder::new(&e.finish()).f32s().is_err());
+        // A length whose `* 4` overflows u64.
+        let mut e = Encoder::new();
+        e.u64(u64::MAX / 2);
+        assert!(Decoder::new(&e.finish()).f32s().is_err());
+        // A modest length that still exceeds the remaining payload.
+        let mut e = Encoder::new();
+        e.u64(10).u32(0); // claims 10 floats, carries 4 bytes
+        assert!(Decoder::new(&e.finish()).f32s().is_err());
+        // The boundary case still decodes.
+        let mut e = Encoder::new();
+        e.f32s(&[1.5]);
+        assert_eq!(Decoder::new(&e.finish()).f32s().unwrap(), vec![1.5]);
     }
 }

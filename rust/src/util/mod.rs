@@ -9,6 +9,7 @@ pub mod logger;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod threads;
 
 pub use rng::Rng;
 

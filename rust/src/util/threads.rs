@@ -1,0 +1,40 @@
+//! Crate-wide compute-thread configuration.
+//!
+//! `default_threads()` resolves once per process: the `COCOI_THREADS`
+//! env var if set (and > 0), else `std::thread::available_parallelism()`.
+//!
+//! Thread count never affects results: every parallel kernel in this
+//! crate (`conv::gemm`, `coding::matrix`) partitions *output elements*
+//! over fixed-size blocks, so the floating-point summation order — and
+//! therefore the bitwise output — is identical at any thread count. The
+//! setting only trades wall-clock for cores.
+
+use std::sync::OnceLock;
+
+/// Default worker-thread count for compute kernels.
+pub fn default_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("COCOI_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn at_least_one_and_stable() {
+        let a = default_threads();
+        assert!(a >= 1);
+        assert_eq!(a, default_threads());
+    }
+}

@@ -39,7 +39,8 @@ fn run(
         ..Default::default()
     };
     let mut cluster =
-        LocalCluster::spawn(model_name, n, config, Arc::new(FallbackProvider), faults).unwrap();
+        LocalCluster::spawn(model_name, n, config, Arc::new(FallbackProvider::new()), faults)
+            .unwrap();
     let result = cluster.master.infer(input).unwrap();
     cluster.shutdown().unwrap();
     result

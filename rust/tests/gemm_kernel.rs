@@ -1,0 +1,153 @@
+//! Tiled-kernel suite: the multithreaded packed GEMM (`conv::gemm`)
+//! against the scalar ikj oracle across tall/skinny/odd-remainder
+//! shapes, bitwise determinism across thread counts, the prepacked
+//! weight path, and scratch-arena reuse.
+
+use cocoi::conv::gemm::{conv_padded_packed, conv_padded_tiled, gemm_tiled, PackedA, Scratch};
+use cocoi::conv::im2col;
+use cocoi::conv::{ConvSpec, Tensor};
+use cocoi::runtime::{ConvProvider, FallbackProvider};
+use cocoi::util::{prop, Rng};
+
+/// f64-accumulated reference — tighter than either f32 path, so both can
+/// be compared against it with a common tolerance.
+fn gemm_f64(a: &[f32], m: usize, kk: usize, b: &[f32], n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for l in 0..kk {
+                acc += a[i * kk + l] as f64 * b[l * n + j] as f64;
+            }
+            c[i * n + j] = acc as f32;
+        }
+    }
+    c
+}
+
+fn random_mat(rng: &mut Rng, len: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; len];
+    rng.fill_uniform_f32(&mut v, -1.0, 1.0);
+    v
+}
+
+#[test]
+fn tiled_matches_scalar_oracle_across_shapes() {
+    prop::check("tiled == oracle", 40, |rng| {
+        let m = 1 + rng.below(70); // crosses MR=4 remainders
+        let kk = 1 + rng.below(600); // crosses the KC=256 slab boundary
+        let n = 1 + rng.below(300); // crosses NR=8 remainders
+        let a = random_mat(rng, m * kk);
+        let b = random_mat(rng, kk * n);
+        let tiled = gemm_tiled(&a, m, kk, &b, n, 1 + rng.below(4));
+        let scalar = im2col::gemm(&a, m, kk, &b, n);
+        let oracle = gemm_f64(&a, m, kk, &b, n);
+        let tol = 1e-5 * (kk as f32).max(16.0);
+        for ((t, s), o) in tiled.iter().zip(&scalar).zip(&oracle) {
+            assert!((t - o).abs() < tol, "tiled {t} vs f64 {o} (m={m} kk={kk} n={n})");
+            assert!((s - o).abs() < tol, "scalar {s} vs f64 {o} (m={m} kk={kk} n={n})");
+        }
+    });
+}
+
+#[test]
+fn tall_and_skinny_extremes() {
+    let mut rng = Rng::new(0x7A11);
+    // (1×k)·(k×1), single-column, single-row, and panel-boundary shapes.
+    for (m, kk, n) in [
+        (1, 1000, 1),
+        (1000, 3, 2),
+        (2, 5, 1000),
+        (4, 256, 8),
+        (5, 257, 9),
+        (8, 512, 16),
+    ] {
+        let a = random_mat(&mut rng, m * kk);
+        let b = random_mat(&mut rng, kk * n);
+        let tiled = gemm_tiled(&a, m, kk, &b, n, 4);
+        let oracle = gemm_f64(&a, m, kk, &b, n);
+        let tol = 1e-5 * (kk as f32).max(16.0);
+        for (t, o) in tiled.iter().zip(&oracle) {
+            assert!((t - o).abs() < tol, "m={m} kk={kk} n={n}");
+        }
+    }
+}
+
+#[test]
+fn bitwise_identical_across_1_2_4_threads() {
+    let mut rng = Rng::new(0xB17);
+    // Shapes chosen to clear the parallelism FLOP gate with remainders
+    // on every axis; plus one tiny shape that stays sequential.
+    for (m, kk, n) in [(64, 576, 784), (33, 300, 523), (7, 9, 11)] {
+        let a = random_mat(&mut rng, m * kk);
+        let b = random_mat(&mut rng, kk * n);
+        let c1 = gemm_tiled(&a, m, kk, &b, n, 1);
+        let c2 = gemm_tiled(&a, m, kk, &b, n, 2);
+        let c4 = gemm_tiled(&a, m, kk, &b, n, 4);
+        assert_eq!(c1, c2, "1 vs 2 threads (m={m} kk={kk} n={n})");
+        assert_eq!(c1, c4, "1 vs 4 threads (m={m} kk={kk} n={n})");
+    }
+}
+
+#[test]
+fn conv_paths_agree_and_scratch_reuse_is_stable() {
+    let mut rng = Rng::new(0xC0);
+    let spec = ConvSpec::new(16, 24, 3, 1, 0);
+    let mut input = Tensor::zeros(16, 30, 28);
+    rng.fill_uniform_f32(&mut input.data, -1.0, 1.0);
+    let w = random_mat(&mut rng, spec.weight_len());
+
+    let provider = FallbackProvider::with_threads(2);
+    let plain = provider.conv(&spec, &input, &w).unwrap();
+
+    let mut scratch = Scratch::new();
+    let tiled = conv_padded_tiled(&spec, &input, &w, 2, &mut scratch).unwrap();
+    let packed = provider.prepack(&spec, &w).unwrap();
+    let prepacked = conv_padded_packed(&spec, &input, &packed, 2, &mut scratch).unwrap();
+    assert_eq!(plain.data, tiled.data);
+    assert_eq!(plain.data, prepacked.data);
+
+    // Dirty the scratch with a different geometry, then repeat: reuse
+    // must not perturb a single bit.
+    let other = ConvSpec::new(3, 5, 5, 2, 0);
+    let mut oin = Tensor::zeros(3, 40, 33);
+    rng.fill_uniform_f32(&mut oin.data, -1.0, 1.0);
+    let ow = random_mat(&mut rng, other.weight_len());
+    conv_padded_tiled(&other, &oin, &ow, 2, &mut scratch).unwrap();
+    let again = conv_padded_packed(&spec, &input, &packed, 2, &mut scratch).unwrap();
+    assert_eq!(plain.data, again.data);
+
+    // And the whole thing stays within fp tolerance of the scalar oracle.
+    let oracle = spec.conv_padded(&input, &w).unwrap();
+    assert!(plain.max_abs_diff(&oracle) < 1e-3);
+}
+
+#[test]
+fn one_by_one_conv_uses_identity_im2col() {
+    let mut rng = Rng::new(0x11);
+    let spec = ConvSpec::new(8, 12, 1, 1, 0);
+    let mut input = Tensor::zeros(8, 17, 13);
+    rng.fill_uniform_f32(&mut input.data, -1.0, 1.0);
+    // The 1×1 stride-1 patch matrix is exactly the flattened input.
+    assert_eq!(im2col::im2col(&input, 1, 1), input.data);
+    let w = random_mat(&mut rng, spec.weight_len());
+    let mut scratch = Scratch::new();
+    let fast = conv_padded_tiled(&spec, &input, &w, 2, &mut scratch).unwrap();
+    let oracle = spec.conv_padded(&input, &w).unwrap();
+    assert!(fast.max_abs_diff(&oracle) < 1e-3);
+}
+
+#[test]
+fn packed_weights_shape_mismatch_rejected() {
+    let mut rng = Rng::new(77);
+    let spec = ConvSpec::new(4, 6, 3, 1, 0);
+    let w = random_mat(&mut rng, spec.weight_len());
+    let pa = PackedA::pack(&w, spec.c_out, spec.c_in * 9);
+    assert_eq!(pa.m(), 6);
+    assert_eq!(pa.k(), 36);
+    let mut input = Tensor::zeros(4, 8, 8);
+    rng.fill_uniform_f32(&mut input.data, -1.0, 1.0);
+    let other = ConvSpec::new(4, 7, 3, 1, 0);
+    let mut scratch = Scratch::new();
+    assert!(conv_padded_packed(&other, &input, &pa, 1, &mut scratch).is_err());
+}

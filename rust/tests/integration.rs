@@ -49,7 +49,7 @@ fn pjrt_fused_conv_matches_fallback() {
         rng.fill_uniform_f32(&mut weights, -0.5, 0.5);
 
         let via_pjrt = provider.conv(&spec, &input, &weights).unwrap();
-        let via_rust = FallbackProvider.conv(&spec, &input, &weights).unwrap();
+        let via_rust = FallbackProvider::new().conv(&spec, &input, &weights).unwrap();
         assert_eq!(via_pjrt.shape(), via_rust.shape());
         let err = via_pjrt.max_abs_diff(&via_rust);
         assert!(err < 1e-3, "artifact {key:?} differs from fallback by {err}");
@@ -77,7 +77,7 @@ fn pjrt_tile_provider_matches_fallback() {
     rng.fill_uniform_f32(&mut weights, -0.5, 0.5);
 
     let got = provider.conv(&spec, &input, &weights).unwrap();
-    let want = FallbackProvider.conv(&spec, &input, &weights).unwrap();
+    let want = FallbackProvider::new().conv(&spec, &input, &weights).unwrap();
     assert!(got.max_abs_diff(&want) < 1e-3);
     assert_eq!(
         provider.stats.tiled.load(std::sync::atomic::Ordering::Relaxed),
@@ -137,7 +137,7 @@ fn tcp_worker_end_to_end() {
             Box::new(rx),
             WorkerConfig {
                 id: 0,
-                provider: Arc::new(FallbackProvider),
+                provider: Arc::new(FallbackProvider::new()),
                 faults: WorkerFaults::none(),
                 rng_seed: 1,
             },
@@ -156,7 +156,7 @@ fn tcp_worker_end_to_end() {
         "tinyvgg",
         config,
         vec![(Box::new(tx), Box::new(rx))],
-        Arc::new(FallbackProvider),
+        Arc::new(FallbackProvider::new()),
     )
     .unwrap();
 
@@ -198,7 +198,7 @@ fn distributed_matches_local_across_configs() {
             "tinyresnet",
             n,
             config,
-            Arc::new(FallbackProvider),
+            Arc::new(FallbackProvider::new()),
             (0..n).map(|_| WorkerFaults::none()).collect(),
         )
         .unwrap();

@@ -52,7 +52,7 @@ fn run_batch(
         ..Default::default()
     };
     let mut cluster =
-        LocalCluster::spawn(model_name, n, config, Arc::new(FallbackProvider), faults)
+        LocalCluster::spawn(model_name, n, config, Arc::new(FallbackProvider::new()), faults)
             .unwrap();
     let out = cluster.master.infer_batch(inputs).unwrap();
     cluster.shutdown().unwrap();
@@ -264,6 +264,66 @@ fn pipelined_straggler_cancelled_not_corrupting() {
     // straggler reports, i.e. some subtask gets cancelled.
     let cancelled: usize = got.iter().map(|(_, m)| m.cancelled()).sum();
     assert!(cancelled > 0, "expected straggler cancellations");
+}
+
+/// Steady-state scratch reuse + prepacked weights on the workers must
+/// not perturb outputs: repeating the same request through one
+/// long-lived cluster gives *bitwise identical* uncoded outputs every
+/// time (the later runs hit fully warmed scratch arenas), and MDS stays
+/// within decode tolerance of the local reference on every repeat
+/// (which k-subset wins each race is timing-dependent).
+#[test]
+fn scratch_reuse_keeps_repeat_outputs_stable() {
+    let inputs = inputs_for("tinyvgg", 1, 909);
+    let want = local_refs("tinyvgg", &inputs);
+
+    // Uncoded, n == k: decode is an exact passthrough, so any output
+    // drift would have to come from worker-side buffer reuse.
+    let config = MasterConfig {
+        scheme: SchemeKind::Uncoded,
+        policy: SplitPolicy::Fixed(3),
+        ..Default::default()
+    };
+    let mut cluster = LocalCluster::spawn(
+        "tinyvgg",
+        3,
+        config,
+        Arc::new(FallbackProvider::new()),
+        (0..3).map(|_| WorkerFaults::none()).collect(),
+    )
+    .unwrap();
+    let (first, _) = cluster.master.infer(&inputs[0]).unwrap();
+    for round in 0..2 {
+        let (again, _) = cluster.master.infer(&inputs[0]).unwrap();
+        assert_eq!(
+            first.data, again.data,
+            "scratch reuse changed worker outputs (repeat {round})"
+        );
+    }
+    cluster.shutdown().unwrap();
+    assert!(first.max_abs_diff(&want[0]) < 2e-2);
+
+    // MDS through its own long-lived cluster: every repeat decodes to
+    // the same values within tolerance.
+    let config = MasterConfig {
+        scheme: SchemeKind::Mds,
+        policy: SplitPolicy::Fixed(3),
+        ..Default::default()
+    };
+    let mut cluster = LocalCluster::spawn(
+        "tinyvgg",
+        4,
+        config,
+        Arc::new(FallbackProvider::new()),
+        (0..4).map(|_| WorkerFaults::none()).collect(),
+    )
+    .unwrap();
+    for round in 0..3 {
+        let (got, _) = cluster.master.infer(&inputs[0]).unwrap();
+        let err = got.max_abs_diff(&want[0]);
+        assert!(err < 2e-2, "MDS repeat {round}: err {err}");
+    }
+    cluster.shutdown().unwrap();
 }
 
 /// Barrier-mode infer_batch == sequential infer (sanity of the baseline
