@@ -56,22 +56,25 @@ struct ActiveRound {
     outstanding: Vec<usize>,
     /// task id -> worker currently holding it (for cancel accounting).
     assigned: Vec<usize>,
+    /// The round's dispatch set (re-dispatch stays inside it).
+    targets: Vec<usize>,
     t_dispatch: Instant,
     /// Master-local seconds already spent (remainder conv).
     t_local: f64,
 }
 
-/// Least-loaded worker, lowest index on ties; avoids `avoid` when there
-/// is a choice (re-dispatch should not go back to the failing worker).
-fn pick_worker(load: &[usize], avoid: Option<usize>) -> usize {
+/// Least-loaded worker among `candidates`, lowest index on ties; avoids
+/// `avoid` when there is a choice (re-dispatch should not go back to the
+/// failing worker).
+fn pick_worker(load: &[usize], candidates: &[usize], avoid: Option<usize>) -> usize {
     let mut best = usize::MAX;
-    let mut best_w = 0;
-    for (w, &l) in load.iter().enumerate() {
-        if Some(w) == avoid && load.len() > 1 {
+    let mut best_w = candidates[0];
+    for &w in candidates {
+        if Some(w) == avoid && candidates.len() > 1 {
             continue;
         }
-        if l < best {
-            best = l;
+        if load[w] < best {
+            best = load[w];
             best_w = w;
         }
     }
@@ -124,7 +127,7 @@ impl Master {
                     );
                 }
             }
-            let (wid, msg) = self
+            let (wid, msg, arrival) = self
                 .from_workers
                 .recv_timeout(self.config.recv_timeout)
                 .context("pipelined engine: timed out waiting for workers")?;
@@ -140,14 +143,25 @@ impl Master {
             }
             match msg {
                 FromWorker::Output {
-                    round, task_id, data, ..
+                    round,
+                    task_id,
+                    exec_secs,
+                    data,
+                    ..
                 } => {
                     let task_id = task_id as usize;
+                    // Telemetry first, even when the round already
+                    // decoded (a cancelled-but-executed straggler's
+                    // stale Output is the estimator's key sample).
+                    let wp = self.record_output(wid, round, task_id, arrival, exec_secs);
                     let ready = {
                         let Some(ar) = rounds.get_mut(&round) else {
                             continue; // stale: round decoded + cancelled earlier
                         };
                         ar.outstanding.retain(|&t| t != task_id);
+                        if let Some(wp) = wp {
+                            ar.pr.lm.per_worker.push(wp);
+                        }
                         if ar.decoder.add(task_id, data) {
                             true
                         } else {
@@ -158,6 +172,9 @@ impl Master {
                     if ready {
                         let ar = rounds.remove(&round).unwrap();
                         self.finish_round(ar, &nodes, &mut reqs, &mut rounds, &mut worker_load)?;
+                        // Between rounds is the engine's "between
+                        // requests": swap the plan here if one is due.
+                        self.maybe_replan();
                     }
                 }
                 FromWorker::Skipped { round, task_id } => {
@@ -170,6 +187,9 @@ impl Master {
                 }
                 FromWorker::Failed { round, task_id } => {
                     let task_id = task_id as usize;
+                    // Symmetric with record_output: only rounds this
+                    // master still tracks count toward failure streaks.
+                    self.record_failed(wid, round);
                     let Some(ar) = rounds.get_mut(&round) else {
                         continue;
                     };
@@ -186,7 +206,10 @@ impl Master {
                                 ar.pr.lm.node_id
                             );
                         }
-                        let target = pick_worker(&worker_load, Some(wid));
+                        let target = pick_worker(&worker_load, &ar.targets, Some(wid));
+                        if let Some(rt) = self.round_log.get_mut(&round) {
+                            rt.dispatched_at[task_id] = Instant::now();
+                        }
                         self.worker_tx[target].send(&ar.pr.frames[task_id])?;
                         worker_load[target] += 1;
                         ar.assigned[task_id] = target;
@@ -248,27 +271,42 @@ impl Master {
                         .map(|c| (c.distributed, c.k))
                         .unwrap_or((false, 1));
                     if dist.0 {
+                        // Dispatch set for this round: the registry's
+                        // active workers under the adaptive policy
+                        // (quarantined stragglers sit out except for due
+                        // probes), the full pool otherwise.
+                        let targets = self.dispatch_targets();
+                        let k_eff = self.effective_k(dist.1, targets.len());
                         let pr = self.prepare_round(
                             req as u32,
                             &node.id,
                             &spec,
-                            dist.1,
+                            k_eff,
                             &fetched[0],
+                            targets.len(),
                         )?;
                         let t_dispatch = Instant::now();
                         // Spread the round's shards over *distinct* workers
                         // (the MDS resilience model assumes one shard per
                         // device), least-loaded first; wrap only when a
                         // scheme issues more subtasks than workers (LT).
-                        let mut order: Vec<usize> = (0..worker_load.len()).collect();
+                        let mut order: Vec<usize> = targets.clone();
                         order.sort_by_key(|&w| (worker_load[w], w));
                         let mut assigned = vec![0usize; pr.frames.len()];
+                        let mut dispatched_at = Vec::with_capacity(pr.frames.len());
                         for (t, frame) in pr.frames.iter().enumerate() {
                             let w = order[t % order.len()];
+                            dispatched_at.push(Instant::now());
                             self.worker_tx[w].send(frame)?;
                             worker_load[w] += 1;
                             assigned[t] = w;
                         }
+                        self.log_round(
+                            pr.round,
+                            pr.flops_per_task,
+                            pr.bytes_per_task,
+                            dispatched_at,
+                        );
                         // Master-local remainder piece while workers run.
                         let t0 = Instant::now();
                         let remainder = match &pr.remainder_input {
@@ -291,6 +329,7 @@ impl Master {
                                 received: Vec::new(),
                                 outstanding,
                                 assigned,
+                                targets,
                                 t_dispatch,
                                 t_local,
                             },
@@ -339,6 +378,7 @@ impl Master {
             ar.outstanding.clear();
         }
         ar.pr.lm.t_workers = ar.t_dispatch.elapsed().as_secs_f64() - ar.t_local;
+        self.retire_round(ar.pr.round);
 
         let t0 = Instant::now();
         let decoded = ar.decoder.decode()?;

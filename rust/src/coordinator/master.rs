@@ -17,11 +17,13 @@ use crate::model::graph::execute_simple_op;
 use crate::model::{zoo, ModelPlan, ModelSpec, Node, Op, WeightStore};
 use crate::planner::SplitPolicy;
 use crate::runtime::ConvProvider;
+use crate::telemetry::{CapacityRegistry, ReplanConfig, Replanner, TelemetryConfig};
 use crate::transport::LinkPair;
+use crate::util::json::Json;
 use crate::util::Rng;
 
 use super::messages::{FromWorker, ToWorker, WorkOrder};
-use super::metrics::{InferenceMetrics, LayerMetrics};
+use super::metrics::{InferenceMetrics, LayerMetrics, WorkerPhase};
 
 /// Redundancy scheme selector (the §V method column).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -95,6 +97,16 @@ pub struct MasterConfig {
     /// Execution engine (see [`ExecMode`]); benchmarks toggle this to
     /// compare the pipeline against the round barrier.
     pub mode: ExecMode,
+    /// Close the telemetry loop: dispatch only to the registry's active
+    /// (non-quarantined) workers, probe quarantined ones back in, and
+    /// let the replanner swap the per-layer k between requests. Timing
+    /// samples are collected either way; `adaptive` only controls
+    /// whether they steer dispatch + planning.
+    pub adaptive: bool,
+    /// Telemetry collection/quarantine tuning.
+    pub telemetry: TelemetryConfig,
+    /// Replan cadence + hysteresis.
+    pub replan: ReplanConfig,
 }
 
 impl Default for MasterConfig {
@@ -107,9 +119,30 @@ impl Default for MasterConfig {
             seed: 7,
             recv_timeout: Duration::from_secs(120),
             mode: ExecMode::RoundBarrier,
+            adaptive: false,
+            telemetry: TelemetryConfig::default(),
+            replan: ReplanConfig::default(),
         }
     }
 }
+
+/// Dispatch bookkeeping for one coded round, kept (bounded) *after* the
+/// round decodes so late straggler replies — the samples that matter
+/// most for capacity estimation — still produce telemetry instead of
+/// being dropped as stale.
+pub(super) struct RoundTelemetry {
+    pub(super) flops_per_task: f64,
+    pub(super) bytes_per_task: f64,
+    /// task id -> last dispatch instant.
+    pub(super) dispatched_at: Vec<Instant>,
+    /// Decoded/finished; only done rounds are eligible for eviction
+    /// (the pipelined engine can hold more than `ROUND_LOG_CAP` rounds
+    /// in flight on a large batch).
+    pub(super) done: bool,
+}
+
+/// How many recently-dispatched rounds keep telemetry bookkeeping.
+const ROUND_LOG_CAP: usize = 64;
 
 /// The master device.
 pub struct Master {
@@ -119,10 +152,19 @@ pub struct Master {
     pub(super) config: MasterConfig,
     pub(super) provider: std::sync::Arc<dyn ConvProvider>,
     pub(super) worker_tx: Vec<Box<dyn crate::transport::FrameTx>>,
-    pub(super) from_workers: mpsc::Receiver<(usize, FromWorker)>,
+    /// Replies arrive tagged with the reader-thread arrival instant, so
+    /// transmission telemetry measures the wire, not however long the
+    /// master took to get back to the channel.
+    pub(super) from_workers: mpsc::Receiver<(usize, FromWorker, Instant)>,
     _readers: Vec<std::thread::JoinHandle<()>>,
     pub(super) round: u64,
     pub(super) rng: Rng,
+    /// Per-worker capacity telemetry (always collected; steers dispatch
+    /// and replanning only when `config.adaptive`).
+    pub(super) registry: CapacityRegistry,
+    pub(super) replanner: Replanner,
+    /// Recent rounds' dispatch bookkeeping (see [`RoundTelemetry`]).
+    pub(super) round_log: std::collections::BTreeMap<u64, RoundTelemetry>,
 }
 
 /// A distributed layer round after split + encode, frames ready to send.
@@ -142,6 +184,10 @@ pub(super) struct PreparedRound {
     pub(super) h_o: usize,
     pub(super) w_o_p: usize,
     pub(super) lm: LayerMetrics,
+    /// Telemetry normalization scales of one subtask of this round:
+    /// conv FLOPs and wire bytes (input partition + output partition).
+    pub(super) flops_per_task: f64,
+    pub(super) bytes_per_task: f64,
 }
 
 /// Decode results + remainder -> the layer's output tensor.
@@ -201,7 +247,11 @@ impl Master {
                             match rx.recv() {
                                 Ok(Some(frame)) => match FromWorker::decode(&frame) {
                                     Ok(msg) => {
-                                        if agg.send((i, msg)).is_err() {
+                                        // Arrival stamp here, not at
+                                        // processing time: the master may
+                                        // be busy for a while before it
+                                        // drains the channel.
+                                        if agg.send((i, msg, Instant::now())).is_err() {
                                             break;
                                         }
                                     }
@@ -221,6 +271,9 @@ impl Master {
             );
         }
 
+        let n_workers = worker_tx.len();
+        let registry = CapacityRegistry::new(n_workers, config.telemetry);
+        let replanner = Replanner::new(config.replan);
         let mut master = Master {
             model,
             weights,
@@ -232,6 +285,9 @@ impl Master {
             _readers: readers,
             round: 0,
             rng,
+            registry,
+            replanner,
+            round_log: std::collections::BTreeMap::new(),
         };
         master.setup_workers(model_name)?;
         Ok(master)
@@ -243,6 +299,156 @@ impl Master {
 
     pub fn plan(&self) -> &ModelPlan {
         &self.plan
+    }
+
+    /// The live capacity registry (telemetry dumps, tests).
+    pub fn registry(&self) -> &CapacityRegistry {
+        &self.registry
+    }
+
+    /// Telemetry dump: fitted per-worker capacities, quarantine log,
+    /// plan-swap count, and the per-layer k currently in force.
+    pub fn telemetry_json(&self) -> Json {
+        let plan: Vec<Json> = self
+            .plan
+            .convs
+            .iter()
+            .filter(|c| c.distributed)
+            .map(|c| {
+                Json::obj(vec![
+                    ("layer", Json::Str(c.node_id.clone())),
+                    ("k", Json::Num(c.k as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("adaptive", Json::Bool(self.config.adaptive)),
+            ("plan_switches", Json::Num(self.replanner.switches as f64)),
+            ("plan", Json::Arr(plan)),
+            ("registry", self.registry.to_json()),
+        ])
+    }
+
+    /// The dispatch set for the upcoming round: the registry's active
+    /// workers under the adaptive policy, the full pool otherwise.
+    pub(super) fn dispatch_targets(&mut self) -> Vec<usize> {
+        if self.config.adaptive {
+            self.registry.active_workers(self.round + 1)
+        } else {
+            (0..self.n_workers()).collect()
+        }
+    }
+
+    /// Run a replan attempt if one is due (no-op unless adaptive).
+    pub(super) fn maybe_replan(&mut self) {
+        if !self.config.adaptive || !self.replanner.due(self.round) {
+            return;
+        }
+        self.replanner.replan(
+            &mut self.plan,
+            &self.registry,
+            &self.config.profile,
+            self.round,
+        );
+    }
+
+    /// Register a freshly dispatched round's telemetry bookkeeping; the
+    /// bounded log keeps it past decode so *late* straggler replies are
+    /// still ingested instead of dropped as stale.
+    pub(super) fn log_round(
+        &mut self,
+        round: u64,
+        flops_per_task: f64,
+        bytes_per_task: f64,
+        dispatched_at: Vec<Instant>,
+    ) {
+        self.round_log.insert(
+            round,
+            RoundTelemetry {
+                flops_per_task,
+                bytes_per_task,
+                dispatched_at,
+                done: false,
+            },
+        );
+        // Evict oldest *done* rounds only: an in-flight round's entry is
+        // load-bearing (re-dispatch timestamps, reply telemetry), so the
+        // log may transiently exceed the cap on huge pipelined batches.
+        while self.round_log.len() > ROUND_LOG_CAP {
+            let oldest_done = self
+                .round_log
+                .iter()
+                .find(|(_, rt)| rt.done)
+                .map(|(r, _)| *r);
+            match oldest_done {
+                Some(r) => {
+                    self.round_log.remove(&r);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Mark a round decoded/finished: its log entry stays for late-reply
+    /// telemetry but becomes eligible for eviction.
+    pub(super) fn retire_round(&mut self, round: u64) {
+        if let Some(rt) = self.round_log.get_mut(&round) {
+            rt.done = true;
+        }
+    }
+
+    /// The `k` actually used for a round dispatched to `n_targets`
+    /// workers: under the adaptive policy a quarantine-shrunken pool
+    /// keeps one parity shard (clamping k to n would yield MDS(n', n')
+    /// with zero redundancy exactly when workers misbehave). The sim
+    /// (`sim::adaptive`) mirrors this policy.
+    pub(super) fn effective_k(&self, k_planned: usize, n_targets: usize) -> usize {
+        if self.config.adaptive && n_targets > 1 {
+            k_planned.min(n_targets - 1)
+        } else {
+            k_planned
+        }
+    }
+
+    /// Fold one successful subtask reply (current *or* stale) into the
+    /// registry, using the round log's dispatch instant and the reader
+    /// thread's arrival instant. Returns the per-task breakdown for the
+    /// layer metrics when the round is known.
+    pub(super) fn record_output(
+        &mut self,
+        worker: usize,
+        round: u64,
+        task_id: usize,
+        arrival: Instant,
+        exec_secs: f64,
+    ) -> Option<WorkerPhase> {
+        let rt = self.round_log.get(&round)?;
+        let dispatched = *rt.dispatched_at.get(task_id)?;
+        let elapsed = arrival.saturating_duration_since(dispatched).as_secs_f64();
+        let transmission = (elapsed - exec_secs).max(0.0);
+        self.registry.record_success(
+            worker,
+            rt.flops_per_task,
+            rt.bytes_per_task,
+            exec_secs,
+            transmission,
+            round,
+        );
+        Some(WorkerPhase {
+            worker,
+            task_id,
+            transmission,
+            execution: exec_secs,
+        })
+    }
+
+    /// Fold one failure reply (current or stale) into the registry —
+    /// only for rounds this master actually dispatched and still tracks,
+    /// keeping success and failure accounting symmetric.
+    pub(super) fn record_failed(&mut self, worker: usize, round: u64) {
+        if self.round_log.contains_key(&round) {
+            self.registry.record_failure(worker, round);
+        }
     }
 
     fn setup_workers(&mut self, model_name: &str) -> Result<()> {
@@ -261,8 +467,8 @@ impl Master {
                 .recv_timeout(self.config.recv_timeout)
                 .context("waiting for worker Ready")?
             {
-                (_, FromWorker::Ready) => ready += 1,
-                (i, other) => bail!("worker {i}: unexpected {other:?} during setup"),
+                (_, FromWorker::Ready, _) => ready += 1,
+                (i, other, _) => bail!("worker {i}: unexpected {other:?} during setup"),
             }
         }
         Ok(())
@@ -328,6 +534,8 @@ impl Master {
             values.insert(node.id.clone(), out);
         }
         metrics.total_seconds = t_start.elapsed().as_secs_f64();
+        // Between requests: fold the round's telemetry into the plan.
+        self.maybe_replan();
         let last = nodes.last().unwrap();
         Ok((values.remove(&last.id).unwrap(), metrics))
     }
@@ -370,7 +578,10 @@ impl Master {
     }
 
     /// Split + encode one distributed layer into a [`PreparedRound`].
-    /// `request` tags the dispatch frames (0 on the round-barrier path).
+    /// `request` tags the dispatch frames (0 on the round-barrier path);
+    /// `n_tasks` is the number of workers that will receive shards (the
+    /// full pool, or the registry's active set under the adaptive
+    /// policy) — the redundancy scheme is sized to it.
     pub(super) fn prepare_round(
         &mut self,
         request: u32,
@@ -378,10 +589,11 @@ impl Master {
         spec: &crate::conv::ConvSpec,
         k_planned: usize,
         input: &Tensor,
+        n_tasks: usize,
     ) -> Result<PreparedRound> {
         self.round += 1;
         let round = self.round;
-        let n = self.n_workers();
+        let n = n_tasks.max(1);
         let mut lm = LayerMetrics {
             node_id: node_id.to_string(),
             distributed: true,
@@ -439,6 +651,16 @@ impl Master {
             _ => None,
         };
         let params = self.weights.get(node_id)?.clone();
+        let h_o = spec.out_dim_padded(padded.h);
+        // Telemetry normalization: one subtask convolves a w_i_p-wide
+        // piece into a w_o_p-wide output (eqs. 9–11 at the concrete
+        // integer piece widths).
+        let flops_per_task = 2.0
+            * (spec.c_out * h_o) as f64
+            * plan.w_o_p as f64
+            * (spec.c_in * spec.k_w * spec.k_w) as f64;
+        let bytes_per_task = 4.0 * (spec.c_in * h_i * plan.w_i_p) as f64
+            + 4.0 * (spec.c_out * h_o * plan.w_o_p) as f64;
         Ok(PreparedRound {
             round,
             scheme,
@@ -446,9 +668,11 @@ impl Master {
             remainder_input,
             params,
             c_out: spec.c_out,
-            h_o: spec.out_dim_padded(padded.h),
+            h_o,
             w_o_p: plan.w_o_p,
             lm,
+            flops_per_task,
+            bytes_per_task,
         })
     }
 
@@ -462,16 +686,23 @@ impl Master {
         k_planned: usize,
         input: &Tensor,
     ) -> Result<(Tensor, LayerMetrics)> {
-        let n = self.n_workers();
-        let mut pr = self.prepare_round(0, node_id, spec, k_planned, input)?;
+        // Dispatch set: the full pool, or — adaptive — the registry's
+        // active workers (quarantined ones appear only when their probe
+        // is due).
+        let targets = self.dispatch_targets();
+        let k_eff = self.effective_k(k_planned, targets.len());
+        let mut pr = self.prepare_round(0, node_id, spec, k_eff, input, targets.len())?;
         let round = pr.round;
         let mut lm = std::mem::take(&mut pr.lm);
 
         // -- execution phase (dispatch + master-local remainder) -------
         let t0 = Instant::now();
+        let mut dispatched_at: Vec<Instant> = Vec::with_capacity(pr.frames.len());
         for (i, frame) in pr.frames.iter().enumerate() {
-            self.worker_tx[i % n].send(frame)?;
+            dispatched_at.push(Instant::now());
+            self.worker_tx[targets[i % targets.len()]].send(frame)?;
         }
+        self.log_round(round, pr.flops_per_task, pr.bytes_per_task, dispatched_at);
 
         // Master-local remainder piece (footnote 2) while workers run.
         let t_local0 = Instant::now();
@@ -495,7 +726,7 @@ impl Master {
                     pr.scheme.min_completions()
                 );
             }
-            let (wid, msg) = self
+            let (wid, msg, arrival) = self
                 .from_workers
                 .recv_timeout(self.config.recv_timeout)
                 .with_context(|| format!("layer {node_id}: timed out waiting for workers"))?;
@@ -503,15 +734,23 @@ impl Master {
                 FromWorker::Output {
                     round: r,
                     task_id,
+                    exec_secs,
                     data,
                     ..
                 } => {
+                    let task_id = task_id as usize;
+                    // Telemetry first, even for stale rounds: a late
+                    // straggler reply is exactly the sample the capacity
+                    // estimator must not lose.
+                    let wp = self.record_output(wid, r, task_id, arrival, exec_secs);
                     if r != round {
                         lm.stale_results += 1;
                         continue;
                     }
-                    let task_id = task_id as usize;
                     outstanding.retain(|&t| t != task_id);
+                    if let Some(wp) = wp {
+                        lm.per_worker.push(wp);
+                    }
                     if decoder.add(task_id, data) {
                         received.push(task_id);
                         break;
@@ -519,6 +758,7 @@ impl Master {
                     received.push(task_id);
                 }
                 FromWorker::Failed { round: r, task_id } => {
+                    self.record_failed(wid, r);
                     if r != round {
                         lm.stale_results += 1;
                         continue;
@@ -530,13 +770,17 @@ impl Master {
                         if lm.redispatches > 4 * pr.frames.len() {
                             bail!("layer {node_id}: re-dispatch storm; giving up");
                         }
-                        // Round-robin to a different worker than the one
-                        // that just failed.
-                        let mut target = next_redispatch_worker % n;
-                        if target == wid && n > 1 {
-                            target = (target + 1) % n;
+                        // Round-robin (over the round's dispatch set) to
+                        // a different worker than the one that failed.
+                        let mut ti = next_redispatch_worker % targets.len();
+                        if targets[ti] == wid && targets.len() > 1 {
+                            ti = (ti + 1) % targets.len();
                         }
-                        next_redispatch_worker = target + 1;
+                        next_redispatch_worker = ti + 1;
+                        let target = targets[ti];
+                        if let Some(rt) = self.round_log.get_mut(&round) {
+                            rt.dispatched_at[task_id] = Instant::now();
+                        }
                         self.worker_tx[target].send(&pr.frames[task_id])?;
                         outstanding.push(task_id);
                         lm.redispatches += 1;
@@ -567,6 +811,7 @@ impl Master {
         let out = assemble_output(&pr, decoded, remainder, relu)?;
         t_local += t0.elapsed().as_secs_f64();
         lm.t_local = t_local;
+        self.retire_round(round);
         Ok((out, lm))
     }
 

@@ -76,13 +76,18 @@ impl WorkOrder {
 pub enum FromWorker {
     /// Setup done.
     Ready,
-    /// Subtask output (flattened CHW).
+    /// Subtask output (flattened CHW). `exec_secs` is the worker-measured
+    /// execution wall time (conv + any chronic-straggler stretch, but not
+    /// transmission): the master subtracts it from its dispatch→reply
+    /// measurement to decompose the sample into transmission vs execution
+    /// for the telemetry registry.
     Output {
         round: u64,
         task_id: u32,
         c: u32,
         h: u32,
         w: u32,
+        exec_secs: f64,
         data: Vec<f32>,
     },
     /// The worker failed this subtask and signals the master (paper §IV-C
@@ -175,9 +180,10 @@ impl ToWorker {
 impl FromWorker {
     pub fn encode(&self) -> Vec<u8> {
         // Output frames (the reply hot path) get an exact-capacity
-        // buffer: tag(1) + round(8) + task(4) + c/h/w(12) + len(8) + data.
+        // buffer: tag(1) + round(8) + task(4) + c/h/w(12) + exec(8) +
+        // len(8) + data.
         let mut e = match self {
-            FromWorker::Output { data, .. } => Encoder::with_capacity(33 + 4 * data.len()),
+            FromWorker::Output { data, .. } => Encoder::with_capacity(41 + 4 * data.len()),
             _ => Encoder::new(),
         };
         match self {
@@ -190,6 +196,7 @@ impl FromWorker {
                 c,
                 h,
                 w,
+                exec_secs,
                 data,
             } => {
                 e.u8(TAG_OUTPUT)
@@ -198,6 +205,7 @@ impl FromWorker {
                     .u32(*c)
                     .u32(*h)
                     .u32(*w)
+                    .f64(*exec_secs)
                     .f32s(data);
             }
             FromWorker::Failed { round, task_id } => {
@@ -220,6 +228,7 @@ impl FromWorker {
                 c: d.u32()?,
                 h: d.u32()?,
                 w: d.u32()?,
+                exec_secs: d.f64()?,
                 data: d.f32s()?,
             },
             TAG_FAILED => FromWorker::Failed {
@@ -277,6 +286,7 @@ mod tests {
                     c: 2,
                     h: 3,
                     w: 4,
+                    exec_secs: 0.125,
                     data: vec![1.0; 24],
                 },
                 FromWorker::Failed { round: 9, task_id: 7 },
@@ -317,8 +327,9 @@ mod tests {
             c: 8,
             h: 4,
             w: 5,
+            exec_secs: 1.5,
             data: vec![1.0; 160],
         };
-        assert_eq!(reply.encode().len(), 33 + 4 * 160);
+        assert_eq!(reply.encode().len(), 41 + 4 * 160);
     }
 }

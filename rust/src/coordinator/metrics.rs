@@ -2,6 +2,32 @@
 
 use crate::util::json::Json;
 
+/// Per-subtask timing decomposition: which worker executed it, how long
+/// the device computed (worker-measured), and how long the rest of the
+/// dispatch→reply path took (transmission + queueing, master-measured).
+/// This is the *same* sample the telemetry registry ingests, so the
+/// metrics JSON and the capacity estimator report one source of truth.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WorkerPhase {
+    pub worker: usize,
+    pub task_id: usize,
+    /// Dispatch→reply minus execution (seconds).
+    pub transmission: f64,
+    /// Worker-measured execution (seconds).
+    pub execution: f64,
+}
+
+impl WorkerPhase {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("worker", Json::Num(self.worker as f64)),
+            ("task_id", Json::Num(self.task_id as f64)),
+            ("transmission", Json::Num(self.transmission)),
+            ("execution", Json::Num(self.execution)),
+        ])
+    }
+}
+
 /// Wall-clock breakdown of one distributed layer execution (Fig. 4's
 /// stacked bars: master enc/dec vs worker transmission+execution).
 #[derive(Clone, Debug, Default)]
@@ -25,6 +51,9 @@ pub struct LayerMetrics {
     /// Straggler subtasks cancelled after the round decoded (pipelined
     /// engine only; the round-barrier path lets them finish as stale).
     pub cancelled: usize,
+    /// Per-subtask worker breakdown (one entry per useful reply), in
+    /// arrival order.
+    pub per_worker: Vec<WorkerPhase>,
 }
 
 impl LayerMetrics {
@@ -55,6 +84,10 @@ impl LayerMetrics {
             ("failures", Json::Num(self.failures as f64)),
             ("redispatches", Json::Num(self.redispatches as f64)),
             ("cancelled", Json::Num(self.cancelled as f64)),
+            (
+                "per_worker",
+                Json::Arr(self.per_worker.iter().map(|w| w.to_json()).collect()),
+            ),
         ])
     }
 }
@@ -149,5 +182,23 @@ mod tests {
         assert!((m.coding_seconds() - 0.05).abs() < 1e-12);
         assert!(m.table().contains("conv2"));
         assert!(m.to_json().to_string_compact().contains("t_encode"));
+    }
+
+    #[test]
+    fn per_worker_breakdown_in_json() {
+        let l = LayerMetrics {
+            node_id: "conv3".into(),
+            per_worker: vec![
+                WorkerPhase { worker: 1, task_id: 0, transmission: 0.02, execution: 0.4 },
+                WorkerPhase { worker: 0, task_id: 1, transmission: 0.03, execution: 0.5 },
+            ],
+            ..Default::default()
+        };
+        let j = l.to_json();
+        let pw = j.get("per_worker").as_arr().unwrap();
+        assert_eq!(pw.len(), 2);
+        assert_eq!(pw[0].req_f64("worker").unwrap(), 1.0);
+        assert!((pw[1].req_f64("execution").unwrap() - 0.5).abs() < 1e-12);
+        assert!((pw[0].req_f64("transmission").unwrap() - 0.02).abs() < 1e-12);
     }
 }

@@ -11,7 +11,7 @@ pub mod worker;
 
 pub use injector::{ScenarioFaults, WorkerFaults};
 pub use master::{ExecMode, Master, MasterConfig, SchemeKind};
-pub use metrics::{InferenceMetrics, LayerMetrics};
+pub use metrics::{InferenceMetrics, LayerMetrics, WorkerPhase};
 pub use pool::LocalCluster;
 
 #[cfg(test)]

@@ -238,6 +238,11 @@ fn execute_order(
         let extra = t0.elapsed().as_secs_f64() * (config.faults.cmp_slowdown - 1.0);
         std::thread::sleep(std::time::Duration::from_secs_f64(extra));
     }
+    // Worker-measured execution time (conv + any straggler stretch).
+    // Reported to the master so telemetry can split dispatch→reply into
+    // execution vs transmission; the injected send delay below is
+    // deliberately *excluded* — it models the link, not the device.
+    let exec_secs = t0.elapsed().as_secs_f64();
     // Scenario-1 transmission delay.
     let d = config.faults.sample_send_delay(rng);
     if d > 0.0 {
@@ -250,6 +255,7 @@ fn execute_order(
         c: out.c as u32,
         h: out.h as u32,
         w: out.w as u32,
+        exec_secs,
         data: out.data,
     })
 }
@@ -313,11 +319,12 @@ mod tests {
         };
         tx.send(&ToWorker::Work(order).encode()).unwrap();
         match FromWorker::decode(&rx.recv().unwrap().unwrap()).unwrap() {
-            FromWorker::Output { round, task_id, c, h, w, data } => {
+            FromWorker::Output { round, task_id, c, h, w, exec_secs, data } => {
                 assert_eq!((round, task_id), (0, 5));
                 assert_eq!((c, h, w), (32, 8, 5));
                 assert_eq!(data.len(), 32 * 8 * 5);
                 assert!(data.iter().all(|v| v.is_finite()));
+                assert!(exec_secs >= 0.0 && exec_secs < 60.0, "exec={exec_secs}");
             }
             other => panic!("expected output, got {other:?}"),
         }

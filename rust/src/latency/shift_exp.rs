@@ -55,31 +55,64 @@ impl ShiftExp {
         self.shift() + rng.exponential(self.mu / self.n_scale)
     }
 
+    /// The μ returned for degenerate windows (no spread information): a
+    /// practically-deterministic distribution with negligible tail.
+    pub const MU_DEGENERATE: f64 = 1e12;
+
     /// MLE fit given samples of an operation with known scale `n_scale`:
     /// `θ̂ = min(x)/N`, `μ̂ = N / mean(x − min)`. This is what the paper's
     /// "prior test and fitting" step produces (App. B).
+    ///
+    /// Degenerate inputs are routine for the online estimator (tiny
+    /// telemetry windows) and get a documented fallback instead of a
+    /// panic or NaN: an empty sample fits a zero-shift near-deterministic
+    /// distribution, and a singleton or all-equal sample fits a pure
+    /// shift at the observed value with [`ShiftExp::MU_DEGENERATE`].
     pub fn fit(samples: &[f64], n_scale: f64) -> ShiftExp {
-        assert!(samples.len() >= 2, "fit needs at least two samples");
+        if samples.is_empty() {
+            return ShiftExp::new(ShiftExp::MU_DEGENERATE, 0.0, n_scale);
+        }
         let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let theta = (min / n_scale).max(0.0);
+        if samples.len() == 1 {
+            return ShiftExp::new(ShiftExp::MU_DEGENERATE, theta, n_scale);
+        }
         let mean_excess =
             samples.iter().map(|x| x - min).sum::<f64>() / samples.len() as f64;
-        // Guard against degenerate (all-equal) samples.
+        // All-equal samples carry no spread information.
         let mu = if mean_excess > 0.0 {
             n_scale / mean_excess
         } else {
-            1e12
+            ShiftExp::MU_DEGENERATE
         };
-        ShiftExp::new(mu, min / n_scale, n_scale)
+        ShiftExp::new(mu, theta, n_scale)
     }
 
-    /// MLE fit with the top `trim_frac` of samples dropped first —
-    /// robust to scheduler spikes on virtualized hosts (the RPi testbed
-    /// the paper fits has no hypervisor noise).
+    /// Robust fit with the top `trim_frac` of samples treated as
+    /// *censored* (type-II) rather than discarded: each dropped sample
+    /// contributes the largest kept excess to the exponential mean. For
+    /// an exponential tail this keeps `μ̂` consistent for the underlying
+    /// distribution (a plain trimmed mean would overestimate μ by
+    /// ~1/(1−trim)·ln-factor), while scheduler spikes on virtualized
+    /// hosts — far above the bulk — still cannot drag the estimate.
     pub fn fit_trimmed(samples: &[f64], n_scale: f64, trim_frac: f64) -> ShiftExp {
+        if samples.len() < 2 {
+            return ShiftExp::fit(samples, n_scale);
+        }
         let mut s = samples.to_vec();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let keep = ((s.len() as f64) * (1.0 - trim_frac)).ceil() as usize;
-        ShiftExp::fit(&s[..keep.clamp(2, s.len())], n_scale)
+        let keep = (((s.len() as f64) * (1.0 - trim_frac)).ceil() as usize).clamp(2, s.len());
+        let min = s[0];
+        let tail_excess = s[keep - 1] - min;
+        let censored_sum: f64 = s[..keep].iter().map(|x| x - min).sum::<f64>()
+            + (s.len() - keep) as f64 * tail_excess;
+        let mean_excess = censored_sum / keep as f64;
+        let mu = if mean_excess > 0.0 {
+            n_scale / mean_excess
+        } else {
+            ShiftExp::MU_DEGENERATE
+        };
+        ShiftExp::new(mu, (min / n_scale).max(0.0), n_scale)
     }
 
     /// Kolmogorov–Smirnov statistic vs an empirical sample (fit quality,
@@ -133,6 +166,45 @@ mod tests {
         assert!((fit.mu - truth.mu).abs() / truth.mu < 0.05, "mu={}", fit.mu);
         // Good fit => small KS statistic.
         assert!(fit.ks_statistic(&samples) < 0.02);
+    }
+
+    #[test]
+    fn fit_trimmed_recovers_parameters() {
+        // The censored-tail correction keeps μ̂ consistent even though 10%
+        // of the sample is withheld from the mean.
+        let truth = ShiftExp::new(5.0, 0.1, 100.0);
+        let mut rng = Rng::new(31);
+        let samples: Vec<f64> = (0..20_000).map(|_| truth.sample(&mut rng)).collect();
+        let fit = ShiftExp::fit_trimmed(&samples, 100.0, 0.10);
+        assert!((fit.theta - truth.theta).abs() / truth.theta < 0.05, "theta={}", fit.theta);
+        assert!((fit.mu - truth.mu).abs() / truth.mu < 0.05, "mu={}", fit.mu);
+    }
+
+    #[test]
+    fn fit_degenerate_inputs_fall_back() {
+        // Empty: zero-shift, near-deterministic.
+        let f = ShiftExp::fit(&[], 10.0);
+        assert_eq!(f.mu, ShiftExp::MU_DEGENERATE);
+        assert_eq!(f.theta, 0.0);
+        // Singleton: pure shift at the observed value.
+        let f = ShiftExp::fit(&[4.0], 8.0);
+        assert_eq!(f.mu, ShiftExp::MU_DEGENERATE);
+        assert!((f.theta - 0.5).abs() < 1e-12);
+        assert!((f.mean() - 4.0).abs() < 1e-3, "mean={}", f.mean());
+        // All-equal: pure shift, no NaN/div-by-zero.
+        let f = ShiftExp::fit(&[2.0, 2.0, 2.0], 4.0);
+        assert_eq!(f.mu, ShiftExp::MU_DEGENERATE);
+        assert!((f.theta - 0.5).abs() < 1e-12);
+        assert!(f.mean().is_finite());
+        // Trimmed fit on tiny windows must not panic either.
+        let f = ShiftExp::fit_trimmed(&[3.0], 3.0, 0.1);
+        assert_eq!(f.mu, ShiftExp::MU_DEGENERATE);
+        let f = ShiftExp::fit_trimmed(&[], 1.0, 0.1);
+        assert_eq!(f.theta, 0.0);
+        // Negative raw samples (clock skew) clamp θ at 0.
+        let f = ShiftExp::fit(&[-1.0, 1.0], 1.0);
+        assert_eq!(f.theta, 0.0);
+        assert!(f.mu.is_finite() && f.mu > 0.0);
     }
 
     #[test]

@@ -26,6 +26,7 @@
 //! * [`runtime`] — PJRT executable cache + pure-rust fallback provider.
 //! * [`transport`] — in-proc and TCP transports with a binary codec.
 //! * [`coordinator`] — the master/worker pipeline with fault injection.
+//! * [`telemetry`] — online capacity estimation + adaptive replanning.
 //! * [`sim`] — calibrated discrete-event simulator for the paper figures.
 //! * [`bench`] — shared experiment drivers for `cargo bench` targets.
 
@@ -38,6 +39,7 @@ pub mod model;
 pub mod planner;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod transport;
 pub mod util;
 

@@ -5,11 +5,13 @@
 //! ```text
 //! cocoi infer  --model tinyvgg --workers 4 [--scheme mds|uncoded|rep|lt-fine|lt-coarse]
 //!              [--k N] [--lambda-tr X] [--fail N] [--pjrt] [--runs R] [--pipeline]
+//!              [--adaptive]                         # telemetry-driven replanning
+//!              [--telemetry PATH]                   # dump registry/plan JSON after the runs
 //!              [--threads T]                        # GEMM kernel threads (0 = auto)
 //! cocoi worker --listen 0.0.0.0:9090 [--pjrt] [--threads T]   # TCP worker process
 //! cocoi infer  --tcp host:9090,host:9091 ...        # master over TCP
 //! cocoi plan   --model vgg16 --workers 10           # show the split plan
-//! cocoi experiment <gemm|fig4|fig5|fig6|fig7|fig8|fig9|fig10|table1|theory|throughput|all>
+//! cocoi experiment <gemm|fig4|fig5|fig6|fig7|fig8|fig9|fig10|table1|theory|throughput|adaptive|all>
 //! ```
 //!
 //! `--threads` (or the `COCOI_THREADS` env var) caps the tiled GEMM
@@ -147,8 +149,10 @@ fn cmd_infer(args: &Args) -> Result<()> {
         } else {
             ExecMode::RoundBarrier
         },
+        adaptive: args.has("adaptive"),
         ..Default::default()
     };
+    let telemetry_path = args.get("telemetry").map(std::path::PathBuf::from);
 
     if let Some(addrs) = args.get("tcp") {
         // Remote workers over TCP.
@@ -162,13 +166,28 @@ fn cmd_infer(args: &Args) -> Result<()> {
         let mut master =
             cocoi::coordinator::Master::new(&model_name, config, links, provider)?;
         run_inferences(&mut master, &model_name, runs)?;
+        dump_telemetry(&master, telemetry_path.as_deref())?;
         master.shutdown();
         return Ok(());
     }
 
     let mut cluster = LocalCluster::spawn(&model_name, n, config, provider, faults)?;
     run_inferences(&mut cluster.master, &model_name, runs)?;
+    dump_telemetry(&cluster.master, telemetry_path.as_deref())?;
     cluster.shutdown()?;
+    Ok(())
+}
+
+/// Write the master's telemetry dump (fitted capacities, quarantine log,
+/// plan in force) to `path` when `--telemetry` was given.
+fn dump_telemetry(
+    master: &cocoi::coordinator::Master,
+    path: Option<&std::path::Path>,
+) -> Result<()> {
+    if let Some(path) = path {
+        master.telemetry_json().write_file(path)?;
+        println!("telemetry dump -> {}", path.display());
+    }
     Ok(())
 }
 
@@ -277,6 +296,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "table1" => exp::table1(scale)?,
         "theory" => exp::theory()?,
         "throughput" => exp::throughput(scale)?,
+        "adaptive" => exp::adaptive(scale)?,
         "all" => {
             exp::gemm(scale)?;
             exp::fig7()?;
@@ -289,6 +309,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             exp::fig10(scale)?;
             exp::theory()?;
             exp::throughput(scale)?;
+            exp::adaptive(scale)?;
         }
         other => bail!("unknown experiment '{other}'"),
     }

@@ -1,0 +1,304 @@
+//! Drifting-capacity serving simulation: the deterministic validation
+//! harness for the telemetry → estimation → replanning loop.
+//!
+//! A request stream runs over `n` workers whose capacities *drift*
+//! mid-run ([`DriftScenario`]): workers slow down, die and return, or
+//! the shared link congests. Two control policies are compared on
+//! **common random numbers** — every trial draws the same per-worker
+//! phase times for all `n` workers regardless of policy, so:
+//!
+//! * with no drift and no plan swap, the adaptive run's latency trace is
+//!   *bitwise identical* to the static run's (hysteresis really did
+//!   nothing), and
+//! * under drift, the latency difference is attributable to the plan,
+//!   not sampling noise.
+//!
+//! The static policy keeps the plan solved against the initial
+//! calibrated profile. The adaptive policy feeds every subtask's timing
+//! into a [`CapacityRegistry`] (execution normalized by FLOPs,
+//! transmission by bytes — the same observables the real coordinator
+//! records), quarantines/probes stragglers, and lets a [`Replanner`]
+//! re-solve `(n, k)` between requests.
+
+use anyhow::Result;
+
+use crate::latency::SystemProfile;
+use crate::model::{ModelPlan, ModelSpec};
+use crate::planner::SplitPolicy;
+use crate::telemetry::{
+    CapacityRegistry, Replanner, ReplanConfig, TelemetryConfig, TelemetryEvent,
+};
+use crate::util::Rng;
+
+/// Capacity drift applied to the worker pool mid-run. Request indices
+/// are the time axis (the drift applies from request `at` onward).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DriftScenario {
+    /// Stationary capacities (the hysteresis/no-thrash baseline).
+    None,
+    /// The first `m` workers run their *compute* `factor`× slower from
+    /// request `at` (wall-time stretch: shift and tail both scale).
+    /// `m = 1` is the paper-style chronic straggler appearing mid-run;
+    /// `m = n` models a pool-wide slowdown (thermal throttle).
+    ComputeSlowdown { m: usize, factor: f64, at: usize },
+    /// Worker `worker` fails every subtask in requests `[down_at,
+    /// up_at)` and then recovers — the quarantine/reintegration
+    /// round-trip scenario.
+    DieAndReturn {
+        worker: usize,
+        down_at: usize,
+        up_at: usize,
+    },
+    /// The shared link congests: every worker's transmission *excess*
+    /// (the exponential tail) grows `factor`× from request `at`. Heavy
+    /// transmission straggling moves the optimal split k° down, so this
+    /// is the scenario where replanning (not just quarantine) pays.
+    TransmissionCongestion { factor: f64, at: usize },
+}
+
+impl DriftScenario {
+    pub fn label(&self) -> String {
+        match self {
+            DriftScenario::None => "none".into(),
+            DriftScenario::ComputeSlowdown { m, factor, at } => {
+                format!("slowdown(m={m},x{factor},at={at})")
+            }
+            DriftScenario::DieAndReturn {
+                worker,
+                down_at,
+                up_at,
+            } => format!("die-return(w={worker},[{down_at},{up_at}))"),
+            DriftScenario::TransmissionCongestion { factor, at } => {
+                format!("congestion(x{factor},at={at})")
+            }
+        }
+    }
+
+    /// Compute wall-time multiplier of `worker` at request `req`.
+    pub fn cmp_slowdown(&self, worker: usize, req: usize) -> f64 {
+        match self {
+            DriftScenario::ComputeSlowdown { m, factor, at } if worker < *m && req >= *at => {
+                *factor
+            }
+            _ => 1.0,
+        }
+    }
+
+    /// Transmission-excess multiplier at request `req`.
+    pub fn tr_excess(&self, req: usize) -> f64 {
+        match self {
+            DriftScenario::TransmissionCongestion { factor, at } if req >= *at => *factor,
+            _ => 1.0,
+        }
+    }
+
+    /// Is `worker` alive at request `req`?
+    pub fn alive(&self, worker: usize, req: usize) -> bool {
+        !matches!(
+            self,
+            DriftScenario::DieAndReturn { worker: w, down_at, up_at }
+                if worker == *w && (*down_at..*up_at).contains(&req)
+        )
+    }
+}
+
+/// Result of one policy's run over the request stream.
+#[derive(Clone, Debug)]
+pub struct AdaptiveSimResult {
+    /// End-to-end latency per request (seconds).
+    pub latencies: Vec<f64>,
+    /// Plan swaps performed (0 for the static policy).
+    pub switches: u64,
+    /// Quarantine/reintegration log (empty for the static policy).
+    pub events: Vec<TelemetryEvent>,
+    /// Final per-distributed-layer k.
+    pub final_ks: Vec<(String, usize)>,
+    /// The registry after the run (adaptive policy; fresh for static).
+    pub registry: CapacityRegistry,
+}
+
+impl AdaptiveSimResult {
+    pub fn mean(&self) -> f64 {
+        self.latencies.iter().sum::<f64>() / self.latencies.len().max(1) as f64
+    }
+
+    /// Mean over requests `from..` (post-drift window).
+    pub fn mean_from(&self, from: usize) -> f64 {
+        let tail = &self.latencies[from.min(self.latencies.len())..];
+        tail.iter().sum::<f64>() / tail.len().max(1) as f64
+    }
+}
+
+/// Serve `n_requests` inferences of `model` over `n` workers whose
+/// capacities follow `drift`, under the static or adaptive policy.
+/// `replan_every` is in requests; phase times are drawn from `profile`
+/// (the true *initial* capacities) modulated by the drift.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_adaptive(
+    model: &ModelSpec,
+    profile: &SystemProfile,
+    n: usize,
+    drift: DriftScenario,
+    n_requests: usize,
+    adaptive: bool,
+    replan_every: usize,
+    rng: &mut Rng,
+) -> Result<AdaptiveSimResult> {
+    anyhow::ensure!(n >= 2 && n_requests >= 1 && replan_every >= 1);
+    let mut plan = ModelPlan::build(model, profile, n, SplitPolicy::KCircle, rng)?;
+    let layers: Vec<(String, crate::latency::LayerDims)> = plan
+        .convs
+        .iter()
+        .filter(|c| c.distributed)
+        .map(|c| (c.node_id.clone(), c.dims))
+        .collect();
+    // Master-local (type-2) work at its mean, identical for both policies.
+    let local_mean: f64 = plan
+        .convs
+        .iter()
+        .filter(|c| !c.distributed)
+        .map(|c| profile.local_conv_dist(c.dims.full_flops()).mean())
+        .sum();
+
+    let mut registry = CapacityRegistry::new(n, TelemetryConfig::default());
+    let mut replanner = Replanner::new(ReplanConfig::default());
+    let mut round: u64 = 0;
+    let mut latencies = Vec::with_capacity(n_requests);
+
+    for req in 0..n_requests {
+        let mut total = local_mean;
+        for (node_id, dims) in &layers {
+            round += 1;
+            let k = plan
+                .conv(node_id)
+                .map(|c| c.k)
+                .unwrap_or(1)
+                .clamp(1, n.min(dims.w_o));
+            // Dispatch set: the registry's active workers (probes
+            // included) under the adaptive policy, everyone otherwise.
+            let targets = if adaptive {
+                registry.active_workers(round)
+            } else {
+                (0..n).collect::<Vec<usize>>()
+            };
+            let n_tasks = targets.len();
+            // Keep one parity shard when quarantine shrank the dispatch
+            // set (mirrors the coordinator's adaptive clamp): MDS(n, n)
+            // would have zero redundancy exactly when workers misbehave.
+            let k = if adaptive && n_tasks > 1 {
+                k.min(n_tasks - 1)
+            } else {
+                k.min(n_tasks)
+            };
+
+            let enc = profile.enc_dist(dims, n_tasks, k).sample(rng);
+            let dec = profile.dec_dist(dims, k).sample(rng);
+            let rec = profile.rec_dist(dims, k);
+            let cmp = profile.cmp_dist(dims, k);
+            let sen = profile.sen_dist(dims, k);
+            let mean_sub = rec.mean() + cmp.mean() + sen.mean();
+            let flops = dims.n_cmp(k as f64);
+            let bytes = dims.n_rec(k as f64) + dims.n_sen(k as f64);
+
+            // Common random numbers: draw all n workers' phase times in a
+            // fixed order, whatever the dispatch set — both policies then
+            // consume the RNG identically, and a no-swap adaptive run is
+            // bitwise identical to the static one.
+            let mut arrivals: Vec<(f64, usize, f64, f64)> = Vec::with_capacity(n_tasks);
+            let mut failed: Vec<usize> = Vec::new();
+            for w in 0..n {
+                let t_rec = rec.shift()
+                    + rng.exponential(rec.mu / rec.n_scale) * drift.tr_excess(req);
+                let t_cmp = cmp.sample(rng) * drift.cmp_slowdown(w, req);
+                let t_sen = sen.shift()
+                    + rng.exponential(sen.mu / sen.n_scale) * drift.tr_excess(req);
+                if !targets.contains(&w) {
+                    continue; // drawn for RNG parity, not dispatched
+                }
+                if !drift.alive(w, req) {
+                    failed.push(w);
+                    continue;
+                }
+                let t = t_rec + t_cmp + t_sen + 2.0 * profile.theta_msg;
+                arrivals.push((t, w, t_cmp, t_rec + t_sen));
+            }
+            arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+            let workers_t = if arrivals.len() >= k {
+                arrivals[k - 1].0
+            } else {
+                // Not enough survivors: the master times out (1.5x the
+                // expected subtask, the §III detection threshold) and
+                // re-executes the missing pieces serially on a survivor.
+                // Deterministic penalty — no extra RNG draws, so both
+                // policies stay on common random numbers.
+                1.5 * mean_sub + (k - arrivals.len()) as f64 * mean_sub
+            };
+            total += enc + workers_t + dec;
+
+            if adaptive {
+                for &(_, w, t_cmp, t_tr) in &arrivals {
+                    registry.record_success(w, flops, bytes, t_cmp, t_tr, round);
+                }
+                for &w in &failed {
+                    registry.record_failure(w, round);
+                }
+            }
+        }
+        latencies.push(total);
+
+        if adaptive && (req + 1) % replan_every == 0 {
+            replanner.replan(&mut plan, &registry, profile, round);
+        }
+    }
+
+    Ok(AdaptiveSimResult {
+        latencies,
+        switches: replanner.switches,
+        events: registry.events().to_vec(),
+        final_ks: plan
+            .convs
+            .iter()
+            .filter(|c| c.distributed)
+            .map(|c| (c.node_id.clone(), c.k))
+            .collect(),
+        registry,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn run(drift: DriftScenario, n_req: usize, adaptive: bool, seed: u64) -> AdaptiveSimResult {
+        let model = zoo::model("vgg16").unwrap();
+        let p = SystemProfile::paper_default();
+        let mut rng = Rng::new(seed);
+        simulate_adaptive(&model, &p, 10, drift, n_req, adaptive, 4, &mut rng).unwrap()
+    }
+
+    #[test]
+    fn finite_and_deterministic() {
+        let a = run(DriftScenario::None, 6, true, 3);
+        let b = run(DriftScenario::None, 6, true, 3);
+        assert_eq!(a.latencies, b.latencies);
+        assert!(a.latencies.iter().all(|t| t.is_finite() && *t > 0.0));
+        assert_eq!(a.latencies.len(), 6);
+    }
+
+    #[test]
+    fn drift_labels_and_predicates() {
+        let d = DriftScenario::ComputeSlowdown { m: 2, factor: 3.0, at: 5 };
+        assert_eq!(d.cmp_slowdown(1, 4), 1.0);
+        assert_eq!(d.cmp_slowdown(1, 5), 3.0);
+        assert_eq!(d.cmp_slowdown(2, 9), 1.0);
+        let d = DriftScenario::DieAndReturn { worker: 3, down_at: 2, up_at: 4 };
+        assert!(d.alive(3, 1) && !d.alive(3, 2) && !d.alive(3, 3) && d.alive(3, 4));
+        assert!(d.alive(0, 3));
+        let d = DriftScenario::TransmissionCongestion { factor: 8.0, at: 1 };
+        assert_eq!(d.tr_excess(0), 1.0);
+        assert_eq!(d.tr_excess(1), 8.0);
+        assert!(DriftScenario::None.label() == "none");
+    }
+}

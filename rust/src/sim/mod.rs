@@ -6,8 +6,10 @@
 //! tiny scale — see EXPERIMENTS.md §Calibration) instead of wall-clock
 //! executing 50-second inferences. Scenario semantics follow §V exactly.
 
+pub mod adaptive;
 pub mod runner;
 pub mod scenario;
 
+pub use adaptive::{simulate_adaptive, AdaptiveSimResult, DriftScenario};
 pub use runner::{simulate_model, simulate_serving, MethodSim, ModelSimResult};
 pub use scenario::Scenario;

@@ -1,0 +1,35 @@
+//! Online telemetry & adaptive replanning (the closed loop the paper
+//! leaves open: §III calibrates the shift-exponential profile *offline*,
+//! but device capacities are "time-varying and possibly unknown").
+//!
+//! Three stages, wired through the coordinator and the simulator:
+//!
+//! 1. **Collection** — every subtask reply carries the worker-measured
+//!    execution time ([`crate::coordinator::messages::FromWorker::Output`]);
+//!    the master subtracts it from the dispatch→reply wall time to split
+//!    each sample into transmission vs execution, normalizes by the
+//!    subtask's FLOPs/bytes, and feeds bounded EWMA-decayed
+//!    [`SlidingWindow`]s per worker.
+//! 2. **Estimation** — [`CapacityRegistry`] fits per-worker
+//!    shift-exponential parameters online (`ShiftExp::fit_trimmed`, with
+//!    staleness-aware widening), scores stragglers against the pool
+//!    median, quarantines chronic stragglers/failures, and probes them
+//!    back in when they recover.
+//! 3. **Replanning** — [`Replanner`] periodically re-solves the optimal
+//!    splitting problem (`solve_k_circ`, or the Monte-Carlo hetero
+//!    planner) against the fitted profile and swaps the per-layer
+//!    `(n, k)` plan between requests, with hysteresis against thrash.
+//!
+//! Validated deterministically by `sim::adaptive` (drifting-capacity
+//! scenarios) and measured by `cocoi experiment adaptive`
+//! (`BENCH_adaptive.json`).
+
+pub mod registry;
+pub mod replanner;
+pub mod window;
+
+pub use registry::{
+    CapacityRegistry, EventKind, TelemetryConfig, TelemetryEvent, WorkerEstimate,
+};
+pub use replanner::{ReplanConfig, Replanner, ReplanOutcome};
+pub use window::SlidingWindow;

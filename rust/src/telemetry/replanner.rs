@@ -1,0 +1,257 @@
+//! Closed-loop replanning: periodically re-solve the optimal splitting
+//! problem against the fitted [`CapacityRegistry`] and swap the
+//! per-layer `(n, k)` plan — with hysteresis, so the plan only moves
+//! when the *predicted* improvement is worth the disruption.
+//!
+//! Two solver paths:
+//!
+//! * [`Replanner::replan`] — the fast iid path: `solve_k_circ` per layer
+//!   against the pool-median fitted profile, with the pool size shrunk
+//!   to the non-quarantined worker count. Cheap enough to run between
+//!   requests on the live engine.
+//! * [`Replanner::plan_hetero`] — the Monte-Carlo heterogeneous
+//!   refinement (`planner::hetero::optimize`) over the registry's
+//!   per-worker relative speeds: jointly picks the worker *subset* and
+//!   `k` for one layer. Too expensive for every round; the adaptive
+//!   experiment and examples use it as the offline refinement step.
+
+use crate::latency::approx::l_integer;
+use crate::latency::phases::LayerDims;
+use crate::latency::SystemProfile;
+use crate::model::ModelPlan;
+use crate::planner::hetero::{self, HeteroPlan};
+use crate::planner::solve_k_circ;
+use crate::util::Rng;
+
+use super::registry::CapacityRegistry;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ReplanConfig {
+    /// Rounds between replan attempts on the live engine.
+    pub every_rounds: u64,
+    /// Relative predicted-latency improvement required before the plan
+    /// is swapped (`L_new < (1 − hysteresis) · L_current`). Prevents
+    /// plan thrash from estimation noise: near the optimum `L(k)` is
+    /// flat, so noise-induced ±1 moves in `k` never clear the bar.
+    pub hysteresis: f64,
+}
+
+impl Default for ReplanConfig {
+    fn default() -> ReplanConfig {
+        ReplanConfig {
+            every_rounds: 24,
+            hysteresis: 0.05,
+        }
+    }
+}
+
+/// Outcome of one replan attempt (for logs/telemetry dumps).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplanOutcome {
+    pub swapped: bool,
+    /// Predicted end-to-end distributed-layer latency of the plan in
+    /// force after this attempt, under the fitted profile.
+    pub predicted: f64,
+    /// Predicted latency of the incumbent plan under the fitted profile.
+    pub incumbent: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Replanner {
+    cfg: ReplanConfig,
+    last_attempt_round: u64,
+    /// Total plan swaps performed (telemetry).
+    pub switches: u64,
+}
+
+impl Replanner {
+    pub fn new(cfg: ReplanConfig) -> Replanner {
+        Replanner {
+            cfg,
+            last_attempt_round: 0,
+            switches: 0,
+        }
+    }
+
+    pub fn config(&self) -> &ReplanConfig {
+        &self.cfg
+    }
+
+    /// Is a replan attempt due at `round`?
+    pub fn due(&self, round: u64) -> bool {
+        round >= self.last_attempt_round + self.cfg.every_rounds
+    }
+
+    /// Re-solve `k` for every distributed layer of `plan` against the
+    /// registry's fitted profile and the current healthy pool size;
+    /// mutate the plan in place iff the predicted improvement beats the
+    /// hysteresis. Layer type-1/type-2 classification is left alone —
+    /// re-deciding *whether* to distribute mid-stream would change
+    /// output numerics, not just latency.
+    pub fn replan(
+        &mut self,
+        plan: &mut ModelPlan,
+        registry: &CapacityRegistry,
+        base: &SystemProfile,
+        round: u64,
+    ) -> ReplanOutcome {
+        self.last_attempt_round = round;
+        let fitted = registry.fitted_profile(base);
+        let n_active = registry.healthy_count();
+        let mut l_new = 0.0;
+        let mut l_cur = 0.0;
+        let mut new_ks: Vec<(usize, usize)> = Vec::new(); // (conv index, k)
+        for (i, c) in plan.convs.iter().enumerate() {
+            if !c.distributed {
+                continue;
+            }
+            let k_new = solve_k_circ(&c.dims, &fitted, n_active)
+                .k
+                .clamp(1, n_active.min(c.dims.w_o));
+            let k_cur = c.k.clamp(1, n_active.min(c.dims.w_o));
+            l_new += l_integer(&c.dims, &fitted, n_active, k_new);
+            l_cur += l_integer(&c.dims, &fitted, n_active, k_cur);
+            new_ks.push((i, k_new));
+        }
+        if l_new < (1.0 - self.cfg.hysteresis) * l_cur {
+            for (i, k) in new_ks {
+                let c = &mut plan.convs[i];
+                c.k = k;
+                c.est_distributed = l_integer(&c.dims, &fitted, n_active, k);
+            }
+            self.switches += 1;
+            log::info!(
+                "replan at round {round}: swapped plan (predicted {l_new:.3}s vs \
+                 incumbent {l_cur:.3}s, n_active={n_active})"
+            );
+            ReplanOutcome {
+                swapped: true,
+                predicted: l_new,
+                incumbent: l_cur,
+            }
+        } else {
+            ReplanOutcome {
+                swapped: false,
+                predicted: l_cur,
+                incumbent: l_cur,
+            }
+        }
+    }
+
+    /// Monte-Carlo heterogeneous refinement for one layer: jointly pick
+    /// the worker subset and `k` from the registry's fitted per-worker
+    /// speeds (see `planner::hetero`).
+    pub fn plan_hetero(
+        &self,
+        registry: &CapacityRegistry,
+        dims: &LayerDims,
+        base: &SystemProfile,
+        samples: usize,
+        rng: &mut Rng,
+    ) -> HeteroPlan {
+        let fitted = registry.fitted_profile(base);
+        hetero::optimize(dims, &fitted, &registry.speeds(), samples, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::planner::SplitPolicy;
+    use crate::telemetry::TelemetryConfig;
+
+    fn vgg_plan(p: &SystemProfile) -> ModelPlan {
+        let model = zoo::model("vgg16").unwrap();
+        let mut rng = Rng::new(1);
+        ModelPlan::build(&model, p, 10, SplitPolicy::KCircle, &mut rng).unwrap()
+    }
+
+    /// Feed the registry samples that exactly reproduce `profile`'s mean
+    /// worker behaviour (deterministic per-unit times).
+    fn feed_profile(reg: &mut CapacityRegistry, p: &SystemProfile, n: usize, rounds: u64) {
+        let per_flop = p.theta_cmp + 1.0 / p.mu_cmp;
+        let per_byte = p.theta_rec + 1.0 / p.mu_rec;
+        for r in 0..rounds {
+            for w in 0..n {
+                reg.record_success(w, 1e9, 1e6, per_flop * 1e9, per_byte * 1e6, r);
+            }
+        }
+    }
+
+    #[test]
+    fn stable_pool_does_not_thrash() {
+        let base = SystemProfile::paper_default();
+        let mut plan = vgg_plan(&base);
+        let ks_before: Vec<usize> = plan.convs.iter().map(|c| c.k).collect();
+        let mut reg = CapacityRegistry::new(10, TelemetryConfig::default());
+        feed_profile(&mut reg, &base, 10, 32);
+        let mut rp = Replanner::new(ReplanConfig::default());
+        let out = rp.replan(&mut plan, &reg, &base, 32);
+        // Deterministic samples fit a pure shift with the same mean; the
+        // re-solved k may differ slightly, but hysteresis must hold the
+        // incumbent unless the predicted gain is real.
+        let ks_after: Vec<usize> = plan.convs.iter().map(|c| c.k).collect();
+        if !out.swapped {
+            assert_eq!(ks_before, ks_after);
+        }
+        assert!(out.predicted <= out.incumbent * (1.0 + 1e-12));
+        assert_eq!(rp.switches, u64::from(out.swapped));
+    }
+
+    #[test]
+    fn due_respects_cadence() {
+        let mut rp = Replanner::new(ReplanConfig {
+            every_rounds: 10,
+            hysteresis: 0.05,
+        });
+        assert!(rp.due(10));
+        assert!(!rp.due(9));
+        rp.last_attempt_round = 10;
+        assert!(!rp.due(19));
+        assert!(rp.due(20));
+    }
+
+    #[test]
+    fn strong_transmission_straggling_forces_lower_k() {
+        // The structural case from the solver tests: heavy transmission
+        // straggling pushes k° down. Feed the registry samples whose
+        // *excess* is 30x the base profile's and check the replanner
+        // actually swaps to smaller k.
+        let base = SystemProfile::paper_default();
+        let mut plan = vgg_plan(&base);
+        let k_before: usize = plan
+            .convs
+            .iter()
+            .find(|c| c.distributed)
+            .map(|c| c.k)
+            .unwrap();
+        let mut congested = base;
+        congested.mu_rec /= 30.0;
+        congested.mu_sen /= 30.0;
+
+        // Noisy samples from the congested profile (deterministic seed).
+        let mut rng = Rng::new(42);
+        let mut reg = CapacityRegistry::new(10, TelemetryConfig::default());
+        for r in 0..40u64 {
+            for w in 0..10 {
+                let exec = 1e9 * congested.theta_cmp + rng.exponential(congested.mu_cmp / 1e9);
+                let tr = 1e6 * congested.theta_rec + rng.exponential(congested.mu_rec / 1e6);
+                reg.record_success(w, 1e9, 1e6, exec, tr, r);
+            }
+        }
+        let mut rp = Replanner::new(ReplanConfig::default());
+        let out = rp.replan(&mut plan, &reg, &base, 40);
+        assert!(out.swapped, "expected a swap: {out:?}");
+        let k_after: usize = plan
+            .convs
+            .iter()
+            .find(|c| c.distributed)
+            .map(|c| c.k)
+            .unwrap();
+        assert!(
+            k_after < k_before,
+            "congestion should lower k: {k_after} !< {k_before}"
+        );
+    }
+}

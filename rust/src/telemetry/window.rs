@@ -1,0 +1,125 @@
+//! Bounded sliding sample window with EWMA decay.
+//!
+//! The online estimator keeps two views of each worker's recent samples:
+//! the raw bounded window (fed to `ShiftExp::fit_trimmed`, which needs
+//! actual observations) and a bias-corrected exponentially-weighted mean
+//! (the cheap "how fast is this worker *right now*" signal that drives
+//! the straggler score). The EWMA reacts within a half-life of new
+//! samples; the window turns over in `cap` samples.
+
+/// A bounded FIFO of `f64` samples plus a bias-corrected EWMA.
+#[derive(Clone, Debug)]
+pub struct SlidingWindow {
+    cap: usize,
+    buf: Vec<f64>,
+    /// Decay per sample: `0.5^(1/half_life)`.
+    lambda: f64,
+    /// EWMA numerator/denominator (bias-corrected form: `ewma = num/den`
+    /// is exact from the first sample, no zero-initialization bias).
+    num: f64,
+    den: f64,
+    /// Lifetime sample count (not capped).
+    total: u64,
+}
+
+impl SlidingWindow {
+    /// `cap` bounds the stored window; `half_life` (in samples) sets the
+    /// EWMA decay.
+    pub fn new(cap: usize, half_life: f64) -> SlidingWindow {
+        assert!(cap >= 2 && half_life > 0.0);
+        SlidingWindow {
+            cap,
+            buf: Vec::with_capacity(cap),
+            lambda: 0.5f64.powf(1.0 / half_life),
+            num: 0.0,
+            den: 0.0,
+            total: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.buf.len() == self.cap {
+            // cap is small (O(100)); the shift is cheaper than a ring's
+            // bookkeeping at this size and keeps `samples()` a plain slice.
+            self.buf.remove(0);
+        }
+        self.buf.push(x);
+        self.num = x + self.lambda * self.num;
+        self.den = 1.0 + self.lambda * self.den;
+        self.total += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Decayed mean; `NaN` when empty.
+    pub fn ewma(&self) -> f64 {
+        if self.den > 0.0 {
+            self.num / self.den
+        } else {
+            f64::NAN
+        }
+    }
+
+    /// The raw bounded window, oldest first.
+    pub fn samples(&self) -> &[f64] {
+        &self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_bounds_and_order() {
+        let mut w = SlidingWindow::new(3, 2.0);
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            w.push(x);
+        }
+        assert_eq!(w.samples(), &[2.0, 3.0, 4.0]);
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.total(), 4);
+    }
+
+    #[test]
+    fn ewma_tracks_level_shift() {
+        let mut w = SlidingWindow::new(64, 8.0);
+        for _ in 0..32 {
+            w.push(1.0);
+        }
+        assert!((w.ewma() - 1.0).abs() < 1e-9);
+        for _ in 0..32 {
+            w.push(3.0);
+        }
+        // After 4 half-lives the EWMA has closed ~94% of the gap.
+        assert!(w.ewma() > 2.8, "ewma={}", w.ewma());
+        assert!(w.ewma() < 3.0);
+    }
+
+    #[test]
+    fn ewma_unbiased_from_first_sample() {
+        let mut w = SlidingWindow::new(8, 4.0);
+        w.push(5.0);
+        assert!((w.ewma() - 5.0).abs() < 1e-12);
+        assert!(SlidingWindow::new(4, 1.0).ewma().is_nan());
+    }
+
+    #[test]
+    fn recent_samples_weigh_more() {
+        let mut w = SlidingWindow::new(16, 4.0);
+        w.push(0.0);
+        w.push(10.0);
+        // Plain mean would be 5; EWMA must lean toward the newer sample.
+        assert!(w.ewma() > 5.0);
+    }
+}

@@ -1,0 +1,218 @@
+//! Adaptive-replanning regressions (the telemetry tentpole's acceptance
+//! tests), all on fixed seeds like `sim_regression.rs`:
+//!
+//! * fitted μ_cmp converges to the drifted truth (within 15%),
+//! * the adaptive plan strictly beats the static calibrated plan on the
+//!   drifting-capacity scenario,
+//! * quarantine + probe reintegration round-trips a failed worker,
+//! * with no drift, hysteresis keeps the adaptive run *bitwise
+//!   identical* to the static one (no plan thrash),
+//! * traces are bitwise reproducible run over run.
+//!
+//! End-to-end (real coordinator, in-proc workers): the adaptive master
+//! still reproduces local inference and produces per-worker telemetry.
+
+use std::sync::Arc;
+
+use cocoi::coordinator::{
+    ExecMode, LocalCluster, MasterConfig, SchemeKind, WorkerFaults,
+};
+use cocoi::latency::SystemProfile;
+use cocoi::model::graph::forward_local;
+use cocoi::model::{zoo, WeightStore};
+use cocoi::planner::SplitPolicy;
+use cocoi::runtime::FallbackProvider;
+use cocoi::sim::{simulate_adaptive, AdaptiveSimResult, DriftScenario};
+use cocoi::telemetry::EventKind;
+use cocoi::util::Rng;
+
+const N: usize = 10;
+
+fn run(drift: DriftScenario, n_req: usize, adaptive: bool, seed: u64) -> AdaptiveSimResult {
+    let model = zoo::model("vgg16").unwrap();
+    let p = SystemProfile::paper_default();
+    let mut rng = Rng::new(seed);
+    simulate_adaptive(&model, &p, N, drift, n_req, adaptive, 4, &mut rng).unwrap()
+}
+
+/// (a) Under a pool-wide 3x compute slowdown the per-worker fits keep
+/// sampling (no quarantine: scores stay relative to the pool median),
+/// and the fitted pool μ_cmp converges to the drifted truth μ/3.
+#[test]
+fn fitted_mu_cmp_converges_to_drifted_rate() {
+    let p = SystemProfile::paper_default();
+    let res = run(
+        DriftScenario::ComputeSlowdown { m: N, factor: 3.0, at: 4 },
+        40,
+        true,
+        42,
+    );
+    // Uniform drift must not quarantine anybody.
+    assert!(
+        res.events.is_empty(),
+        "uniform drift should not quarantine: {:?}",
+        res.events
+    );
+    let fitted = res.registry.fitted_profile(&p);
+    let true_mu = p.mu_cmp / 3.0;
+    let rel = (fitted.mu_cmp - true_mu).abs() / true_mu;
+    assert!(rel < 0.15, "fitted mu_cmp {:.3e} vs true {true_mu:.3e} (rel {rel:.3})", fitted.mu_cmp);
+    // θ stretches with the wall-time slowdown too.
+    let true_theta = p.theta_cmp * 3.0;
+    let rel_t = (fitted.theta_cmp - true_theta).abs() / true_theta;
+    assert!(rel_t < 0.10, "fitted theta_cmp rel err {rel_t:.3}");
+}
+
+/// (b) Three workers slowing down 3x overwhelms the static plan's
+/// redundancy (k°=8 of n=10 absorbs only two); the adaptive policy
+/// quarantines them, re-solves for the shrunken pool, and wins the
+/// post-drift window outright. Common random numbers (same seed) make
+/// the comparison noise-free.
+#[test]
+fn adaptive_beats_static_under_drift() {
+    let drift = DriftScenario::ComputeSlowdown { m: 3, factor: 3.0, at: 8 };
+    let stat = run(drift, 32, false, 7);
+    let adap = run(drift, 32, true, 7);
+    let stat_mean = stat.mean_from(16);
+    let adap_mean = adap.mean_from(16);
+    assert!(
+        adap_mean < stat_mean,
+        "adaptive {adap_mean:.2}s must beat static {stat_mean:.2}s"
+    );
+    // The python-prototyped margin is ~0.85-0.90; leave headroom.
+    assert!(
+        adap_mean < 0.97 * stat_mean,
+        "win too thin: {adap_mean:.2}s vs {stat_mean:.2}s"
+    );
+    assert!(adap.switches >= 1, "expected at least one plan swap");
+    assert!(
+        adap.events.iter().any(|e| e.kind == EventKind::QuarantineSlow),
+        "expected straggler quarantines: {:?}",
+        adap.events
+    );
+    // The static policy never switches or quarantines.
+    assert_eq!(stat.switches, 0);
+    assert!(stat.events.is_empty());
+}
+
+/// (c) A worker that dies and later returns is quarantined on
+/// consecutive failures, probed while down, and reintegrated once its
+/// probes succeed — and the adaptive run stays within noise of static.
+#[test]
+fn quarantine_and_reintegration_roundtrip() {
+    let drift = DriftScenario::DieAndReturn { worker: 2, down_at: 6, up_at: 18 };
+    let adap = run(drift, 32, true, 11);
+    let quarantined_at = adap
+        .events
+        .iter()
+        .position(|e| e.kind == EventKind::QuarantineFail && e.worker == 2)
+        .expect("worker 2 must be quarantined after consecutive failures");
+    let reintegrated_at = adap
+        .events
+        .iter()
+        .position(|e| e.kind == EventKind::Reintegrate && e.worker == 2)
+        .expect("worker 2 must be reintegrated after it returns");
+    assert!(quarantined_at < reintegrated_at);
+    assert!(!adap.registry.is_quarantined(2), "round-trip must complete");
+    let stat = run(drift, 32, false, 11);
+    assert!(
+        adap.mean() <= 1.05 * stat.mean(),
+        "adaptive {:.2}s vs static {:.2}s",
+        adap.mean(),
+        stat.mean()
+    );
+}
+
+/// With stationary capacities the hysteresis must hold the incumbent
+/// plan: no swaps, no quarantines — and because the sim draws on common
+/// random numbers, the adaptive trace is bitwise identical to static.
+#[test]
+fn no_drift_no_thrash_bitwise() {
+    let stat = run(DriftScenario::None, 16, false, 21);
+    let adap = run(DriftScenario::None, 16, true, 21);
+    assert_eq!(adap.switches, 0, "plan thrash with no drift");
+    assert!(adap.events.is_empty());
+    assert_eq!(adap.final_ks, stat.final_ks);
+    for (i, (a, s)) in adap.latencies.iter().zip(&stat.latencies).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            s.to_bits(),
+            "request {i}: adaptive {a} != static {s}"
+        );
+    }
+}
+
+/// Fixed seed => bitwise-identical trace, drift or not (the
+/// sim_regression.rs contract extended to the adaptive loop).
+#[test]
+fn adaptive_traces_are_reproducible() {
+    for drift in [
+        DriftScenario::None,
+        DriftScenario::ComputeSlowdown { m: 3, factor: 3.0, at: 8 },
+        DriftScenario::DieAndReturn { worker: 2, down_at: 6, up_at: 18 },
+        DriftScenario::TransmissionCongestion { factor: 30.0, at: 8 },
+    ] {
+        let a = run(drift, 20, true, 5);
+        let b = run(drift, 20, true, 5);
+        assert_eq!(a.latencies.len(), b.latencies.len());
+        for (x, y) in a.latencies.iter().zip(&b.latencies) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{drift:?}");
+        }
+        assert_eq!(a.switches, b.switches);
+        assert_eq!(a.events, b.events);
+    }
+}
+
+/// End-to-end on the real coordinator: an adaptive master (pipelined
+/// engine, in-proc pool) still reproduces local inference bit-for-bit
+/// within tolerance, collects per-worker phase telemetry, and exposes a
+/// well-formed telemetry dump.
+#[test]
+fn adaptive_master_end_to_end() {
+    let model = zoo::model("tinyvgg").unwrap();
+    let weights = WeightStore::generate(&model, 42).unwrap();
+    let mut input = cocoi::conv::Tensor::zeros(3, 56, 56);
+    Rng::new(33).fill_uniform_f32(&mut input.data, -1.0, 1.0);
+    let want = forward_local(&model, &weights, &input).unwrap();
+
+    let config = MasterConfig {
+        scheme: SchemeKind::Mds,
+        policy: SplitPolicy::Fixed(3),
+        mode: ExecMode::Pipelined,
+        adaptive: true,
+        ..Default::default()
+    };
+    let n = 4;
+    let mut cluster = LocalCluster::spawn(
+        "tinyvgg",
+        n,
+        config,
+        Arc::new(FallbackProvider::new()),
+        (0..n).map(|_| WorkerFaults::none()).collect(),
+    )
+    .unwrap();
+    let inputs = vec![input.clone(), input.clone()];
+    let results = cluster.master.infer_batch(&inputs).unwrap();
+    assert_eq!(results.len(), 2);
+    for (got, metrics) in &results {
+        assert_eq!(got.shape(), want.shape());
+        let err = got.max_abs_diff(&want);
+        assert!(err < 2e-2, "adaptive output differs from local by {err}");
+        // Per-worker breakdown present on distributed layers, and the
+        // decomposition is sane (nonnegative, bounded by the round).
+        let dist = metrics.layers.iter().find(|l| l.distributed).unwrap();
+        assert!(!dist.per_worker.is_empty());
+        for wp in &dist.per_worker {
+            assert!(wp.worker < n);
+            assert!(wp.execution >= 0.0 && wp.transmission >= 0.0);
+        }
+    }
+
+    // Telemetry dump carries one entry per worker and the plan in force.
+    let dump = cluster.master.telemetry_json();
+    let workers = dump.get("registry").get("workers").as_arr().unwrap();
+    assert_eq!(workers.len(), n);
+    assert!(dump.get("adaptive").as_bool().unwrap());
+    assert!(!dump.get("plan").as_arr().unwrap().is_empty());
+    cluster.shutdown().unwrap();
+}
