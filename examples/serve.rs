@@ -13,7 +13,10 @@
 use std::sync::Arc;
 
 use cocoi::conv::Tensor;
-use cocoi::coordinator::{ExecMode, LocalCluster, MasterConfig, ScenarioFaults, SchemeKind};
+use cocoi::coordinator::{
+    ExecMode, InferenceRequest, InferenceServer, LocalCluster, MasterConfig, ScenarioFaults,
+    SchemeKind, ServeError, ServerConfig, SubmitError,
+};
 use cocoi::model::graph::forward_local;
 use cocoi::model::{zoo, WeightStore};
 use cocoi::planner::SplitPolicy;
@@ -147,5 +150,84 @@ fn main() -> anyhow::Result<()> {
         wall / wall_pipe
     );
     println!("cancelled     : {cancelled} straggler subtasks freed early");
+
+    // == phase 3: the streaming serving API — non-blocking submits, ==
+    // == open-loop trickle, priorities + deadlines, out-of-order    ==
+    // == completion, backpressure via the bounded admission queue   ==
+    let faults = ScenarioFaults::straggling(n, 0.3, 0.010);
+    let config = MasterConfig {
+        scheme: SchemeKind::Mds,
+        policy: SplitPolicy::Fixed(4),
+        mode: ExecMode::Pipelined,
+        ..Default::default()
+    };
+    let cluster = LocalCluster::spawn("tinyvgg", n, config, provider.clone(), faults)?;
+    let (master, workers) = cluster.into_parts();
+    let server = InferenceServer::start(
+        master,
+        ServerConfig {
+            queue_capacity: 8,
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::new(2025); // same request stream again
+    let mut handles = Vec::new();
+    let mut rejected = 0usize;
+    let t_all = std::time::Instant::now();
+    for i in 0..requests {
+        let mut input = Tensor::zeros(3, 56, 56);
+        rng.fill_uniform_f32(&mut input.data, -1.0, 1.0);
+        // Every 4th request is urgent: higher priority, 30 s deadline.
+        let mut req = InferenceRequest::new(input);
+        if i % 4 == 0 {
+            req = req
+                .with_priority(1)
+                .with_deadline(std::time::Duration::from_secs(30));
+        }
+        match server.submit(req) {
+            Ok(h) => handles.push(h),
+            Err(SubmitError::QueueFull) => rejected += 1, // backpressure: drop this one
+            Err(e) => anyhow::bail!("submit failed: {e}"),
+        }
+        // Open-loop-ish trickle: requests keep arriving mid-flight.
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    // Sojourns are engine-stamped: collecting in submission order still
+    // measures each (possibly out-of-order-completed) request exactly.
+    let mut stream_lat = Summary::new();
+    let mut shed = 0usize;
+    for h in handles {
+        let (res, sojourn) = h.wait_timed();
+        match res {
+            Ok(_) => stream_lat.push(sojourn.as_secs_f64()),
+            Err(ServeError::DeadlineShed { .. }) => shed += 1,
+            Err(e) => anyhow::bail!("streamed request failed: {e}"),
+        }
+    }
+    let wall_stream = t_all.elapsed().as_secs_f64();
+    let stats = server.stats();
+    let master = server.shutdown()?;
+    master.shutdown();
+    workers.join()?;
+
+    println!("\n== streaming serving API (submit/handle, queue cap 8) ==");
+    println!(
+        "served        : {} of {requests} ({} shed on deadline, {rejected} \
+         refused on backpressure)",
+        stream_lat.len(),
+        shed
+    );
+    println!(
+        "sojourn       : p50 {:.0} ms   p95 {:.0} ms   mean {:.0} ms",
+        stream_lat.quantile(0.5) * 1e3,
+        stream_lat.quantile(0.95) * 1e3,
+        stream_lat.mean() * 1e3
+    );
+    println!(
+        "throughput    : {:.2} req/s (stats: {} submitted, {} completed)",
+        stream_lat.len() as f64 / wall_stream,
+        stats.submitted,
+        stats.completed
+    );
     Ok(())
 }

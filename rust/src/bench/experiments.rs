@@ -22,12 +22,10 @@ use super::harness::{fmt_secs, BenchJson, BenchTimer, Table};
 /// Fold scenario-1's extra `Exp(λ_tr · T̄_tr)` transmission delay into the
 /// profile: each transmission phase's exponential part grows by
 /// `λ_tr × (θ + 1/μ)` per unit, i.e. `1/μ' = 1/μ + λ_tr (θ + 1/μ)`.
+/// (Thin alias of [`crate::sim::straggling_profile`], kept for the
+/// bench drivers' historical name.)
 pub fn scenario1_profile(base: &SystemProfile, lambda_tr: f64) -> SystemProfile {
-    let fold = |mu: f64, theta: f64| 1.0 / (1.0 / mu + lambda_tr * (theta + 1.0 / mu));
-    let mut p = *base;
-    p.mu_rec = fold(base.mu_rec, base.theta_rec);
-    p.mu_sen = fold(base.mu_sen, base.theta_sen);
-    p
+    crate::sim::straggling_profile(base, lambda_tr)
 }
 
 /// Per-model calibrated profile (App. B): θ_cmp scaled so total conv
@@ -665,7 +663,10 @@ pub fn throughput(scale: Scale) -> Result<()> {
 }
 
 /// The throughput measurement itself, parameterized so bench drivers
-/// (`bench_e2e`) can run it with their own pool size / provider.
+/// (`bench_e2e`) can run it with their own pool size / provider. The
+/// pipelined column runs through the streaming serving API
+/// (`InferenceServer` submit/handle), which also yields the per-request
+/// sojourn percentiles the makespan alone hides.
 pub fn throughput_with(
     n: usize,
     provider: std::sync::Arc<dyn crate::runtime::ConvProvider>,
@@ -673,8 +674,11 @@ pub fn throughput_with(
     batch: usize,
 ) -> Result<()> {
     use crate::coordinator::{
-        ExecMode, LocalCluster, MasterConfig, ScenarioFaults, SchemeKind, WorkerFaults,
+        InferenceRequest, InferenceServer, LocalCluster, MasterConfig, ScenarioFaults,
+        SchemeKind, ServerConfig, WorkerFaults,
     };
+    use crate::coordinator::ExecMode;
+    use crate::sim::percentile;
 
     // k < n so MDS keeps redundancy on every pool size.
     let k = (n - 1).min(4).max(1);
@@ -683,7 +687,7 @@ pub fn throughput_with(
             "Throughput — tinyvgg, n={n} in-proc workers, k={k}, batch={batch} \
              requests, provider={prov_name}"
         ),
-        &["scheme", "faults", "barrier", "pipelined", "speedup"],
+        &["scheme", "faults", "barrier", "pipelined", "speedup", "req p50/p95"],
     );
     let healthy = || (0..n).map(|_| WorkerFaults::none()).collect::<Vec<_>>();
     let cases: [(SchemeKind, &str, Vec<WorkerFaults>); 3] = [
@@ -693,46 +697,248 @@ pub fn throughput_with(
         (SchemeKind::Mds, "straggle λ=0.5", ScenarioFaults::straggling(n, 0.5, 0.010)),
         (SchemeKind::Uncoded, "none", healthy()),
     ];
+    let inputs_for = |batch: usize| -> Vec<crate::conv::Tensor> {
+        let mut rng = Rng::new(42);
+        (0..batch)
+            .map(|_| {
+                let mut t = crate::conv::Tensor::zeros(3, 56, 56);
+                rng.fill_uniform_f32(&mut t.data, -1.0, 1.0);
+                t
+            })
+            .collect()
+    };
     for (scheme, faults_name, faults) in cases {
-        let mut run = |mode: ExecMode| -> Result<f64> {
-            let config = MasterConfig {
-                scheme,
-                policy: SplitPolicy::Fixed(k),
-                mode,
-                ..Default::default()
-            };
-            let mut cluster =
-                LocalCluster::spawn("tinyvgg", n, config, provider.clone(), faults.clone())?;
-            let mut rng = Rng::new(42);
-            let inputs: Vec<crate::conv::Tensor> = (0..batch)
-                .map(|_| {
-                    let mut t = crate::conv::Tensor::zeros(3, 56, 56);
-                    rng.fill_uniform_f32(&mut t.data, -1.0, 1.0);
-                    t
-                })
-                .collect();
+        let config = |mode: ExecMode| MasterConfig {
+            scheme,
+            policy: SplitPolicy::Fixed(k),
+            mode,
+            ..Default::default()
+        };
+        // Round barrier: the blocking batch path.
+        let barrier = {
+            let mut cluster = LocalCluster::spawn(
+                "tinyvgg",
+                n,
+                config(ExecMode::RoundBarrier),
+                provider.clone(),
+                faults.clone(),
+            )?;
+            let inputs = inputs_for(batch);
             let _ = cluster.master.infer(&inputs[0])?; // warmup
             let t0 = std::time::Instant::now();
             let _ = cluster.master.infer_batch(&inputs)?;
             let dt = t0.elapsed().as_secs_f64();
             cluster.shutdown()?;
-            Ok(dt)
+            dt
         };
-        let barrier = run(ExecMode::RoundBarrier)?;
-        let pipe = run(ExecMode::Pipelined)?;
+        // Pipelined: submit the batch through the serving front-end and
+        // record each request's submit→completion sojourn.
+        let (pipe, lats) = {
+            let cluster = LocalCluster::spawn(
+                "tinyvgg",
+                n,
+                config(ExecMode::Pipelined),
+                provider.clone(),
+                faults.clone(),
+            )?;
+            let (mut master, workers) = cluster.into_parts();
+            let inputs = inputs_for(batch);
+            let _ = master.infer(&inputs[0])?; // warmup before serving
+            let server = InferenceServer::start(
+                master,
+                ServerConfig {
+                    queue_capacity: batch.max(1),
+                    ..Default::default()
+                },
+            );
+            let t0 = std::time::Instant::now();
+            let mut handles = Vec::with_capacity(batch);
+            for input in &inputs {
+                let h = server
+                    .submit(InferenceRequest::new(input.clone()))
+                    .map_err(|e| anyhow::anyhow!("submit failed: {e}"))?;
+                handles.push(h);
+            }
+            // Sojourns are engine-stamped, so awaiting in submission
+            // order measures each request exactly.
+            let mut lats = Vec::with_capacity(handles.len());
+            for h in handles {
+                let (res, sojourn) = h.wait_timed();
+                res.map_err(|e| anyhow::anyhow!("request failed: {e}"))?;
+                lats.push(sojourn.as_secs_f64());
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let master = server.shutdown()?;
+            master.shutdown();
+            workers.join()?;
+            (dt, lats)
+        };
         table.row(vec![
             scheme.name().to_string(),
             faults_name.to_string(),
             format!("{:.0}ms ({:.1} req/s)", barrier * 1e3, batch as f64 / barrier),
             format!("{:.0}ms ({:.1} req/s)", pipe * 1e3, batch as f64 / pipe),
             format!("{:.2}x", barrier / pipe),
+            format!(
+                "{:.0}/{:.0}ms",
+                percentile(&lats, 0.50) * 1e3,
+                percentile(&lats, 0.95) * 1e3
+            ),
         ]);
     }
     table.print();
     println!(
-        "(pipelined engine: requests multiplexed over the pool, decode \
-         overlapped with other requests' compute, stragglers cancelled; \
-         identical outputs to the barrier path — see rust/tests/pipeline.rs)"
+        "(pipelined engine: requests multiplexed over the pool via the serving \
+         API, decode overlapped with other requests' compute, stragglers \
+         cancelled; identical outputs to the barrier path — see \
+         rust/tests/pipeline.rs and rust/tests/serving.rs)"
+    );
+    Ok(())
+}
+
+// ====================================================================
+// §Serving: open-loop Poisson load through the serving stack — latency
+// percentiles + shed rate, barrier vs pipelined vs pipelined+adaptive.
+// Emits BENCH_serving.json and *fails* if the pipelined engine loses to
+// the barrier on p95 at any load point (the API-redesign acceptance
+// gate, validated per-trial in rust/tests as well).
+// ====================================================================
+pub fn serving(scale: Scale) -> Result<()> {
+    use crate::sim::{simulate_serving_open, ServeSimMode};
+    use crate::util::json::Json;
+
+    let model = zoo::model("vgg16")?;
+    let p = SystemProfile::paper_default();
+    let n = 10;
+    let method = MethodSim::CocoiKCirc;
+    let scenario = Scenario::Straggling { lambda_tr: 0.5 };
+    let arrivals = (scale.trials * 25).clamp(100, 600);
+    let modes = [
+        ServeSimMode::Barrier,
+        ServeSimMode::Pipelined,
+        ServeSimMode::PipelinedAdaptive,
+    ];
+
+    // Pilot: mean isolated service time (16 non-overlapping requests)
+    // fixes the load scale.
+    let service = {
+        let mut rng = Rng::new(0x5E21);
+        let r = simulate_serving_open(
+            &model, &p, n, method, scenario,
+            ServeSimMode::Barrier, 1e-9, 16, None, &mut rng,
+        )?;
+        r.latencies.iter().sum::<f64>() / r.latencies.len() as f64
+    };
+
+    let mut json = BenchJson::new("serving");
+    json.set_num("n_workers", n as f64);
+    json.set_num("arrivals", arrivals as f64);
+    json.set_num("isolated_service_s", service);
+    json.set("scenario", Json::Str(scenario.label()));
+
+    // -- sweep 1: offered load, no deadlines (the p95 gate) -----------
+    // Loads are relative to the *barrier's* capacity and start at its
+    // saturation point: that is the regime that motivates pipelined
+    // serving. (Below saturation both engines are stable and the FIFO
+    // barrier keeps the classic tail advantage for near-deterministic
+    // service times — pipelining buys capacity headroom there, which is
+    // exactly what these points measure.)
+    let rhos = [1.05, 1.15, 1.3];
+    let mut table = Table::new(
+        &format!(
+            "Serving — vgg16 open-loop sim, n={n}, {arrivals} Poisson arrivals per \
+             point, {} (offered load relative to the barrier's capacity)",
+            scenario.label()
+        ),
+        &["offered load", "mode", "p50", "p95", "p99", "mean"],
+    );
+    let mut gate_ok = true;
+    for &rho in &rhos {
+        let rate = rho / service;
+        let mut barrier_p95 = f64::NAN;
+        for mode in modes {
+            let mut rng = Rng::new(0x5EE5 ^ (rho * 100.0) as u64);
+            let r = simulate_serving_open(
+                &model, &p, n, method, scenario, mode, rate, arrivals, None, &mut rng,
+            )?;
+            if mode == ServeSimMode::Barrier {
+                barrier_p95 = r.p95();
+            } else if mode == ServeSimMode::Pipelined
+                && !(r.p95() <= barrier_p95 * (1.0 + 1e-9))
+            {
+                gate_ok = false;
+            }
+            table.row(vec![
+                format!("{rho:.2}"),
+                r.mode.to_string(),
+                fmt_secs(r.p50()),
+                fmt_secs(r.p95()),
+                fmt_secs(r.p99()),
+                fmt_secs(r.mean()),
+            ]);
+            json.set(
+                &format!("load{:02.0}_{}", rho * 100.0, r.mode),
+                Json::obj(vec![
+                    ("rate_rps", Json::Num(rate)),
+                    ("p50_s", Json::Num(r.p50())),
+                    ("p95_s", Json::Num(r.p95())),
+                    ("p99_s", Json::Num(r.p99())),
+                    ("mean_s", Json::Num(r.mean())),
+                    ("served", Json::Num(r.latencies.len() as f64)),
+                ]),
+            );
+        }
+    }
+    table.print();
+
+    // -- sweep 2: deadline shedding in overload -----------------------
+    let deadline = 3.0 * service;
+    let rate = 1.2 / service; // past the barrier's capacity: sheds must kick in
+    let mut table = Table::new(
+        &format!(
+            "Serving — deadline {}: shed rate at offered load 1.20 \
+             ({arrivals} arrivals)",
+            fmt_secs(deadline)
+        ),
+        &["mode", "served p50", "served p95", "shed"],
+    );
+    for mode in modes {
+        let mut rng = Rng::new(0xDEAD11);
+        let r = simulate_serving_open(
+            &model, &p, n, method, scenario, mode, rate, arrivals,
+            Some(deadline), &mut rng,
+        )?;
+        table.row(vec![
+            r.mode.to_string(),
+            fmt_secs(r.p50()),
+            fmt_secs(r.p95()),
+            format!("{:.1}%", 100.0 * r.shed_rate()),
+        ]);
+        json.set(
+            &format!("deadline_{}", r.mode),
+            Json::obj(vec![
+                ("deadline_s", Json::Num(deadline)),
+                ("rate_rps", Json::Num(rate)),
+                ("p50_s", Json::Num(r.p50())),
+                ("p95_s", Json::Num(r.p95())),
+                ("shed_rate", Json::Num(r.shed_rate())),
+                ("served", Json::Num(r.latencies.len() as f64)),
+            ]),
+        );
+    }
+    table.print();
+
+    json.set("gate_pipelined_p95_le_barrier", Json::Bool(gate_ok));
+    let path = json.write()?;
+    println!(
+        "(open-loop Poisson arrivals through the serving stack; gate: pipelined \
+         p95 <= barrier p95 at every load point — {}) results -> {}",
+        if gate_ok { "PASS" } else { "FAIL" },
+        path.display()
+    );
+    anyhow::ensure!(
+        gate_ok,
+        "pipelined serving lost to the barrier on p95 at equal offered load"
     );
     Ok(())
 }

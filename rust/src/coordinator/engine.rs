@@ -1,27 +1,38 @@
-//! The pipelined execution engine.
+//! The pipelined execution engine — a continuous, admission-driven run
+//! loop.
 //!
 //! The round-barrier path (`Master::infer`) dispatches layer ℓ, blocks
 //! until it decodes, then starts layer ℓ+1 — workers sit idle while the
 //! master decodes/re-encodes, and exactly one request is served at a
-//! time. This engine removes both stalls:
+//! time. This engine removes both stalls and, since the serving API
+//! redesign, no longer needs the full request list up front:
 //!
-//! * several inference requests are in flight at once, each advancing
-//!   through the model graph independently;
-//! * a distributed conv dispatches its encoded subtasks to the
-//!   *least-loaded* workers and yields back to the event loop instead of
-//!   blocking, so other requests' rounds keep the pool busy while this
-//!   one waits, decodes, or re-encodes;
+//! * requests are *admitted* between event-loop iterations: the loop
+//!   blocks on the master's single event channel, which multiplexes
+//!   worker replies with [`MasterEvent::Submit`] from the serving
+//!   front-end ([`super::server::InferenceServer`]);
+//! * admitted requests wait in a queue ordered by **(priority, deadline,
+//!   submission order)** — not batch index — and start when a
+//!   concurrency slot frees up (`StreamOptions::max_concurrent`);
+//! * requests whose deadline has expired, or whose predicted completion
+//!   (from the telemetry-fitted profile, `--adaptive`) misses it, are
+//!   shed at dispatch time instead of served late;
+//! * several in-flight requests advance through the model graph
+//!   independently; a distributed conv dispatches its encoded subtasks
+//!   to the *least-loaded* workers and yields back to the event loop;
 //! * the moment a round has its first `k` results, its outstanding
 //!   straggler subtasks are cancelled ([`ToWorker::Cancel`]) so the
 //!   per-worker queues (see `coordinator::worker`) drop them and free
-//!   capacity for the next wave.
+//!   capacity for the next wave;
+//! * `maybe_replan` runs after every finished round, so the adaptive
+//!   plan tracks the *live* arrival stream rather than batch boundaries.
 //!
-//! A single request's latency is still bounded by its layer dependency
-//! chain, so the speedup materialises as multi-request throughput — see
-//! the `throughput` experiment in `bench::experiments` and the
-//! `bench_e2e` driver.
+//! `Master::infer_batch` is a thin wrapper: it seeds the admission queue
+//! with the whole batch and drains it ([`StreamOptions::draining`]), so
+//! the batch path and the serving path cannot diverge.
 
-use std::collections::{BTreeMap, HashMap};
+use std::cmp::Ordering;
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -30,9 +41,86 @@ use crate::coding;
 use crate::conv::Tensor;
 use crate::model::{Node, Op};
 
-use super::master::{assemble_output, Master, PreparedRound};
+use super::master::{assemble_output, Master, MasterEvent, PreparedRound};
 use super::messages::{FromWorker, ToWorker};
 use super::metrics::InferenceMetrics;
+use super::server::ServeError;
+
+/// One admitted request, as the engine sees it.
+pub(super) struct EngineRequest {
+    pub(super) id: u64,
+    pub(super) input: Tensor,
+    /// Larger = more urgent (the dispatch-order key ahead of the
+    /// deadline).
+    pub(super) priority: u8,
+    pub(super) deadline: Option<Instant>,
+}
+
+/// Where terminal request outcomes go: the batch wrapper collects them
+/// into a vector, the serving front-end routes them to per-request
+/// handles and keeps the admission accounting.
+pub(super) trait EngineSink {
+    /// Register a server submission (stash its reply channel) and hand
+    /// back the engine-facing request.
+    fn accept(&mut self, req: super::server::ServerRequest) -> EngineRequest;
+    /// Deliver a terminal outcome for request `id`.
+    fn deliver(&mut self, id: u64, result: Result<(Tensor, InferenceMetrics), ServeError>);
+}
+
+/// Run-loop options for [`Master::serve_stream`].
+pub(super) struct StreamOptions {
+    /// Max requests advancing concurrently (0 = unlimited). Admitted
+    /// requests beyond it wait in the (priority, deadline, id) queue.
+    pub(super) max_concurrent: usize,
+    /// Start in draining mode: serve the seeded requests, accept no
+    /// submissions, return when everything delivered (the `infer_batch`
+    /// path). A live server starts `false` and flips on
+    /// [`MasterEvent::Drain`].
+    pub(super) draining: bool,
+}
+
+/// Admission-queue entry: a newtype whose `Ord` ranks the *most urgent*
+/// request greatest (the heap is a max-heap): higher priority first,
+/// then earlier deadline (`None` = no deadline = last), then lower id
+/// (submission order).
+struct Pending {
+    req: EngineRequest,
+}
+
+impl Pending {
+    fn new(req: EngineRequest) -> Pending {
+        Pending { req }
+    }
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Pending {}
+
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.req
+            .priority
+            .cmp(&other.req.priority)
+            .then_with(|| match (self.req.deadline, other.req.deadline) {
+                (Some(a), Some(b)) => b.cmp(&a),
+                (Some(_), None) => Ordering::Greater,
+                (None, Some(_)) => Ordering::Less,
+                (None, None) => Ordering::Equal,
+            })
+            .then_with(|| other.req.id.cmp(&self.req.id))
+    }
+}
 
 /// One request's progress through the model graph.
 struct RequestState {
@@ -41,13 +129,25 @@ struct RequestState {
     node_idx: usize,
     metrics: InferenceMetrics,
     t_start: Instant,
-    output: Option<Tensor>,
+}
+
+impl RequestState {
+    fn new(input: Tensor) -> RequestState {
+        let mut values = BTreeMap::new();
+        values.insert("input".to_string(), input);
+        RequestState {
+            values,
+            node_idx: 0,
+            metrics: InferenceMetrics::default(),
+            t_start: Instant::now(),
+        }
+    }
 }
 
 /// One in-flight coded round: a distributed conv of one request whose
 /// subtasks are out on the pool.
 struct ActiveRound {
-    request: usize,
+    request: u64,
     relu: bool,
     pr: PreparedRound,
     decoder: Box<dyn coding::Decoder>,
@@ -81,39 +181,128 @@ fn pick_worker(load: &[usize], candidates: &[usize], avoid: Option<usize>) -> us
     best_w
 }
 
+/// Collects the batch wrapper's outcomes by submission index.
+struct BatchSink {
+    out: Vec<Option<Result<(Tensor, InferenceMetrics), ServeError>>>,
+}
+
+impl EngineSink for BatchSink {
+    fn accept(&mut self, _req: super::server::ServerRequest) -> EngineRequest {
+        unreachable!("batch mode starts draining; nothing can be submitted")
+    }
+
+    fn deliver(&mut self, id: u64, result: Result<(Tensor, InferenceMetrics), ServeError>) {
+        self.out[id as usize] = Some(result);
+    }
+}
+
 impl Master {
-    /// Pipelined batch inference: every input in flight at once,
-    /// multiplexed over the shared worker pool. Results come back in
-    /// input order.
+    /// Pipelined batch inference: seed the admission queue with every
+    /// input, drain it, return results in input order.
     pub(super) fn infer_pipelined(
         &mut self,
         inputs: &[Tensor],
     ) -> Result<Vec<(Tensor, InferenceMetrics)>> {
-        anyhow::ensure!(!inputs.is_empty(), "empty inference batch");
+        debug_assert!(!inputs.is_empty(), "infer_batch guards the empty case");
+        let seed: Vec<EngineRequest> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, input)| EngineRequest {
+                id: i as u64,
+                input: input.clone(),
+                priority: 0,
+                deadline: None,
+            })
+            .collect();
+        let mut sink = BatchSink {
+            out: (0..inputs.len()).map(|_| None).collect(),
+        };
+        self.serve_stream(
+            seed,
+            StreamOptions {
+                max_concurrent: 0,
+                draining: true,
+            },
+            &mut sink,
+        )?;
+        sink.out
+            .into_iter()
+            .enumerate()
+            .map(|(i, o)| {
+                match o.with_context(|| format!("request {i} was never delivered"))? {
+                    Ok(pair) => Ok(pair),
+                    Err(e) => bail!("request {i}: {e}"),
+                }
+            })
+            .collect()
+    }
+
+    /// Should a request with this deadline be shed instead of started?
+    fn shed_decision(&self, deadline: Option<Instant>) -> Option<ServeError> {
+        let d = deadline?;
+        let remaining = d.saturating_duration_since(Instant::now()).as_secs_f64();
+        if remaining <= 0.0 {
+            // Expired in the queue: serving it late helps nobody.
+            return Some(ServeError::DeadlineShed {
+                predicted_secs: 0.0,
+                remaining_secs: 0.0,
+            });
+        }
+        if let Some(predicted) = self.predicted_service_secs() {
+            if predicted > remaining {
+                return Some(ServeError::DeadlineShed {
+                    predicted_secs: predicted,
+                    remaining_secs: remaining,
+                });
+            }
+        }
+        None
+    }
+
+    /// The engine's continuous run loop: admit from the (priority,
+    /// deadline, id) queue up to the concurrency limit, block on the
+    /// event channel, advance requests as replies arrive, replan between
+    /// rounds, exit when draining and empty. Both `infer_batch`
+    /// (pre-seeded, draining) and the serving front-end (live
+    /// submissions) run through here.
+    pub(super) fn serve_stream(
+        &mut self,
+        seed: Vec<EngineRequest>,
+        opts: StreamOptions,
+        sink: &mut dyn EngineSink,
+    ) -> Result<()> {
         let nodes = self.model.nodes.clone();
         let mut worker_load = vec![0usize; self.n_workers()];
         let mut rounds: HashMap<u64, ActiveRound> = HashMap::new();
-        let mut reqs: Vec<RequestState> = inputs
-            .iter()
-            .map(|input| {
-                let mut values = BTreeMap::new();
-                values.insert("input".to_string(), input.clone());
-                RequestState {
-                    values,
-                    node_idx: 0,
-                    metrics: InferenceMetrics::default(),
-                    t_start: Instant::now(),
-                    output: None,
+        let mut active: BTreeMap<u64, RequestState> = BTreeMap::new();
+        let mut pending: BinaryHeap<Pending> = seed.into_iter().map(Pending::new).collect();
+        let mut draining = opts.draining;
+
+        loop {
+            // -- admission: start the most urgent pending requests ----
+            while !pending.is_empty()
+                && (opts.max_concurrent == 0 || active.len() < opts.max_concurrent)
+            {
+                let req = pending.pop().unwrap().req;
+                if let Some(err) = self.shed_decision(req.deadline) {
+                    sink.deliver(req.id, Err(err));
+                    continue;
                 }
-            })
-            .collect();
+                active.insert(req.id, RequestState::new(req.input));
+                self.advance_request(
+                    req.id,
+                    &nodes,
+                    &mut active,
+                    &mut rounds,
+                    &mut worker_load,
+                    sink,
+                )?;
+            }
+            if draining && pending.is_empty() && active.is_empty() {
+                debug_assert!(rounds.is_empty());
+                return Ok(());
+            }
 
-        // Launch: run every request up to its first distributed round.
-        for r in 0..reqs.len() {
-            self.advance_request(r, &nodes, &mut reqs, &mut rounds, &mut worker_load)?;
-        }
-
-        while reqs.iter().any(|r| r.output.is_none()) {
             // Liveness: a round with nothing outstanding can never decode.
             for ar in rounds.values() {
                 if ar.outstanding.is_empty() && !ar.decoder.ready() {
@@ -127,139 +316,176 @@ impl Master {
                     );
                 }
             }
-            let (wid, msg, arrival) = self
-                .from_workers
-                .recv_timeout(self.config.recv_timeout)
-                .context("pipelined engine: timed out waiting for workers")?;
-            // Every dispatched subtask yields exactly one reply (Output,
-            // Failed, or Skipped after a cancel), so the worker's load
-            // charge is released here — at reply time, never earlier. A
-            // cancelled-but-already-executing subtask therefore keeps its
-            // worker charged until the stale Output actually arrives,
-            // which is what keeps the straggler off the next wave's
-            // least-loaded placement.
-            if !matches!(msg, FromWorker::Ready) {
-                worker_load[wid] = worker_load[wid].saturating_sub(1);
-            }
-            match msg {
-                FromWorker::Output {
-                    round,
-                    task_id,
-                    exec_secs,
-                    data,
-                    ..
-                } => {
-                    let task_id = task_id as usize;
-                    // Telemetry first, even when the round already
-                    // decoded (a cancelled-but-executed straggler's
-                    // stale Output is the estimator's key sample).
-                    let wp = self.record_output(wid, round, task_id, arrival, exec_secs);
-                    let ready = {
-                        let Some(ar) = rounds.get_mut(&round) else {
-                            continue; // stale: round decoded + cancelled earlier
-                        };
-                        ar.outstanding.retain(|&t| t != task_id);
-                        if let Some(wp) = wp {
-                            ar.pr.lm.per_worker.push(wp);
-                        }
-                        if ar.decoder.add(task_id, data) {
-                            true
-                        } else {
-                            ar.received.push(task_id);
-                            false
-                        }
-                    };
-                    if ready {
-                        let ar = rounds.remove(&round).unwrap();
-                        self.finish_round(ar, &nodes, &mut reqs, &mut rounds, &mut worker_load)?;
-                        // Between rounds is the engine's "between
-                        // requests": swap the plan here if one is due.
-                        self.maybe_replan();
-                    }
-                }
-                FromWorker::Skipped { round, task_id } => {
-                    // Normally stale by construction (Cancel is only sent
-                    // after a round decoded). Defensively unblock the
-                    // round if one ever arrives live.
-                    if let Some(ar) = rounds.get_mut(&round) {
-                        ar.outstanding.retain(|&t| t != task_id as usize);
-                    }
-                }
-                FromWorker::Failed { round, task_id } => {
-                    let task_id = task_id as usize;
-                    // Symmetric with record_output: only rounds this
-                    // master still tracks count toward failure streaks.
-                    self.record_failed(wid, round);
-                    let Some(ar) = rounds.get_mut(&round) else {
+
+            // -- block for the next event -----------------------------
+            // Every live in-flight request has a round on the pool, so
+            // an empty `rounds` means the engine is idle: wait (without
+            // a wedge timeout) for a submission or the drain signal.
+            let ev = if rounds.is_empty() {
+                debug_assert!(active.is_empty());
+                self.events.recv().context("master event channel closed")?
+            } else {
+                self.events
+                    .recv_timeout(self.config.recv_timeout)
+                    .context("pipelined engine: timed out waiting for workers")?
+            };
+            match ev {
+                MasterEvent::Submit(sreq) => {
+                    if draining {
+                        // Lost the race with drain(): refuse, don't hang.
+                        sreq.reject();
                         continue;
-                    };
-                    ar.pr.lm.failures += 1;
-                    ar.outstanding.retain(|&t| t != task_id);
-                    if ar
-                        .pr
-                        .scheme
-                        .needs_redispatch(task_id, &ar.received, &ar.outstanding)
-                    {
-                        if ar.pr.lm.redispatches > 4 * ar.pr.frames.len() {
-                            bail!(
-                                "layer {}: re-dispatch storm; giving up",
-                                ar.pr.lm.node_id
-                            );
-                        }
-                        let target = pick_worker(&worker_load, &ar.targets, Some(wid));
-                        if let Some(rt) = self.round_log.get_mut(&round) {
-                            rt.dispatched_at[task_id] = Instant::now();
-                        }
-                        self.worker_tx[target].send(&ar.pr.frames[task_id])?;
-                        worker_load[target] += 1;
-                        ar.assigned[task_id] = target;
-                        ar.outstanding.push(task_id);
-                        ar.pr.lm.redispatches += 1;
-                        log::debug!(
-                            "pipeline: task {task_id} of round {round} failed on \
-                             worker {wid}, re-dispatched to {target}"
-                        );
                     }
+                    pending.push(Pending::new(sink.accept(sreq)));
                 }
-                FromWorker::Ready => bail!("unexpected Ready from worker {wid}"),
+                MasterEvent::Drain => draining = true,
+                MasterEvent::Reply(wid, msg, arrival) => self.handle_reply(
+                    wid,
+                    msg,
+                    arrival,
+                    &nodes,
+                    &mut active,
+                    &mut rounds,
+                    &mut worker_load,
+                    sink,
+                )?,
             }
         }
-
-        Ok(reqs
-            .into_iter()
-            .map(|mut r| (r.output.take().unwrap(), r.metrics))
-            .collect())
     }
 
-    /// Execute `reqs[req]` forward from its cursor: type-2/simple ops run
-    /// locally; the first distributed conv dispatches a round and yields.
-    fn advance_request(
+    /// Fold one worker reply into the engine state; finishes (and
+    /// advances past) any round it completes.
+    #[allow(clippy::too_many_arguments)]
+    fn handle_reply(
         &mut self,
-        req: usize,
+        wid: usize,
+        msg: FromWorker,
+        arrival: Instant,
         nodes: &[Node],
-        reqs: &mut [RequestState],
+        active: &mut BTreeMap<u64, RequestState>,
         rounds: &mut HashMap<u64, ActiveRound>,
         worker_load: &mut [usize],
+        sink: &mut dyn EngineSink,
+    ) -> Result<()> {
+        // Every dispatched subtask yields exactly one reply (Output,
+        // Failed, or Skipped after a cancel), so the worker's load
+        // charge is released here — at reply time, never earlier. A
+        // cancelled-but-already-executing subtask therefore keeps its
+        // worker charged until the stale Output actually arrives,
+        // which is what keeps the straggler off the next wave's
+        // least-loaded placement.
+        if !matches!(msg, FromWorker::Ready) {
+            worker_load[wid] = worker_load[wid].saturating_sub(1);
+        }
+        match msg {
+            FromWorker::Output {
+                round,
+                task_id,
+                exec_secs,
+                data,
+                ..
+            } => {
+                let task_id = task_id as usize;
+                // Telemetry first, even when the round already decoded
+                // (a cancelled-but-executed straggler's stale Output is
+                // the estimator's key sample).
+                let wp = self.record_output(wid, round, task_id, arrival, exec_secs);
+                let ready = {
+                    let Some(ar) = rounds.get_mut(&round) else {
+                        return Ok(()); // stale: round decoded + cancelled earlier
+                    };
+                    ar.outstanding.retain(|&t| t != task_id);
+                    if let Some(wp) = wp {
+                        ar.pr.lm.per_worker.push(wp);
+                    }
+                    if ar.decoder.add(task_id, data) {
+                        true
+                    } else {
+                        ar.received.push(task_id);
+                        false
+                    }
+                };
+                if ready {
+                    let ar = rounds.remove(&round).unwrap();
+                    self.finish_round(ar, nodes, active, rounds, worker_load, sink)?;
+                    // Between rounds is the live stream's "between
+                    // requests": swap the plan here if one is due.
+                    self.maybe_replan();
+                }
+            }
+            FromWorker::Skipped { round, task_id } => {
+                // Normally stale by construction (Cancel is only sent
+                // after a round decoded). Defensively unblock the round
+                // if one ever arrives live.
+                if let Some(ar) = rounds.get_mut(&round) {
+                    ar.outstanding.retain(|&t| t != task_id as usize);
+                }
+            }
+            FromWorker::Failed { round, task_id } => {
+                let task_id = task_id as usize;
+                // Symmetric with record_output: only rounds this master
+                // still tracks count toward failure streaks.
+                self.record_failed(wid, round);
+                let Some(ar) = rounds.get_mut(&round) else {
+                    return Ok(());
+                };
+                ar.pr.lm.failures += 1;
+                ar.outstanding.retain(|&t| t != task_id);
+                if ar
+                    .pr
+                    .scheme
+                    .needs_redispatch(task_id, &ar.received, &ar.outstanding)
+                {
+                    if ar.pr.lm.redispatches > 4 * ar.pr.frames.len() {
+                        bail!("layer {}: re-dispatch storm; giving up", ar.pr.lm.node_id);
+                    }
+                    let target = pick_worker(worker_load, &ar.targets, Some(wid));
+                    if let Some(rt) = self.round_log.get_mut(&round) {
+                        rt.dispatched_at[task_id] = Instant::now();
+                    }
+                    self.worker_tx[target].send(&ar.pr.frames[task_id])?;
+                    worker_load[target] += 1;
+                    ar.assigned[task_id] = target;
+                    ar.outstanding.push(task_id);
+                    ar.pr.lm.redispatches += 1;
+                    log::debug!(
+                        "pipeline: task {task_id} of round {round} failed on \
+                         worker {wid}, re-dispatched to {target}"
+                    );
+                }
+            }
+            FromWorker::Ready => bail!("unexpected Ready from worker {wid}"),
+        }
+        Ok(())
+    }
+
+    /// Execute request `id` forward from its cursor: type-2/simple ops
+    /// run locally; the first distributed conv dispatches a round and
+    /// yields. A request that reaches the end of the graph is delivered
+    /// to the sink and removed from the active set.
+    fn advance_request(
+        &mut self,
+        id: u64,
+        nodes: &[Node],
+        active: &mut BTreeMap<u64, RequestState>,
+        rounds: &mut HashMap<u64, ActiveRound>,
+        worker_load: &mut [usize],
+        sink: &mut dyn EngineSink,
     ) -> Result<()> {
         loop {
-            if reqs[req].node_idx >= nodes.len() {
-                if reqs[req].output.is_none() {
-                    let last = nodes.last().unwrap();
-                    let out = reqs[req]
-                        .values
-                        .remove(&last.id)
-                        .context("missing model output")?;
-                    reqs[req].metrics.total_seconds =
-                        reqs[req].t_start.elapsed().as_secs_f64();
-                    reqs[req].output = Some(out);
-                }
+            if active[&id].node_idx >= nodes.len() {
+                let mut st = active.remove(&id).unwrap();
+                let last = nodes.last().unwrap();
+                let out = st.values.remove(&last.id).context("missing model output")?;
+                st.metrics.total_seconds = st.t_start.elapsed().as_secs_f64();
+                sink.deliver(id, Ok((out, st.metrics)));
                 return Ok(());
             }
-            let node = &nodes[reqs[req].node_idx];
+            let node = &nodes[active[&id].node_idx];
             let fetched: Vec<Tensor> = node
                 .inputs
                 .iter()
-                .map(|i| reqs[req].values.get(i).cloned().context("missing value"))
+                .map(|i| active[&id].values.get(i).cloned().context("missing value"))
                 .collect::<Result<_>>()?;
             match &node.op {
                 Op::Conv { spec, relu } => {
@@ -277,8 +503,10 @@ impl Master {
                         // probes), the full pool otherwise.
                         let targets = self.dispatch_targets();
                         let k_eff = self.effective_k(dist.1, targets.len());
+                        // The wire's request tag is diagnostic-only; a
+                        // long-lived server's ids may exceed u32.
                         let pr = self.prepare_round(
-                            req as u32,
+                            id as u32,
                             &node.id,
                             &spec,
                             k_eff,
@@ -321,7 +549,7 @@ impl Master {
                         rounds.insert(
                             pr.round,
                             ActiveRound {
-                                request: req,
+                                request: id,
                                 relu,
                                 pr,
                                 decoder,
@@ -336,14 +564,16 @@ impl Master {
                         );
                         return Ok(()); // yield: event loop resumes us
                     }
-                    let out = self.run_local_node(node, &fetched, &mut reqs[req].metrics)?;
-                    reqs[req].values.insert(node.id.clone(), out);
-                    reqs[req].node_idx += 1;
+                    let st = active.get_mut(&id).unwrap();
+                    let out = self.run_local_node(node, &fetched, &mut st.metrics)?;
+                    st.values.insert(node.id.clone(), out);
+                    st.node_idx += 1;
                 }
                 _ => {
-                    let out = self.run_local_node(node, &fetched, &mut reqs[req].metrics)?;
-                    reqs[req].values.insert(node.id.clone(), out);
-                    reqs[req].node_idx += 1;
+                    let st = active.get_mut(&id).unwrap();
+                    let out = self.run_local_node(node, &fetched, &mut st.metrics)?;
+                    st.values.insert(node.id.clone(), out);
+                    st.node_idx += 1;
                 }
             }
         }
@@ -355,9 +585,10 @@ impl Master {
         &mut self,
         mut ar: ActiveRound,
         nodes: &[Node],
-        reqs: &mut [RequestState],
+        active: &mut BTreeMap<u64, RequestState>,
         rounds: &mut HashMap<u64, ActiveRound>,
         worker_load: &mut [usize],
+        sink: &mut dyn EngineSink,
     ) -> Result<()> {
         // Cancel outstanding stragglers so worker queues drop them. Their
         // load charges are NOT released here: each cancelled subtask
@@ -388,11 +619,53 @@ impl Master {
         let out = assemble_output(&ar.pr, decoded, ar.remainder.take(), ar.relu)?;
         ar.pr.lm.t_local = ar.t_local + t0.elapsed().as_secs_f64();
 
-        let req = ar.request;
-        let node_id = nodes[reqs[req].node_idx].id.clone();
-        reqs[req].metrics.layers.push(ar.pr.lm.clone());
-        reqs[req].values.insert(node_id, out);
-        reqs[req].node_idx += 1;
-        self.advance_request(req, nodes, reqs, rounds, worker_load)
+        let id = ar.request;
+        let st = active.get_mut(&id).context("finished round for unknown request")?;
+        let node_id = nodes[st.node_idx].id.clone();
+        st.metrics.layers.push(ar.pr.lm.clone());
+        st.values.insert(node_id, out);
+        st.node_idx += 1;
+        self.advance_request(id, nodes, active, rounds, worker_load, sink)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn req(id: u64, priority: u8, deadline: Option<Instant>) -> Pending {
+        Pending::new(EngineRequest {
+            id,
+            input: Tensor::zeros(1, 1, 1),
+            priority,
+            deadline,
+        })
+    }
+
+    /// Admission order is (priority desc, deadline asc with None last,
+    /// id asc) — the serving redesign's dispatch-order contract.
+    #[test]
+    fn pending_orders_by_priority_deadline_id() {
+        let t0 = Instant::now();
+        let mut heap = BinaryHeap::new();
+        heap.push(req(0, 0, None));
+        heap.push(req(1, 0, Some(t0 + Duration::from_secs(5))));
+        heap.push(req(2, 1, None));
+        heap.push(req(3, 1, Some(t0 + Duration::from_secs(9))));
+        heap.push(req(4, 1, Some(t0 + Duration::from_secs(2))));
+        heap.push(req(5, 0, None));
+        let order: Vec<u64> = std::iter::from_fn(|| heap.pop().map(|p| p.req.id)).collect();
+        assert_eq!(order, vec![4, 3, 2, 1, 0, 5]);
+    }
+
+    #[test]
+    fn pick_worker_prefers_least_loaded_and_avoids() {
+        let load = [3, 0, 2, 0];
+        let all = [0, 1, 2, 3];
+        assert_eq!(pick_worker(&load, &all, None), 1);
+        assert_eq!(pick_worker(&load, &all, Some(1)), 3);
+        // A single candidate is used even if it should be avoided.
+        assert_eq!(pick_worker(&load, &[2], Some(2)), 2);
     }
 }

@@ -25,6 +25,18 @@ use crate::util::Rng;
 use super::messages::{FromWorker, ToWorker, WorkOrder};
 use super::metrics::{InferenceMetrics, LayerMetrics, WorkerPhase};
 
+/// Everything the master's single event channel can carry: worker
+/// replies (stamped with the reader-thread arrival instant), and — when
+/// an [`super::server::InferenceServer`] front-end is attached — request
+/// submissions and the drain signal. Multiplexing submissions into the
+/// same channel is what lets the engine's run loop block on *one*
+/// receiver and wake for either a finished subtask or a new request.
+pub(super) enum MasterEvent {
+    Reply(usize, FromWorker, Instant),
+    Submit(super::server::ServerRequest),
+    Drain,
+}
+
 /// Redundancy scheme selector (the §V method column).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SchemeKind {
@@ -154,8 +166,13 @@ pub struct Master {
     pub(super) worker_tx: Vec<Box<dyn crate::transport::FrameTx>>,
     /// Replies arrive tagged with the reader-thread arrival instant, so
     /// transmission telemetry measures the wire, not however long the
-    /// master took to get back to the channel.
-    pub(super) from_workers: mpsc::Receiver<(usize, FromWorker, Instant)>,
+    /// master took to get back to the channel. Server submissions and
+    /// the drain signal are multiplexed into the same stream.
+    pub(super) events: mpsc::Receiver<MasterEvent>,
+    /// A sender into [`Master::events`]; the serving front-end clones it
+    /// for its submission path. Keeping one here also means the channel
+    /// never disconnects while the master lives.
+    event_tx: mpsc::Sender<MasterEvent>,
     _readers: Vec<std::thread::JoinHandle<()>>,
     pub(super) round: u64,
     pub(super) rng: Rng,
@@ -233,7 +250,7 @@ impl Master {
         )?;
 
         // One reader thread per worker feeding a single channel.
-        let (agg_tx, from_workers) = mpsc::channel();
+        let (agg_tx, events) = mpsc::channel();
         let mut worker_tx = Vec::new();
         let mut readers = Vec::new();
         for (i, (tx, mut rx)) in links.into_iter().enumerate() {
@@ -251,7 +268,8 @@ impl Master {
                                         // processing time: the master may
                                         // be busy for a while before it
                                         // drains the channel.
-                                        if agg.send((i, msg, Instant::now())).is_err() {
+                                        let ev = MasterEvent::Reply(i, msg, Instant::now());
+                                        if agg.send(ev).is_err() {
                                             break;
                                         }
                                     }
@@ -281,7 +299,8 @@ impl Master {
             config,
             provider,
             worker_tx,
-            from_workers,
+            events,
+            event_tx: agg_tx,
             _readers: readers,
             round: 0,
             rng,
@@ -295,6 +314,16 @@ impl Master {
 
     pub(super) fn n_workers(&self) -> usize {
         self.worker_tx.len()
+    }
+
+    /// A sender into the master's event channel — the serving
+    /// front-end's non-blocking submission path.
+    pub(super) fn event_sender(&self) -> mpsc::Sender<MasterEvent> {
+        self.event_tx.clone()
+    }
+
+    pub fn config(&self) -> &MasterConfig {
+        &self.config
     }
 
     pub fn plan(&self) -> &ModelPlan {
@@ -350,6 +379,33 @@ impl Master {
             &self.config.profile,
             self.round,
         );
+    }
+
+    /// Predicted end-to-end service seconds of one request under the
+    /// telemetry-fitted profile — the deadline-shedding estimate used by
+    /// the serving engine. `None` unless the adaptive loop is on *and*
+    /// the registry has at least one fitted worker: the base profile is
+    /// calibrated to the paper's testbed, and its absolute scale on an
+    /// unmeasured host would shed everything (or nothing) meaninglessly.
+    pub fn predicted_service_secs(&self) -> Option<f64> {
+        if !self.config.adaptive {
+            return None;
+        }
+        if !(0..self.n_workers()).any(|w| self.registry.estimate(w).is_some()) {
+            return None;
+        }
+        let fitted = self.registry.fitted_profile(&self.config.profile);
+        let n = self.registry.healthy_count().max(1);
+        let mut total = 0.0;
+        for c in &self.plan.convs {
+            if c.distributed {
+                let k = c.k.clamp(1, n.min(c.dims.w_o).max(1));
+                total += crate::latency::approx::l_integer(&c.dims, &fitted, n, k);
+            } else {
+                total += fitted.local_conv_dist(c.dims.full_flops()).mean();
+            }
+        }
+        Some(total)
     }
 
     /// Register a freshly dispatched round's telemetry bookkeeping; the
@@ -463,12 +519,17 @@ impl Master {
         let mut ready = 0;
         while ready < self.n_workers() {
             match self
-                .from_workers
+                .events
                 .recv_timeout(self.config.recv_timeout)
                 .context("waiting for worker Ready")?
             {
-                (_, FromWorker::Ready, _) => ready += 1,
-                (i, other, _) => bail!("worker {i}: unexpected {other:?} during setup"),
+                MasterEvent::Reply(_, FromWorker::Ready, _) => ready += 1,
+                MasterEvent::Reply(i, other, _) => {
+                    bail!("worker {i}: unexpected {other:?} during setup")
+                }
+                MasterEvent::Submit(_) | MasterEvent::Drain => {
+                    bail!("serving event before worker setup finished")
+                }
             }
         }
         Ok(())
@@ -476,24 +537,35 @@ impl Master {
 
     /// Run a batch of inferences. [`ExecMode::RoundBarrier`] serves them
     /// one at a time (the comparison baseline); [`ExecMode::Pipelined`]
-    /// multiplexes all of them over the worker pool (`engine.rs`).
+    /// multiplexes all of them over the worker pool by seeding the
+    /// engine's admission queue and draining it (`engine::serve_stream`)
+    /// — the same submit+wait path [`super::server::InferenceServer`]
+    /// drives continuously.
     pub fn infer_batch(
         &mut self,
         inputs: &[Tensor],
     ) -> Result<Vec<(Tensor, InferenceMetrics)>> {
+        // Degenerate batch: nothing to admit, nothing to dispatch — the
+        // workers see no traffic at all.
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
         match self.config.mode {
-            ExecMode::RoundBarrier => inputs.iter().map(|i| self.infer(i)).collect(),
+            ExecMode::RoundBarrier => inputs.iter().map(|i| self.infer_barrier(i)).collect(),
             ExecMode::Pipelined => self.infer_pipelined(inputs),
         }
     }
 
-    /// Run one full inference. Returns the network output and the
-    /// per-layer latency breakdown.
+    /// Run one full inference (a single-request batch through either
+    /// engine). Returns the network output and the per-layer latency
+    /// breakdown.
     pub fn infer(&mut self, input: &Tensor) -> Result<(Tensor, InferenceMetrics)> {
-        if self.config.mode == ExecMode::Pipelined {
-            let mut out = self.infer_pipelined(std::slice::from_ref(input))?;
-            return Ok(out.pop().unwrap());
-        }
+        let mut out = self.infer_batch(std::slice::from_ref(input))?;
+        Ok(out.pop().unwrap())
+    }
+
+    /// One blocking round-barrier inference (the paper's workflow).
+    fn infer_barrier(&mut self, input: &Tensor) -> Result<(Tensor, InferenceMetrics)> {
         let t_start = Instant::now();
         let mut metrics = InferenceMetrics::default();
         let mut values: std::collections::BTreeMap<String, Tensor> = Default::default();
@@ -726,10 +798,21 @@ impl Master {
                     pr.scheme.min_completions()
                 );
             }
-            let (wid, msg, arrival) = self
-                .from_workers
+            let (wid, msg, arrival) = match self
+                .events
                 .recv_timeout(self.config.recv_timeout)
-                .with_context(|| format!("layer {node_id}: timed out waiting for workers"))?;
+                .with_context(|| format!("layer {node_id}: timed out waiting for workers"))?
+            {
+                MasterEvent::Reply(wid, msg, arrival) => (wid, msg, arrival),
+                // A server never drives the barrier path directly; if a
+                // submission ever reaches it, refuse it rather than hang
+                // the caller's handle.
+                MasterEvent::Submit(req) => {
+                    req.reject();
+                    continue;
+                }
+                MasterEvent::Drain => continue,
+            };
             match msg {
                 FromWorker::Output {
                     round: r,

@@ -7,12 +7,17 @@ pub mod master;
 pub mod messages;
 pub mod metrics;
 pub mod pool;
+pub mod server;
 pub mod worker;
 
 pub use injector::{ScenarioFaults, WorkerFaults};
 pub use master::{ExecMode, Master, MasterConfig, SchemeKind};
 pub use metrics::{InferenceMetrics, LayerMetrics, WorkerPhase};
-pub use pool::LocalCluster;
+pub use pool::{LocalCluster, WorkerHandles};
+pub use server::{
+    InferenceRequest, InferenceServer, RequestHandle, ServeError, ServeResult, ServerConfig,
+    ServerStats, SubmitError,
+};
 
 #[cfg(test)]
 mod tests {

@@ -25,6 +25,23 @@ pub struct LocalCluster {
     workers: Vec<std::thread::JoinHandle<Result<()>>>,
 }
 
+/// The joinable worker-thread half of a [`LocalCluster`] after
+/// [`LocalCluster::into_parts`] hands the master off (e.g. to an
+/// `InferenceServer`, whose engine thread owns it).
+pub struct WorkerHandles {
+    workers: Vec<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl WorkerHandles {
+    /// Join all workers (call after the master sent `Shutdown`).
+    pub fn join(self) -> Result<()> {
+        for w in self.workers {
+            w.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+        }
+        Ok(())
+    }
+}
+
 impl LocalCluster {
     /// Spawn `n` workers (threads) with the given provider and per-worker
     /// faults, then start a master on `model_name`.
@@ -65,12 +82,22 @@ impl LocalCluster {
         Ok(LocalCluster { master, workers })
     }
 
+    /// Split into the master and the joinable worker handles — the shape
+    /// the serving front-end wants (`InferenceServer::start` takes the
+    /// master by value).
+    pub fn into_parts(self) -> (Master, WorkerHandles) {
+        (
+            self.master,
+            WorkerHandles {
+                workers: self.workers,
+            },
+        )
+    }
+
     /// Shut down master and join workers.
     pub fn shutdown(self) -> Result<()> {
-        self.master.shutdown();
-        for w in self.workers {
-            w.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
-        }
-        Ok(())
+        let (master, workers) = self.into_parts();
+        master.shutdown();
+        workers.join()
     }
 }

@@ -1,0 +1,550 @@
+//! Streaming serving front-end: a non-blocking submit/handle API over
+//! the pipelined engine, with bounded admission (backpressure), a
+//! (priority, deadline) dispatch order, deadline-based shedding, and
+//! graceful drain/shutdown.
+//!
+//! The engine thread owns the [`Master`]; [`InferenceServer::submit`]
+//! injects requests into the master's event channel (the same one that
+//! carries worker replies), so admission happens *between* event-loop
+//! iterations of the live run loop — nothing blocks, and requests can
+//! arrive while earlier ones are still in flight. `SubmitError::QueueFull`
+//! is the backpressure signal: the bounded admission count covers every
+//! accepted-but-undelivered request.
+//!
+//! ```text
+//! let (master, workers) = LocalCluster::spawn(...)?.into_parts();
+//! let server = InferenceServer::start(master, ServerConfig::default());
+//! let handle = server.submit(InferenceRequest::new(input))?; // non-blocking
+//! ...                                                        // submit more
+//! let (out, metrics) = handle.wait()?;                       // any order
+//! let master = server.shutdown()?;                           // drain + stop
+//! master.shutdown();
+//! workers.join()?;
+//! ```
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::conv::Tensor;
+
+use super::engine::{EngineRequest, EngineSink, StreamOptions};
+use super::master::{ExecMode, Master, MasterEvent};
+use super::metrics::InferenceMetrics;
+
+/// One serving request: the input plus its scheduling contract.
+#[derive(Clone, Debug)]
+pub struct InferenceRequest {
+    pub input: Tensor,
+    /// Larger = more urgent. Dispatch order is (priority, deadline,
+    /// submission order).
+    pub priority: u8,
+    /// Completion budget relative to submission. A request that has (or
+    /// is predicted to have — see `Master::predicted_service_secs`) no
+    /// chance of meeting it is shed at dispatch instead of served late.
+    pub deadline: Option<Duration>,
+}
+
+impl InferenceRequest {
+    pub fn new(input: Tensor) -> InferenceRequest {
+        InferenceRequest {
+            input,
+            priority: 0,
+            deadline: None,
+        }
+    }
+
+    pub fn with_priority(mut self, priority: u8) -> InferenceRequest {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> InferenceRequest {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// Why a submission was refused (nothing was admitted).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded admission queue is at capacity — the backpressure
+    /// signal. Retry after some in-flight request completes.
+    QueueFull,
+    /// The server is draining, shut down, or its engine died.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "admission queue full"),
+            SubmitError::ShuttingDown => write!(f, "server shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Why an *admitted* request produced no output.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// Shed at dispatch: the deadline had expired, or the predicted
+    /// service time (telemetry-fitted profile, adaptive mode) exceeded
+    /// the remaining budget.
+    DeadlineShed {
+        predicted_secs: f64,
+        remaining_secs: f64,
+    },
+    /// The submission lost the race with drain()/shutdown().
+    Rejected,
+    /// The engine terminated before delivering this request.
+    Engine(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::DeadlineShed {
+                predicted_secs,
+                remaining_secs,
+            } => write!(
+                f,
+                "shed: predicted {predicted_secs:.3}s exceeds the {remaining_secs:.3}s \
+                 remaining to the deadline"
+            ),
+            ServeError::Rejected => write!(f, "rejected: server draining"),
+            ServeError::Engine(e) => write!(f, "engine failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Terminal outcome of one admitted request.
+pub type ServeResult = Result<(Tensor, InferenceMetrics), ServeError>;
+
+/// Server tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Bound on admitted-but-undelivered requests; submissions beyond it
+    /// get [`SubmitError::QueueFull`].
+    pub queue_capacity: usize,
+    /// Max requests advancing through the engine concurrently (0 =
+    /// unlimited); the rest wait in the admission queue in (priority,
+    /// deadline, id) order.
+    pub max_concurrent: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            queue_capacity: 64,
+            max_concurrent: 0,
+        }
+    }
+}
+
+/// Counters shared between the front-end and the engine sink.
+#[derive(Default)]
+struct Counters {
+    /// Admitted, not yet delivered (the bounded-queue occupancy).
+    open: usize,
+    accepting: bool,
+    engine_dead: bool,
+    /// Root cause when `engine_dead` (error chain, or "panicked").
+    dead_reason: Option<String>,
+    submitted: u64,
+    completed: u64,
+    /// Deadline sheds only.
+    shed: u64,
+    /// Admitted requests terminated for any other reason (lost the race
+    /// with drain(), engine failure).
+    failed: u64,
+    rejected_queue_full: u64,
+}
+
+struct Shared {
+    state: Mutex<Counters>,
+    /// Signalled on every delivery (drain() waits on it).
+    delivered: Condvar,
+}
+
+impl Shared {
+    fn new() -> Shared {
+        Shared {
+            state: Mutex::new(Counters {
+                accepting: true,
+                ..Default::default()
+            }),
+            delivered: Condvar::new(),
+        }
+    }
+
+    /// Close out one open request and wake any drain() waiter.
+    fn finish(&self, outcome: &ServeResult) {
+        let mut st = self.state.lock().unwrap();
+        st.open = st.open.saturating_sub(1);
+        match outcome {
+            Ok(_) => st.completed += 1,
+            Err(ServeError::DeadlineShed { .. }) => st.shed += 1,
+            Err(_) => st.failed += 1,
+        }
+        self.delivered.notify_all();
+    }
+
+    /// Mark the engine dead and release every waiter — MUST run on any
+    /// engine-thread exit that leaves requests undelivered, including
+    /// panics (see [`EngineGuard`]), or drain()/shutdown() would block
+    /// forever on the Condvar with no waker left alive. The first
+    /// recorded reason wins (the Err path records the root cause before
+    /// the guard's generic "panicked" would).
+    fn mark_engine_dead(&self, reason: &str) {
+        // Poison-tolerant: the panic may have happened inside a lock.
+        let mut st = match self.state.lock() {
+            Ok(st) => st,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        st.accepting = false;
+        st.engine_dead = true;
+        if st.dead_reason.is_none() {
+            st.dead_reason = Some(reason.to_string());
+        }
+        st.open = 0;
+        self.delivered.notify_all();
+    }
+}
+
+/// Unwind-safety for the engine thread: if `serve_stream` exits without
+/// the guard being disarmed — an `Err` *or* a panic — the shared state
+/// is marked dead so `drain()`/`shutdown()` return instead of hanging.
+/// (Pending handles observe their reply senders dropping either way.)
+struct EngineGuard {
+    shared: Arc<Shared>,
+    disarm: bool,
+}
+
+impl Drop for EngineGuard {
+    fn drop(&mut self) {
+        if !self.disarm {
+            self.shared.mark_engine_dead("serve-engine thread panicked");
+        }
+    }
+}
+
+/// A submission accepted into the admission queue — the wire between
+/// [`InferenceServer::submit`] and the engine loop.
+pub(super) struct ServerRequest {
+    pub(super) id: u64,
+    pub(super) input: Tensor,
+    pub(super) priority: u8,
+    pub(super) deadline: Option<Instant>,
+    /// Terminal result + the engine-stamped completion instant, so
+    /// sojourn measurements don't depend on when the caller polls.
+    reply: mpsc::Sender<(ServeResult, Instant)>,
+    shared: Arc<Shared>,
+}
+
+impl ServerRequest {
+    /// Terminal refusal for submissions that lost the race with
+    /// drain()/shutdown(); keeps the open-count accounting exact.
+    pub(super) fn reject(self) {
+        let outcome: ServeResult = Err(ServeError::Rejected);
+        let _ = self.reply.send((outcome.clone(), Instant::now()));
+        self.shared.finish(&outcome);
+    }
+}
+
+/// Routes engine outcomes to the per-request reply channels and keeps
+/// the admission accounting.
+struct ServerSink {
+    shared: Arc<Shared>,
+    replies: HashMap<u64, mpsc::Sender<(ServeResult, Instant)>>,
+}
+
+impl EngineSink for ServerSink {
+    fn accept(&mut self, req: ServerRequest) -> EngineRequest {
+        let ServerRequest {
+            id,
+            input,
+            priority,
+            deadline,
+            reply,
+            shared: _,
+        } = req;
+        self.replies.insert(id, reply);
+        EngineRequest {
+            id,
+            input,
+            priority,
+            deadline,
+        }
+    }
+
+    fn deliver(&mut self, id: u64, result: ServeResult) {
+        let completed_at = Instant::now();
+        self.shared.finish(&result);
+        if let Some(tx) = self.replies.remove(&id) {
+            let _ = tx.send((result, completed_at)); // receiver may be gone
+        }
+    }
+}
+
+/// Completion handle for one submitted request.
+pub struct RequestHandle {
+    id: u64,
+    submitted_at: Instant,
+    rx: mpsc::Receiver<(ServeResult, Instant)>,
+    received: Option<ServeResult>,
+    completed_at: Option<Instant>,
+}
+
+impl RequestHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn submitted_at(&self) -> Instant {
+        self.submitted_at
+    }
+
+    fn store(&mut self, result: ServeResult, completed_at: Instant) {
+        self.received = Some(result);
+        self.completed_at = Some(completed_at);
+    }
+
+    /// Non-blocking poll: `Some(&result)` once the request reached a
+    /// terminal state (buffered — repeat calls keep returning it),
+    /// `None` while it is still queued or executing.
+    pub fn try_wait(&mut self) -> Option<&ServeResult> {
+        if self.received.is_none() {
+            match self.rx.try_recv() {
+                Ok((r, at)) => self.store(r, at),
+                Err(mpsc::TryRecvError::Empty) => return None,
+                Err(mpsc::TryRecvError::Disconnected) => self.store(
+                    Err(ServeError::Engine("engine terminated before delivering".into())),
+                    Instant::now(),
+                ),
+            }
+        }
+        self.received.as_ref()
+    }
+
+    /// Submission → completion, engine-stamped (exact even when the
+    /// result is collected much later). `None` until a terminal state
+    /// has been observed via `try_wait`.
+    pub fn sojourn(&self) -> Option<Duration> {
+        self.completed_at
+            .map(|at| at.saturating_duration_since(self.submitted_at))
+    }
+
+    /// Block until the request completes (or is shed).
+    pub fn wait(self) -> ServeResult {
+        self.wait_timed().0
+    }
+
+    /// Block until the request completes; also return the
+    /// engine-stamped submission→completion sojourn. Exact regardless
+    /// of when (or in what order) handles are awaited, so latency
+    /// percentiles carry no collection-loop error.
+    pub fn wait_timed(mut self) -> (ServeResult, Duration) {
+        if self.received.is_none() {
+            match self.rx.recv() {
+                Ok((r, at)) => self.store(r, at),
+                Err(_) => self.store(
+                    Err(ServeError::Engine("engine terminated before delivering".into())),
+                    Instant::now(),
+                ),
+            }
+        }
+        let sojourn = self.sojourn().unwrap();
+        (self.received.take().unwrap(), sojourn)
+    }
+}
+
+/// Point-in-time serving counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerStats {
+    pub submitted: u64,
+    pub completed: u64,
+    /// Deadline sheds only.
+    pub shed: u64,
+    /// Admitted requests terminated for any other reason (drain race,
+    /// engine failure).
+    pub failed: u64,
+    pub rejected_queue_full: u64,
+    /// Admitted but not yet delivered.
+    pub open: usize,
+}
+
+/// The streaming serving front-end (see the module docs).
+pub struct InferenceServer {
+    tx: mpsc::Sender<MasterEvent>,
+    shared: Arc<Shared>,
+    capacity: usize,
+    next_id: AtomicU64,
+    engine: Option<std::thread::JoinHandle<Result<Master>>>,
+}
+
+impl InferenceServer {
+    /// Take ownership of `master` and start the serving loop on a
+    /// dedicated engine thread. Serving always runs the pipelined run
+    /// loop; a `RoundBarrier`-mode master is served with one request in
+    /// flight at a time (the sequential baseline).
+    pub fn start(master: Master, config: ServerConfig) -> InferenceServer {
+        let shared = Arc::new(Shared::new());
+        let tx = master.event_sender();
+        let max_concurrent = if master.config().mode == ExecMode::RoundBarrier {
+            1
+        } else {
+            config.max_concurrent
+        };
+        let engine_shared = shared.clone();
+        let engine = std::thread::Builder::new()
+            .name("cocoi-serve".into())
+            .spawn(move || -> Result<Master> {
+                let mut master = master;
+                // Armed until a clean exit: an Err return *or a panic*
+                // anywhere below marks the engine dead so
+                // submit()/drain()/shutdown() callers are unblocked
+                // (dropping the sink drops every reply sender, so
+                // pending handles observe the disconnect too).
+                let mut guard = EngineGuard {
+                    shared: engine_shared,
+                    disarm: false,
+                };
+                let mut sink = ServerSink {
+                    shared: guard.shared.clone(),
+                    replies: HashMap::new(),
+                };
+                match master.serve_stream(
+                    Vec::new(),
+                    StreamOptions {
+                        max_concurrent,
+                        draining: false,
+                    },
+                    &mut sink,
+                ) {
+                    Ok(()) => {
+                        guard.disarm = true;
+                        Ok(master)
+                    }
+                    Err(e) => {
+                        // Record + log the root cause (handles only see
+                        // a generic disconnect); the still-armed guard
+                        // does the waiter-release bookkeeping.
+                        log::error!("serve engine failed: {e:#}");
+                        guard.shared.mark_engine_dead(&format!("{e:#}"));
+                        Err(e)
+                    }
+                }
+            })
+            .expect("spawn serve-engine thread");
+        InferenceServer {
+            tx,
+            shared,
+            capacity: config.queue_capacity.max(1),
+            next_id: AtomicU64::new(0),
+            engine: Some(engine),
+        }
+    }
+
+    /// Non-blocking submission. `Err(QueueFull)` is backpressure —
+    /// nothing was admitted; retry after a completion.
+    pub fn submit(&self, req: InferenceRequest) -> Result<RequestHandle, SubmitError> {
+        let submitted_at = Instant::now();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if !st.accepting || st.engine_dead {
+                return Err(SubmitError::ShuttingDown);
+            }
+            if st.open >= self.capacity {
+                st.rejected_queue_full += 1;
+                return Err(SubmitError::QueueFull);
+            }
+            st.open += 1;
+            st.submitted += 1;
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        let sreq = ServerRequest {
+            id,
+            input: req.input,
+            priority: req.priority,
+            deadline: req.deadline.map(|d| submitted_at + d),
+            reply,
+            shared: self.shared.clone(),
+        };
+        if self.tx.send(MasterEvent::Submit(sreq)).is_err() {
+            // Engine gone; roll the admission back.
+            let mut st = self.shared.state.lock().unwrap();
+            st.open = st.open.saturating_sub(1);
+            st.submitted -= 1;
+            return Err(SubmitError::ShuttingDown);
+        }
+        Ok(RequestHandle {
+            id,
+            submitted_at,
+            rx,
+            received: None,
+            completed_at: None,
+        })
+    }
+
+    /// Why the engine died, if it has (`None` while healthy). The same
+    /// root cause is logged at `error` level when it happens.
+    pub fn failure(&self) -> Option<String> {
+        self.shared.state.lock().unwrap().dead_reason.clone()
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        let st = self.shared.state.lock().unwrap();
+        ServerStats {
+            submitted: st.submitted,
+            completed: st.completed,
+            shed: st.shed,
+            failed: st.failed,
+            rejected_queue_full: st.rejected_queue_full,
+            open: st.open,
+        }
+    }
+
+    /// Stop accepting and block until every already-admitted request has
+    /// been delivered (their handles still receive results).
+    pub fn drain(&self) {
+        self.shared.state.lock().unwrap().accepting = false;
+        let mut st = self.shared.state.lock().unwrap();
+        while st.open > 0 {
+            st = self.shared.delivered.wait(st).unwrap();
+        }
+    }
+
+    /// Drain, stop the engine loop, and hand the master back (so the
+    /// caller can reuse it or shut the workers down).
+    pub fn shutdown(mut self) -> Result<Master> {
+        self.drain();
+        let _ = self.tx.send(MasterEvent::Drain);
+        let engine = self.engine.take().unwrap();
+        engine
+            .join()
+            .map_err(|_| anyhow::anyhow!("serve-engine thread panicked"))?
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        if let Some(engine) = self.engine.take() {
+            self.shared.state.lock().unwrap().accepting = false;
+            let _ = self.tx.send(MasterEvent::Drain);
+            // Don't silently eat the root cause on the drop path.
+            match engine.join() {
+                Ok(Ok(_)) => {}
+                Ok(Err(e)) => log::error!("serve engine died: {e:#}"),
+                Err(_) => log::error!("serve engine panicked"),
+            }
+        }
+    }
+}

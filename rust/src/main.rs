@@ -8,10 +8,15 @@
 //!              [--adaptive]                         # telemetry-driven replanning
 //!              [--telemetry PATH]                   # dump registry/plan JSON after the runs
 //!              [--threads T]                        # GEMM kernel threads (0 = auto)
+//!              [--stream N]                         # open-loop serving: N requests via InferenceServer
+//!              [--rate R]                           # Poisson arrival rate, req/s (0 = back-to-back)
+//!              [--deadline-ms D]                    # per-request deadline (shed when unmeetable)
+//!              [--queue-cap C]                      # admission bound (QueueFull backpressure)
+//!              [--concurrent M]                     # engine concurrency limit (0 = unlimited)
 //! cocoi worker --listen 0.0.0.0:9090 [--pjrt] [--threads T]   # TCP worker process
 //! cocoi infer  --tcp host:9090,host:9091 ...        # master over TCP
 //! cocoi plan   --model vgg16 --workers 10           # show the split plan
-//! cocoi experiment <gemm|fig4|fig5|fig6|fig7|fig8|fig9|fig10|table1|theory|throughput|adaptive|all>
+//! cocoi experiment <gemm|fig4|fig5|fig6|fig7|fig8|fig9|fig10|table1|theory|throughput|adaptive|serving|all>
 //! ```
 //!
 //! `--threads` (or the `COCOI_THREADS` env var) caps the tiled GEMM
@@ -154,8 +159,8 @@ fn cmd_infer(args: &Args) -> Result<()> {
     };
     let telemetry_path = args.get("telemetry").map(std::path::PathBuf::from);
 
-    if let Some(addrs) = args.get("tcp") {
-        // Remote workers over TCP.
+    // Build the master over TCP workers or a local in-proc pool.
+    let (mut master, workers) = if let Some(addrs) = args.get("tcp") {
         let mut links: Vec<cocoi::transport::LinkPair> = Vec::new();
         for addr in addrs.split(',') {
             let stream = std::net::TcpStream::connect(addr.trim())
@@ -163,19 +168,111 @@ fn cmd_infer(args: &Args) -> Result<()> {
             let (tx, rx) = split_tcp(stream)?;
             links.push((Box::new(tx), Box::new(rx)));
         }
-        let mut master =
-            cocoi::coordinator::Master::new(&model_name, config, links, provider)?;
+        let master = cocoi::coordinator::Master::new(&model_name, config, links, provider)?;
+        (master, None)
+    } else {
+        let cluster = LocalCluster::spawn(&model_name, n, config, provider, faults)?;
+        let (master, workers) = cluster.into_parts();
+        (master, Some(workers))
+    };
+
+    if args.has("stream") {
+        master = run_stream(master, &model_name, args)?;
+    } else {
         run_inferences(&mut master, &model_name, runs)?;
-        dump_telemetry(&master, telemetry_path.as_deref())?;
-        master.shutdown();
-        return Ok(());
+    }
+    dump_telemetry(&master, telemetry_path.as_deref())?;
+    master.shutdown();
+    if let Some(workers) = workers {
+        workers.join()?;
+    }
+    Ok(())
+}
+
+/// `--stream N`: open-loop serving through the `InferenceServer`
+/// front-end — non-blocking submits (Poisson-paced by `--rate`),
+/// completions collected out of order, percentile/shed/backpressure
+/// report at the end. Returns the master for telemetry dump + shutdown.
+fn run_stream(
+    master: cocoi::coordinator::Master,
+    model_name: &str,
+    args: &Args,
+) -> Result<cocoi::coordinator::Master> {
+    use cocoi::coordinator::{InferenceRequest, InferenceServer, ServeError, ServerConfig};
+    use cocoi::sim::percentile;
+    use std::time::Duration;
+
+    let requests = match args.get("stream") {
+        Some("true") | None => 32,
+        Some(v) => v.parse().with_context(|| format!("--stream {v}"))?,
+    };
+    let rate = args.get_f64("rate", 0.0)?;
+    let deadline = args.get_f64("deadline-ms", 0.0)?;
+    let deadline = (deadline > 0.0).then(|| Duration::from_secs_f64(deadline / 1e3));
+    let server = InferenceServer::start(
+        master,
+        ServerConfig {
+            queue_capacity: args.get_usize("queue-cap", 64)?,
+            max_concurrent: args.get_usize("concurrent", 0)?,
+        },
+    );
+
+    let model = zoo::model(model_name)?;
+    let mut rng = Rng::new(args.get_usize("seed", 1)? as u64 ^ 0x57EA);
+    let mut handles = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..requests {
+        if rate > 0.0 && i > 0 {
+            std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
+        }
+        let mut input = Tensor::zeros(model.input.0, model.input.1, model.input.2);
+        rng.fill_uniform_f32(&mut input.data, -1.0, 1.0);
+        let mut req = InferenceRequest::new(input);
+        if let Some(d) = deadline {
+            req = req.with_deadline(d);
+        }
+        match server.submit(req) {
+            Ok(h) => handles.push(h),
+            Err(e) => {
+                log::warn!("request {i} refused: {e}");
+                rejected += 1;
+            }
+        }
     }
 
-    let mut cluster = LocalCluster::spawn(&model_name, n, config, provider, faults)?;
-    run_inferences(&mut cluster.master, &model_name, runs)?;
-    dump_telemetry(&cluster.master, telemetry_path.as_deref())?;
-    cluster.shutdown()?;
-    Ok(())
+    // Sojourns are engine-stamped, so collecting in submission order
+    // still measures each request exactly.
+    let mut lats = Vec::new();
+    let mut shed = 0usize;
+    for h in handles {
+        let (res, sojourn) = h.wait_timed();
+        match res {
+            Ok(_) => lats.push(sojourn.as_secs_f64()),
+            Err(ServeError::DeadlineShed { .. }) => shed += 1,
+            Err(e) => anyhow::bail!("streamed request failed: {e}"),
+        }
+    }
+
+    println!(
+        "streamed {requests} requests: {} served, {shed} shed (deadline), \
+         {rejected} refused (backpressure)",
+        lats.len()
+    );
+    if !lats.is_empty() {
+        println!(
+            "sojourn: p50 {:.1}ms  p95 {:.1}ms  p99 {:.1}ms  mean {:.1}ms",
+            percentile(&lats, 0.50) * 1e3,
+            percentile(&lats, 0.95) * 1e3,
+            percentile(&lats, 0.99) * 1e3,
+            lats.iter().sum::<f64>() / lats.len() as f64 * 1e3,
+        );
+    }
+    let stats = server.stats();
+    println!(
+        "server: {} submitted, {} completed, {} shed, {} failed, {} queue-full",
+        stats.submitted, stats.completed, stats.shed, stats.failed, stats.rejected_queue_full
+    );
+    server.shutdown()
 }
 
 /// Write the master's telemetry dump (fitted capacities, quarantine log,
@@ -297,6 +394,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "theory" => exp::theory()?,
         "throughput" => exp::throughput(scale)?,
         "adaptive" => exp::adaptive(scale)?,
+        "serving" => exp::serving(scale)?,
         "all" => {
             exp::gemm(scale)?;
             exp::fig7()?;
@@ -310,6 +408,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             exp::theory()?;
             exp::throughput(scale)?;
             exp::adaptive(scale)?;
+            exp::serving(scale)?;
         }
         other => bail!("unknown experiment '{other}'"),
     }

@@ -11,5 +11,8 @@ pub mod runner;
 pub mod scenario;
 
 pub use adaptive::{simulate_adaptive, AdaptiveSimResult, DriftScenario};
-pub use runner::{simulate_model, simulate_serving, MethodSim, ModelSimResult};
+pub use runner::{
+    percentile, simulate_model, simulate_serving, simulate_serving_open, straggling_profile,
+    MethodSim, ModelSimResult, ServeSimMode, ServingSimResult,
+};
 pub use scenario::Scenario;

@@ -1,5 +1,26 @@
 //! Summary statistics used by the bench harness and experiment drivers.
 
+/// Linear-interpolation percentile of an (unsorted) sample, `q` in
+/// [0, 1]; NaN on empty. THE percentile implementation — shared by
+/// [`Summary::quantile`] and the serving tables (`sim::percentile`), so
+/// every latency report interpolates the same way.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        let w = pos - lo as f64;
+        s[lo] * (1.0 - w) + s[hi] * w
+    }
+}
+
 /// Online/summary statistics over a sample of f64 observations.
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
@@ -58,20 +79,7 @@ impl Summary {
 
     /// Quantile by linear interpolation on the sorted sample, `q` in [0,1].
     pub fn quantile(&self, q: f64) -> f64 {
-        if self.xs.is_empty() {
-            return f64::NAN;
-        }
-        let mut s = self.xs.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
-        let lo = pos.floor() as usize;
-        let hi = pos.ceil() as usize;
-        if lo == hi {
-            s[lo]
-        } else {
-            let w = pos - lo as f64;
-            s[lo] * (1.0 - w) + s[hi] * w
-        }
+        percentile(&self.xs, q)
     }
 
     pub fn median(&self) -> f64 {

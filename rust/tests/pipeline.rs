@@ -326,6 +326,35 @@ fn scratch_reuse_keeps_repeat_outputs_stable() {
     cluster.shutdown().unwrap();
 }
 
+/// Degenerate batch: `infer_batch(&[])` returns `Ok(vec![])` in both
+/// modes without dispatching anything to the workers — and the pool
+/// still serves real work afterwards.
+#[test]
+fn empty_batch_returns_empty() {
+    for mode in [ExecMode::RoundBarrier, ExecMode::Pipelined] {
+        let config = MasterConfig {
+            scheme: SchemeKind::Mds,
+            policy: SplitPolicy::Fixed(3),
+            mode,
+            ..Default::default()
+        };
+        let mut cluster = LocalCluster::spawn(
+            "tinyvgg",
+            4,
+            config,
+            Arc::new(FallbackProvider::new()),
+            (0..4).map(|_| WorkerFaults::none()).collect(),
+        )
+        .unwrap();
+        let out = cluster.master.infer_batch(&[]).unwrap();
+        assert!(out.is_empty(), "{mode:?}: empty batch must yield no results");
+        let inputs = inputs_for("tinyvgg", 1, 1234);
+        let got = cluster.master.infer_batch(&inputs).unwrap();
+        assert_eq!(got.len(), 1, "{mode:?}: pool unusable after empty batch");
+        cluster.shutdown().unwrap();
+    }
+}
+
 /// Barrier-mode infer_batch == sequential infer (sanity of the baseline
 /// the throughput experiment compares against).
 #[test]

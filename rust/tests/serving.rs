@@ -1,0 +1,303 @@
+//! Serving-API suite: the non-blocking submit/handle front-end must
+//! produce the same outputs as the blocking batch paths, deliver
+//! handles awaited in any order, reject on a full admission queue while
+//! in-flight requests still complete, shed expired deadlines, and drain
+//! gracefully. Runs without `artifacts/`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cocoi::conv::Tensor;
+use cocoi::coordinator::{
+    ExecMode, InferenceRequest, InferenceServer, LocalCluster, MasterConfig, SchemeKind,
+    ServeError, ServerConfig, SubmitError, WorkerFaults, WorkerHandles,
+};
+use cocoi::model::graph::forward_local;
+use cocoi::model::{zoo, WeightStore};
+use cocoi::planner::SplitPolicy;
+use cocoi::runtime::FallbackProvider;
+use cocoi::util::Rng;
+
+fn inputs_for(model_name: &str, count: usize, seed: u64) -> Vec<Tensor> {
+    let model = zoo::model(model_name).unwrap();
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            let mut t = Tensor::zeros(model.input.0, model.input.1, model.input.2);
+            rng.fill_uniform_f32(&mut t.data, -1.0, 1.0);
+            t
+        })
+        .collect()
+}
+
+fn local_refs(model_name: &str, inputs: &[Tensor]) -> Vec<Tensor> {
+    let model = zoo::model(model_name).unwrap();
+    let weights = WeightStore::generate(&model, 42).unwrap();
+    inputs
+        .iter()
+        .map(|i| forward_local(&model, &weights, i).unwrap())
+        .collect()
+}
+
+fn spawn_server(
+    scheme: SchemeKind,
+    n: usize,
+    k: usize,
+    faults: Vec<WorkerFaults>,
+    config: ServerConfig,
+) -> (InferenceServer, WorkerHandles) {
+    let master_cfg = MasterConfig {
+        scheme,
+        policy: SplitPolicy::Fixed(k),
+        mode: ExecMode::Pipelined,
+        ..Default::default()
+    };
+    let cluster = LocalCluster::spawn(
+        "tinyvgg",
+        n,
+        master_cfg,
+        Arc::new(FallbackProvider::new()),
+        faults,
+    )
+    .unwrap();
+    let (master, workers) = cluster.into_parts();
+    (InferenceServer::start(master, config), workers)
+}
+
+fn stop(server: InferenceServer, workers: WorkerHandles) {
+    let master = server.shutdown().unwrap();
+    master.shutdown();
+    workers.join().unwrap();
+}
+
+/// submit+wait must agree with the blocking paths: bitwise with the
+/// barrier engine under the deterministic uncoded decode, and within
+/// decode tolerance of local inference under MDS.
+#[test]
+fn submit_wait_matches_barrier_and_local() {
+    let inputs = inputs_for("tinyvgg", 3, 901);
+    let want = local_refs("tinyvgg", &inputs);
+
+    // Barrier reference (uncoded, n == k: exact passthrough decode).
+    let config = MasterConfig {
+        scheme: SchemeKind::Uncoded,
+        policy: SplitPolicy::Fixed(3),
+        mode: ExecMode::RoundBarrier,
+        ..Default::default()
+    };
+    let mut cluster = LocalCluster::spawn(
+        "tinyvgg",
+        3,
+        config,
+        Arc::new(FallbackProvider::new()),
+        (0..3).map(|_| WorkerFaults::none()).collect(),
+    )
+    .unwrap();
+    let barrier = cluster.master.infer_batch(&inputs).unwrap();
+    cluster.shutdown().unwrap();
+
+    let (server, workers) = spawn_server(
+        SchemeKind::Uncoded,
+        3,
+        3,
+        (0..3).map(|_| WorkerFaults::none()).collect(),
+        ServerConfig::default(),
+    );
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|i| server.submit(InferenceRequest::new(i.clone())).unwrap())
+        .collect();
+    for (handle, (b, _)) in handles.into_iter().zip(&barrier) {
+        let (out, metrics) = handle.wait().unwrap();
+        assert_eq!(out.data, b.data, "serving diverged from the barrier engine");
+        assert!(metrics.layers.iter().any(|l| l.distributed));
+    }
+    stop(server, workers);
+
+    // MDS through the server: within decode tolerance of local.
+    let (server, workers) = spawn_server(
+        SchemeKind::Mds,
+        4,
+        3,
+        (0..4).map(|_| WorkerFaults::none()).collect(),
+        ServerConfig::default(),
+    );
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|i| server.submit(InferenceRequest::new(i.clone())).unwrap())
+        .collect();
+    for (handle, want) in handles.into_iter().zip(&want) {
+        let (out, _) = handle.wait().unwrap();
+        let err = out.max_abs_diff(want);
+        assert!(err < 2e-2, "served output off local by {err}");
+    }
+    stop(server, workers);
+}
+
+/// Handles are independent completion tokens: awaiting them in reverse
+/// submission order still yields each request's own answer.
+#[test]
+fn handles_awaited_out_of_order() {
+    let inputs = inputs_for("tinyvgg", 4, 902);
+    let want = local_refs("tinyvgg", &inputs);
+    let (server, workers) = spawn_server(
+        SchemeKind::Mds,
+        4,
+        3,
+        (0..4).map(|_| WorkerFaults::none()).collect(),
+        ServerConfig::default(),
+    );
+    let mut handles: Vec<_> = inputs
+        .iter()
+        .map(|i| server.submit(InferenceRequest::new(i.clone())).unwrap())
+        .collect();
+    let mut results: Vec<Option<Tensor>> = (0..inputs.len()).map(|_| None).collect();
+    while let Some(handle) = handles.pop() {
+        let idx = handles.len(); // reverse order: last submitted first
+        let (out, _) = handle.wait().unwrap();
+        results[idx] = Some(out);
+    }
+    for (got, want) in results.iter().zip(&want) {
+        let err = got.as_ref().unwrap().max_abs_diff(want);
+        assert!(err < 2e-2, "out-of-order wait returned wrong output ({err})");
+    }
+    stop(server, workers);
+}
+
+/// Backpressure: a full admission queue rejects with `QueueFull` while
+/// the in-flight requests still complete — and capacity frees up again
+/// once they do.
+#[test]
+fn full_queue_rejects_then_recovers() {
+    let inputs = inputs_for("tinyvgg", 4, 903);
+    let want = local_refs("tinyvgg", &inputs);
+    // Slow the pool (20 ms per reply) so the queue stays occupied for
+    // the whole submit burst.
+    let faults: Vec<WorkerFaults> = (0..3)
+        .map(|_| WorkerFaults::with_send_delay(0.020))
+        .collect();
+    let (server, workers) = spawn_server(
+        SchemeKind::Mds,
+        3,
+        2,
+        faults,
+        ServerConfig {
+            queue_capacity: 3,
+            ..Default::default()
+        },
+    );
+    let handles: Vec<_> = inputs[..3]
+        .iter()
+        .map(|i| server.submit(InferenceRequest::new(i.clone())).unwrap())
+        .collect();
+    // 4th submission: the bounded queue must push back.
+    match server.submit(InferenceRequest::new(inputs[3].clone())) {
+        Err(SubmitError::QueueFull) => {}
+        other => panic!("expected QueueFull, got {:?}", other.map(|h| h.id())),
+    }
+    assert_eq!(server.stats().rejected_queue_full, 1);
+    // The in-flight requests are unaffected by the rejection.
+    for (handle, want) in handles.into_iter().zip(&want) {
+        let (out, _) = handle.wait().unwrap();
+        assert!(out.max_abs_diff(want) < 2e-2);
+    }
+    // Queue drained: the same request is admitted now.
+    let h = server.submit(InferenceRequest::new(inputs[3].clone())).unwrap();
+    let (out, _) = h.wait().unwrap();
+    assert!(out.max_abs_diff(&want[3]) < 2e-2);
+    stop(server, workers);
+}
+
+/// An already-expired deadline is shed at dispatch — and the shed
+/// request does not disturb its neighbours.
+#[test]
+fn expired_deadline_is_shed() {
+    let inputs = inputs_for("tinyvgg", 2, 904);
+    let want = local_refs("tinyvgg", &inputs);
+    let (server, workers) = spawn_server(
+        SchemeKind::Mds,
+        4,
+        3,
+        (0..4).map(|_| WorkerFaults::none()).collect(),
+        ServerConfig::default(),
+    );
+    let doomed = server
+        .submit(InferenceRequest::new(inputs[0].clone()).with_deadline(Duration::ZERO))
+        .unwrap();
+    let fine = server.submit(InferenceRequest::new(inputs[1].clone())).unwrap();
+    match doomed.wait() {
+        Err(ServeError::DeadlineShed { .. }) => {}
+        other => panic!("expected a deadline shed, got {other:?}"),
+    }
+    let (out, _) = fine.wait().unwrap();
+    assert!(out.max_abs_diff(&want[1]) < 2e-2);
+    assert_eq!(server.stats().shed, 1);
+    assert_eq!(server.stats().completed, 1);
+    stop(server, workers);
+}
+
+/// drain() waits for in-flight work, then refuses new submissions; the
+/// earlier handles still hold their results.
+#[test]
+fn drain_rejects_new_submissions() {
+    let inputs = inputs_for("tinyvgg", 2, 905);
+    let want = local_refs("tinyvgg", &inputs);
+    let (server, workers) = spawn_server(
+        SchemeKind::Mds,
+        4,
+        3,
+        (0..4).map(|_| WorkerFaults::none()).collect(),
+        ServerConfig::default(),
+    );
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|i| server.submit(InferenceRequest::new(i.clone())).unwrap())
+        .collect();
+    server.drain();
+    assert_eq!(
+        server
+            .submit(InferenceRequest::new(inputs[0].clone()))
+            .err()
+            .unwrap(),
+        SubmitError::ShuttingDown
+    );
+    for (handle, want) in handles.into_iter().zip(&want) {
+        let (out, _) = handle.wait().unwrap();
+        assert!(out.max_abs_diff(want) < 2e-2);
+    }
+    assert_eq!(server.stats().open, 0);
+    stop(server, workers);
+}
+
+/// A barrier-mode master behind the server serves sequentially (one in
+/// flight) but yields the same answers.
+#[test]
+fn server_over_barrier_mode_master_serves_sequentially() {
+    let inputs = inputs_for("tinyvgg", 2, 906);
+    let want = local_refs("tinyvgg", &inputs);
+    let config = MasterConfig {
+        scheme: SchemeKind::Mds,
+        policy: SplitPolicy::Fixed(3),
+        mode: ExecMode::RoundBarrier,
+        ..Default::default()
+    };
+    let cluster = LocalCluster::spawn(
+        "tinyvgg",
+        4,
+        config,
+        Arc::new(FallbackProvider::new()),
+        (0..4).map(|_| WorkerFaults::none()).collect(),
+    )
+    .unwrap();
+    let (master, workers) = cluster.into_parts();
+    let server = InferenceServer::start(master, ServerConfig::default());
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|i| server.submit(InferenceRequest::new(i.clone())).unwrap())
+        .collect();
+    for (handle, want) in handles.into_iter().zip(&want) {
+        let (out, _) = handle.wait().unwrap();
+        assert!(out.max_abs_diff(want) < 2e-2);
+    }
+    stop(server, workers);
+}
