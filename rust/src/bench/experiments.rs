@@ -804,7 +804,7 @@ pub fn throughput_with(
 // gate, validated per-trial in rust/tests as well).
 // ====================================================================
 pub fn serving(scale: Scale) -> Result<()> {
-    use crate::sim::{simulate_serving_open, ServeSimMode};
+    use crate::sim::{simulate_serving_open, simulate_serving_open_with, ServeKnobs, ServeSimMode};
     use crate::util::json::Json;
 
     let model = zoo::model("vgg16")?;
@@ -844,6 +844,24 @@ pub fn serving(scale: Scale) -> Result<()> {
     // service times — pipelining buys capacity headroom there, which is
     // exactly what these points measure.)
     let rhos = [1.05, 1.15, 1.3];
+    // The engine-knob arms: cross-request coalescing alone, and
+    // coalescing + 2 worker slots (the full PR-5 configuration).
+    let knob_arms: [(&str, ServeKnobs); 2] = [
+        (
+            "pipelined+coal4",
+            ServeKnobs {
+                coalesce: 4,
+                worker_slots: 1,
+            },
+        ),
+        (
+            "pipelined+coal4+slots2",
+            ServeKnobs {
+                coalesce: 4,
+                worker_slots: 2,
+            },
+        ),
+    ];
     let mut table = Table::new(
         &format!(
             "Serving — vgg16 open-loop sim, n={n}, {arrivals} Poisson arrivals per \
@@ -853,9 +871,11 @@ pub fn serving(scale: Scale) -> Result<()> {
         &["offered load", "mode", "p50", "p95", "p99", "mean"],
     );
     let mut gate_ok = true;
+    let mut coal_gate_ok = true;
     for &rho in &rhos {
         let rate = rho / service;
         let mut barrier_p95 = f64::NAN;
+        let mut pipelined_p95 = f64::NAN;
         for mode in modes {
             let mut rng = Rng::new(0x5EE5 ^ (rho * 100.0) as u64);
             let r = simulate_serving_open(
@@ -863,10 +883,11 @@ pub fn serving(scale: Scale) -> Result<()> {
             )?;
             if mode == ServeSimMode::Barrier {
                 barrier_p95 = r.p95();
-            } else if mode == ServeSimMode::Pipelined
-                && !(r.p95() <= barrier_p95 * (1.0 + 1e-9))
-            {
-                gate_ok = false;
+            } else if mode == ServeSimMode::Pipelined {
+                pipelined_p95 = r.p95();
+                if !(r.p95() <= barrier_p95 * (1.0 + 1e-9)) {
+                    gate_ok = false;
+                }
             }
             table.row(vec![
                 format!("{rho:.2}"),
@@ -880,6 +901,49 @@ pub fn serving(scale: Scale) -> Result<()> {
                 &format!("load{:02.0}_{}", rho * 100.0, r.mode),
                 Json::obj(vec![
                     ("rate_rps", Json::Num(rate)),
+                    ("p50_s", Json::Num(r.p50())),
+                    ("p95_s", Json::Num(r.p95())),
+                    ("p99_s", Json::Num(r.p99())),
+                    ("mean_s", Json::Num(r.mean())),
+                    ("served", Json::Num(r.latencies.len() as f64)),
+                ]),
+            );
+        }
+        // Coalescing / worker-slot arms, same seed ⇒ identical draws as
+        // the uncoalesced pipelined arm. HARD gate: batching same-layer
+        // shards must not lose on p95 at (or beyond) saturation.
+        for (label, knobs) in knob_arms {
+            let mut rng = Rng::new(0x5EE5 ^ (rho * 100.0) as u64);
+            let r = simulate_serving_open_with(
+                &model,
+                &p,
+                n,
+                method,
+                scenario,
+                ServeSimMode::Pipelined,
+                rate,
+                arrivals,
+                None,
+                knobs,
+                &mut rng,
+            )?;
+            if knobs.worker_slots <= 1 && !(r.p95() <= pipelined_p95 * (1.0 + 1e-9)) {
+                coal_gate_ok = false;
+            }
+            table.row(vec![
+                format!("{rho:.2}"),
+                label.to_string(),
+                fmt_secs(r.p50()),
+                fmt_secs(r.p95()),
+                fmt_secs(r.p99()),
+                fmt_secs(r.mean()),
+            ]);
+            json.set(
+                &format!("load{:02.0}_{}", rho * 100.0, label),
+                Json::obj(vec![
+                    ("rate_rps", Json::Num(rate)),
+                    ("coalesce", Json::Num(knobs.coalesce as f64)),
+                    ("worker_slots", Json::Num(knobs.worker_slots as f64)),
                     ("p50_s", Json::Num(r.p50())),
                     ("p95_s", Json::Num(r.p95())),
                     ("p99_s", Json::Num(r.p99())),
@@ -929,16 +993,23 @@ pub fn serving(scale: Scale) -> Result<()> {
     table.print();
 
     json.set("gate_pipelined_p95_le_barrier", Json::Bool(gate_ok));
+    json.set("gate_coalesced_p95_le_uncoalesced", Json::Bool(coal_gate_ok));
     let path = json.write()?;
     println!(
-        "(open-loop Poisson arrivals through the serving stack; gate: pipelined \
-         p95 <= barrier p95 at every load point — {}) results -> {}",
+        "(open-loop Poisson arrivals through the serving stack; gates: pipelined \
+         p95 <= barrier p95 — {} — and coalesced p95 <= uncoalesced pipelined \
+         p95 — {} — at every swept load) results -> {}",
         if gate_ok { "PASS" } else { "FAIL" },
+        if coal_gate_ok { "PASS" } else { "FAIL" },
         path.display()
     );
     anyhow::ensure!(
         gate_ok,
         "pipelined serving lost to the barrier on p95 at equal offered load"
+    );
+    anyhow::ensure!(
+        coal_gate_ok,
+        "coalesced serving lost to the uncoalesced pipelined engine on p95"
     );
     Ok(())
 }

@@ -53,6 +53,9 @@ pub struct Scratch {
     im2col: Vec<f32>,
     packed_a: Vec<f32>,
     packed_b: Vec<f32>,
+    /// Column-concatenated im2col matrix of a coalesced batch (see
+    /// [`conv_padded_packed_batch`]).
+    im2col_batch: Vec<f32>,
 }
 
 impl Scratch {
@@ -357,6 +360,89 @@ pub fn conv_padded_packed(
     Tensor::from_vec(pa.m, h_o, w_o, out)
 }
 
+/// Batched conv for cross-request shard coalescing: all `inputs` share
+/// one shape (same layer, same split width), and the GEMM's N dimension
+/// spans their concatenated im2col columns — one prepacked-weight pass
+/// serves every request, amortizing packing/dispatch overhead.
+///
+/// Each output element's f32 summation runs over K in the same fixed
+/// `KC`-slab order regardless of which column strip the element lands in
+/// or how wide N is, so every request's slice of the batched result is
+/// **bitwise identical** to running that request alone (asserted in the
+/// tests below and in `rust/tests/gemm_kernel.rs`).
+pub fn conv_padded_packed_batch(
+    spec: &ConvSpec,
+    inputs: &[&Tensor],
+    pa: &PackedA,
+    threads: usize,
+    scratch: &mut Scratch,
+) -> Result<Vec<Tensor>> {
+    ensure!(!inputs.is_empty(), "empty conv batch");
+    if inputs.len() == 1 {
+        return Ok(vec![conv_padded_packed(spec, inputs[0], pa, threads, scratch)?]);
+    }
+    let first = inputs[0];
+    spec.check_padded_input(first)?;
+    for t in &inputs[1..] {
+        ensure!(
+            t.c == first.c && t.h == first.h && t.w == first.w,
+            "coalesced batch mixes input shapes"
+        );
+    }
+    let kk = spec.c_in * spec.k_w * spec.k_w;
+    ensure!(
+        pa.m == spec.c_out && pa.k == kk,
+        "packed weights {}x{} do not match conv {}x{}",
+        pa.m,
+        pa.k,
+        spec.c_out,
+        kk
+    );
+    let h_o = spec.out_dim_padded(first.h);
+    let w_o = spec.out_dim_padded(first.w);
+    let n = h_o * w_o;
+    let r = inputs.len();
+    let n_total = n * r;
+    let Scratch {
+        im2col: col_one,
+        packed_b,
+        im2col_batch: col_batch,
+        ..
+    } = scratch;
+    // Interleave per-input im2col columns: row l of the batch matrix is
+    // [input0's row l | input1's row l | ...] — a pure copy, so the
+    // per-element arithmetic is untouched.
+    grow(col_batch, kk * n_total);
+    for (ri, input) in inputs.iter().enumerate() {
+        im2col::im2col_into(input, spec.k_w, spec.s_w, col_one);
+        for l in 0..kk {
+            col_batch[l * n_total + ri * n..][..n].copy_from_slice(&col_one[l * n..][..n]);
+        }
+    }
+    let mut out = vec![0f32; pa.m * n_total];
+    gemm_packed_slices(
+        pa.m,
+        kk,
+        &pa.data,
+        &col_batch[..kk * n_total],
+        n_total,
+        &mut out,
+        threads,
+        packed_b,
+    );
+    // Un-interleave the output columns back into per-request tensors.
+    (0..r)
+        .map(|ri| {
+            let mut flat = vec![0f32; pa.m * n];
+            for i in 0..pa.m {
+                flat[i * n..(i + 1) * n]
+                    .copy_from_slice(&out[i * n_total + ri * n..][..n]);
+            }
+            Tensor::from_vec(pa.m, h_o, w_o, flat)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -449,6 +535,42 @@ mod tests {
         // Shape-mismatched pack is rejected.
         let wrong = ConvSpec::new(6, 11, 3, 1, 0);
         assert!(conv_padded_packed(&wrong, &input, &pa, 2, &mut scratch).is_err());
+    }
+
+    /// The coalescing kernel's load-bearing property: each request's
+    /// slice of a batched conv is bitwise identical to running it alone
+    /// (per-element K-order accumulation is independent of column
+    /// position and of total N).
+    #[test]
+    fn batched_conv_matches_singles_bitwise() {
+        let mut rng = Rng::new(0xBA7C);
+        // Odd W so n is not a multiple of NR: batch offsets shift every
+        // column's strip position relative to the solo run.
+        let spec = ConvSpec::new(5, 9, 3, 1, 0);
+        let pa = {
+            let mut w = vec![0f32; spec.weight_len()];
+            rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+            PackedA::pack(&w, spec.c_out, spec.c_in * 9)
+        };
+        let inputs: Vec<Tensor> = (0..3)
+            .map(|_| {
+                let mut t = Tensor::zeros(5, 11, 9);
+                rng.fill_uniform_f32(&mut t.data, -1.0, 1.0);
+                t
+            })
+            .collect();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        for threads in [1, 3] {
+            let mut scratch = Scratch::new();
+            let batched =
+                conv_padded_packed_batch(&spec, &refs, &pa, threads, &mut scratch).unwrap();
+            assert_eq!(batched.len(), inputs.len());
+            for (input, got) in inputs.iter().zip(&batched) {
+                let solo =
+                    conv_padded_packed(&spec, input, &pa, threads, &mut scratch).unwrap();
+                assert_eq!(solo.data, got.data, "threads={threads}");
+            }
+        }
     }
 
     #[test]

@@ -18,8 +18,20 @@
 //!   (from the telemetry-fitted profile, `--adaptive`) misses it, are
 //!   shed at dispatch time instead of served late;
 //! * several in-flight requests advance through the model graph
-//!   independently; a distributed conv dispatches its encoded subtasks
-//!   to the *least-loaded* workers and yields back to the event loop;
+//!   independently; a request reaching a distributed conv *stages* its
+//!   round, and staged rounds are flushed together after the loop has
+//!   drained every already-queued event — so requests that become ready
+//!   at the same moment are visible to one flush;
+//! * at flush time, staged same-layer same-shape rounds are **coalesced**
+//!   (up to `MasterConfig::coalesce` requests): their same-index shards
+//!   merge into one multi-payload [`WorkOrder`] and a worker runs one
+//!   prepacked-weight pass whose GEMM N dimension spans every request —
+//!   the per-dispatch fixed costs (wire framing, im2col, queueing) are
+//!   paid once per *batch* instead of once per request. One reply fans
+//!   back out into per-request decoders; requests coalesced at layer ℓ
+//!   finish ℓ together and naturally re-coalesce at ℓ+1;
+//! * a coalesced dispatch goes to the *least-loaded* workers and yields
+//!   back to the event loop;
 //! * the moment a round has its first `k` results, its outstanding
 //!   straggler subtasks are cancelled ([`ToWorker::Cancel`]) so the
 //!   per-worker queues (see `coordinator::worker`) drop them and free
@@ -43,7 +55,7 @@ use crate::model::{Node, Op};
 
 use super::master::{assemble_output, Master, MasterEvent, PreparedRound};
 use super::messages::{FromWorker, ToWorker};
-use super::metrics::InferenceMetrics;
+use super::metrics::{InferenceMetrics, LayerMetrics, WorkerPhase};
 use super::server::ServeError;
 
 /// One admitted request, as the engine sees it.
@@ -144,14 +156,26 @@ impl RequestState {
     }
 }
 
-/// One in-flight coded round: a distributed conv of one request whose
-/// subtasks are out on the pool.
-struct ActiveRound {
+/// One request's slice of an in-flight round: its own decoder (fed the
+/// request's chunk of every batched reply), remainder piece, and layer
+/// metrics.
+struct ActivePart {
     request: u64,
-    relu: bool,
-    pr: PreparedRound,
     decoder: Box<dyn coding::Decoder>,
     remainder: Option<Tensor>,
+    lm: LayerMetrics,
+}
+
+/// One in-flight coded round: a distributed conv of one *or several
+/// coalesced* requests whose subtasks are out on the pool. All parts
+/// share the round's subtask set — every reply carries every part's
+/// chunk — so their decoders become ready at the same completion and
+/// the whole batch finishes together.
+struct ActiveRound {
+    relu: bool,
+    pr: PreparedRound,
+    /// Per-request slices, in payload order.
+    parts: Vec<ActivePart>,
     received: Vec<usize>,
     outstanding: Vec<usize>,
     /// task id -> worker currently holding it (for cancel accounting).
@@ -159,7 +183,7 @@ struct ActiveRound {
     /// The round's dispatch set (re-dispatch stays inside it).
     targets: Vec<usize>,
     t_dispatch: Instant,
-    /// Master-local seconds already spent (remainder conv).
+    /// Master-local seconds already spent (remainder convs, all parts).
     t_local: f64,
 }
 
@@ -265,6 +289,13 @@ impl Master {
     /// rounds, exit when draining and empty. Both `infer_batch`
     /// (pre-seeded, draining) and the serving front-end (live
     /// submissions) run through here.
+    ///
+    /// Requests that reach a distributed conv are *staged*, and the loop
+    /// flushes the staging buffer only after draining every
+    /// already-queued event — admissions that arrive in one burst, and
+    /// coalesced batches that finish a layer together, therefore meet in
+    /// the same flush and merge into coalesced rounds
+    /// (`MasterConfig::coalesce`).
     pub(super) fn serve_stream(
         &mut self,
         seed: Vec<EngineRequest>,
@@ -276,6 +307,7 @@ impl Master {
         let mut rounds: HashMap<u64, ActiveRound> = HashMap::new();
         let mut active: BTreeMap<u64, RequestState> = BTreeMap::new();
         let mut pending: BinaryHeap<Pending> = seed.into_iter().map(Pending::new).collect();
+        let mut staged: Vec<u64> = Vec::new();
         let mut draining = opts.draining;
 
         loop {
@@ -289,15 +321,17 @@ impl Master {
                     continue;
                 }
                 active.insert(req.id, RequestState::new(req.input));
-                self.advance_request(
-                    req.id,
-                    &nodes,
-                    &mut active,
-                    &mut rounds,
-                    &mut worker_load,
-                    sink,
-                )?;
+                self.advance_request(req.id, &nodes, &mut active, &mut staged, sink)?;
             }
+
+            // -- flush staged dispatches (coalescing same-layer shards)
+            self.dispatch_staged(
+                &mut staged,
+                &nodes,
+                &mut active,
+                &mut rounds,
+                &mut worker_load,
+            )?;
             if draining && pending.is_empty() && active.is_empty() {
                 debug_assert!(rounds.is_empty());
                 return Ok(());
@@ -305,12 +339,12 @@ impl Master {
 
             // Liveness: a round with nothing outstanding can never decode.
             for ar in rounds.values() {
-                if ar.outstanding.is_empty() && !ar.decoder.ready() {
+                if ar.outstanding.is_empty() && !ar.parts[0].decoder.ready() {
                     bail!(
-                        "layer {} (request {}): no outstanding subtasks but decoder \
+                        "layer {} (requests {:?}): no outstanding subtasks but decoder \
                          needs more (received {} of {})",
-                        ar.pr.lm.node_id,
-                        ar.request,
+                        ar.parts[0].lm.node_id,
+                        ar.parts.iter().map(|p| p.request).collect::<Vec<_>>(),
                         ar.received.len(),
                         ar.pr.scheme.min_completions()
                     );
@@ -329,27 +363,76 @@ impl Master {
                     .recv_timeout(self.config.recv_timeout)
                     .context("pipelined engine: timed out waiting for workers")?
             };
-            match ev {
-                MasterEvent::Submit(sreq) => {
-                    if draining {
-                        // Lost the race with drain(): refuse, don't hang.
-                        sreq.reject();
-                        continue;
-                    }
-                    pending.push(Pending::new(sink.accept(sreq)));
-                }
-                MasterEvent::Drain => draining = true,
-                MasterEvent::Reply(wid, msg, arrival) => self.handle_reply(
-                    wid,
-                    msg,
-                    arrival,
+            self.on_event(
+                ev,
+                &mut draining,
+                &nodes,
+                &mut pending,
+                &mut active,
+                &mut rounds,
+                &mut worker_load,
+                &mut staged,
+                sink,
+            )?;
+            // Opportunistically drain whatever else is already queued
+            // before the next flush: replies/submissions that landed
+            // together stage together, which is what lets their rounds
+            // coalesce.
+            while let Ok(ev) = self.events.try_recv() {
+                self.on_event(
+                    ev,
+                    &mut draining,
                     &nodes,
+                    &mut pending,
                     &mut active,
                     &mut rounds,
                     &mut worker_load,
+                    &mut staged,
                     sink,
-                )?,
+                )?;
             }
+        }
+    }
+
+    /// Fold one multiplexed event into the engine state.
+    #[allow(clippy::too_many_arguments)]
+    fn on_event(
+        &mut self,
+        ev: MasterEvent,
+        draining: &mut bool,
+        nodes: &[Node],
+        pending: &mut BinaryHeap<Pending>,
+        active: &mut BTreeMap<u64, RequestState>,
+        rounds: &mut HashMap<u64, ActiveRound>,
+        worker_load: &mut [usize],
+        staged: &mut Vec<u64>,
+        sink: &mut dyn EngineSink,
+    ) -> Result<()> {
+        match ev {
+            MasterEvent::Submit(sreq) => {
+                if *draining {
+                    // Lost the race with drain(): refuse, don't hang.
+                    sreq.reject();
+                } else {
+                    pending.push(Pending::new(sink.accept(sreq)));
+                }
+                Ok(())
+            }
+            MasterEvent::Drain => {
+                *draining = true;
+                Ok(())
+            }
+            MasterEvent::Reply(wid, msg, arrival) => self.handle_reply(
+                wid,
+                msg,
+                arrival,
+                nodes,
+                active,
+                rounds,
+                worker_load,
+                staged,
+                sink,
+            ),
         }
     }
 
@@ -365,6 +448,7 @@ impl Master {
         active: &mut BTreeMap<u64, RequestState>,
         rounds: &mut HashMap<u64, ActiveRound>,
         worker_load: &mut [usize],
+        staged: &mut Vec<u64>,
         sink: &mut dyn EngineSink,
     ) -> Result<()> {
         // Every dispatched subtask yields exactly one reply (Output,
@@ -388,26 +472,64 @@ impl Master {
                 let task_id = task_id as usize;
                 // Telemetry first, even when the round already decoded
                 // (a cancelled-but-executed straggler's stale Output is
-                // the estimator's key sample).
+                // the estimator's key sample). The round log's
+                // flops/bytes scales are the *coalesced* totals, so a
+                // batched reply's exec_secs normalizes to the same
+                // per-FLOP sample a single-request conv would yield.
                 let wp = self.record_output(wid, round, task_id, arrival, exec_secs);
                 let ready = {
                     let Some(ar) = rounds.get_mut(&round) else {
                         return Ok(()); // stale: round decoded + cancelled earlier
                     };
                     ar.outstanding.retain(|&t| t != task_id);
+                    let n_parts = ar.parts.len();
                     if let Some(wp) = wp {
-                        ar.pr.lm.per_worker.push(wp);
+                        // Attribute the batched subtask's wall time
+                        // evenly across the coalesced requests so each
+                        // request's per-worker breakdown sums sanely.
+                        let share = 1.0 / n_parts as f64;
+                        for p in &mut ar.parts {
+                            p.lm.per_worker.push(WorkerPhase {
+                                transmission: wp.transmission * share,
+                                execution: wp.execution * share,
+                                ..wp
+                            });
+                        }
                     }
-                    if ar.decoder.add(task_id, data) {
-                        true
+                    // Fan the (possibly batched) output back out: chunk
+                    // `i` belongs to part `i`'s decoder. Every part's
+                    // decoder sees the same subtask ids, so readiness
+                    // flips for all of them on the same reply.
+                    let ready = if n_parts == 1 {
+                        ar.parts[0].decoder.add(task_id, data)
                     } else {
+                        let part_len = ar.pr.part_elems();
+                        anyhow::ensure!(
+                            data.len() == part_len * n_parts,
+                            "round {round}: batched output {} != {} parts x {part_len}",
+                            data.len(),
+                            n_parts
+                        );
+                        let mut ready = true;
+                        for (i, p) in ar.parts.iter_mut().enumerate() {
+                            let r = p
+                                .decoder
+                                .add(task_id, data[i * part_len..(i + 1) * part_len].to_vec());
+                            // Identical subtask sets ⇒ identical
+                            // readiness; never finish before every
+                            // part can decode.
+                            ready = ready && r;
+                        }
+                        ready
+                    };
+                    if !ready {
                         ar.received.push(task_id);
-                        false
                     }
+                    ready
                 };
                 if ready {
                     let ar = rounds.remove(&round).unwrap();
-                    self.finish_round(ar, nodes, active, rounds, worker_load, sink)?;
+                    self.finish_round(ar, nodes, active, staged, sink)?;
                     // Between rounds is the live stream's "between
                     // requests": swap the plan here if one is due.
                     self.maybe_replan();
@@ -429,15 +551,21 @@ impl Master {
                 let Some(ar) = rounds.get_mut(&round) else {
                     return Ok(());
                 };
-                ar.pr.lm.failures += 1;
+                // Every coalesced request experienced this failure.
+                for p in &mut ar.parts {
+                    p.lm.failures += 1;
+                }
                 ar.outstanding.retain(|&t| t != task_id);
                 if ar
                     .pr
                     .scheme
                     .needs_redispatch(task_id, &ar.received, &ar.outstanding)
                 {
-                    if ar.pr.lm.redispatches > 4 * ar.pr.frames.len() {
-                        bail!("layer {}: re-dispatch storm; giving up", ar.pr.lm.node_id);
+                    if ar.parts[0].lm.redispatches > 4 * ar.pr.frames.len() {
+                        bail!(
+                            "layer {}: re-dispatch storm; giving up",
+                            ar.parts[0].lm.node_id
+                        );
                     }
                     let target = pick_worker(worker_load, &ar.targets, Some(wid));
                     if let Some(rt) = self.round_log.get_mut(&round) {
@@ -447,7 +575,9 @@ impl Master {
                     worker_load[target] += 1;
                     ar.assigned[task_id] = target;
                     ar.outstanding.push(task_id);
-                    ar.pr.lm.redispatches += 1;
+                    for p in &mut ar.parts {
+                        p.lm.redispatches += 1;
+                    }
                     log::debug!(
                         "pipeline: task {task_id} of round {round} failed on \
                          worker {wid}, re-dispatched to {target}"
@@ -460,16 +590,17 @@ impl Master {
     }
 
     /// Execute request `id` forward from its cursor: type-2/simple ops
-    /// run locally; the first distributed conv dispatches a round and
-    /// yields. A request that reaches the end of the graph is delivered
-    /// to the sink and removed from the active set.
+    /// run locally; the first distributed conv *stages* the request
+    /// (the caller flushes staged rounds — possibly coalesced — via
+    /// [`Master::dispatch_staged`]) and yields. A request that reaches
+    /// the end of the graph is delivered to the sink and removed from
+    /// the active set.
     fn advance_request(
         &mut self,
         id: u64,
         nodes: &[Node],
         active: &mut BTreeMap<u64, RequestState>,
-        rounds: &mut HashMap<u64, ActiveRound>,
-        worker_load: &mut [usize],
+        staged: &mut Vec<u64>,
         sink: &mut dyn EngineSink,
     ) -> Result<()> {
         loop {
@@ -482,112 +613,158 @@ impl Master {
                 return Ok(());
             }
             let node = &nodes[active[&id].node_idx];
+            if let Op::Conv { .. } = &node.op {
+                let dist = self
+                    .plan
+                    .conv(&node.id)
+                    .map(|c| c.distributed)
+                    .unwrap_or(false);
+                if dist {
+                    staged.push(id);
+                    return Ok(()); // yield: dispatch_staged resumes us
+                }
+            }
             let fetched: Vec<Tensor> = node
                 .inputs
                 .iter()
                 .map(|i| active[&id].values.get(i).cloned().context("missing value"))
                 .collect::<Result<_>>()?;
-            match &node.op {
-                Op::Conv { spec, relu } => {
-                    let spec = *spec;
-                    let relu = *relu;
-                    let dist = self
-                        .plan
-                        .conv(&node.id)
-                        .map(|c| (c.distributed, c.k))
-                        .unwrap_or((false, 1));
-                    if dist.0 {
-                        // Dispatch set for this round: the registry's
-                        // active workers under the adaptive policy
-                        // (quarantined stragglers sit out except for due
-                        // probes), the full pool otherwise.
-                        let targets = self.dispatch_targets();
-                        let k_eff = self.effective_k(dist.1, targets.len());
-                        // The wire's request tag is diagnostic-only; a
-                        // long-lived server's ids may exceed u32.
-                        let pr = self.prepare_round(
-                            id as u32,
-                            &node.id,
-                            &spec,
-                            k_eff,
-                            &fetched[0],
-                            targets.len(),
-                        )?;
-                        let t_dispatch = Instant::now();
-                        // Spread the round's shards over *distinct* workers
-                        // (the MDS resilience model assumes one shard per
-                        // device), least-loaded first; wrap only when a
-                        // scheme issues more subtasks than workers (LT).
-                        let mut order: Vec<usize> = targets.clone();
-                        order.sort_by_key(|&w| (worker_load[w], w));
-                        let mut assigned = vec![0usize; pr.frames.len()];
-                        let mut dispatched_at = Vec::with_capacity(pr.frames.len());
-                        for (t, frame) in pr.frames.iter().enumerate() {
-                            let w = order[t % order.len()];
-                            dispatched_at.push(Instant::now());
-                            self.worker_tx[w].send(frame)?;
-                            worker_load[w] += 1;
-                            assigned[t] = w;
-                        }
-                        self.log_round(
-                            pr.round,
-                            pr.flops_per_task,
-                            pr.bytes_per_task,
-                            dispatched_at,
-                        );
-                        // Master-local remainder piece while workers run.
-                        let t0 = Instant::now();
-                        let remainder = match &pr.remainder_input {
-                            Some(piece) => {
-                                Some(self.provider.conv(&spec, piece, &pr.params.weights)?)
-                            }
-                            None => None,
-                        };
-                        let t_local = t0.elapsed().as_secs_f64();
-                        let outstanding: Vec<usize> = (0..pr.frames.len()).collect();
-                        let decoder = pr.scheme.decoder();
-                        rounds.insert(
-                            pr.round,
-                            ActiveRound {
-                                request: id,
-                                relu,
-                                pr,
-                                decoder,
-                                remainder,
-                                received: Vec::new(),
-                                outstanding,
-                                assigned,
-                                targets,
-                                t_dispatch,
-                                t_local,
-                            },
-                        );
-                        return Ok(()); // yield: event loop resumes us
-                    }
-                    let st = active.get_mut(&id).unwrap();
-                    let out = self.run_local_node(node, &fetched, &mut st.metrics)?;
-                    st.values.insert(node.id.clone(), out);
-                    st.node_idx += 1;
-                }
-                _ => {
-                    let st = active.get_mut(&id).unwrap();
-                    let out = self.run_local_node(node, &fetched, &mut st.metrics)?;
-                    st.values.insert(node.id.clone(), out);
-                    st.node_idx += 1;
-                }
-            }
+            let st = active.get_mut(&id).unwrap();
+            let out = self.run_local_node(node, &fetched, &mut st.metrics)?;
+            st.values.insert(node.id.clone(), out);
+            st.node_idx += 1;
         }
     }
 
-    /// A round just became decodable: cancel stragglers, decode,
-    /// reassemble, and advance the owning request.
+    /// Flush the staging buffer: group staged requests by (layer,
+    /// input shape) in staging order, chunk groups at the coalescing
+    /// limit, and dispatch each group as ONE coded round whose frames
+    /// carry every member's shard. With `coalesce <= 1` every group is
+    /// a singleton and dispatch behaves exactly like the uncoalesced
+    /// engine.
+    fn dispatch_staged(
+        &mut self,
+        staged: &mut Vec<u64>,
+        nodes: &[Node],
+        active: &mut BTreeMap<u64, RequestState>,
+        rounds: &mut HashMap<u64, ActiveRound>,
+        worker_load: &mut [usize],
+    ) -> Result<()> {
+        if staged.is_empty() {
+            return Ok(());
+        }
+        let cap = self.config.coalesce.max(1);
+        // Stable grouping: same layer cursor + same input shape, first
+        // open group wins, groups close at `cap` members.
+        let mut groups: Vec<(usize, (usize, usize, usize), Vec<u64>)> = Vec::new();
+        for &id in staged.iter() {
+            let st = active.get(&id).context("staged request not active")?;
+            let node = &nodes[st.node_idx];
+            let input = st
+                .values
+                .get(&node.inputs[0])
+                .context("staged conv input missing")?;
+            let key = (st.node_idx, (input.c, input.h, input.w));
+            match groups
+                .iter_mut()
+                .find(|(ni, sh, ids)| (*ni, *sh) == key && ids.len() < cap)
+            {
+                Some((_, _, ids)) => ids.push(id),
+                None => groups.push((key.0, key.1, vec![id])),
+            }
+        }
+        staged.clear();
+
+        for (node_idx, _, ids) in groups {
+            let node = &nodes[node_idx];
+            let (spec, relu) = match &node.op {
+                Op::Conv { spec, relu } => (*spec, *relu),
+                _ => bail!("staged request not at a conv node"),
+            };
+            let k_planned = self.plan.conv(&node.id).map(|c| c.k).unwrap_or(1);
+            // Dispatch set for this round: the registry's active
+            // workers under the adaptive policy (quarantined
+            // stragglers sit out except for due probes), the full pool
+            // otherwise.
+            let targets = self.dispatch_targets();
+            let k_eff = self.effective_k(k_planned, targets.len());
+            let reqs: Vec<(u64, &Tensor)> = ids
+                .iter()
+                .map(|rid| {
+                    (
+                        *rid,
+                        active
+                            .get(rid)
+                            .and_then(|st| st.values.get(&node.inputs[0]))
+                            .expect("validated during grouping"),
+                    )
+                })
+                .collect();
+            let mut pr = self.prepare_round(&reqs, &node.id, &spec, k_eff, targets.len())?;
+            let t_dispatch = Instant::now();
+            // Spread the round's shards over *distinct* workers (the
+            // MDS resilience model assumes one shard per device),
+            // least-loaded first; wrap only when a scheme issues more
+            // subtasks than workers (LT).
+            let mut order: Vec<usize> = targets.clone();
+            order.sort_by_key(|&w| (worker_load[w], w));
+            let mut assigned = vec![0usize; pr.frames.len()];
+            let mut dispatched_at = Vec::with_capacity(pr.frames.len());
+            for (t, frame) in pr.frames.iter().enumerate() {
+                let w = order[t % order.len()];
+                dispatched_at.push(Instant::now());
+                self.worker_tx[w].send(frame)?;
+                worker_load[w] += 1;
+                assigned[t] = w;
+            }
+            self.log_round(pr.round, pr.flops_per_task, pr.bytes_per_task, dispatched_at);
+            // Master-local remainder pieces while workers run (one per
+            // coalesced request).
+            let t0 = Instant::now();
+            let prepared = std::mem::take(&mut pr.parts);
+            let mut parts = Vec::with_capacity(prepared.len());
+            for pp in prepared {
+                let remainder = match &pp.remainder_input {
+                    Some(piece) => Some(self.provider.conv(&spec, piece, &pr.params.weights)?),
+                    None => None,
+                };
+                parts.push(ActivePart {
+                    request: pp.request,
+                    decoder: pr.scheme.decoder(),
+                    remainder,
+                    lm: pp.lm,
+                });
+            }
+            let t_local = t0.elapsed().as_secs_f64();
+            let outstanding: Vec<usize> = (0..pr.frames.len()).collect();
+            rounds.insert(
+                pr.round,
+                ActiveRound {
+                    relu,
+                    pr,
+                    parts,
+                    received: Vec::new(),
+                    outstanding,
+                    assigned,
+                    targets,
+                    t_dispatch,
+                    t_local,
+                },
+            );
+        }
+        Ok(())
+    }
+
+    /// A round just became decodable: cancel stragglers, decode every
+    /// coalesced part, and advance each owning request (which stages
+    /// their next rounds — coalesced batches move through the model in
+    /// lockstep and re-coalesce at the next distributed layer).
     fn finish_round(
         &mut self,
         mut ar: ActiveRound,
         nodes: &[Node],
         active: &mut BTreeMap<u64, RequestState>,
-        rounds: &mut HashMap<u64, ActiveRound>,
-        worker_load: &mut [usize],
+        staged: &mut Vec<u64>,
         sink: &mut dyn EngineSink,
     ) -> Result<()> {
         // Cancel outstanding stragglers so worker queues drop them. Their
@@ -597,7 +774,7 @@ impl Master {
         // charge is released when that reply arrives.
         if !ar.outstanding.is_empty() {
             let frame = ToWorker::Cancel { round: ar.pr.round }.encode();
-            let mut notified = vec![false; worker_load.len()];
+            let mut notified = vec![false; self.n_workers()];
             for &t in &ar.outstanding {
                 let w = ar.assigned[t];
                 if !notified[w] {
@@ -605,27 +782,39 @@ impl Master {
                     self.worker_tx[w].send(&frame)?;
                 }
             }
-            ar.pr.lm.cancelled += ar.outstanding.len();
+            for p in &mut ar.parts {
+                p.lm.cancelled += ar.outstanding.len();
+            }
             ar.outstanding.clear();
         }
-        ar.pr.lm.t_workers = ar.t_dispatch.elapsed().as_secs_f64() - ar.t_local;
+        let t_workers = ar.t_dispatch.elapsed().as_secs_f64() - ar.t_local;
+        let t_local_share = ar.t_local / ar.parts.len() as f64;
         self.retire_round(ar.pr.round);
 
-        let t0 = Instant::now();
-        let decoded = ar.decoder.decode()?;
-        ar.pr.lm.t_decode = t0.elapsed().as_secs_f64();
+        let mut advanced = Vec::with_capacity(ar.parts.len());
+        for mut part in std::mem::take(&mut ar.parts) {
+            part.lm.t_workers = t_workers;
 
-        let t0 = Instant::now();
-        let out = assemble_output(&ar.pr, decoded, ar.remainder.take(), ar.relu)?;
-        ar.pr.lm.t_local = ar.t_local + t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            let decoded = part.decoder.decode()?;
+            part.lm.t_decode = t0.elapsed().as_secs_f64();
 
-        let id = ar.request;
-        let st = active.get_mut(&id).context("finished round for unknown request")?;
-        let node_id = nodes[st.node_idx].id.clone();
-        st.metrics.layers.push(ar.pr.lm.clone());
-        st.values.insert(node_id, out);
-        st.node_idx += 1;
-        self.advance_request(id, nodes, active, rounds, worker_load, sink)
+            let t0 = Instant::now();
+            let out = assemble_output(&ar.pr, decoded, part.remainder.take(), ar.relu)?;
+            part.lm.t_local = t_local_share + t0.elapsed().as_secs_f64();
+
+            let id = part.request;
+            let st = active.get_mut(&id).context("finished round for unknown request")?;
+            let node_id = nodes[st.node_idx].id.clone();
+            st.metrics.layers.push(part.lm);
+            st.values.insert(node_id, out);
+            st.node_idx += 1;
+            advanced.push(id);
+        }
+        for id in advanced {
+            self.advance_request(id, nodes, active, staged, sink)?;
+        }
+        Ok(())
     }
 }
 

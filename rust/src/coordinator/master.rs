@@ -119,6 +119,13 @@ pub struct MasterConfig {
     pub telemetry: TelemetryConfig,
     /// Replan cadence + hysteresis.
     pub replan: ReplanConfig,
+    /// Cross-request shard coalescing (pipelined engine only): the max
+    /// number of concurrent requests whose same-layer rounds are merged
+    /// into one multi-payload dispatch (a worker then runs ONE
+    /// prepacked-weight pass spanning all of them). `0` or `1` disables
+    /// coalescing; the uncoded decode stays bitwise identical either
+    /// way (`rust/tests/coalesce.rs`).
+    pub coalesce: usize,
 }
 
 impl Default for MasterConfig {
@@ -134,6 +141,7 @@ impl Default for MasterConfig {
             adaptive: false,
             telemetry: TelemetryConfig::default(),
             replan: ReplanConfig::default(),
+            coalesce: 1,
         }
     }
 }
@@ -184,27 +192,49 @@ pub struct Master {
     pub(super) round_log: std::collections::BTreeMap<u64, RoundTelemetry>,
 }
 
+/// One request's slice of a [`PreparedRound`]: its id, its master-local
+/// remainder piece, and its own per-layer metrics (each coalesced
+/// request reports the round in its own latency breakdown).
+pub(super) struct PreparedPart {
+    pub(super) request: u64,
+    /// Master-local remainder slice (footnote 2); convolved *after*
+    /// dispatch so workers start first.
+    pub(super) remainder_input: Option<Tensor>,
+    pub(super) lm: LayerMetrics,
+}
+
 /// A distributed layer round after split + encode, frames ready to send.
 /// Shared between the round-barrier path and the pipelined engine so the
 /// two produce identical encodings (and therefore identical outputs).
+/// Carries one [`PreparedPart`] per coalesced request (exactly one on
+/// the barrier path and whenever coalescing is off); the dispatch
+/// frames interleave every part's shard `i` into one multi-payload
+/// `WorkOrder`.
 pub(super) struct PreparedRound {
     pub(super) round: u64,
     pub(super) scheme: Box<dyn RedundancyScheme>,
     /// Pre-encoded dispatch frames, one per subtask; re-dispatch after a
     /// failure reuses the same bytes.
     pub(super) frames: Vec<Vec<u8>>,
-    /// Master-local remainder slice (footnote 2); convolved *after*
-    /// dispatch so workers start first.
-    pub(super) remainder_input: Option<Tensor>,
+    /// Per-request slices, in payload order.
+    pub(super) parts: Vec<PreparedPart>,
     pub(super) params: crate::model::LayerParams,
     pub(super) c_out: usize,
     pub(super) h_o: usize,
     pub(super) w_o_p: usize,
-    pub(super) lm: LayerMetrics,
-    /// Telemetry normalization scales of one subtask of this round:
-    /// conv FLOPs and wire bytes (input partition + output partition).
+    /// Telemetry normalization scales of one subtask of this round,
+    /// summed over every coalesced payload — a batched conv reports one
+    /// `exec_secs` for ALL payloads, so normalizing by the coalesced
+    /// FLOPs/bytes keeps the per-FLOP shift-exp fits unbiased.
     pub(super) flops_per_task: f64,
     pub(super) bytes_per_task: f64,
+}
+
+impl PreparedRound {
+    /// Flattened length of one request's decoded subtask output.
+    pub(super) fn part_elems(&self) -> usize {
+        self.c_out * self.h_o * self.w_o_p
+    }
 }
 
 /// Decode results + remainder -> the layer's output tensor.
@@ -650,60 +680,68 @@ impl Master {
     }
 
     /// Split + encode one distributed layer into a [`PreparedRound`].
-    /// `request` tags the dispatch frames (0 on the round-barrier path);
+    /// `requests` is one `(id, input)` per coalesced request — all with
+    /// identical input shapes (the engine only groups same-layer
+    /// same-shape requests; the barrier path always passes one) — and
     /// `n_tasks` is the number of workers that will receive shards (the
     /// full pool, or the registry's active set under the adaptive
-    /// policy) — the redundancy scheme is sized to it.
+    /// policy) — the redundancy scheme is sized to it. One scheme
+    /// instance encodes every request, and frame `i` interleaves each
+    /// request's shard `i` as one multi-payload [`WorkOrder`].
     pub(super) fn prepare_round(
         &mut self,
-        request: u32,
+        requests: &[(u64, &Tensor)],
         node_id: &str,
         spec: &crate::conv::ConvSpec,
         k_planned: usize,
-        input: &Tensor,
         n_tasks: usize,
     ) -> Result<PreparedRound> {
+        anyhow::ensure!(!requests.is_empty(), "prepare_round with no requests");
         self.round += 1;
         let round = self.round;
         let n = n_tasks.max(1);
-        let mut lm = LayerMetrics {
-            node_id: node_id.to_string(),
-            distributed: true,
-            ..Default::default()
-        };
+        let n_req = requests.len();
 
         // -- input splitting phase ------------------------------------
         let t0 = Instant::now();
-        let padded = input.pad(spec.pad);
-        let scheme = self
-            .config
-            .scheme
-            .make(n, k_planned, spec.out_dim_padded(padded.w), self.rng.next_u64());
+        let padded: Vec<Tensor> = requests.iter().map(|(_, t)| t.pad(spec.pad)).collect();
+        let scheme = self.config.scheme.make(
+            n,
+            k_planned,
+            spec.out_dim_padded(padded[0].w),
+            self.rng.next_u64(),
+        );
         let k = scheme.source_count();
-        lm.k = k;
-        let plan = SplitPlan::new(spec, padded.w, k)?;
-        let sources: Vec<Vec<f32>> = plan
-            .in_ranges
+        let plan = SplitPlan::new(spec, padded[0].w, k)?;
+        let all_sources: Vec<Vec<Vec<f32>>> = padded
             .iter()
-            .map(|r| padded.slice_w(r.start, r.end).flatten())
+            .map(|p| {
+                plan.in_ranges
+                    .iter()
+                    .map(|r| p.slice_w(r.start, r.end).flatten())
+                    .collect()
+            })
             .collect();
-        lm.t_split = t0.elapsed().as_secs_f64();
+        let t_split = t0.elapsed().as_secs_f64() / n_req as f64;
 
         // -- encoding phase --------------------------------------------
         let t0 = Instant::now();
-        let tasks = scheme.encode(&sources);
-        lm.n_tasks = tasks.len();
-        let h_i = padded.h;
+        // One scheme instance encodes every coalesced request, so shard
+        // `i` of each carries the same coefficients and one decoder per
+        // request recovers them from the same received-subtask set.
+        let all_tasks: Vec<Vec<crate::coding::EncodedTask>> =
+            all_sources.iter().map(|s| scheme.encode(s)).collect();
+        let n_tasks_out = all_tasks[0].len();
+        let h_i = padded[0].h;
         // Encode each dispatch frame exactly once (§Perf: the payload used
         // to be cloned into a WorkOrder and re-serialized per dispatch);
         // re-dispatch after a failure reuses the same frame bytes.
-        let frames: Vec<Vec<u8>> = tasks
-            .iter()
-            .map(|task| {
+        let frames: Vec<Vec<u8>> = (0..n_tasks_out)
+            .map(|t| {
+                debug_assert!(all_tasks.iter().all(|ts| ts[t].id == all_tasks[0][t].id));
                 ToWorker::Work(WorkOrder {
                     round,
-                    request,
-                    task_id: task.id as u32,
+                    task_id: all_tasks[0][t].id as u32,
                     node_id: node_id.to_string(),
                     c_in: spec.c_in as u32,
                     c_out: spec.c_out as u32,
@@ -711,38 +749,65 @@ impl Master {
                     s_w: spec.s_w as u32,
                     h: h_i as u32,
                     w: plan.w_i_p as u32,
-                    data: task.payload.clone(),
+                    payloads: requests
+                        .iter()
+                        .zip(&all_tasks)
+                        .map(|(&(id, _), tasks)| super::messages::WorkPayload {
+                            request: id,
+                            data: tasks[t].payload.clone(),
+                        })
+                        .collect(),
                 })
                 .encode()
             })
             .collect();
-        lm.t_encode = t0.elapsed().as_secs_f64();
+        let t_encode = t0.elapsed().as_secs_f64() / n_req as f64;
 
-        let remainder_input = match (plan.remainder_in, plan.remainder_out) {
-            (Some(ri), Some(_)) => Some(padded.slice_w(ri.start, ri.end)),
-            _ => None,
-        };
+        let parts: Vec<PreparedPart> = requests
+            .iter()
+            .zip(&padded)
+            .map(|(&(id, _), p)| PreparedPart {
+                request: id,
+                remainder_input: match (plan.remainder_in, plan.remainder_out) {
+                    (Some(ri), Some(_)) => Some(p.slice_w(ri.start, ri.end)),
+                    _ => None,
+                },
+                lm: LayerMetrics {
+                    node_id: node_id.to_string(),
+                    distributed: true,
+                    k,
+                    n_tasks: n_tasks_out,
+                    // Split/encode wall time divided evenly across the
+                    // coalesced requests so per-request sums stay honest.
+                    t_split,
+                    t_encode,
+                    ..Default::default()
+                },
+            })
+            .collect();
         let params = self.weights.get(node_id)?.clone();
-        let h_o = spec.out_dim_padded(padded.h);
+        let h_o = spec.out_dim_padded(h_i);
         // Telemetry normalization: one subtask convolves a w_i_p-wide
         // piece into a w_o_p-wide output (eqs. 9–11 at the concrete
-        // integer piece widths).
+        // integer piece widths) — times the number of coalesced payloads
+        // it carries.
         let flops_per_task = 2.0
             * (spec.c_out * h_o) as f64
             * plan.w_o_p as f64
-            * (spec.c_in * spec.k_w * spec.k_w) as f64;
-        let bytes_per_task = 4.0 * (spec.c_in * h_i * plan.w_i_p) as f64
-            + 4.0 * (spec.c_out * h_o * plan.w_o_p) as f64;
+            * (spec.c_in * spec.k_w * spec.k_w) as f64
+            * n_req as f64;
+        let bytes_per_task = (4.0 * (spec.c_in * h_i * plan.w_i_p) as f64
+            + 4.0 * (spec.c_out * h_o * plan.w_o_p) as f64)
+            * n_req as f64;
         Ok(PreparedRound {
             round,
             scheme,
             frames,
-            remainder_input,
+            parts,
             params,
             c_out: spec.c_out,
             h_o,
             w_o_p: plan.w_o_p,
-            lm,
             flops_per_task,
             bytes_per_task,
         })
@@ -763,9 +828,10 @@ impl Master {
         // is due).
         let targets = self.dispatch_targets();
         let k_eff = self.effective_k(k_planned, targets.len());
-        let mut pr = self.prepare_round(0, node_id, spec, k_eff, input, targets.len())?;
+        let mut pr =
+            self.prepare_round(&[(0, input)], node_id, spec, k_eff, targets.len())?;
         let round = pr.round;
-        let mut lm = std::mem::take(&mut pr.lm);
+        let mut lm = std::mem::take(&mut pr.parts[0].lm);
 
         // -- execution phase (dispatch + master-local remainder) -------
         let t0 = Instant::now();
@@ -778,7 +844,7 @@ impl Master {
 
         // Master-local remainder piece (footnote 2) while workers run.
         let t_local0 = Instant::now();
-        let remainder: Option<Tensor> = match &pr.remainder_input {
+        let remainder: Option<Tensor> = match &pr.parts[0].remainder_input {
             Some(piece) => Some(self.provider.conv(spec, piece, &pr.params.weights)?),
             None => None,
         };

@@ -20,17 +20,30 @@ pub enum ToWorker {
     Shutdown,
 }
 
+/// One request's slice of a (possibly coalesced) subtask: which
+/// inference request it belongs to, and that request's encoded input
+/// partition. The request tag is the full engine id (u64 — a long-lived
+/// server overflows u32) and is diagnostic-only on the worker.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkPayload {
+    pub request: u64,
+    pub data: Vec<f32>,
+}
+
 /// One encoded subtask: the (already padded, already encoded) input
-/// partition plus which layer's preloaded weights to convolve it with.
+/// partition(s) plus which layer's preloaded weights to convolve them
+/// with. A *coalesced* order carries the same-index shard of several
+/// concurrent requests at the same layer (`payloads.len() > 1`): the
+/// worker runs them through one prepacked-weight pass whose im2col/GEMM
+/// N dimension spans all payloads, and replies with the concatenated
+/// outputs in payload order.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkOrder {
     /// Coded-computation round (one per distributed layer execution,
-    /// unique across concurrent requests); the master routes results and
-    /// discards stale ones by this id.
+    /// unique across concurrent requests *and* shared by every request
+    /// coalesced into it); the master routes results and discards stale
+    /// ones by this id.
     pub round: u64,
-    /// Inference request this subtask belongs to (pipelined engine tag;
-    /// always 0 on the round-barrier path).
-    pub request: u32,
     /// Scheme-local subtask id.
     pub task_id: u32,
     /// Conv node whose weights to use.
@@ -40,20 +53,63 @@ pub struct WorkOrder {
     pub c_out: u32,
     pub k_w: u32,
     pub s_w: u32,
-    /// Input partition shape + data.
+    /// Input partition shape; identical for every payload (coalescing
+    /// only merges same-layer same-split shards).
     pub h: u32,
     pub w: u32,
-    pub data: Vec<f32>,
+    /// One entry per coalesced request, each `c_in * h * w` long.
+    pub payloads: Vec<WorkPayload>,
 }
 
 impl WorkOrder {
+    /// Single-request order (the uncoalesced common case).
+    pub fn single(
+        round: u64,
+        request: u64,
+        task_id: u32,
+        node_id: String,
+        c_in: u32,
+        c_out: u32,
+        k_w: u32,
+        s_w: u32,
+        h: u32,
+        w: u32,
+        data: Vec<f32>,
+    ) -> WorkOrder {
+        WorkOrder {
+            round,
+            task_id,
+            node_id,
+            c_in,
+            c_out,
+            k_w,
+            s_w,
+            h,
+            w,
+            payloads: vec![WorkPayload { request, data }],
+        }
+    }
+
     /// Exact byte length of this order's encoded `ToWorker::Work` frame
-    /// (tag + fixed header + node id + payload). Lets the master's
-    /// dispatch encode allocate each frame exactly once with zero slack
-    /// — these frames are cached for re-dispatch, so over-reservation
-    /// would stay alive for the whole round.
+    /// (tag + fixed header + node id + payload vector). Lets the
+    /// master's dispatch encode allocate each frame exactly once with
+    /// zero slack — these frames are cached for re-dispatch, so
+    /// over-reservation would stay alive for the whole round.
     pub fn encoded_len(&self) -> usize {
-        1 + 8 + 4 + 4 + (4 + self.node_id.len()) + 6 * 4 + (8 + 4 * self.data.len())
+        1 + 8 + 4
+            + (4 + self.node_id.len())
+            + 6 * 4
+            + 4
+            + self
+                .payloads
+                .iter()
+                .map(|p| 8 + (8 + 4 * p.data.len()))
+                .sum::<usize>()
+    }
+
+    /// Expected element count of each payload (`c_in * h * w`).
+    pub fn payload_elems(&self) -> usize {
+        self.c_in as usize * self.h as usize * self.w as usize
     }
 
     pub fn spec(&self) -> ConvSpec {
@@ -66,8 +122,14 @@ impl WorkOrder {
         )
     }
 
-    pub fn input_tensor(&self) -> Result<Tensor> {
-        Tensor::from_vec(self.c_in as usize, self.h as usize, self.w as usize, self.data.clone())
+    /// Payload `i` as an input tensor.
+    pub fn input_tensor(&self, i: usize) -> Result<Tensor> {
+        Tensor::from_vec(
+            self.c_in as usize,
+            self.h as usize,
+            self.w as usize,
+            self.payloads[i].data.clone(),
+        )
     }
 }
 
@@ -76,11 +138,16 @@ impl WorkOrder {
 pub enum FromWorker {
     /// Setup done.
     Ready,
-    /// Subtask output (flattened CHW). `exec_secs` is the worker-measured
-    /// execution wall time (conv + any chronic-straggler stretch, but not
-    /// transmission): the master subtracts it from its dispatch→reply
-    /// measurement to decompose the sample into transmission vs execution
-    /// for the telemetry registry.
+    /// Subtask output (flattened CHW). For a coalesced order, `data` is
+    /// the per-request outputs concatenated in payload order (each
+    /// `c*h*w` long) and `c`/`h`/`w` describe ONE request's slice — the
+    /// master fans the reply back out per request. `exec_secs` is the
+    /// worker-measured execution wall time of the whole (batched) conv
+    /// (plus any chronic-straggler stretch, but not transmission): the
+    /// master subtracts it from its dispatch→reply measurement to
+    /// decompose the sample into transmission vs execution for the
+    /// telemetry registry, normalizing by the order's *coalesced* FLOPs
+    /// so batched samples don't bias the per-FLOP fits.
     Output {
         round: u64,
         task_id: u32,
@@ -124,7 +191,6 @@ impl ToWorker {
             ToWorker::Work(w) => {
                 e.u8(TAG_WORK)
                     .u64(w.round)
-                    .u32(w.request)
                     .u32(w.task_id)
                     .str(&w.node_id)
                     .u32(w.c_in)
@@ -133,7 +199,10 @@ impl ToWorker {
                     .u32(w.s_w)
                     .u32(w.h)
                     .u32(w.w)
-                    .f32s(&w.data);
+                    .u32(w.payloads.len() as u32);
+                for p in &w.payloads {
+                    e.u64(p.request).f32s(&p.data);
+                }
             }
             ToWorker::Cancel { round } => {
                 e.u8(TAG_CANCEL).u64(*round);
@@ -155,19 +224,41 @@ impl ToWorker {
                 model: d.str()?,
                 weight_seed: d.u64()?,
             },
-            TAG_WORK => ToWorker::Work(WorkOrder {
-                round: d.u64()?,
-                request: d.u32()?,
-                task_id: d.u32()?,
-                node_id: d.str()?,
-                c_in: d.u32()?,
-                c_out: d.u32()?,
-                k_w: d.u32()?,
-                s_w: d.u32()?,
-                h: d.u32()?,
-                w: d.u32()?,
-                data: d.f32s()?,
-            }),
+            TAG_WORK => {
+                let round = d.u64()?;
+                let task_id = d.u32()?;
+                let node_id = d.str()?;
+                let (c_in, c_out) = (d.u32()?, d.u32()?);
+                let (k_w, s_w) = (d.u32()?, d.u32()?);
+                let (h, w) = (d.u32()?, d.u32()?);
+                let n_payloads = d.u32()? as usize;
+                // Each payload is ≥ 16 wire bytes (request tag + length
+                // prefix); bound the claimed count by the remaining
+                // frame before allocating.
+                anyhow::ensure!(
+                    n_payloads >= 1 && n_payloads <= d.remaining() / 16,
+                    "implausible payload count {n_payloads}"
+                );
+                let mut payloads = Vec::with_capacity(n_payloads);
+                for _ in 0..n_payloads {
+                    payloads.push(WorkPayload {
+                        request: d.u64()?,
+                        data: d.f32s()?,
+                    });
+                }
+                ToWorker::Work(WorkOrder {
+                    round,
+                    task_id,
+                    node_id,
+                    c_in,
+                    c_out,
+                    k_w,
+                    s_w,
+                    h,
+                    w,
+                    payloads,
+                })
+            }
             TAG_CANCEL => ToWorker::Cancel { round: d.u64()? },
             TAG_SHUTDOWN => ToWorker::Shutdown,
             t => bail!("unknown ToWorker tag {t}"),
@@ -254,9 +345,17 @@ mod tests {
     #[test]
     fn message_roundtrips() {
         prop::check("message codec roundtrip", 48, |rng| {
+            // 1..=3 payloads: the single-request case and coalesced ones.
+            let n_payloads = 1 + rng.below(3);
+            let len = rng.below(500);
+            let payloads: Vec<WorkPayload> = (0..n_payloads)
+                .map(|_| WorkPayload {
+                    request: rng.next_u64(),
+                    data: (0..len).map(|_| rng.uniform() as f32).collect(),
+                })
+                .collect();
             let order = WorkOrder {
                 round: rng.next_u64(),
-                request: rng.below(8) as u32,
                 task_id: rng.below(100) as u32,
                 node_id: format!("conv{}", rng.below(20)),
                 c_in: 1 + rng.below(64) as u32,
@@ -265,7 +364,7 @@ mod tests {
                 s_w: 1 + rng.below(2) as u32,
                 h: 4,
                 w: 5,
-                data: (0..rng.below(500)).map(|_| rng.uniform() as f32).collect(),
+                payloads,
             };
             for msg in [
                 ToWorker::Setup {
@@ -301,25 +400,37 @@ mod tests {
     fn garbage_rejected() {
         assert!(ToWorker::decode(&[99, 1, 2]).is_err());
         assert!(FromWorker::decode(&[]).is_err());
+        // Work frame claiming zero / implausibly many payloads.
+        for claimed in [0u32, u32::MAX] {
+            let mut e = Encoder::new();
+            e.u8(TAG_WORK)
+                .u64(1)
+                .u32(0)
+                .str("conv1")
+                .u32(1)
+                .u32(1)
+                .u32(1)
+                .u32(1)
+                .u32(1)
+                .u32(1)
+                .u32(claimed);
+            assert!(ToWorker::decode(&e.finish()).is_err(), "count {claimed}");
+        }
     }
 
     #[test]
     fn work_frame_length_is_exact() {
-        let order = WorkOrder {
-            round: 3,
-            request: 1,
-            task_id: 2,
-            node_id: "conv_x".into(),
-            c_in: 3,
-            c_out: 8,
-            k_w: 3,
-            s_w: 1,
-            h: 6,
-            w: 7,
-            data: vec![0.5; 97],
-        };
+        let mut order = WorkOrder::single(3, 1, 2, "conv_x".into(), 3, 8, 3, 1, 6, 7, vec![0.5; 97]);
         let frame = ToWorker::Work(order.clone()).encode();
         assert_eq!(frame.len(), order.encoded_len());
+        // Coalesced frames too: the length formula must track payloads.
+        order.payloads.push(WorkPayload {
+            request: u64::MAX, // full-width tag survives the wire
+            data: vec![0.25; 97],
+        });
+        let frame = ToWorker::Work(order.clone()).encode();
+        assert_eq!(frame.len(), order.encoded_len());
+        assert_eq!(ToWorker::decode(&frame).unwrap(), ToWorker::Work(order));
         // Output frames likewise match their reserved capacity formula.
         let reply = FromWorker::Output {
             round: 3,

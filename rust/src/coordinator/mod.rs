@@ -13,7 +13,7 @@ pub mod worker;
 pub use injector::{ScenarioFaults, WorkerFaults};
 pub use master::{ExecMode, Master, MasterConfig, SchemeKind};
 pub use metrics::{InferenceMetrics, LayerMetrics, WorkerPhase};
-pub use pool::{LocalCluster, WorkerHandles};
+pub use pool::{LocalCluster, PoolOptions, WorkerHandles};
 pub use server::{
     InferenceRequest, InferenceServer, RequestHandle, ServeError, ServeResult, ServerConfig,
     ServerStats, SubmitError,

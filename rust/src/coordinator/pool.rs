@@ -42,15 +42,43 @@ impl WorkerHandles {
     }
 }
 
+/// Worker-side pool tuning (everything that is not the master's
+/// concern).
+#[derive(Clone, Copy, Debug)]
+pub struct PoolOptions {
+    /// Conv subtasks each worker keeps in flight concurrently (the
+    /// `--worker-slots` knob; see `coordinator::worker`). 0 = 1.
+    pub worker_slots: usize,
+}
+
+impl Default for PoolOptions {
+    fn default() -> PoolOptions {
+        PoolOptions { worker_slots: 1 }
+    }
+}
+
 impl LocalCluster {
     /// Spawn `n` workers (threads) with the given provider and per-worker
-    /// faults, then start a master on `model_name`.
+    /// faults, then start a master on `model_name`. Single-slot workers;
+    /// see [`LocalCluster::spawn_with`] for the concurrency knob.
     pub fn spawn(
         model_name: &str,
         n: usize,
         config: MasterConfig,
         provider: Arc<dyn ConvProvider>,
         faults: Vec<WorkerFaults>,
+    ) -> Result<LocalCluster> {
+        Self::spawn_with(model_name, n, config, provider, faults, PoolOptions::default())
+    }
+
+    /// [`LocalCluster::spawn`] with explicit [`PoolOptions`].
+    pub fn spawn_with(
+        model_name: &str,
+        n: usize,
+        config: MasterConfig,
+        provider: Arc<dyn ConvProvider>,
+        faults: Vec<WorkerFaults>,
+        opts: PoolOptions,
     ) -> Result<LocalCluster> {
         anyhow::ensure!(faults.len() == n, "need one fault plan per worker");
         let mut links: Vec<LinkPair> = Vec::new();
@@ -73,6 +101,7 @@ impl LocalCluster {
                                 provider,
                                 faults: f,
                                 rng_seed: 0xC0C0 + i as u64,
+                                slots: opts.worker_slots,
                             },
                         )
                     })?,

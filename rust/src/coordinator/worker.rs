@@ -12,11 +12,25 @@
 //! queued subtasks of that round as dead instead of waiting behind them
 //! in the transport FIFO. That is what frees straggler capacity for the
 //! pipelined engine's next wave.
+//!
+//! Execution runs on a small **persistent executor**: `slots` threads
+//! (the `--worker-slots` knob) spawned once per worker, each owning its
+//! own [`Scratch`] arena and fault-sampling RNG, fed over one shared job
+//! channel. With `slots > 1` the device keeps several convs in flight —
+//! a queued subtask no longer convoys behind a long-running one — while
+//! the cancel-set semantics are preserved: the dispatcher checks the
+//! set before enqueueing and the executor re-checks at dequeue, and
+//! every dispatched subtask still yields **exactly one** reply (Output /
+//! Failed / Skipped), which is what keeps the master's per-worker load
+//! accounting exact. A *coalesced* order (multi-payload `WorkOrder`)
+//! runs as one batched im2col/GEMM pass over every payload
+//! ([`ConvProvider::conv_batch`]) and replies with the concatenated
+//! outputs.
 
 use std::collections::{BTreeMap, HashSet};
 use std::sync::{mpsc, Arc, Mutex};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::model::{zoo, WeightStore};
 use crate::runtime::{ConvProvider, PackedWeights, Scratch};
@@ -33,28 +47,68 @@ pub struct WorkerConfig {
     pub faults: WorkerFaults,
     /// Seed for the fault-sampling RNG (deterministic runs).
     pub rng_seed: u64,
+    /// Conv subtasks this device keeps in flight concurrently (the
+    /// `--worker-slots` knob); `0` is treated as `1`. Results are
+    /// payload-exact at any setting — only completion *order* can
+    /// change.
+    pub slots: usize,
+}
+
+/// Everything `Setup` loads, shared read-only with the executor threads.
+struct LoadedModel {
+    store: WeightStore,
+    specs: BTreeMap<String, crate::conv::ConvSpec>,
+    /// Weights packed once at Setup into the kernel's execute-ready
+    /// layout (per layer): steady-state subtask execution does no
+    /// im2col/packing (re)allocation at all.
+    packed: BTreeMap<String, PackedWeights>,
+}
+
+/// Events multiplexed into the worker's main loop: link frames from the
+/// reader thread, the link closing, and executor-thread failures (the
+/// executors hold clones of the sender, so the dispatcher needs an
+/// explicit close event rather than relying on channel disconnect).
+enum WorkerEvent {
+    Msg(ToWorker),
+    LinkClosed,
+    Error(anyhow::Error),
+}
+
+/// Unwind guard for an executor thread: a PANIC (as opposed to a clean
+/// `Err` return, which posts its own event) must still surface to the
+/// dispatcher — otherwise the worker keeps accepting subtasks that
+/// nobody executes and whose one-reply-per-dispatch ack never comes,
+/// and the master only notices at its recv timeout.
+struct ExecGuard {
+    err_tx: mpsc::Sender<WorkerEvent>,
+}
+
+impl Drop for ExecGuard {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            let _ = self.err_tx.send(WorkerEvent::Error(anyhow::anyhow!(
+                "worker executor panicked"
+            )));
+        }
+    }
 }
 
 /// Blocking worker main loop. Returns when the master shuts the link or
 /// sends `Shutdown`.
 pub fn run_worker(
-    mut tx: Box<dyn FrameTx>,
+    tx: Box<dyn FrameTx>,
     mut rx: Box<dyn FrameRx>,
     config: WorkerConfig,
 ) -> Result<()> {
-    let mut rng = Rng::new(config.rng_seed);
-    let mut weights: Option<(String, WeightStore)> = None;
-    let mut specs: BTreeMap<String, crate::conv::ConvSpec> = Default::default();
-    // Weights packed once at Setup into the kernel's execute-ready layout
-    // (per layer), plus a reusable scratch arena: steady-state subtask
-    // execution does no im2col/packing (re)allocation at all.
-    let mut packed: BTreeMap<String, PackedWeights> = Default::default();
-    let mut scratch = Scratch::new();
+    let slots = config.slots.max(1);
+    // The executors and the dispatcher share the reply link.
+    let tx: Arc<Mutex<Box<dyn FrameTx>>> = Arc::new(Mutex::new(tx));
 
     // Reader thread: link frames -> in-memory work queue + cancel set.
-    let (queue_tx, queue) = mpsc::channel::<Result<ToWorker>>();
+    let (queue_tx, queue) = mpsc::channel::<WorkerEvent>();
     let cancelled: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
     let cancel_set = cancelled.clone();
+    let reader_tx = queue_tx.clone();
     let reader = std::thread::Builder::new()
         .name(format!("worker-{}-rx", config.id))
         .spawn(move || loop {
@@ -73,44 +127,126 @@ pub fn run_worker(
                     }
                     Ok(msg) => {
                         let stop = matches!(msg, ToWorker::Shutdown);
-                        if queue_tx.send(Ok(msg)).is_err() || stop {
+                        if reader_tx.send(WorkerEvent::Msg(msg)).is_err() || stop {
                             break;
                         }
                     }
                     Err(e) => {
-                        let _ = queue_tx.send(Err(e));
+                        let _ = reader_tx.send(WorkerEvent::Error(e));
                         break;
                     }
                 },
-                Ok(None) => break, // peer closed
+                Ok(None) => {
+                    let _ = reader_tx.send(WorkerEvent::LinkClosed);
+                    break;
+                }
                 Err(e) => {
-                    let _ = queue_tx.send(Err(e));
+                    let _ = reader_tx.send(WorkerEvent::Error(e));
                     break;
                 }
             }
         })?;
 
+    // Persistent executor pool: `slots` threads fed over one shared job
+    // channel, spawned ONCE per worker (this also closes the old
+    // per-conv `thread::scope` amortization gap at the worker level —
+    // steady state spawns no threads at all).
+    let (job_tx, job_rx) = mpsc::channel::<(WorkOrder, Arc<LoadedModel>)>();
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    let mut executors = Vec::with_capacity(slots);
+    for slot in 0..slots {
+        let job_rx = job_rx.clone();
+        let tx = tx.clone();
+        let cancelled = cancelled.clone();
+        let err_tx = queue_tx.clone();
+        let provider = config.provider.clone();
+        let faults = config.faults.clone();
+        let id = config.id;
+        // Slot 0 inherits the worker's seed verbatim, so a 1-slot
+        // executor samples the exact fault sequence the old sequential
+        // loop did.
+        let mut rng = Rng::new(config.rng_seed ^ (slot as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        executors.push(
+            std::thread::Builder::new()
+                .name(format!("worker-{id}-exec-{slot}"))
+                .spawn(move || {
+                    let _guard = ExecGuard {
+                        err_tx: err_tx.clone(),
+                    };
+                    let mut scratch = Scratch::new();
+                    loop {
+                        // Hold the lock only for the dequeue, not the conv.
+                        let job = job_rx.lock().unwrap().recv();
+                        let Ok((order, model)) = job else { break };
+                        // Re-check the cancel set at dequeue: a Cancel that
+                        // raced in while this subtask waited in the job
+                        // queue still saves the work. Ack the drop so the
+                        // master's one-reply-per-dispatch accounting and
+                        // load charges stay exact.
+                        if cancelled.lock().unwrap().contains(&order.round) {
+                            log::debug!(
+                                "worker {id}: skipping cancelled round {} task {}",
+                                order.round,
+                                order.task_id
+                            );
+                            let skipped = FromWorker::Skipped {
+                                round: order.round,
+                                task_id: order.task_id,
+                            };
+                            if tx.lock().unwrap().send(&skipped.encode()).is_err() {
+                                break;
+                            }
+                            continue;
+                        }
+                        match execute_order(&order, &model, &*provider, &faults, &mut scratch, &mut rng, id)
+                        {
+                            Ok(reply) => {
+                                // A failed send means the master has shut
+                                // down while this worker was draining
+                                // queued subtasks — a normal exit.
+                                if tx.lock().unwrap().send(&reply.encode()).is_err() {
+                                    log::debug!("worker {id}: master gone; exiting");
+                                    break;
+                                }
+                            }
+                            Err(e) => {
+                                let _ = err_tx.send(WorkerEvent::Error(e));
+                                break;
+                            }
+                        }
+                    }
+                })?,
+        );
+    }
+    drop(queue_tx); // main-loop senders: reader + executors only
+    // Drop the dispatcher's own handle on the job receiver: once every
+    // executor has exited, `job_tx.send` then actually fails (instead of
+    // queueing into a channel nobody will ever drain).
+    drop(job_rx);
+
+    let mut model: Option<Arc<LoadedModel>> = None;
     let mut result = Ok(());
-    while let Ok(msg) = queue.recv() {
-        match msg {
-            Err(e) => {
+    while let Ok(ev) = queue.recv() {
+        match ev {
+            WorkerEvent::Error(e) => {
                 result = Err(e);
                 break;
             }
-            Ok(ToWorker::Shutdown) => break,
+            WorkerEvent::LinkClosed => break, // peer closed: clean exit
+            WorkerEvent::Msg(ToWorker::Shutdown) => break,
             // Cancels are absorbed by the reader; tolerate one anyway.
-            Ok(ToWorker::Cancel { .. }) => {}
-            Ok(ToWorker::Setup { model, weight_seed }) => {
-                let spec = zoo::model(&model)?;
+            WorkerEvent::Msg(ToWorker::Cancel { .. }) => {}
+            WorkerEvent::Msg(ToWorker::Setup { model: name, weight_seed }) => {
+                let spec = zoo::model(&name)?;
                 let store = WeightStore::generate(&spec, weight_seed)?;
-                specs = spec
+                let specs: BTreeMap<String, crate::conv::ConvSpec> = spec
                     .conv_layers()?
                     .into_iter()
                     .map(|(id, s, _)| (id, s))
                     .collect();
                 // Pre-pack every conv layer's weights now (the paper's
                 // "preloaded weights" step) so no subtask pays for it.
-                packed = specs
+                let packed: BTreeMap<String, PackedWeights> = specs
                     .iter()
                     .filter_map(|(id, s)| {
                         let params = store.get(id).ok()?;
@@ -120,17 +256,23 @@ pub fn run_worker(
                             .map(|pa| (id.clone(), pa))
                     })
                     .collect();
-                weights = Some((model.clone(), store));
                 log::debug!(
-                    "worker {}: loaded {model} ({} layers prepacked)",
+                    "worker {}: loaded {name} ({} layers prepacked, {slots} slots)",
                     config.id,
                     packed.len()
                 );
-                if tx.send(&FromWorker::Ready.encode()).is_err() {
+                model = Some(Arc::new(LoadedModel { store, specs, packed }));
+                if tx.lock().unwrap().send(&FromWorker::Ready.encode()).is_err() {
                     break; // master gone mid-setup
                 }
             }
-            Ok(ToWorker::Work(order)) => {
+            WorkerEvent::Msg(ToWorker::Work(order)) => {
+                let Some(model) = &model else {
+                    result = Err(anyhow::anyhow!("Work before Setup: no weights loaded"));
+                    break;
+                };
+                // Already-cancelled rounds never reach the executor;
+                // ack the drop here (one reply per dispatch).
                 if cancelled.lock().unwrap().contains(&order.round) {
                     log::debug!(
                         "worker {}: skipping cancelled round {} task {}",
@@ -138,40 +280,30 @@ pub fn run_worker(
                         order.round,
                         order.task_id
                     );
-                    // Ack the drop: the master keeps its per-worker load
-                    // accounting exact by counting one reply per subtask.
                     let skipped = FromWorker::Skipped {
                         round: order.round,
                         task_id: order.task_id,
                     };
-                    if tx.send(&skipped.encode()).is_err() {
+                    if tx.lock().unwrap().send(&skipped.encode()).is_err() {
                         break;
                     }
                     continue;
                 }
-                let reply = match execute_order(
-                    &order,
-                    &weights,
-                    &specs,
-                    &packed,
-                    &mut scratch,
-                    &config,
-                    &mut rng,
-                ) {
-                    Ok(r) => r,
-                    Err(e) => {
-                        result = Err(e);
-                        break;
-                    }
-                };
-                // A failed send means the master has shut down while this
-                // worker was draining queued (e.g. rateless LT) subtasks —
-                // a normal exit, not an error.
-                if tx.send(&reply.encode()).is_err() {
-                    log::debug!("worker {}: master gone; exiting", config.id);
+                if job_tx.send((order, model.clone())).is_err() {
+                    // All executors died; the Error event that killed
+                    // them is (or will be) in the queue — surface it.
+                    result = Err(anyhow::anyhow!("worker executor pool terminated"));
                     break;
                 }
             }
+        }
+    }
+    // Let the executors drain their queue (each remaining subtask still
+    // gets its one reply when the master is alive), then reap errors.
+    drop(job_tx);
+    for exec in executors {
+        if exec.join().is_err() && result.is_ok() {
+            result = Err(anyhow::anyhow!("worker executor panicked"));
         }
     }
     // Don't join: the reader may be blocked in recv() until the master
@@ -180,38 +312,47 @@ pub fn run_worker(
     result
 }
 
+/// Execute one (possibly coalesced) work order: a single-payload order
+/// runs the classic prepacked single conv; a multi-payload order runs
+/// ONE batched pass whose GEMM N dimension spans every payload — each
+/// payload's slice is bitwise identical to a solo run — and replies
+/// with the concatenated outputs in payload order.
 fn execute_order(
     order: &WorkOrder,
-    weights: &Option<(String, WeightStore)>,
-    specs: &std::collections::BTreeMap<String, crate::conv::ConvSpec>,
-    packed: &std::collections::BTreeMap<String, PackedWeights>,
+    model: &LoadedModel,
+    provider: &dyn ConvProvider,
+    faults: &WorkerFaults,
     scratch: &mut Scratch,
-    config: &WorkerConfig,
     rng: &mut Rng,
+    worker_id: usize,
 ) -> Result<FromWorker> {
-    let (_, store) = weights
-        .as_ref()
-        .context("Work before Setup: no weights loaded")?;
     let spec = order.spec();
     // Sanity: the wire spec must match the preloaded layer's.
-    if let Some(known) = specs.get(&order.node_id) {
+    if let Some(known) = model.specs.get(&order.node_id) {
         anyhow::ensure!(
             known.c_in == spec.c_in && known.c_out == spec.c_out && known.k_w == spec.k_w,
             "order spec mismatch for '{}'",
             order.node_id
         );
     }
-    let input = order.input_tensor()?;
-    let params = store.get(&order.node_id)?;
+    let elems = order.payload_elems();
+    anyhow::ensure!(
+        order.payloads.iter().all(|p| p.data.len() == elems),
+        "order payload length mismatch for '{}'",
+        order.node_id
+    );
+    let inputs: Vec<crate::conv::Tensor> = (0..order.payloads.len())
+        .map(|i| order.input_tensor(i))
+        .collect::<Result<_>>()?;
+    let params = model.store.get(&order.node_id)?;
 
     let t0 = std::time::Instant::now();
     // Injected failure: signal the master after "noticing" (half the
     // nominal compute, approximated by the work done so far: zero here,
     // so we charge a small fixed notice delay instead of computing).
-    if config.faults.fails(order.round) {
+    if faults.fails(order.round) {
         log::debug!(
-            "worker {}: injected failure (round {}, task {})",
-            config.id,
+            "worker {worker_id}: injected failure (round {}, task {})",
             order.round,
             order.task_id
         );
@@ -222,41 +363,49 @@ fn execute_order(
     }
 
     // Steady-state execution path: prepacked weights when Setup packed
-    // this layer, caller-owned scratch either way (zero per-subtask
-    // im2col/panel allocation once buffers reach their high-water mark).
-    let out = match packed.get(&order.node_id) {
-        Some(pa) => config
-            .provider
-            .conv_prepacked(&spec, &input, &params.weights, pa, scratch)?,
-        None => config
-            .provider
-            .conv_scratch(&spec, &input, &params.weights, scratch)?,
-    };
+    // this layer, executor-owned scratch either way (zero per-subtask
+    // im2col/panel allocation once buffers reach their high-water
+    // mark). One pass serves every coalesced payload.
+    let input_refs: Vec<&crate::conv::Tensor> = inputs.iter().collect();
+    let outs = provider.conv_batch(
+        &spec,
+        &input_refs,
+        &params.weights,
+        model.packed.get(&order.node_id),
+        scratch,
+    )?;
 
     // Chronic straggler: stretch compute wall-time by (slowdown − 1)×.
-    if config.faults.cmp_slowdown > 1.0 {
-        let extra = t0.elapsed().as_secs_f64() * (config.faults.cmp_slowdown - 1.0);
+    if faults.cmp_slowdown > 1.0 {
+        let extra = t0.elapsed().as_secs_f64() * (faults.cmp_slowdown - 1.0);
         std::thread::sleep(std::time::Duration::from_secs_f64(extra));
     }
-    // Worker-measured execution time (conv + any straggler stretch).
-    // Reported to the master so telemetry can split dispatch→reply into
-    // execution vs transmission; the injected send delay below is
+    // Worker-measured execution time (conv + any straggler stretch) of
+    // the WHOLE batched pass — the master normalizes it by the order's
+    // coalesced FLOPs. Reported so telemetry can split dispatch→reply
+    // into execution vs transmission; the injected send delay below is
     // deliberately *excluded* — it models the link, not the device.
     let exec_secs = t0.elapsed().as_secs_f64();
     // Scenario-1 transmission delay.
-    let d = config.faults.sample_send_delay(rng);
+    let d = faults.sample_send_delay(rng);
     if d > 0.0 {
         std::thread::sleep(std::time::Duration::from_secs_f64(d));
     }
 
+    let (c, h, w) = (outs[0].c, outs[0].h, outs[0].w);
+    let mut data = Vec::with_capacity(c * h * w * outs.len());
+    for out in outs {
+        debug_assert_eq!((out.c, out.h, out.w), (c, h, w));
+        data.extend_from_slice(&out.data);
+    }
     Ok(FromWorker::Output {
         round: order.round,
         task_id: order.task_id,
-        c: out.c as u32,
-        h: out.h as u32,
-        w: out.w as u32,
+        c: c as u32,
+        h: h as u32,
+        w: w as u32,
         exec_secs,
-        data: out.data,
+        data,
     })
 }
 
@@ -267,8 +416,9 @@ mod tests {
     use crate::transport::inproc;
     use crate::transport::split::split_inproc;
 
-    fn spawn_test_worker(
+    fn spawn_test_worker_slots(
         faults: WorkerFaults,
+        slots: usize,
     ) -> (Box<dyn FrameTx>, Box<dyn FrameRx>, std::thread::JoinHandle<()>) {
         let (master_side, worker_side) = inproc::pair();
         let (mtx, mrx) = split_inproc(master_side);
@@ -282,11 +432,18 @@ mod tests {
                     provider: Arc::new(FallbackProvider::new()),
                     faults,
                     rng_seed: 1,
+                    slots,
                 },
             )
             .unwrap();
         });
         (Box::new(mtx), Box::new(mrx), handle)
+    }
+
+    fn spawn_test_worker(
+        faults: WorkerFaults,
+    ) -> (Box<dyn FrameTx>, Box<dyn FrameRx>, std::thread::JoinHandle<()>) {
+        spawn_test_worker_slots(faults, 1)
     }
 
     #[test]
@@ -304,19 +461,19 @@ mod tests {
         assert_eq!(ready, FromWorker::Ready);
 
         // conv1 of tinyvgg: 3 -> 32, 3x3 s1. Send a small padded slice.
-        let order = WorkOrder {
-            round: 0,
-            request: 0,
-            task_id: 5,
-            node_id: "conv1".into(),
-            c_in: 3,
-            c_out: 32,
-            k_w: 3,
-            s_w: 1,
-            h: 10,
-            w: 7,
-            data: vec![0.5; 3 * 10 * 7],
-        };
+        let order = WorkOrder::single(
+            0,
+            0,
+            5,
+            "conv1".into(),
+            3,
+            32,
+            3,
+            1,
+            10,
+            7,
+            vec![0.5; 3 * 10 * 7],
+        );
         tx.send(&ToWorker::Work(order).encode()).unwrap();
         match FromWorker::decode(&rx.recv().unwrap().unwrap()).unwrap() {
             FromWorker::Output { round, task_id, c, h, w, exec_secs, data } => {
@@ -325,6 +482,57 @@ mod tests {
                 assert_eq!(data.len(), 32 * 8 * 5);
                 assert!(data.iter().all(|v| v.is_finite()));
                 assert!(exec_secs >= 0.0 && exec_secs < 60.0, "exec={exec_secs}");
+            }
+            other => panic!("expected output, got {other:?}"),
+        }
+        tx.send(&ToWorker::Shutdown.encode()).unwrap();
+        handle.join().unwrap();
+    }
+
+    /// A coalesced (multi-payload) order yields ONE reply whose data is
+    /// the per-payload outputs concatenated — each slice bitwise equal
+    /// to the single-payload result for the same input.
+    #[test]
+    fn coalesced_order_concatenates_outputs() {
+        let (mut tx, mut rx, handle) = spawn_test_worker(WorkerFaults::none());
+        tx.send(
+            &ToWorker::Setup {
+                model: "tinyvgg".into(),
+                weight_seed: 42,
+            }
+            .encode(),
+        )
+        .unwrap();
+        rx.recv().unwrap().unwrap(); // Ready
+
+        let data_a = vec![0.5; 3 * 10 * 7];
+        let data_b: Vec<f32> = (0..3 * 10 * 7).map(|i| (i % 13) as f32 * 0.1 - 0.6).collect();
+        // Solo runs first.
+        let mut solo = Vec::new();
+        for (i, d) in [data_a.clone(), data_b.clone()].into_iter().enumerate() {
+            let order =
+                WorkOrder::single(i as u64, 7, 0, "conv1".into(), 3, 32, 3, 1, 10, 7, d);
+            tx.send(&ToWorker::Work(order).encode()).unwrap();
+            match FromWorker::decode(&rx.recv().unwrap().unwrap()).unwrap() {
+                FromWorker::Output { data, .. } => solo.push(data),
+                other => panic!("expected output, got {other:?}"),
+            }
+        }
+        // One coalesced order with both payloads.
+        let mut order =
+            WorkOrder::single(10, 40, 1, "conv1".into(), 3, 32, 3, 1, 10, 7, data_a);
+        order.payloads.push(super::super::messages::WorkPayload {
+            request: 41,
+            data: data_b,
+        });
+        tx.send(&ToWorker::Work(order).encode()).unwrap();
+        match FromWorker::decode(&rx.recv().unwrap().unwrap()).unwrap() {
+            FromWorker::Output { round, c, h, w, data, .. } => {
+                assert_eq!(round, 10);
+                let part = (c * h * w) as usize;
+                assert_eq!(data.len(), 2 * part);
+                assert_eq!(&data[..part], &solo[0][..], "payload 0 diverged");
+                assert_eq!(&data[part..], &solo[1][..], "payload 1 diverged");
             }
             other => panic!("expected output, got {other:?}"),
         }
@@ -345,19 +553,8 @@ mod tests {
         )
         .unwrap();
         rx.recv().unwrap().unwrap(); // Ready
-        let order = WorkOrder {
-            round: 0,
-            request: 0,
-            task_id: 2,
-            node_id: "conv1".into(),
-            c_in: 3,
-            c_out: 32,
-            k_w: 3,
-            s_w: 1,
-            h: 5,
-            w: 5,
-            data: vec![0.0; 75],
-        };
+        let order =
+            WorkOrder::single(0, 0, 2, "conv1".into(), 3, 32, 3, 1, 5, 5, vec![0.0; 75]);
         tx.send(&ToWorker::Work(order.clone()).encode()).unwrap();
         assert_eq!(
             FromWorker::decode(&rx.recv().unwrap().unwrap()).unwrap(),
@@ -388,19 +585,19 @@ mod tests {
         )
         .unwrap();
         rx.recv().unwrap().unwrap(); // Ready
-        let order = WorkOrder {
-            round: 5,
-            request: 0,
-            task_id: 1,
-            node_id: "conv1".into(),
-            c_in: 3,
-            c_out: 32,
-            k_w: 3,
-            s_w: 1,
-            h: 10,
-            w: 7,
-            data: vec![0.25; 3 * 10 * 7],
-        };
+        let order = WorkOrder::single(
+            5,
+            0,
+            1,
+            "conv1".into(),
+            3,
+            32,
+            3,
+            1,
+            10,
+            7,
+            vec![0.25; 3 * 10 * 7],
+        );
         // Cancel round 5 first (FIFO: reader records it before the work
         // is dequeued), then send round-5 work and round-6 work.
         tx.send(&ToWorker::Cancel { round: 5 }.encode()).unwrap();
@@ -421,6 +618,99 @@ mod tests {
         handle.join().unwrap();
     }
 
+    /// The executor contract at every slot count: N dispatched subtasks
+    /// yield exactly N replies (here all Outputs), regardless of the
+    /// completion order concurrency allows.
+    #[test]
+    fn slots_preserve_one_reply_per_dispatch() {
+        for slots in [1, 2, 4] {
+            let (mut tx, mut rx, handle) =
+                spawn_test_worker_slots(WorkerFaults::none(), slots);
+            tx.send(
+                &ToWorker::Setup {
+                    model: "tinyvgg".into(),
+                    weight_seed: 42,
+                }
+                .encode(),
+            )
+            .unwrap();
+            rx.recv().unwrap().unwrap(); // Ready
+            let n = 6;
+            for t in 0..n {
+                let order = WorkOrder::single(
+                    t as u64,
+                    0,
+                    t as u32,
+                    "conv1".into(),
+                    3,
+                    32,
+                    3,
+                    1,
+                    10,
+                    7,
+                    vec![0.1 * (t + 1) as f32; 3 * 10 * 7],
+                );
+                tx.send(&ToWorker::Work(order).encode()).unwrap();
+            }
+            let mut seen: Vec<u64> = (0..n)
+                .map(|_| match FromWorker::decode(&rx.recv().unwrap().unwrap()).unwrap() {
+                    FromWorker::Output { round, .. } => round,
+                    other => panic!("slots={slots}: expected output, got {other:?}"),
+                })
+                .collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..n as u64).collect::<Vec<_>>(), "slots={slots}");
+            tx.send(&ToWorker::Shutdown.encode()).unwrap();
+            handle.join().unwrap();
+        }
+    }
+
+    /// Cancel acks survive concurrency: with multiple slots, a cancelled
+    /// round queued behind work still produces exactly one Skipped ack.
+    #[test]
+    fn slots_ack_cancels_exactly_once() {
+        let (mut tx, mut rx, handle) = spawn_test_worker_slots(WorkerFaults::none(), 4);
+        tx.send(
+            &ToWorker::Setup {
+                model: "tinyvgg".into(),
+                weight_seed: 42,
+            }
+            .encode(),
+        )
+        .unwrap();
+        rx.recv().unwrap().unwrap(); // Ready
+        tx.send(&ToWorker::Cancel { round: 2 }.encode()).unwrap();
+        for round in 0..4u64 {
+            let order = WorkOrder::single(
+                round,
+                0,
+                0,
+                "conv1".into(),
+                3,
+                32,
+                3,
+                1,
+                10,
+                7,
+                vec![0.5; 3 * 10 * 7],
+            );
+            tx.send(&ToWorker::Work(order).encode()).unwrap();
+        }
+        let mut outputs = 0;
+        let mut skipped = Vec::new();
+        for _ in 0..4 {
+            match FromWorker::decode(&rx.recv().unwrap().unwrap()).unwrap() {
+                FromWorker::Output { .. } => outputs += 1,
+                FromWorker::Skipped { round, .. } => skipped.push(round),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(outputs, 3);
+        assert_eq!(skipped, vec![2]);
+        tx.send(&ToWorker::Shutdown.encode()).unwrap();
+        handle.join().unwrap();
+    }
+
     #[test]
     fn work_before_setup_is_error() {
         let (master_side, worker_side) = inproc::pair();
@@ -435,22 +725,12 @@ mod tests {
                     provider: Arc::new(FallbackProvider::new()),
                     faults: WorkerFaults::none(),
                     rng_seed: 1,
+                    slots: 2,
                 },
             )
         });
-        let order = WorkOrder {
-            round: 0,
-            request: 0,
-            task_id: 0,
-            node_id: "conv1".into(),
-            c_in: 1,
-            c_out: 1,
-            k_w: 1,
-            s_w: 1,
-            h: 1,
-            w: 1,
-            data: vec![0.0],
-        };
+        let order =
+            WorkOrder::single(0, 0, 0, "conv1".into(), 1, 1, 1, 1, 1, 1, vec![0.0]);
         mtx.send(&ToWorker::Work(order).encode()).unwrap();
         assert!(handle.join().unwrap().is_err());
     }

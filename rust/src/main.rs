@@ -13,7 +13,9 @@
 //!              [--deadline-ms D]                    # per-request deadline (shed when unmeetable)
 //!              [--queue-cap C]                      # admission bound (QueueFull backpressure)
 //!              [--concurrent M]                     # engine concurrency limit (0 = unlimited)
-//! cocoi worker --listen 0.0.0.0:9090 [--pjrt] [--threads T]   # TCP worker process
+//!              [--coalesce C]                       # merge ≤C same-layer requests per round (1 = off)
+//!              [--worker-slots S]                   # convs in flight per worker (1 = sequential)
+//! cocoi worker --listen 0.0.0.0:9090 [--pjrt] [--threads T] [--slots S]   # TCP worker process
 //! cocoi infer  --tcp host:9090,host:9091 ...        # master over TCP
 //! cocoi plan   --model vgg16 --workers 10           # show the split plan
 //! cocoi experiment <gemm|fig4|fig5|fig6|fig7|fig8|fig9|fig10|table1|theory|throughput|adaptive|serving|all>
@@ -155,6 +157,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
             ExecMode::RoundBarrier
         },
         adaptive: args.has("adaptive"),
+        coalesce: args.get_usize("coalesce", 1)?,
         ..Default::default()
     };
     let telemetry_path = args.get("telemetry").map(std::path::PathBuf::from);
@@ -171,7 +174,16 @@ fn cmd_infer(args: &Args) -> Result<()> {
         let master = cocoi::coordinator::Master::new(&model_name, config, links, provider)?;
         (master, None)
     } else {
-        let cluster = LocalCluster::spawn(&model_name, n, config, provider, faults)?;
+        let cluster = LocalCluster::spawn_with(
+            &model_name,
+            n,
+            config,
+            provider,
+            faults,
+            cocoi::coordinator::PoolOptions {
+                worker_slots: args.get_usize("worker-slots", 1)?,
+            },
+        )?;
         let (master, workers) = cluster.into_parts();
         (master, Some(workers))
     };
@@ -313,6 +325,7 @@ fn run_inferences(
 
 fn cmd_worker(args: &Args) -> Result<()> {
     let listen = args.get("listen").unwrap_or("127.0.0.1:9090").to_string();
+    let slots = args.get_usize("slots", 1)?;
     let (provider, _service) = make_provider(args.has("pjrt"), args.get_usize("threads", 0)?)?;
     cocoi::transport::tcp::serve(&listen, move |link| {
         let provider = provider.clone();
@@ -325,6 +338,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
                 provider,
                 faults: WorkerFaults::none(),
                 rng_seed: 0xDEC0DE,
+                slots,
             },
         )
     })

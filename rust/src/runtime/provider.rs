@@ -67,6 +67,31 @@ pub trait ConvProvider: Send + Sync {
     ) -> Result<Tensor> {
         self.conv_scratch(spec, input, weights, scratch)
     }
+
+    /// Convolve a coalesced batch of same-shape inputs with one layer's
+    /// weights — the worker path for cross-request shard coalescing.
+    /// Every output must be bitwise identical to running its input alone
+    /// through the matching single-input path; the default loop
+    /// guarantees that trivially, the fallback provider overrides it
+    /// with one batched im2col/GEMM pass whose N dimension spans all
+    /// inputs (bitwise identity proven structurally — see
+    /// `conv::gemm::conv_padded_packed_batch`).
+    fn conv_batch(
+        &self,
+        spec: &ConvSpec,
+        inputs: &[&Tensor],
+        weights: &[f32],
+        packed: Option<&PackedWeights>,
+        scratch: &mut Scratch,
+    ) -> Result<Vec<Tensor>> {
+        inputs
+            .iter()
+            .map(|input| match packed {
+                Some(pa) => self.conv_prepacked(spec, input, weights, pa, scratch),
+                None => self.conv_scratch(spec, input, weights, scratch),
+            })
+            .collect()
+    }
 }
 
 /// Pure-rust provider: im2col + the tiled multithreaded packed GEMM
@@ -152,6 +177,27 @@ impl ConvProvider for FallbackProvider {
             return self.conv_scratch(spec, input, weights, scratch);
         }
         gemm::conv_padded_packed(spec, input, packed, self.threads(), scratch)
+    }
+
+    fn conv_batch(
+        &self,
+        spec: &ConvSpec,
+        inputs: &[&Tensor],
+        weights: &[f32],
+        packed: Option<&PackedWeights>,
+        scratch: &mut Scratch,
+    ) -> Result<Vec<Tensor>> {
+        match packed {
+            Some(pa) if pa.m() == spec.c_out && pa.k() == spec.c_in * spec.k_w * spec.k_w => {
+                gemm::conv_padded_packed_batch(spec, inputs, pa, self.threads(), scratch)
+            }
+            // No (or shape-drifted) pack: pack once here, then batch.
+            _ => {
+                anyhow::ensure!(weights.len() == spec.weight_len(), "bad weight length");
+                let pa = PackedA::pack(weights, spec.c_out, spec.c_in * spec.k_w * spec.k_w);
+                gemm::conv_padded_packed_batch(spec, inputs, &pa, self.threads(), scratch)
+            }
+        }
     }
 }
 
@@ -339,5 +385,36 @@ mod tests {
             .unwrap();
         assert_eq!(plain.data, scratched.data);
         assert_eq!(plain.data, prepacked.data);
+    }
+
+    /// The coalescing contract at the provider level: a batched call
+    /// returns exactly the per-input single-call results, with and
+    /// without prepacked weights.
+    #[test]
+    fn conv_batch_matches_singles_bitwise() {
+        let spec = ConvSpec::new(3, 7, 3, 1, 0);
+        let mut rng = Rng::new(21);
+        let inputs: Vec<Tensor> = (0..3)
+            .map(|_| {
+                let mut t = Tensor::zeros(3, 9, 11);
+                rng.fill_uniform_f32(&mut t.data, -1.0, 1.0);
+                t
+            })
+            .collect();
+        let mut w = vec![0f32; spec.weight_len()];
+        rng.fill_uniform_f32(&mut w, -1.0, 1.0);
+        let p = FallbackProvider::with_threads(2);
+        let packed = p.prepack(&spec, &w).unwrap();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let mut scratch = Scratch::new();
+        for pack in [Some(&packed), None] {
+            let batched = p.conv_batch(&spec, &refs, &w, pack, &mut scratch).unwrap();
+            for (input, got) in inputs.iter().zip(&batched) {
+                let solo = p
+                    .conv_prepacked(&spec, input, &w, &packed, &mut scratch)
+                    .unwrap();
+                assert_eq!(solo.data, got.data, "pack={:?}", pack.is_some());
+            }
+        }
     }
 }

@@ -12,7 +12,8 @@ pub mod scenario;
 
 pub use adaptive::{simulate_adaptive, AdaptiveSimResult, DriftScenario};
 pub use runner::{
-    percentile, simulate_model, simulate_serving, simulate_serving_open, straggling_profile,
-    MethodSim, ModelSimResult, ServeSimMode, ServingSimResult,
+    percentile, simulate_model, simulate_serving, simulate_serving_open,
+    simulate_serving_open_with, straggling_profile, MethodSim, ModelSimResult, ServeKnobs,
+    ServeSimMode, ServingSimResult,
 };
 pub use scenario::Scenario;

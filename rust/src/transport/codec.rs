@@ -153,6 +153,12 @@ impl<'a> Decoder<'a> {
         Ok(out)
     }
 
+    /// Bytes not yet consumed — lets callers validate a claimed element
+    /// count against what the frame can actually hold before allocating.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
     pub fn done(&self) -> Result<()> {
         if self.pos != self.buf.len() {
             bail!("{} trailing bytes", self.buf.len() - self.pos);

@@ -1,0 +1,266 @@
+//! Cross-request shard-coalescing property suite.
+//!
+//! The coalescing contract: merging several concurrent requests'
+//! same-layer shards into one multi-payload round is a pure *scheduling*
+//! optimization — it must never change what any request computes.
+//! Pinned here as: fixed-seed randomized mixes of request counts and
+//! priorities through the coalesced engine are bitwise-identical to the
+//! uncoalesced engine AND to `Master::infer` run serially on the
+//! deterministic uncoded decode, within decode tolerance of local under
+//! MDS, and both still hold under mid-batch straggler cancellation and
+//! staggered (different-layer) submission streams.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cocoi::conv::Tensor;
+use cocoi::coordinator::{
+    ExecMode, InferenceRequest, InferenceServer, LocalCluster, MasterConfig, PoolOptions,
+    SchemeKind, ServerConfig, WorkerFaults,
+};
+use cocoi::model::graph::forward_local;
+use cocoi::model::{zoo, WeightStore};
+use cocoi::planner::SplitPolicy;
+use cocoi::runtime::FallbackProvider;
+use cocoi::util::Rng;
+
+fn inputs_for(count: usize, seed: u64) -> Vec<Tensor> {
+    let model = zoo::model("tinyvgg").unwrap();
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            let mut t = Tensor::zeros(model.input.0, model.input.1, model.input.2);
+            rng.fill_uniform_f32(&mut t.data, -1.0, 1.0);
+            t
+        })
+        .collect()
+}
+
+fn local_refs(inputs: &[Tensor]) -> Vec<Tensor> {
+    let model = zoo::model("tinyvgg").unwrap();
+    let weights = WeightStore::generate(&model, 42).unwrap();
+    inputs
+        .iter()
+        .map(|i| forward_local(&model, &weights, i).unwrap())
+        .collect()
+}
+
+fn cluster(
+    scheme: SchemeKind,
+    n: usize,
+    k: usize,
+    mode: ExecMode,
+    coalesce: usize,
+    worker_slots: usize,
+    faults: Vec<WorkerFaults>,
+) -> LocalCluster {
+    let config = MasterConfig {
+        scheme,
+        policy: SplitPolicy::Fixed(k),
+        mode,
+        coalesce,
+        ..Default::default()
+    };
+    LocalCluster::spawn_with(
+        "tinyvgg",
+        n,
+        config,
+        Arc::new(FallbackProvider::new()),
+        faults,
+        PoolOptions { worker_slots },
+    )
+    .unwrap()
+}
+
+fn healthy(n: usize) -> Vec<WorkerFaults> {
+    (0..n).map(|_| WorkerFaults::none()).collect()
+}
+
+/// Batch the inputs through a pipelined engine with the given knobs.
+fn run_batch(inputs: &[Tensor], coalesce: usize, slots: usize) -> Vec<Tensor> {
+    let mut c = cluster(
+        SchemeKind::Uncoded,
+        3,
+        3,
+        ExecMode::Pipelined,
+        coalesce,
+        slots,
+        healthy(3),
+    );
+    let outs = c.master.infer_batch(inputs).unwrap();
+    c.shutdown().unwrap();
+    outs.into_iter().map(|(t, _)| t).collect()
+}
+
+/// THE coalescing correctness pin: fixed-seed randomized request counts
+/// through coalesced / uncoalesced / serial engines agree BITWISE on the
+/// uncoded path (identity decode + bitwise-stable batched GEMM).
+#[test]
+fn randomized_mixes_bitwise_equal_across_engines() {
+    let mut rng = Rng::new(0xC0A1);
+    for trial in 0..4 {
+        let count = 1 + rng.below(5); // 1..=5 requests
+        let inputs = inputs_for(count, 0xBEE5 ^ trial);
+
+        // Serial reference: one request at a time through infer().
+        let serial: Vec<Tensor> = {
+            let mut c = cluster(
+                SchemeKind::Uncoded,
+                3,
+                3,
+                ExecMode::RoundBarrier,
+                1,
+                1,
+                healthy(3),
+            );
+            let outs = inputs
+                .iter()
+                .map(|i| c.master.infer(i).unwrap().0)
+                .collect();
+            c.shutdown().unwrap();
+            outs
+        };
+        let plain = run_batch(&inputs, 1, 1);
+        let coalesced = run_batch(&inputs, 4, 1);
+        let coalesced_slotted = run_batch(&inputs, 4, 2);
+        for i in 0..count {
+            assert_eq!(
+                plain[i].data, serial[i].data,
+                "trial {trial} req {i}: uncoalesced engine != serial"
+            );
+            assert_eq!(
+                coalesced[i].data, serial[i].data,
+                "trial {trial} req {i}: coalesced engine != serial"
+            );
+            assert_eq!(
+                coalesced_slotted[i].data, serial[i].data,
+                "trial {trial} req {i}: coalesced+slots engine != serial"
+            );
+        }
+    }
+}
+
+/// Coalesced MDS serving with randomized priorities: every request's
+/// answer stays within decode tolerance of local inference, whichever
+/// batch its shards rode in.
+#[test]
+fn coalesced_mds_with_priorities_matches_local() {
+    let inputs = inputs_for(6, 77);
+    let want = local_refs(&inputs);
+    let c = cluster(SchemeKind::Mds, 4, 3, ExecMode::Pipelined, 3, 2, healthy(4));
+    let (master, workers) = c.into_parts();
+    let server = InferenceServer::start(master, ServerConfig::default());
+    let mut rng = Rng::new(5);
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|i| {
+            server
+                .submit(InferenceRequest::new(i.clone()).with_priority(rng.below(4) as u8))
+                .unwrap()
+        })
+        .collect();
+    for (h, want) in handles.into_iter().zip(&want) {
+        let (out, metrics) = h.wait().unwrap();
+        let err = out.max_abs_diff(want);
+        assert!(err < 2e-2, "coalesced MDS off local by {err}");
+        assert!(metrics.layers.iter().any(|l| l.distributed));
+    }
+    stop(server, workers);
+}
+
+fn stop(server: InferenceServer, workers: cocoi::coordinator::WorkerHandles) {
+    let master = server.shutdown().unwrap();
+    master.shutdown();
+    workers.join().unwrap();
+}
+
+/// Mid-batch cancellation: MDS(k=2, n=4) with one slow-sending worker
+/// cancels two straggler shards per round while the round's other
+/// requests ride the same coalesced frames. Outputs stay within
+/// tolerance and the metrics show the cancellations actually happened.
+#[test]
+fn coalesced_output_correct_under_mid_batch_cancellation() {
+    let inputs = inputs_for(5, 31);
+    let want = local_refs(&inputs);
+    let mut faults = healthy(4);
+    // One chronically slow link: its shard is routinely the straggler
+    // that gets cancelled after the round decodes from the fast three.
+    faults[3] = WorkerFaults::with_send_delay(0.03);
+    let mut c = cluster(SchemeKind::Mds, 4, 2, ExecMode::Pipelined, 4, 1, faults);
+    let results = c.master.infer_batch(&inputs).unwrap();
+    let cancelled: usize = results.iter().map(|(_, m)| m.cancelled()).sum();
+    for ((out, _), want) in results.iter().zip(&want) {
+        let err = out.max_abs_diff(want);
+        assert!(err < 2e-2, "cancellation run off local by {err}");
+    }
+    // With a 30 ms straggler on every round and k=2-of-4 decode, at
+    // least one straggler shard must have been cancelled mid-batch.
+    assert!(cancelled > 0, "expected mid-batch cancellations");
+    c.shutdown().unwrap();
+}
+
+/// Layer-offset mixes: a staggered stream (later submissions arrive
+/// while earlier requests are deep in the model) coalesces only
+/// same-layer groups; everything still matches local. The pacing makes
+/// grouping nondeterministic on purpose — correctness may not depend on
+/// which requests happened to batch.
+#[test]
+fn staggered_stream_coalesces_safely() {
+    let inputs = inputs_for(6, 99);
+    let want = local_refs(&inputs);
+    let c = cluster(SchemeKind::Uncoded, 3, 3, ExecMode::Pipelined, 4, 2, healthy(3));
+    let (master, workers) = c.into_parts();
+    let server = InferenceServer::start(master, ServerConfig::default());
+    let handles: Vec<_> = inputs
+        .iter()
+        .enumerate()
+        .map(|(i, input)| {
+            if i > 0 && i % 2 == 0 {
+                std::thread::sleep(Duration::from_millis(3));
+            }
+            server.submit(InferenceRequest::new(input.clone())).unwrap()
+        })
+        .collect();
+    for (h, want) in handles.into_iter().zip(&want) {
+        let (out, _) = h.wait().unwrap();
+        // Uncoded: bitwise-local regardless of which batches formed.
+        assert_eq!(out.data, want.data, "staggered uncoded output not bitwise-local");
+    }
+    stop(server, workers);
+}
+
+/// The per-request latency metrics of a coalesced batch stay coherent:
+/// every request reports each distributed layer exactly once, with the
+/// coalesced round's shared phases accounted per request.
+#[test]
+fn coalesced_metrics_report_every_layer_once() {
+    let inputs = inputs_for(3, 55);
+    let mut c = cluster(
+        SchemeKind::Uncoded,
+        3,
+        3,
+        ExecMode::Pipelined,
+        4,
+        1,
+        healthy(3),
+    );
+    let results = c.master.infer_batch(&inputs).unwrap();
+    let model = zoo::model("tinyvgg").unwrap();
+    let n_convs = model
+        .nodes
+        .iter()
+        .filter(|n| matches!(n.op, cocoi::model::Op::Conv { .. }))
+        .count();
+    for (_, metrics) in &results {
+        assert_eq!(
+            metrics.layers.len(),
+            n_convs,
+            "each conv layer reports exactly once per request"
+        );
+        for lm in metrics.layers.iter().filter(|l| l.distributed) {
+            assert!(lm.t_workers >= 0.0 && lm.t_workers.is_finite());
+            assert!(!lm.per_worker.is_empty(), "per-worker breakdown missing");
+        }
+    }
+    c.shutdown().unwrap();
+}

@@ -140,6 +140,7 @@ fn tcp_worker_end_to_end() {
                 provider: Arc::new(FallbackProvider::new()),
                 faults: WorkerFaults::none(),
                 rng_seed: 1,
+                slots: 1,
             },
         )
         .unwrap();

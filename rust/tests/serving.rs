@@ -3,14 +3,23 @@
 //! handles awaited in any order, reject on a full admission queue while
 //! in-flight requests still complete, shed expired deadlines, and drain
 //! gracefully. Runs without `artifacts/`.
+//!
+//! The `chaos_*` tests are the fault-injection suite: chronic
+//! stragglers, per-round failures, and extra send delay are wired
+//! through `WorkerFaults` into a live `InferenceServer` stream — under
+//! every engine configuration (sequential, coalesced, multi-slot) the
+//! outputs must stay bitwise-equal to local inference on the uncoded
+//! path / within decode tolerance under MDS, and every handle must
+//! resolve (no wedge).
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use cocoi::conv::Tensor;
 use cocoi::coordinator::{
-    ExecMode, InferenceRequest, InferenceServer, LocalCluster, MasterConfig, SchemeKind,
-    ServeError, ServerConfig, SubmitError, WorkerFaults, WorkerHandles,
+    ExecMode, InferenceRequest, InferenceServer, LocalCluster, MasterConfig, PoolOptions,
+    ScenarioFaults, SchemeKind, ServeError, ServerConfig, SubmitError, WorkerFaults,
+    WorkerHandles,
 };
 use cocoi::model::graph::forward_local;
 use cocoi::model::{zoo, WeightStore};
@@ -46,18 +55,34 @@ fn spawn_server(
     faults: Vec<WorkerFaults>,
     config: ServerConfig,
 ) -> (InferenceServer, WorkerHandles) {
+    spawn_server_knobs(scheme, n, k, faults, config, 1, 1)
+}
+
+/// `spawn_server` plus the PR-5 engine knobs: cross-request coalescing
+/// and intra-worker slots.
+fn spawn_server_knobs(
+    scheme: SchemeKind,
+    n: usize,
+    k: usize,
+    faults: Vec<WorkerFaults>,
+    config: ServerConfig,
+    coalesce: usize,
+    worker_slots: usize,
+) -> (InferenceServer, WorkerHandles) {
     let master_cfg = MasterConfig {
         scheme,
         policy: SplitPolicy::Fixed(k),
         mode: ExecMode::Pipelined,
+        coalesce,
         ..Default::default()
     };
-    let cluster = LocalCluster::spawn(
+    let cluster = LocalCluster::spawn_with(
         "tinyvgg",
         n,
         master_cfg,
         Arc::new(FallbackProvider::new()),
         faults,
+        PoolOptions { worker_slots },
     )
     .unwrap();
     let (master, workers) = cluster.into_parts();
@@ -266,6 +291,166 @@ fn drain_rejects_new_submissions() {
         assert!(out.max_abs_diff(want) < 2e-2);
     }
     assert_eq!(server.stats().open, 0);
+    stop(server, workers);
+}
+
+// ====================================================================
+// Chaos suite: faults through the live serving stream, under every
+// engine configuration (sequential / coalesced / multi-slot).
+// ====================================================================
+
+/// The engine configurations every chaos case must survive unchanged:
+/// the PR-4 baseline, coalescing alone, and coalescing + worker slots.
+const CHAOS_KNOBS: [(usize, usize); 3] = [(1, 1), (4, 1), (4, 2)];
+
+/// Stream `inputs` through a server and wait for everything, asserting
+/// no handle wedges and every request succeeds.
+fn stream_all(server: &InferenceServer, inputs: &[Tensor]) -> Vec<Tensor> {
+    let handles: Vec<_> = inputs
+        .iter()
+        .enumerate()
+        .map(|(i, input)| {
+            server
+                .submit(InferenceRequest::new(input.clone()).with_priority((i % 3) as u8))
+                .unwrap()
+        })
+        .collect();
+    handles
+        .into_iter()
+        .map(|h| h.wait().expect("chaos request failed").0)
+        .collect()
+}
+
+/// A chronic ~3× straggler in the pool: MDS(k=3, n=4) decodes from the
+/// healthy three; every streamed request completes within decode
+/// tolerance of local, with no wedged handle, under every knob setting.
+#[test]
+fn chaos_chronic_straggler_stream() {
+    let inputs = inputs_for("tinyvgg", 6, 910);
+    let want = local_refs("tinyvgg", &inputs);
+    for (coalesce, slots) in CHAOS_KNOBS {
+        let mut faults: Vec<WorkerFaults> = (0..4).map(|_| WorkerFaults::none()).collect();
+        faults[0] = WorkerFaults::none().slowdown(3.0);
+        let (server, workers) = spawn_server_knobs(
+            SchemeKind::Mds,
+            4,
+            3,
+            faults,
+            ServerConfig::default(),
+            coalesce,
+            slots,
+        );
+        let outs = stream_all(&server, &inputs);
+        for (got, want) in outs.iter().zip(&want) {
+            let err = got.max_abs_diff(want);
+            assert!(
+                err < 2e-2,
+                "coalesce={coalesce} slots={slots}: straggler run off local by {err}"
+            );
+        }
+        let stats = server.stats();
+        assert_eq!(stats.completed, inputs.len() as u64);
+        assert_eq!(stats.open, 0);
+        stop(server, workers);
+    }
+}
+
+/// Per-round injected failures (scenario 2) on the uncoded path: every
+/// failed shard is re-dispatched and the streamed outputs stay
+/// BITWISE-equal to local inference — re-dispatch reuses the exact
+/// frame bytes and the batched GEMM is bitwise per payload.
+#[test]
+fn chaos_per_round_failures_uncoded_bitwise() {
+    let inputs = inputs_for("tinyvgg", 5, 911);
+    let want = local_refs("tinyvgg", &inputs);
+    for (coalesce, slots) in CHAOS_KNOBS {
+        let mut rng = Rng::new(0xFA11 ^ coalesce as u64);
+        let faults = ScenarioFaults::failures(3, 1, 256, &mut rng);
+        let (server, workers) = spawn_server_knobs(
+            SchemeKind::Uncoded,
+            3,
+            3,
+            faults,
+            ServerConfig::default(),
+            coalesce,
+            slots,
+        );
+        let outs = stream_all(&server, &inputs);
+        for (got, want) in outs.iter().zip(&want) {
+            assert_eq!(
+                got.data, want.data,
+                "coalesce={coalesce} slots={slots}: uncoded chaos output not bitwise-local"
+            );
+        }
+        stop(server, workers);
+    }
+}
+
+/// Scenario-1 extra send delay on every worker while the submit stream
+/// stays open: stragglers get cancelled mid-flight, nothing wedges, and
+/// MDS outputs stay within decode tolerance of local.
+#[test]
+fn chaos_send_delay_open_stream() {
+    let inputs = inputs_for("tinyvgg", 8, 912);
+    let want = local_refs("tinyvgg", &inputs);
+    for (coalesce, slots) in CHAOS_KNOBS {
+        let faults = ScenarioFaults::straggling(4, 0.8, 0.01);
+        let (server, workers) = spawn_server_knobs(
+            SchemeKind::Mds,
+            4,
+            2,
+            faults,
+            ServerConfig {
+                queue_capacity: inputs.len(),
+                ..Default::default()
+            },
+            coalesce,
+            slots,
+        );
+        let outs = stream_all(&server, &inputs);
+        for (got, want) in outs.iter().zip(&want) {
+            let err = got.max_abs_diff(want);
+            assert!(
+                err < 2e-2,
+                "coalesce={coalesce} slots={slots}: send-delay run off local by {err}"
+            );
+        }
+        let stats = server.stats();
+        assert_eq!(stats.completed, inputs.len() as u64);
+        assert_eq!(stats.failed, 0);
+        stop(server, workers);
+    }
+}
+
+/// Mixed chaos — failures AND a chronic straggler AND send delay — with
+/// deadline-free streaming: the full fault cocktail must still deliver
+/// every answer within tolerance under the coalesced multi-slot engine.
+#[test]
+fn chaos_mixed_faults_coalesced_multislot() {
+    let inputs = inputs_for("tinyvgg", 6, 913);
+    let want = local_refs("tinyvgg", &inputs);
+    let mut rng = Rng::new(0x5EED);
+    let mut faults = ScenarioFaults::failures_plus_straggler(4, 1, 256, &mut rng);
+    for f in &mut faults {
+        f.extra_send_delay_mean = 0.004;
+    }
+    let (server, workers) = spawn_server_knobs(
+        SchemeKind::Mds,
+        4,
+        3,
+        faults,
+        ServerConfig::default(),
+        4,
+        2,
+    );
+    let outs = stream_all(&server, &inputs);
+    for (got, want) in outs.iter().zip(&want) {
+        let err = got.max_abs_diff(want);
+        assert!(err < 2e-2, "mixed chaos run off local by {err}");
+    }
+    let stats = server.stats();
+    assert_eq!(stats.completed, inputs.len() as u64);
+    assert_eq!(stats.open, 0);
     stop(server, workers);
 }
 

@@ -1,0 +1,164 @@
+//! Intra-worker concurrency semantics at the engine level, plus the
+//! telemetry-normalization pin for coalesced execution.
+//!
+//! The worker's persistent executor (`--worker-slots`) must be a pure
+//! scheduling change: exactly one reply per dispatched subtask at every
+//! slot count (pinned at the wire level in `coordinator::worker` unit
+//! tests), bitwise-identical outputs through the full engine, and
+//! telemetry fits that cannot tell a coalesced batch from a
+//! single-request conv (exec time is normalized by coalesced FLOPs).
+
+use std::sync::Arc;
+
+use cocoi::conv::Tensor;
+use cocoi::coordinator::{
+    ExecMode, LocalCluster, MasterConfig, PoolOptions, SchemeKind, WorkerFaults,
+};
+use cocoi::model::graph::forward_local;
+use cocoi::model::{zoo, WeightStore};
+use cocoi::planner::SplitPolicy;
+use cocoi::runtime::FallbackProvider;
+use cocoi::util::Rng;
+
+fn inputs_for(count: usize, seed: u64) -> Vec<Tensor> {
+    let model = zoo::model("tinyvgg").unwrap();
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            let mut t = Tensor::zeros(model.input.0, model.input.1, model.input.2);
+            rng.fill_uniform_f32(&mut t.data, -1.0, 1.0);
+            t
+        })
+        .collect()
+}
+
+fn spawn(
+    scheme: SchemeKind,
+    n: usize,
+    k: usize,
+    mode: ExecMode,
+    coalesce: usize,
+    worker_slots: usize,
+) -> LocalCluster {
+    let config = MasterConfig {
+        scheme,
+        policy: SplitPolicy::Fixed(k),
+        mode,
+        coalesce,
+        ..Default::default()
+    };
+    LocalCluster::spawn_with(
+        "tinyvgg",
+        n,
+        config,
+        Arc::new(FallbackProvider::new()),
+        (0..n).map(|_| WorkerFaults::none()).collect(),
+        PoolOptions { worker_slots },
+    )
+    .unwrap()
+}
+
+/// Engine-level slot sweep: the pipelined batch over 1/2/4-slot workers
+/// is bitwise-identical to local inference on the uncoded path — the
+/// executor changes *when* subtasks run, never what they compute, and
+/// the engine's round accounting absorbs out-of-order completions.
+#[test]
+fn slot_sweep_outputs_bitwise_local() {
+    let inputs = inputs_for(4, 641);
+    let model = zoo::model("tinyvgg").unwrap();
+    let weights = WeightStore::generate(&model, 42).unwrap();
+    let want: Vec<Tensor> = inputs
+        .iter()
+        .map(|i| forward_local(&model, &weights, i).unwrap())
+        .collect();
+    for slots in [1, 2, 4] {
+        let mut c = spawn(SchemeKind::Uncoded, 3, 3, ExecMode::Pipelined, 1, slots);
+        let outs = c.master.infer_batch(&inputs).unwrap();
+        for ((out, _), want) in outs.iter().zip(&want) {
+            assert_eq!(out.data, want.data, "slots={slots}: output not bitwise-local");
+        }
+        c.shutdown().unwrap();
+    }
+}
+
+/// Multi-slot MDS under straggler cancellation: cancels are acked
+/// exactly once per dispatched subtask even when several convs are in
+/// flight per device, so the batch drains with exact accounting (a
+/// double- or zero-ack would wedge the engine's load bookkeeping and
+/// time the run out).
+#[test]
+fn multislot_cancellation_accounting_drains() {
+    let inputs = inputs_for(6, 642);
+    let model = zoo::model("tinyvgg").unwrap();
+    let weights = WeightStore::generate(&model, 42).unwrap();
+    let config = MasterConfig {
+        scheme: SchemeKind::Mds,
+        policy: SplitPolicy::Fixed(2),
+        mode: ExecMode::Pipelined,
+        coalesce: 3,
+        ..Default::default()
+    };
+    // One slow link forces routine mid-round cancellation.
+    let mut faults: Vec<WorkerFaults> = (0..4).map(|_| WorkerFaults::none()).collect();
+    faults[1] = WorkerFaults::with_send_delay(0.02);
+    let mut c = LocalCluster::spawn_with(
+        "tinyvgg",
+        4,
+        config,
+        Arc::new(FallbackProvider::new()),
+        faults,
+        PoolOptions { worker_slots: 4 },
+    )
+    .unwrap();
+    let results = c.master.infer_batch(&inputs).unwrap();
+    for ((out, _), input) in results.iter().zip(&inputs) {
+        let want = forward_local(&model, &weights, input).unwrap();
+        let err = out.max_abs_diff(&want);
+        assert!(err < 2e-2, "multislot cancellation run off local by {err}");
+    }
+    c.shutdown().unwrap();
+}
+
+/// Median fitted per-FLOP execution time across the pool.
+fn median_cmp_mean(cluster: &LocalCluster) -> f64 {
+    let reg = cluster.master.registry();
+    let mut means: Vec<f64> = (0..reg.n_workers())
+        .filter_map(|w| reg.estimate(w))
+        .map(|est| est.cmp.mean())
+        .collect();
+    assert!(!means.is_empty(), "no fitted workers — not enough samples");
+    means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    means[means.len() / 2]
+}
+
+/// The telemetry-normalization pin: coalesced rounds report ONE
+/// exec_secs for the whole batched conv, and the master normalizes it
+/// by the round's *coalesced* FLOPs. The fitted per-FLOP execution
+/// scale must therefore land where the single-request fit lands; a
+/// normalization bug would inflate (or deflate) it by roughly the
+/// coalescing factor (4x here), far outside this window.
+#[test]
+fn coalesced_exec_normalization_keeps_cmp_fit_unbiased() {
+    // Enough requests that even a model plan with few distributed
+    // layers clears the registry's min-sample bar on the coalesced run
+    // (20 requests / coalesce 4 = 5 rounds per distributed layer).
+    let inputs = inputs_for(20, 643);
+    // Single-request engine: one payload per round.
+    let mut solo = spawn(SchemeKind::Uncoded, 3, 3, ExecMode::Pipelined, 1, 1);
+    solo.master.infer_batch(&inputs).unwrap();
+    let solo_mean = median_cmp_mean(&solo);
+    solo.shutdown().unwrap();
+
+    // Coalesced engine: the batch rides multi-payload rounds.
+    let mut coal = spawn(SchemeKind::Uncoded, 3, 3, ExecMode::Pipelined, 4, 1);
+    coal.master.infer_batch(&inputs).unwrap();
+    let coal_mean = median_cmp_mean(&coal);
+    coal.shutdown().unwrap();
+
+    let ratio = coal_mean / solo_mean;
+    assert!(
+        (0.4..2.5).contains(&ratio),
+        "coalesced per-FLOP fit {coal_mean:e} vs solo {solo_mean:e} \
+         (ratio {ratio:.2}): normalization biased"
+    );
+}
