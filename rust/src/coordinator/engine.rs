@@ -44,7 +44,7 @@
 //! the batch path and the serving path cannot diverge.
 
 use std::cmp::Ordering;
-use std::collections::{BTreeMap, BinaryHeap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -187,18 +187,24 @@ struct ActiveRound {
     t_local: f64,
 }
 
-/// Least-loaded worker among `candidates`, lowest index on ties; avoids
+/// Least-loaded worker among `candidates`, lowest id on ties; avoids
 /// `avoid` when there is a choice (re-dispatch should not go back to the
-/// failing worker).
-fn pick_worker(load: &[usize], candidates: &[usize], avoid: Option<usize>) -> usize {
+/// failing worker). `load` is keyed by stable worker id — a candidate
+/// with no entry (just admitted) counts as idle.
+fn pick_worker(
+    load: &BTreeMap<usize, usize>,
+    candidates: &[usize],
+    avoid: Option<usize>,
+) -> usize {
     let mut best = usize::MAX;
     let mut best_w = candidates[0];
     for &w in candidates {
         if Some(w) == avoid && candidates.len() > 1 {
             continue;
         }
-        if load[w] < best {
-            best = load[w];
+        let l = load.get(&w).copied().unwrap_or(0);
+        if l < best {
+            best = l;
             best_w = w;
         }
     }
@@ -303,7 +309,10 @@ impl Master {
         sink: &mut dyn EngineSink,
     ) -> Result<()> {
         let nodes = self.model.nodes.clone();
-        let mut worker_load = vec![0usize; self.n_workers()];
+        // Outstanding-reply charge per *stable worker id*. Seeded from
+        // the current membership; joins insert, evictions remove.
+        let mut worker_load: BTreeMap<usize, usize> =
+            self.workers.keys().map(|&w| (w, 0)).collect();
         let mut rounds: HashMap<u64, ActiveRound> = HashMap::new();
         let mut active: BTreeMap<u64, RequestState> = BTreeMap::new();
         let mut pending: BinaryHeap<Pending> = seed.into_iter().map(Pending::new).collect();
@@ -352,11 +361,12 @@ impl Master {
             }
 
             // -- block for the next event -----------------------------
-            // Every live in-flight request has a round on the pool, so
-            // an empty `rounds` means the engine is idle: wait (without
-            // a wedge timeout) for a submission or the drain signal.
+            // An empty `rounds` means nothing is out on the pool: wait
+            // (without a wedge timeout) for a submission, the drain
+            // signal, or a membership event. Requests may still be
+            // staged here — an empty (or fully-retiring) pool parks
+            // them until a worker joins.
             let ev = if rounds.is_empty() {
-                debug_assert!(active.is_empty());
                 self.events.recv().context("master event channel closed")?
             } else {
                 self.events
@@ -391,6 +401,17 @@ impl Master {
                     sink,
                 )?;
             }
+            // Retiring members finalize (Shutdown + removal) only once
+            // every charge against them has drained — a nonzero load
+            // means replies (possibly stale Outputs of cancelled work)
+            // are still owed.
+            let busy: BTreeSet<usize> = worker_load
+                .iter()
+                .filter(|(_, &l)| l > 0)
+                .map(|(&w, _)| w)
+                .collect();
+            self.finalize_retiring(&busy);
+            worker_load.retain(|w, _| self.workers.contains_key(w));
         }
     }
 
@@ -404,7 +425,7 @@ impl Master {
         pending: &mut BinaryHeap<Pending>,
         active: &mut BTreeMap<u64, RequestState>,
         rounds: &mut HashMap<u64, ActiveRound>,
-        worker_load: &mut [usize],
+        worker_load: &mut BTreeMap<usize, usize>,
         staged: &mut Vec<u64>,
         sink: &mut dyn EngineSink,
     ) -> Result<()> {
@@ -422,6 +443,20 @@ impl Master {
                 *draining = true;
                 Ok(())
             }
+            MasterEvent::Joined { id, name, tx } => {
+                self.admit_worker(id, name, tx);
+                worker_load.insert(id, 0);
+                // Staged requests parked on an empty pool flush on the
+                // next loop iteration now that a target exists.
+                self.probe_worker(id, worker_load)
+            }
+            MasterEvent::LinkDown(wid) => {
+                if !self.drop_worker(wid) {
+                    return Ok(()); // double-fire: already evicted
+                }
+                worker_load.remove(&wid);
+                self.redispatch_orphans(wid, rounds, worker_load)
+            }
             MasterEvent::Reply(wid, msg, arrival) => self.handle_reply(
                 wid,
                 msg,
@@ -436,6 +471,99 @@ impl Master {
         }
     }
 
+    /// Dispatch a one-subtask probe round to a just-joined worker: the
+    /// registry needs real (exec, transmission) samples before the
+    /// adaptive policy can place or judge it. The round is logged for
+    /// telemetry and immediately retired — its Output reply takes the
+    /// stale-reply path (`record_output` still feeds the registry; the
+    /// engine holds no `ActiveRound` for it, so the data is dropped).
+    fn probe_worker(
+        &mut self,
+        id: usize,
+        worker_load: &mut BTreeMap<usize, usize>,
+    ) -> Result<()> {
+        let Some(c) = self.plan.convs.iter().find(|c| c.distributed).cloned() else {
+            return Ok(()); // nothing distributed: nothing worth probing
+        };
+        let spec = c.dims.spec;
+        let h = c.dims.h_i - 2 * spec.pad;
+        let w = c.dims.w_i - 2 * spec.pad;
+        let input = Tensor::from_vec(spec.c_in, h, w, vec![0.5; spec.c_in * h * w])?;
+        // u64::MAX marks the probe's pseudo-request; no decoder ever
+        // sees it. n = k = 1: the smallest real subtask on this layer.
+        let pr = self.prepare_round(&[(u64::MAX, &input)], &c.node_id, &spec, 1, 1)?;
+        let dispatched_at: Vec<Instant> = pr.frames.iter().map(|_| Instant::now()).collect();
+        *worker_load.entry(id).or_insert(0) += pr.frames.len();
+        for frame in &pr.frames {
+            self.send_to(id, frame);
+        }
+        self.log_round(pr.round, pr.flops_per_task, pr.bytes_per_task, dispatched_at);
+        self.retire_round(pr.round);
+        log::debug!("worker {id}: probe round {} dispatched", pr.round);
+        Ok(())
+    }
+
+    /// A member died mid-flight: every outstanding subtask it held is
+    /// orphaned. Re-dispatch each one inside its round's (shrunken)
+    /// dispatch set, exactly like a `Failed` reply — the round decodes
+    /// from whichever k subtasks land first, so churn costs latency, not
+    /// correctness.
+    fn redispatch_orphans(
+        &mut self,
+        wid: usize,
+        rounds: &mut HashMap<u64, ActiveRound>,
+        worker_load: &mut BTreeMap<usize, usize>,
+    ) -> Result<()> {
+        for (&round, ar) in rounds.iter_mut() {
+            ar.targets.retain(|&w| w != wid);
+            let orphaned: Vec<usize> = ar
+                .outstanding
+                .iter()
+                .copied()
+                .filter(|&t| ar.assigned[t] == wid)
+                .collect();
+            if orphaned.is_empty() {
+                continue;
+            }
+            let assigned = &ar.assigned;
+            ar.outstanding.retain(|&t| assigned[t] != wid);
+            for p in &mut ar.parts {
+                p.lm.failures += orphaned.len();
+            }
+            for t in orphaned {
+                if !ar
+                    .pr
+                    .scheme
+                    .needs_redispatch(t, &ar.received, &ar.outstanding)
+                {
+                    continue;
+                }
+                anyhow::ensure!(
+                    !ar.targets.is_empty(),
+                    "layer {} (round {round}): worker {wid} died and no live workers \
+                     remain to take over its subtasks",
+                    ar.parts[0].lm.node_id
+                );
+                let target = pick_worker(worker_load, &ar.targets, None);
+                if let Some(rt) = self.round_log.get_mut(&round) {
+                    rt.dispatched_at[t] = Instant::now();
+                }
+                self.send_to(target, &ar.pr.frames[t]);
+                *worker_load.entry(target).or_insert(0) += 1;
+                ar.assigned[t] = target;
+                ar.outstanding.push(t);
+                for p in &mut ar.parts {
+                    p.lm.redispatches += 1;
+                }
+                log::warn!(
+                    "pipeline: task {t} of round {round} orphaned by dead worker \
+                     {wid}, re-dispatched to {target}"
+                );
+            }
+        }
+        Ok(())
+    }
+
     /// Fold one worker reply into the engine state; finishes (and
     /// advances past) any round it completes.
     #[allow(clippy::too_many_arguments)]
@@ -447,7 +575,7 @@ impl Master {
         nodes: &[Node],
         active: &mut BTreeMap<u64, RequestState>,
         rounds: &mut HashMap<u64, ActiveRound>,
-        worker_load: &mut [usize],
+        worker_load: &mut BTreeMap<usize, usize>,
         staged: &mut Vec<u64>,
         sink: &mut dyn EngineSink,
     ) -> Result<()> {
@@ -457,9 +585,15 @@ impl Master {
         // cancelled-but-already-executing subtask therefore keeps its
         // worker charged until the stale Output actually arrives,
         // which is what keeps the straggler off the next wave's
-        // least-loaded placement.
-        if !matches!(msg, FromWorker::Ready) {
-            worker_load[wid] = worker_load[wid].saturating_sub(1);
+        // least-loaded placement. Only subtask replies release charge:
+        // heartbeats and membership messages never carried one.
+        if matches!(
+            msg,
+            FromWorker::Output { .. } | FromWorker::Failed { .. } | FromWorker::Skipped { .. }
+        ) {
+            if let Some(l) = worker_load.get_mut(&wid) {
+                *l = l.saturating_sub(1);
+            }
         }
         match msg {
             FromWorker::Output {
@@ -567,12 +701,18 @@ impl Master {
                             ar.parts[0].lm.node_id
                         );
                     }
+                    anyhow::ensure!(
+                        !ar.targets.is_empty(),
+                        "layer {}: task {task_id} failed and no live workers remain \
+                         in the round's dispatch set",
+                        ar.parts[0].lm.node_id
+                    );
                     let target = pick_worker(worker_load, &ar.targets, Some(wid));
                     if let Some(rt) = self.round_log.get_mut(&round) {
                         rt.dispatched_at[task_id] = Instant::now();
                     }
-                    self.worker_tx[target].send(&ar.pr.frames[task_id])?;
-                    worker_load[target] += 1;
+                    self.send_to(target, &ar.pr.frames[task_id]);
+                    *worker_load.entry(target).or_insert(0) += 1;
                     ar.assigned[task_id] = target;
                     ar.outstanding.push(task_id);
                     for p in &mut ar.parts {
@@ -583,6 +723,15 @@ impl Master {
                          worker {wid}, re-dispatched to {target}"
                     );
                 }
+            }
+            // Liveness signal only; the reader's read-timeout clock is
+            // what it actually services.
+            FromWorker::Heartbeat { .. } => {}
+            // Graceful leave: stop dispatching to it; the main loop
+            // finalizes (Shutdown + removal) once its charge drains.
+            FromWorker::Retire => self.retire_worker(wid),
+            FromWorker::Join { .. } => {
+                bail!("unexpected Join from already-admitted worker {wid}")
             }
             FromWorker::Ready => bail!("unexpected Ready from worker {wid}"),
         }
@@ -648,9 +797,15 @@ impl Master {
         nodes: &[Node],
         active: &mut BTreeMap<u64, RequestState>,
         rounds: &mut HashMap<u64, ActiveRound>,
-        worker_load: &mut [usize],
+        worker_load: &mut BTreeMap<usize, usize>,
     ) -> Result<()> {
         if staged.is_empty() {
+            return Ok(());
+        }
+        // No live members (elastic cluster before the first join, or
+        // everyone retiring/evicted): park the staging buffer as-is. A
+        // `Joined` event wakes the loop and the next flush drains it.
+        if self.live_worker_ids().is_empty() {
             return Ok(());
         }
         let cap = self.config.coalesce.max(1);
@@ -687,6 +842,12 @@ impl Master {
             // stragglers sit out except for due probes), the full pool
             // otherwise.
             let targets = self.dispatch_targets();
+            if targets.is_empty() {
+                // Membership changed under us mid-flush: re-park this
+                // group for the next flush.
+                staged.extend(ids.iter().copied());
+                continue;
+            }
             let k_eff = self.effective_k(k_planned, targets.len());
             let reqs: Vec<(u64, &Tensor)> = ids
                 .iter()
@@ -707,14 +868,14 @@ impl Master {
             // least-loaded first; wrap only when a scheme issues more
             // subtasks than workers (LT).
             let mut order: Vec<usize> = targets.clone();
-            order.sort_by_key(|&w| (worker_load[w], w));
+            order.sort_by_key(|&w| (worker_load.get(&w).copied().unwrap_or(0), w));
             let mut assigned = vec![0usize; pr.frames.len()];
             let mut dispatched_at = Vec::with_capacity(pr.frames.len());
             for (t, frame) in pr.frames.iter().enumerate() {
                 let w = order[t % order.len()];
                 dispatched_at.push(Instant::now());
-                self.worker_tx[w].send(frame)?;
-                worker_load[w] += 1;
+                self.send_to(w, frame);
+                *worker_load.entry(w).or_insert(0) += 1;
                 assigned[t] = w;
             }
             self.log_round(pr.round, pr.flops_per_task, pr.bytes_per_task, dispatched_at);
@@ -774,12 +935,12 @@ impl Master {
         // charge is released when that reply arrives.
         if !ar.outstanding.is_empty() {
             let frame = ToWorker::Cancel { round: ar.pr.round }.encode();
-            let mut notified = vec![false; self.n_workers()];
+            let mut notified: BTreeSet<usize> = BTreeSet::new();
             for &t in &ar.outstanding {
                 let w = ar.assigned[t];
-                if !notified[w] {
-                    notified[w] = true;
-                    self.worker_tx[w].send(&frame)?;
+                if notified.insert(w) {
+                    // Evicted holders are a no-op inside send_to.
+                    self.send_to(w, &frame);
                 }
             }
             for p in &mut ar.parts {
@@ -850,10 +1011,13 @@ mod tests {
 
     #[test]
     fn pick_worker_prefers_least_loaded_and_avoids() {
-        let load = [3, 0, 2, 0];
-        let all = [0, 1, 2, 3];
-        assert_eq!(pick_worker(&load, &all, None), 1);
-        assert_eq!(pick_worker(&load, &all, Some(1)), 3);
+        // Keyed by stable worker id — ids need not be contiguous.
+        let load: BTreeMap<usize, usize> = [(0, 3), (2, 2), (7, 0)].into_iter().collect();
+        let all = [0, 2, 7];
+        assert_eq!(pick_worker(&load, &all, None), 7);
+        assert_eq!(pick_worker(&load, &all, Some(7)), 2);
+        // A candidate with no load entry (just admitted) counts as idle.
+        assert_eq!(pick_worker(&load, &[0, 9], None), 9);
         // A single candidate is used even if it should be avoided.
         assert_eq!(pick_worker(&load, &[2], Some(2)), 2);
     }

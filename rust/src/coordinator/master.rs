@@ -3,7 +3,9 @@
 //! results, handles failure re-dispatch, and executes type-2 work
 //! locally (paper §II).
 
-use std::sync::mpsc;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -26,15 +28,41 @@ use super::messages::{FromWorker, ToWorker, WorkOrder};
 use super::metrics::{InferenceMetrics, LayerMetrics, WorkerPhase};
 
 /// Everything the master's single event channel can carry: worker
-/// replies (stamped with the reader-thread arrival instant), and — when
-/// an [`super::server::InferenceServer`] front-end is attached — request
-/// submissions and the drain signal. Multiplexing submissions into the
+/// replies (stamped with the reader-thread arrival instant), membership
+/// transitions (a handshake thread admitting a joiner, a reader thread
+/// reporting link death), and — when an
+/// [`super::server::InferenceServer`] front-end is attached — request
+/// submissions and the drain signal. Multiplexing everything into the
 /// same channel is what lets the engine's run loop block on *one*
-/// receiver and wake for either a finished subtask or a new request.
+/// receiver and wake for a finished subtask, a new request, or churn.
 pub(super) enum MasterEvent {
     Reply(usize, FromWorker, Instant),
     Submit(super::server::ServerRequest),
     Drain,
+    /// A worker completed the join handshake (Join → JoinAck → prepack →
+    /// Ready); its send half arrives here. The handshake thread sends
+    /// this *before* spawning the reader, so in the FIFO channel `Joined`
+    /// always precedes any `Reply` from the same id.
+    Joined {
+        id: usize,
+        name: String,
+        tx: Box<dyn crate::transport::FrameTx>,
+    },
+    /// A worker's link died or its heartbeat deadline lapsed (the reader
+    /// thread exited) — may fire more than once per id; handlers are
+    /// idempotent.
+    LinkDown(usize),
+}
+
+/// One pool member: its send half plus membership state, keyed in
+/// [`Master::workers`] by *stable worker id* (never reused; a rejoining
+/// worker gets a fresh id).
+pub(super) struct WorkerLink {
+    pub(super) tx: Box<dyn crate::transport::FrameTx>,
+    pub(super) name: String,
+    /// Graceful retirement in progress: excluded from new dispatches,
+    /// removed once its in-flight subtasks drain.
+    pub(super) retiring: bool,
 }
 
 /// Redundancy scheme selector (the §V method column).
@@ -126,6 +154,11 @@ pub struct MasterConfig {
     /// coalescing; the uncoded decode stays bitwise identical either
     /// way (`rust/tests/coalesce.rs`).
     pub coalesce: usize,
+    /// Heartbeat deadline for runtime-joined (TCP) workers: their reader
+    /// threads arm a read timeout of this much, and the `JoinAck` tells
+    /// the worker to beacon at a third of it. Silence past the deadline
+    /// evicts the worker.
+    pub heartbeat: Duration,
 }
 
 impl Default for MasterConfig {
@@ -142,6 +175,7 @@ impl Default for MasterConfig {
             telemetry: TelemetryConfig::default(),
             replan: ReplanConfig::default(),
             coalesce: 1,
+            heartbeat: Duration::from_secs(10),
         }
     }
 }
@@ -167,21 +201,28 @@ const ROUND_LOG_CAP: usize = 64;
 /// The master device.
 pub struct Master {
     pub(super) model: ModelSpec,
+    /// The zoo name of [`Master::model`] — echoed in `JoinAck` so a
+    /// runtime joiner prepacks the right weights.
+    pub(super) model_name: String,
     pub(super) weights: WeightStore,
     pub(super) plan: ModelPlan,
     pub(super) config: MasterConfig,
     pub(super) provider: std::sync::Arc<dyn ConvProvider>,
-    pub(super) worker_tx: Vec<Box<dyn crate::transport::FrameTx>>,
+    /// The pool, keyed by stable worker id (see [`WorkerLink`]).
+    pub(super) workers: BTreeMap<usize, WorkerLink>,
+    /// Id allocator for runtime joiners; shared with handshake threads.
+    next_worker_id: Arc<AtomicUsize>,
     /// Replies arrive tagged with the reader-thread arrival instant, so
     /// transmission telemetry measures the wire, not however long the
-    /// master took to get back to the channel. Server submissions and
-    /// the drain signal are multiplexed into the same stream.
+    /// master took to get back to the channel. Server submissions,
+    /// membership transitions, and the drain signal are multiplexed
+    /// into the same stream.
     pub(super) events: mpsc::Receiver<MasterEvent>,
     /// A sender into [`Master::events`]; the serving front-end clones it
-    /// for its submission path. Keeping one here also means the channel
-    /// never disconnects while the master lives.
+    /// for its submission path, handshake/reader threads for membership
+    /// events. Keeping one here also means the channel never disconnects
+    /// while the master lives.
     event_tx: mpsc::Sender<MasterEvent>,
-    _readers: Vec<std::thread::JoinHandle<()>>,
     pub(super) round: u64,
     pub(super) rng: Rng,
     /// Per-worker capacity telemetry (always collected; steers dispatch
@@ -190,6 +231,125 @@ pub struct Master {
     pub(super) replanner: Replanner,
     /// Recent rounds' dispatch bookkeeping (see [`RoundTelemetry`]).
     pub(super) round_log: std::collections::BTreeMap<u64, RoundTelemetry>,
+}
+
+/// Forward one link's frames into the shared event channel, tagging the
+/// stable worker id and the arrival instant; on exit (peer closed, bad
+/// frame, recv error — including a lapsed heartbeat read-timeout) emit
+/// `LinkDown` so the membership path fires. Detached: lives exactly as
+/// long as its link.
+fn spawn_reader(
+    id: usize,
+    mut rx: Box<dyn crate::transport::FrameRx>,
+    agg: mpsc::Sender<MasterEvent>,
+) {
+    let _ = std::thread::Builder::new()
+        .name(format!("rx-worker-{id}"))
+        .spawn(move || {
+            loop {
+                match rx.recv() {
+                    Ok(Some(frame)) => match FromWorker::decode(&frame) {
+                        Ok(msg) => {
+                            // Arrival stamp here, not at processing
+                            // time: the master may be busy for a while
+                            // before it drains the channel.
+                            let ev = MasterEvent::Reply(id, msg, Instant::now());
+                            if agg.send(ev).is_err() {
+                                return;
+                            }
+                        }
+                        Err(e) => {
+                            log::error!("worker {id}: bad frame: {e:#}");
+                            break;
+                        }
+                    },
+                    Ok(None) => break,
+                    Err(e) => {
+                        log::warn!("worker {id}: recv failed (dead link or lapsed heartbeat): {e:#}");
+                        break;
+                    }
+                }
+            }
+            let _ = agg.send(MasterEvent::LinkDown(id));
+        });
+}
+
+/// One join handshake, run on its own thread per accepted connection:
+/// `Join` → validate protocol+model → `JoinAck{id, model, seed,
+/// heartbeat}` → the worker prepacks and sends `Ready` → arm the
+/// heartbeat read-timeout, hand the send half to the master
+/// (`MasterEvent::Joined`), and start the reader.
+fn handshake(
+    stream: std::net::TcpStream,
+    event_tx: mpsc::Sender<MasterEvent>,
+    next_id: Arc<AtomicUsize>,
+    model: String,
+    weight_seed: u64,
+    heartbeat: Duration,
+) -> Result<()> {
+    use crate::transport::tcp::TcpLink;
+    use crate::transport::Link;
+    let mut link = TcpLink::from_stream(stream);
+    // Bound the handshake so a silent dialer can't pin this thread.
+    link.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let frame = link.recv()?.context("peer closed before Join")?;
+    let (name, protocol, model_hint) = match FromWorker::decode(&frame)? {
+        FromWorker::Join {
+            name,
+            protocol,
+            model,
+        } => (name, protocol, model),
+        other => bail!("expected Join, got {other:?}"),
+    };
+    if protocol != super::messages::PROTOCOL_VERSION {
+        let reason = format!(
+            "protocol {protocol} != master's {}",
+            super::messages::PROTOCOL_VERSION
+        );
+        let _ = link.send(&ToWorker::JoinReject { reason: reason.clone() }.encode());
+        bail!("rejected join from {name}: {reason}");
+    }
+    if !model_hint.is_empty() && model_hint != model {
+        let reason = format!("model {model_hint:?} != master's {model:?}");
+        let _ = link.send(&ToWorker::JoinReject { reason: reason.clone() }.encode());
+        bail!("rejected join from {name}: {reason}");
+    }
+    let id = next_id.fetch_add(1, Ordering::SeqCst);
+    let heartbeat_ms = ((heartbeat.as_millis() / 3) as u32).max(1);
+    link.send(
+        &ToWorker::JoinAck {
+            worker_id: id as u64,
+            model,
+            weight_seed,
+            heartbeat_ms,
+        }
+        .encode(),
+    )?;
+    // The joiner now regenerates + prepacks the weights; allow it time.
+    link.set_read_timeout(Some(Duration::from_secs(120)))?;
+    loop {
+        let frame = link.recv()?.context("peer closed during prepack")?;
+        match FromWorker::decode(&frame)? {
+            FromWorker::Ready => break,
+            FromWorker::Heartbeat { .. } => continue, // early beacons are fine
+            other => bail!("worker {id} ({name}): expected Ready, got {other:?}"),
+        }
+    }
+    // From here on the heartbeat deadline polices the link.
+    let (tx, rx) = crate::transport::split::split_tcp(link.into_stream())?;
+    rx.set_read_timeout(Some(heartbeat))?;
+    log::info!("worker {id} ({name}) completed join handshake");
+    // Joined must precede any Reply(id) in the FIFO channel, so send it
+    // BEFORE the reader starts.
+    event_tx
+        .send(MasterEvent::Joined {
+            id,
+            name,
+            tx: Box::new(tx),
+        })
+        .map_err(|_| anyhow::anyhow!("master gone during join"))?;
+    spawn_reader(id, Box::new(rx), event_tx);
+    Ok(())
 }
 
 /// One request's slice of a [`PreparedRound`]: its id, its master-local
@@ -281,57 +441,33 @@ impl Master {
 
         // One reader thread per worker feeding a single channel.
         let (agg_tx, events) = mpsc::channel();
-        let mut worker_tx = Vec::new();
-        let mut readers = Vec::new();
-        for (i, (tx, mut rx)) in links.into_iter().enumerate() {
-            worker_tx.push(tx);
-            let agg = agg_tx.clone();
-            readers.push(
-                std::thread::Builder::new()
-                    .name(format!("rx-worker-{i}"))
-                    .spawn(move || {
-                        loop {
-                            match rx.recv() {
-                                Ok(Some(frame)) => match FromWorker::decode(&frame) {
-                                    Ok(msg) => {
-                                        // Arrival stamp here, not at
-                                        // processing time: the master may
-                                        // be busy for a while before it
-                                        // drains the channel.
-                                        let ev = MasterEvent::Reply(i, msg, Instant::now());
-                                        if agg.send(ev).is_err() {
-                                            break;
-                                        }
-                                    }
-                                    Err(e) => {
-                                        log::error!("worker {i}: bad frame: {e:#}");
-                                        break;
-                                    }
-                                },
-                                Ok(None) => break,
-                                Err(e) => {
-                                    log::error!("worker {i}: recv error: {e:#}");
-                                    break;
-                                }
-                            }
-                        }
-                    })?,
+        let mut workers: BTreeMap<usize, WorkerLink> = BTreeMap::new();
+        for (i, (tx, rx)) in links.into_iter().enumerate() {
+            workers.insert(
+                i,
+                WorkerLink {
+                    tx,
+                    name: format!("worker-{i}"),
+                    retiring: false,
+                },
             );
+            spawn_reader(i, rx, agg_tx.clone());
         }
 
-        let n_workers = worker_tx.len();
+        let n_workers = workers.len();
         let registry = CapacityRegistry::new(n_workers, config.telemetry);
         let replanner = Replanner::new(config.replan);
         let mut master = Master {
             model,
+            model_name: model_name.to_string(),
             weights,
             plan,
             config,
             provider,
-            worker_tx,
+            workers,
+            next_worker_id: Arc::new(AtomicUsize::new(n_workers)),
             events,
             event_tx: agg_tx,
-            _readers: readers,
             round: 0,
             rng,
             registry,
@@ -342,8 +478,197 @@ impl Master {
         Ok(master)
     }
 
+    /// An *elastic* master: starts with zero workers and admits them at
+    /// runtime via [`Master::listen`]. `planned_workers` (≥ 1) sizes the
+    /// initial split plan — once real workers join, the replanner
+    /// (under `adaptive`) re-solves against the measured pool. Forces
+    /// [`ExecMode::Pipelined`]: the engine's event loop is the only path
+    /// that can react to membership churn mid-stream.
+    pub fn new_elastic(
+        model_name: &str,
+        mut config: MasterConfig,
+        planned_workers: usize,
+        provider: std::sync::Arc<dyn ConvProvider>,
+    ) -> Result<Master> {
+        anyhow::ensure!(planned_workers >= 1, "planned_workers must be >= 1");
+        config.mode = ExecMode::Pipelined;
+        let model = zoo::model(model_name)?;
+        let weights = WeightStore::generate(&model, config.weight_seed)?;
+        let mut rng = Rng::new(config.seed);
+        let plan = ModelPlan::build(
+            &model,
+            &config.profile,
+            planned_workers,
+            config.policy,
+            &mut rng,
+        )?;
+        let (agg_tx, events) = mpsc::channel();
+        let registry = CapacityRegistry::new(0, config.telemetry);
+        let replanner = Replanner::new(config.replan);
+        Ok(Master {
+            model,
+            model_name: model_name.to_string(),
+            weights,
+            plan,
+            config,
+            provider,
+            workers: BTreeMap::new(),
+            next_worker_id: Arc::new(AtomicUsize::new(0)),
+            events,
+            event_tx: agg_tx,
+            round: 0,
+            rng,
+            registry,
+            replanner,
+            round_log: std::collections::BTreeMap::new(),
+        })
+    }
+
+    /// Start accepting worker joins on `addr` (`"host:port"`; port 0
+    /// picks a free one). Returns the bound address. Each connection
+    /// runs the join handshake on its own thread, so a slow or hostile
+    /// dialer never blocks other joiners; admitted workers surface as
+    /// `MasterEvent::Joined` on the event channel, which the engine's
+    /// run loop folds into the pool. Works on any master (elastic or
+    /// fixed-seed) — ids continue past the initial pool.
+    pub fn listen(&mut self, addr: &str) -> Result<std::net::SocketAddr> {
+        let listener = std::net::TcpListener::bind(addr)
+            .with_context(|| format!("binding membership listener on {addr}"))?;
+        let local = listener.local_addr()?;
+        let event_tx = self.event_tx.clone();
+        let next_id = Arc::clone(&self.next_worker_id);
+        let model = self.model_name.clone();
+        let weight_seed = self.config.weight_seed;
+        let heartbeat = self.config.heartbeat;
+        std::thread::Builder::new()
+            .name("membership-accept".to_string())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    let stream = match stream {
+                        Ok(s) => s,
+                        Err(e) => {
+                            log::warn!("membership accept failed: {e}");
+                            continue;
+                        }
+                    };
+                    let peer = stream
+                        .peer_addr()
+                        .map(|a| a.to_string())
+                        .unwrap_or_else(|_| "?".into());
+                    let event_tx = event_tx.clone();
+                    let next_id = Arc::clone(&next_id);
+                    let model = model.clone();
+                    let spawned = std::thread::Builder::new()
+                        .name(format!("join-{peer}"))
+                        .spawn(move || {
+                            if let Err(e) = handshake(
+                                stream, event_tx, next_id, model, weight_seed, heartbeat,
+                            ) {
+                                log::warn!("join handshake with {peer} failed: {e:#}");
+                            }
+                        });
+                    if let Err(e) = spawned {
+                        log::error!("spawning join handshake thread: {e}");
+                    }
+                }
+            })?;
+        log::info!("master accepting worker joins on {local}");
+        Ok(local)
+    }
+
     pub(super) fn n_workers(&self) -> usize {
-        self.worker_tx.len()
+        self.workers.len()
+    }
+
+    /// Stable ids of current members still accepting new work (i.e. not
+    /// retiring), ascending.
+    pub(super) fn live_worker_ids(&self) -> Vec<usize> {
+        self.workers
+            .iter()
+            .filter(|(_, w)| !w.retiring)
+            .map(|(&id, _)| id)
+            .collect()
+    }
+
+    /// Send a frame to one worker by stable id. Absent ids are a no-op
+    /// (the worker was already evicted; the caller's redispatch path
+    /// recovers the subtask). A send failure queues `LinkDown` instead
+    /// of erroring: the event handler owns removal, keeping every
+    /// membership transition on one code path.
+    pub(super) fn send_to(&mut self, id: usize, frame: &[u8]) {
+        let Some(w) = self.workers.get_mut(&id) else {
+            return;
+        };
+        if let Err(e) = w.tx.send(frame) {
+            log::warn!("worker {id}: send failed ({e:#}); scheduling link-down");
+            let _ = self.event_tx.send(MasterEvent::LinkDown(id));
+        }
+    }
+
+    /// Admit a joined worker into the pool + registry and invalidate the
+    /// current plan's pool-size assumption.
+    pub(super) fn admit_worker(
+        &mut self,
+        id: usize,
+        name: String,
+        tx: Box<dyn crate::transport::FrameTx>,
+    ) {
+        log::info!("worker {id} ({name}) admitted to the pool");
+        self.workers.insert(
+            id,
+            WorkerLink {
+                tx,
+                name,
+                retiring: false,
+            },
+        );
+        self.registry.admit(id);
+        self.replanner.force();
+    }
+
+    /// Evict a worker whose link died. Idempotent (link-death events can
+    /// double-fire: reader exit + send failure). Returns whether the
+    /// worker was still a member.
+    pub(super) fn drop_worker(&mut self, id: usize) -> bool {
+        if self.workers.remove(&id).is_none() {
+            return false;
+        }
+        log::warn!("worker {id}: link down; evicted from pool");
+        self.registry.evict(id);
+        self.replanner.force();
+        true
+    }
+
+    /// Begin graceful retirement: the worker stops receiving new
+    /// subtasks and is removed (with a Shutdown) once its in-flight ones
+    /// drain — see [`Master::finalize_retiring`].
+    pub fn retire_worker(&mut self, id: usize) {
+        if let Some(w) = self.workers.get_mut(&id) {
+            if !w.retiring {
+                log::info!("worker {id} ({}) retiring: draining in-flight subtasks", w.name);
+                w.retiring = true;
+            }
+        }
+    }
+
+    /// Finish retirement for every retiring worker not in `busy` (the
+    /// set of ids with outstanding subtasks): send Shutdown, remove from
+    /// the pool, log the transition.
+    pub(super) fn finalize_retiring(&mut self, busy: &BTreeSet<usize>) {
+        let done: Vec<usize> = self
+            .workers
+            .iter()
+            .filter(|(id, w)| w.retiring && !busy.contains(id))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in done {
+            if let Some(mut w) = self.workers.remove(&id) {
+                let _ = w.tx.send(&ToWorker::Shutdown.encode());
+                log::info!("worker {id} ({}) retired", w.name);
+            }
+            self.registry.retire(id);
+            self.replanner.force();
+        }
     }
 
     /// A sender into the master's event channel — the serving
@@ -380,22 +705,41 @@ impl Master {
                 ])
             })
             .collect();
+        let members: Vec<Json> = self
+            .workers
+            .iter()
+            .map(|(&id, w)| {
+                Json::obj(vec![
+                    ("id", Json::Num(id as f64)),
+                    ("name", Json::Str(w.name.clone())),
+                    ("retiring", Json::Bool(w.retiring)),
+                ])
+            })
+            .collect();
         Json::obj(vec![
             ("adaptive", Json::Bool(self.config.adaptive)),
             ("plan_switches", Json::Num(self.replanner.switches as f64)),
             ("plan", Json::Arr(plan)),
+            ("members", Json::Arr(members)),
             ("registry", self.registry.to_json()),
         ])
     }
 
-    /// The dispatch set for the upcoming round: the registry's active
-    /// workers under the adaptive policy, the full pool otherwise.
+    /// The dispatch set for the upcoming round, by stable worker id:
+    /// the registry's active workers under the adaptive policy, every
+    /// pool member otherwise — minus retiring workers either way. Empty
+    /// when no live workers exist (the elastic engine then parks staged
+    /// requests until someone joins).
     pub(super) fn dispatch_targets(&mut self) -> Vec<usize> {
-        if self.config.adaptive {
+        let candidates = if self.config.adaptive {
             self.registry.active_workers(self.round + 1)
         } else {
-            (0..self.n_workers()).collect()
-        }
+            self.workers.keys().copied().collect()
+        };
+        candidates
+            .into_iter()
+            .filter(|id| self.workers.get(id).is_some_and(|w| !w.retiring))
+            .collect()
     }
 
     /// Run a replan attempt if one is due (no-op unless adaptive).
@@ -421,7 +765,7 @@ impl Master {
         if !self.config.adaptive {
             return None;
         }
-        if !(0..self.n_workers()).any(|w| self.registry.estimate(w).is_some()) {
+        if !self.registry.any_estimate() {
             return None;
         }
         let fitted = self.registry.fitted_profile(&self.config.profile);
@@ -543,8 +887,8 @@ impl Master {
             weight_seed: self.config.weight_seed,
         }
         .encode();
-        for tx in self.worker_tx.iter_mut() {
-            tx.send(&setup)?;
+        for w in self.workers.values_mut() {
+            w.tx.send(&setup)?;
         }
         let mut ready = 0;
         while ready < self.n_workers() {
@@ -554,8 +898,15 @@ impl Master {
                 .context("waiting for worker Ready")?
             {
                 MasterEvent::Reply(_, FromWorker::Ready, _) => ready += 1,
+                MasterEvent::Reply(_, FromWorker::Heartbeat { .. }, _) => {}
                 MasterEvent::Reply(i, other, _) => {
                     bail!("worker {i}: unexpected {other:?} during setup")
+                }
+                MasterEvent::LinkDown(i) => {
+                    bail!("worker {i}: link down during setup")
+                }
+                MasterEvent::Joined { .. } => {
+                    bail!("runtime join before worker setup finished")
                 }
                 MasterEvent::Submit(_) | MasterEvent::Drain => {
                     bail!("serving event before worker setup finished")
@@ -823,10 +1174,14 @@ impl Master {
         k_planned: usize,
         input: &Tensor,
     ) -> Result<(Tensor, LayerMetrics)> {
-        // Dispatch set: the full pool, or — adaptive — the registry's
-        // active workers (quarantined ones appear only when their probe
-        // is due).
-        let targets = self.dispatch_targets();
+        // Dispatch set (stable worker ids): the live pool, or — adaptive
+        // — the registry's active workers (quarantined ones appear only
+        // when their probe is due).
+        let mut targets = self.dispatch_targets();
+        anyhow::ensure!(
+            !targets.is_empty(),
+            "layer {node_id}: no live workers to dispatch to"
+        );
         let k_eff = self.effective_k(k_planned, targets.len());
         let mut pr =
             self.prepare_round(&[(0, input)], node_id, spec, k_eff, targets.len())?;
@@ -836,9 +1191,15 @@ impl Master {
         // -- execution phase (dispatch + master-local remainder) -------
         let t0 = Instant::now();
         let mut dispatched_at: Vec<Instant> = Vec::with_capacity(pr.frames.len());
-        for (i, frame) in pr.frames.iter().enumerate() {
+        // task id -> the worker currently holding it, so link death can
+        // recover exactly the dead worker's subtasks.
+        let mut assigned: Vec<usize> = Vec::with_capacity(pr.frames.len());
+        for i in 0..pr.frames.len() {
             dispatched_at.push(Instant::now());
-            self.worker_tx[targets[i % targets.len()]].send(frame)?;
+            assigned.push(targets[i % targets.len()]);
+        }
+        for (frame, &target) in pr.frames.iter().zip(&assigned) {
+            self.send_to(target, frame);
         }
         self.log_round(round, pr.flops_per_task, pr.bytes_per_task, dispatched_at);
 
@@ -878,6 +1239,50 @@ impl Master {
                     continue;
                 }
                 MasterEvent::Drain => continue,
+                // A runtime joiner is admitted immediately; it starts
+                // receiving shards from the next round (this round's
+                // frames are already sized to the old dispatch set).
+                MasterEvent::Joined { id, name, tx } => {
+                    self.admit_worker(id, name, tx);
+                    continue;
+                }
+                MasterEvent::LinkDown(wid) => {
+                    if !self.drop_worker(wid) {
+                        continue; // double-fire: already handled
+                    }
+                    targets.retain(|&t| t != wid);
+                    // Recover the dead worker's outstanding subtasks.
+                    let orphaned: Vec<usize> = outstanding
+                        .iter()
+                        .copied()
+                        .filter(|&t| assigned[t] == wid)
+                        .collect();
+                    for task_id in orphaned {
+                        outstanding.retain(|&t| t != task_id);
+                        lm.failures += 1;
+                        if pr.scheme.needs_redispatch(task_id, &received, &outstanding) {
+                            anyhow::ensure!(
+                                !targets.is_empty(),
+                                "layer {node_id}: all workers lost mid-round"
+                            );
+                            let ti = next_redispatch_worker % targets.len();
+                            next_redispatch_worker = ti + 1;
+                            let target = targets[ti];
+                            if let Some(rt) = self.round_log.get_mut(&round) {
+                                rt.dispatched_at[task_id] = Instant::now();
+                            }
+                            self.send_to(target, &pr.frames[task_id]);
+                            assigned[task_id] = target;
+                            outstanding.push(task_id);
+                            lm.redispatches += 1;
+                            log::debug!(
+                                "layer {node_id}: task {task_id} orphaned by dead \
+                                 worker {wid}, re-dispatched to {target}"
+                            );
+                        }
+                    }
+                    continue;
+                }
             };
             match msg {
                 FromWorker::Output {
@@ -919,6 +1324,10 @@ impl Master {
                         if lm.redispatches > 4 * pr.frames.len() {
                             bail!("layer {node_id}: re-dispatch storm; giving up");
                         }
+                        anyhow::ensure!(
+                            !targets.is_empty(),
+                            "layer {node_id}: all workers lost mid-round"
+                        );
                         // Round-robin (over the round's dispatch set) to
                         // a different worker than the one that failed.
                         let mut ti = next_redispatch_worker % targets.len();
@@ -930,7 +1339,8 @@ impl Master {
                         if let Some(rt) = self.round_log.get_mut(&round) {
                             rt.dispatched_at[task_id] = Instant::now();
                         }
-                        self.worker_tx[target].send(&pr.frames[task_id])?;
+                        self.send_to(target, &pr.frames[task_id]);
+                        assigned[task_id] = target;
                         outstanding.push(task_id);
                         lm.redispatches += 1;
                         log::debug!(
@@ -944,6 +1354,22 @@ impl Master {
                     // reaching the barrier path is a leftover from an
                     // earlier pipelined batch on this master.
                     lm.stale_results += 1;
+                }
+                // Liveness beacon from a TCP joiner: the read timeout on
+                // its link is what polices silence; nothing to do here.
+                FromWorker::Heartbeat { .. } => {}
+                // Graceful retirement: stop assigning new shards; the
+                // worker is finalized once this round's decode clears.
+                FromWorker::Retire => {
+                    self.retire_worker(wid);
+                    targets.retain(|&t| t != wid);
+                    anyhow::ensure!(
+                        !targets.is_empty(),
+                        "layer {node_id}: every worker retired mid-round"
+                    );
+                }
+                FromWorker::Join { .. } => {
+                    bail!("worker {wid}: Join on an established link")
                 }
                 FromWorker::Ready => bail!("unexpected Ready from worker {wid}"),
             }
@@ -961,14 +1387,18 @@ impl Master {
         t_local += t0.elapsed().as_secs_f64();
         lm.t_local = t_local;
         self.retire_round(round);
+        // Barrier mode runs one round at a time, so once this round
+        // decodes no retiring worker holds work we still need — any
+        // straggler reply of this round would be stale anyway.
+        self.finalize_retiring(&BTreeSet::new());
         Ok((out, lm))
     }
 
     /// Graceful shutdown (workers exit their loops).
     pub fn shutdown(mut self) {
         let frame = ToWorker::Shutdown.encode();
-        for tx in self.worker_tx.iter_mut() {
-            let _ = tx.send(&frame);
+        for w in self.workers.values_mut() {
+            let _ = w.tx.send(&frame);
         }
     }
 }

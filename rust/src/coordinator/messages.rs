@@ -6,6 +6,10 @@ use anyhow::{bail, Result};
 use crate::conv::{ConvSpec, Tensor};
 use crate::transport::codec::{Decoder, Encoder};
 
+/// Membership wire-protocol version, checked during the join handshake
+/// so an old worker binary can't silently join a newer master.
+pub const PROTOCOL_VERSION: u32 = 1;
+
 /// Master -> worker.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ToWorker {
@@ -18,6 +22,16 @@ pub enum ToWorker {
     /// master has already decoded it, so straggler results are useless.
     Cancel { round: u64 },
     Shutdown,
+    /// Handshake accept: the master assigns a stable worker id and tells
+    /// the joiner which model to prepack and how often to heartbeat.
+    JoinAck {
+        worker_id: u64,
+        model: String,
+        weight_seed: u64,
+        heartbeat_ms: u32,
+    },
+    /// Handshake reject (wrong protocol / model mismatch).
+    JoinReject { reason: String },
 }
 
 /// One request's slice of a (possibly coalesced) subtask: which
@@ -165,16 +179,36 @@ pub enum FromWorker {
     /// (Output / Failed / Skipped), which is what keeps the master's
     /// per-worker load accounting exact.
     Skipped { round: u64, task_id: u32 },
+    /// Membership handshake: a worker announcing itself to a running
+    /// cluster. `model` is a hint ("" = whatever the master serves);
+    /// a non-empty mismatch is rejected.
+    Join {
+        name: String,
+        protocol: u32,
+        model: String,
+    },
+    /// Periodic liveness beacon from a joined worker. The master's
+    /// per-worker read timeout (heartbeat deadline) is what evicts a
+    /// silent peer; `seq` is diagnostic.
+    Heartbeat { seq: u64 },
+    /// Graceful retirement request: stop assigning me new subtasks,
+    /// let my in-flight ones drain, then drop me from the pool.
+    Retire,
 }
 
 const TAG_SETUP: u8 = 1;
 const TAG_WORK: u8 = 2;
 const TAG_SHUTDOWN: u8 = 3;
 const TAG_CANCEL: u8 = 4;
+const TAG_JOIN_ACK: u8 = 5;
+const TAG_JOIN_REJECT: u8 = 6;
 const TAG_READY: u8 = 11;
 const TAG_OUTPUT: u8 = 12;
 const TAG_FAILED: u8 = 13;
 const TAG_SKIPPED: u8 = 14;
+const TAG_JOIN: u8 = 15;
+const TAG_HEARTBEAT: u8 = 16;
+const TAG_RETIRE: u8 = 17;
 
 impl ToWorker {
     pub fn encode(&self) -> Vec<u8> {
@@ -209,6 +243,21 @@ impl ToWorker {
             }
             ToWorker::Shutdown => {
                 e.u8(TAG_SHUTDOWN);
+            }
+            ToWorker::JoinAck {
+                worker_id,
+                model,
+                weight_seed,
+                heartbeat_ms,
+            } => {
+                e.u8(TAG_JOIN_ACK)
+                    .u64(*worker_id)
+                    .str(model)
+                    .u64(*weight_seed)
+                    .u32(*heartbeat_ms);
+            }
+            ToWorker::JoinReject { reason } => {
+                e.u8(TAG_JOIN_REJECT).str(reason);
             }
         }
         if let ToWorker::Work(w) = self {
@@ -261,6 +310,13 @@ impl ToWorker {
             }
             TAG_CANCEL => ToWorker::Cancel { round: d.u64()? },
             TAG_SHUTDOWN => ToWorker::Shutdown,
+            TAG_JOIN_ACK => ToWorker::JoinAck {
+                worker_id: d.u64()?,
+                model: d.str()?,
+                weight_seed: d.u64()?,
+                heartbeat_ms: d.u32()?,
+            },
+            TAG_JOIN_REJECT => ToWorker::JoinReject { reason: d.str()? },
             t => bail!("unknown ToWorker tag {t}"),
         };
         d.done()?;
@@ -305,6 +361,19 @@ impl FromWorker {
             FromWorker::Skipped { round, task_id } => {
                 e.u8(TAG_SKIPPED).u64(*round).u32(*task_id);
             }
+            FromWorker::Join {
+                name,
+                protocol,
+                model,
+            } => {
+                e.u8(TAG_JOIN).str(name).u32(*protocol).str(model);
+            }
+            FromWorker::Heartbeat { seq } => {
+                e.u8(TAG_HEARTBEAT).u64(*seq);
+            }
+            FromWorker::Retire => {
+                e.u8(TAG_RETIRE);
+            }
         }
         e.finish()
     }
@@ -330,6 +399,13 @@ impl FromWorker {
                 round: d.u64()?,
                 task_id: d.u32()?,
             },
+            TAG_JOIN => FromWorker::Join {
+                name: d.str()?,
+                protocol: d.u32()?,
+                model: d.str()?,
+            },
+            TAG_HEARTBEAT => FromWorker::Heartbeat { seq: d.u64()? },
+            TAG_RETIRE => FromWorker::Retire,
             t => bail!("unknown FromWorker tag {t}"),
         };
         d.done()?;
@@ -374,11 +450,27 @@ mod tests {
                 ToWorker::Work(order),
                 ToWorker::Cancel { round: rng.next_u64() },
                 ToWorker::Shutdown,
+                ToWorker::JoinAck {
+                    worker_id: rng.next_u64(),
+                    model: "tinyvgg".into(),
+                    weight_seed: rng.next_u64(),
+                    heartbeat_ms: rng.below(60_000) as u32,
+                },
+                ToWorker::JoinReject {
+                    reason: "protocol mismatch".into(),
+                },
             ] {
                 assert_eq!(ToWorker::decode(&msg.encode()).unwrap(), msg);
             }
             for msg in [
                 FromWorker::Ready,
+                FromWorker::Join {
+                    name: format!("edge-{}", rng.below(100)),
+                    protocol: PROTOCOL_VERSION,
+                    model: String::new(),
+                },
+                FromWorker::Heartbeat { seq: rng.next_u64() },
+                FromWorker::Retire,
                 FromWorker::Output {
                     round: 3,
                     task_id: 1,

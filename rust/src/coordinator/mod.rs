@@ -18,6 +18,7 @@ pub use server::{
     InferenceRequest, InferenceServer, RequestHandle, ServeError, ServeResult, ServerConfig,
     ServerStats, SubmitError,
 };
+pub use worker::{run_worker, run_worker_announcing, JoinOptions, WorkerConfig, WorkerExit};
 
 #[cfg(test)]
 mod tests {

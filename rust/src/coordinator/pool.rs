@@ -33,12 +33,25 @@ pub struct WorkerHandles {
 }
 
 impl WorkerHandles {
-    /// Join all workers (call after the master sent `Shutdown`).
+    /// Join all workers (call after the master sent `Shutdown`). Every
+    /// thread is joined even when an early one failed, and the error
+    /// names *which* workers died instead of discarding the identity
+    /// with the first `?`.
     pub fn join(self) -> Result<()> {
+        let mut failures: Vec<String> = Vec::new();
         for w in self.workers {
-            w.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+            let name = w.thread().name().unwrap_or("worker-?").to_string();
+            match w.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => failures.push(format!("{name}: {e:#}")),
+                Err(_) => failures.push(format!("{name}: panicked")),
+            }
         }
-        Ok(())
+        if failures.is_empty() {
+            Ok(())
+        } else {
+            Err(anyhow::anyhow!("worker failures: {}", failures.join("; ")))
+        }
     }
 }
 
@@ -128,5 +141,38 @@ impl LocalCluster {
         let (master, workers) = self.into_parts();
         master.shutdown();
         workers.join()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// `join` keeps joining after a failure and names every worker that
+    /// died — it used to stop at the first `?` and discard the identity.
+    #[test]
+    fn join_reports_which_workers_failed_and_joins_the_rest() {
+        let spawn = |name: &str, r: Result<()>| {
+            std::thread::Builder::new()
+                .name(name.to_string())
+                .spawn(move || r)
+                .unwrap()
+        };
+        let handles = WorkerHandles {
+            workers: vec![
+                spawn("worker-0", Ok(())),
+                spawn("worker-1", Err(anyhow::anyhow!("link reset"))),
+                std::thread::Builder::new()
+                    .name("worker-2".to_string())
+                    .spawn(|| -> Result<()> { panic!("injected test panic") })
+                    .unwrap(),
+                spawn("worker-3", Ok(())),
+            ],
+        };
+        let err = handles.join().unwrap_err().to_string();
+        assert!(err.contains("worker-1: link reset"), "{err}");
+        assert!(err.contains("worker-2: panicked"), "{err}");
+        assert!(!err.contains("worker-0:"), "{err}");
+        assert!(!err.contains("worker-3:"), "{err}");
     }
 }

@@ -64,6 +64,56 @@ struct LoadedModel {
     packed: BTreeMap<String, PackedWeights>,
 }
 
+/// Why the worker main loop ended — the reconnect loop's branch point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerExit {
+    /// The master sent `Shutdown` (or retired this worker): final.
+    Shutdown,
+    /// The link dropped. An announcing worker (`--connect`) treats this
+    /// as "reconnect with backoff"; a spawned in-proc worker as a clean
+    /// exit.
+    LinkClosed,
+}
+
+/// How an announcing worker (`cocoi worker --connect`) introduces
+/// itself during the join handshake.
+pub struct JoinOptions {
+    /// Human-readable name echoed in the master's membership telemetry.
+    pub name: String,
+    /// Model hint: a non-empty mismatch is rejected by the master
+    /// instead of prepacking weights this master will never dispatch
+    /// against. Empty = prepack whatever the master serves.
+    pub model: String,
+}
+
+/// Regenerate + prepack a model's weights (the paper's "preloaded
+/// weights" step) — paid once per Setup/JoinAck, never per subtask.
+fn load_model(name: &str, weight_seed: u64, config: &WorkerConfig) -> Result<LoadedModel> {
+    let spec = zoo::model(name)?;
+    let store = WeightStore::generate(&spec, weight_seed)?;
+    let specs: BTreeMap<String, crate::conv::ConvSpec> = spec
+        .conv_layers()?
+        .into_iter()
+        .map(|(id, s, _)| (id, s))
+        .collect();
+    let packed: BTreeMap<String, PackedWeights> = specs
+        .iter()
+        .filter_map(|(id, s)| {
+            let params = store.get(id).ok()?;
+            config
+                .provider
+                .prepack(s, &params.weights)
+                .map(|pa| (id.clone(), pa))
+        })
+        .collect();
+    log::debug!(
+        "worker {}: loaded {name} ({} layers prepacked)",
+        config.id,
+        packed.len()
+    );
+    Ok(LoadedModel { store, specs, packed })
+}
+
 /// Events multiplexed into the worker's main loop: link frames from the
 /// reader thread, the link closing, and executor-thread failures (the
 /// executors hold clones of the sender, so the dispatcher needs an
@@ -93,16 +143,110 @@ impl Drop for ExecGuard {
     }
 }
 
-/// Blocking worker main loop. Returns when the master shuts the link or
-/// sends `Shutdown`.
+/// Blocking worker main loop for a *provisioned* worker (the master
+/// spawned it and sends `Setup` first). Returns when the master shuts
+/// the link or sends `Shutdown`.
 pub fn run_worker(
     tx: Box<dyn FrameTx>,
-    mut rx: Box<dyn FrameRx>,
+    rx: Box<dyn FrameRx>,
     config: WorkerConfig,
 ) -> Result<()> {
-    let slots = config.slots.max(1);
-    // The executors and the dispatcher share the reply link.
     let tx: Arc<Mutex<Box<dyn FrameTx>>> = Arc::new(Mutex::new(tx));
+    run_worker_core(tx, rx, &config, None).map(|_| ())
+}
+
+/// Announce-and-serve: join a *running* cluster over an established
+/// link. Sends `Join`, waits for `JoinAck` (bails on `JoinReject`),
+/// prepacks the master's model, sends `Ready`, spawns the heartbeat
+/// thread at the master-assigned cadence, then runs the normal main
+/// loop. The returned [`WorkerExit`] tells the caller's reconnect loop
+/// whether to dial again.
+pub fn run_worker_announcing(
+    mut tx: Box<dyn FrameTx>,
+    mut rx: Box<dyn FrameRx>,
+    mut config: WorkerConfig,
+    opts: &JoinOptions,
+) -> Result<WorkerExit> {
+    tx.send(
+        &FromWorker::Join {
+            name: opts.name.clone(),
+            protocol: super::messages::PROTOCOL_VERSION,
+            model: opts.model.clone(),
+        }
+        .encode(),
+    )?;
+    let Some(frame) = rx.recv()? else {
+        return Ok(WorkerExit::LinkClosed); // master died mid-handshake
+    };
+    let (worker_id, model_name, weight_seed, heartbeat_ms) = match ToWorker::decode(&frame)? {
+        ToWorker::JoinAck {
+            worker_id,
+            model,
+            weight_seed,
+            heartbeat_ms,
+        } => (worker_id as usize, model, weight_seed, heartbeat_ms),
+        ToWorker::JoinReject { reason } => {
+            anyhow::bail!("join rejected by master: {reason}")
+        }
+        other => anyhow::bail!("expected JoinAck, got {other:?}"),
+    };
+    config.id = worker_id;
+    // Prepack BEFORE Ready: the master admits this worker into dispatch
+    // targets the moment Ready lands, so it must be execute-ready.
+    let model = Arc::new(load_model(&model_name, weight_seed, &config)?);
+    let tx: Arc<Mutex<Box<dyn FrameTx>>> = Arc::new(Mutex::new(tx));
+    tx.lock().unwrap().send(&FromWorker::Ready.encode())?;
+
+    // Heartbeat thread: one beat per master-assigned interval (a third
+    // of the eviction deadline) until the stop channel hangs up. A
+    // failed beat means the link died — the main loop notices on its
+    // own, so the thread just exits.
+    let (stop_tx, stop_rx) = mpsc::channel::<()>();
+    let beat_tx = tx.clone();
+    let interval = std::time::Duration::from_millis(u64::from(heartbeat_ms.max(1)));
+    let beats = std::thread::Builder::new()
+        .name(format!("worker-{worker_id}-hb"))
+        .spawn(move || {
+            let mut seq = 0u64;
+            loop {
+                match stop_rx.recv_timeout(interval) {
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    _ => break, // stop signal (or sender dropped)
+                }
+                seq += 1;
+                let beat = FromWorker::Heartbeat { seq }.encode();
+                if beat_tx.lock().unwrap().send(&beat).is_err() {
+                    break;
+                }
+            }
+        })?;
+    let out = match run_worker_core(tx, rx, &config, Some(model)) {
+        // Post-admission failures (a torn link usually surfaces as a
+        // recv/send error, not a clean EOF) end THIS membership, not
+        // the worker: the caller's reconnect loop decides whether to
+        // dial again. Handshake errors above stay fatal — re-dialing a
+        // master that rejected the join would spin forever.
+        Err(e) => {
+            log::warn!("worker {worker_id}: link lost after join: {e:#}");
+            Ok(WorkerExit::LinkClosed)
+        }
+        ok => ok,
+    };
+    drop(stop_tx); // hang up: the heartbeat thread exits on its next wake
+    let _ = beats.join();
+    out
+}
+
+/// The shared dispatcher + executor-pool loop behind both entry points.
+/// `model` is pre-loaded for announcing workers (JoinAck carried the
+/// name/seed); provisioned workers load it from `Setup`.
+fn run_worker_core(
+    tx: Arc<Mutex<Box<dyn FrameTx>>>,
+    mut rx: Box<dyn FrameRx>,
+    config: &WorkerConfig,
+    mut model: Option<Arc<LoadedModel>>,
+) -> Result<WorkerExit> {
+    let slots = config.slots.max(1);
 
     // Reader thread: link frames -> in-memory work queue + cancel set.
     let (queue_tx, queue) = mpsc::channel::<WorkerEvent>();
@@ -224,8 +368,7 @@ pub fn run_worker(
     // queueing into a channel nobody will ever drain).
     drop(job_rx);
 
-    let mut model: Option<Arc<LoadedModel>> = None;
-    let mut result = Ok(());
+    let mut result = Ok(WorkerExit::LinkClosed);
     while let Ok(ev) = queue.recv() {
         match ev {
             WorkerEvent::Error(e) => {
@@ -233,35 +376,19 @@ pub fn run_worker(
                 break;
             }
             WorkerEvent::LinkClosed => break, // peer closed: clean exit
-            WorkerEvent::Msg(ToWorker::Shutdown) => break,
+            WorkerEvent::Msg(ToWorker::Shutdown) => {
+                result = Ok(WorkerExit::Shutdown);
+                break;
+            }
             // Cancels are absorbed by the reader; tolerate one anyway.
             WorkerEvent::Msg(ToWorker::Cancel { .. }) => {}
+            // Handshake frames after admission: harmless, ignore.
+            WorkerEvent::Msg(ToWorker::JoinAck { .. } | ToWorker::JoinReject { .. }) => {
+                log::warn!("worker {}: stray handshake frame post-join", config.id);
+            }
             WorkerEvent::Msg(ToWorker::Setup { model: name, weight_seed }) => {
-                let spec = zoo::model(&name)?;
-                let store = WeightStore::generate(&spec, weight_seed)?;
-                let specs: BTreeMap<String, crate::conv::ConvSpec> = spec
-                    .conv_layers()?
-                    .into_iter()
-                    .map(|(id, s, _)| (id, s))
-                    .collect();
-                // Pre-pack every conv layer's weights now (the paper's
-                // "preloaded weights" step) so no subtask pays for it.
-                let packed: BTreeMap<String, PackedWeights> = specs
-                    .iter()
-                    .filter_map(|(id, s)| {
-                        let params = store.get(id).ok()?;
-                        config
-                            .provider
-                            .prepack(s, &params.weights)
-                            .map(|pa| (id.clone(), pa))
-                    })
-                    .collect();
-                log::debug!(
-                    "worker {}: loaded {name} ({} layers prepacked, {slots} slots)",
-                    config.id,
-                    packed.len()
-                );
-                model = Some(Arc::new(LoadedModel { store, specs, packed }));
+                model = Some(Arc::new(load_model(&name, weight_seed, config)?));
+                log::debug!("worker {}: setup complete ({slots} slots)", config.id);
                 if tx.lock().unwrap().send(&FromWorker::Ready.encode()).is_err() {
                     break; // master gone mid-setup
                 }

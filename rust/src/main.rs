@@ -16,7 +16,10 @@
 //!              [--coalesce C]                       # merge ≤C same-layer requests per round (1 = off)
 //!              [--worker-slots S]                   # convs in flight per worker (1 = sequential)
 //! cocoi worker --listen 0.0.0.0:9090 [--pjrt] [--threads T] [--slots S]   # TCP worker process
-//! cocoi infer  --tcp host:9090,host:9091 ...        # master over TCP
+//! cocoi worker --connect host:9095 [--name N] [--model M]                 # announce to a running master
+//!              [--retry-initial-ms 200] [--retry-max-ms 5000] [--retries 0]  # reconnect backoff (0 = forever)
+//! cocoi infer  --tcp host:9090,host:9091 ...        # master over TCP (fixed pool)
+//! cocoi infer  --listen 0.0.0.0:9095 --stream N     # elastic master: workers join/leave at runtime
 //! cocoi plan   --model vgg16 --workers 10           # show the split plan
 //! cocoi experiment <gemm|fig4|fig5|fig6|fig7|fig8|fig9|fig10|table1|theory|throughput|adaptive|serving|all>
 //! ```
@@ -162,8 +165,15 @@ fn cmd_infer(args: &Args) -> Result<()> {
     };
     let telemetry_path = args.get("telemetry").map(std::path::PathBuf::from);
 
-    // Build the master over TCP workers or a local in-proc pool.
-    let (mut master, workers) = if let Some(addrs) = args.get("tcp") {
+    // Build the master: elastic (workers announce themselves), fixed
+    // TCP pool, or a local in-proc pool.
+    let (mut master, workers) = if let Some(listen_addr) = args.get("listen") {
+        let mut master =
+            cocoi::coordinator::Master::new_elastic(&model_name, config, n.max(1), provider)?;
+        let bound = master.listen(listen_addr)?;
+        println!("elastic master: membership listener on {bound} (inference waits for joins)");
+        (master, None)
+    } else if let Some(addrs) = args.get("tcp") {
         let mut links: Vec<cocoi::transport::LinkPair> = Vec::new();
         for addr in addrs.split(',') {
             let stream = std::net::TcpStream::connect(addr.trim())
@@ -324,9 +334,12 @@ fn run_inferences(
 }
 
 fn cmd_worker(args: &Args) -> Result<()> {
-    let listen = args.get("listen").unwrap_or("127.0.0.1:9090").to_string();
     let slots = args.get_usize("slots", 1)?;
     let (provider, _service) = make_provider(args.has("pjrt"), args.get_usize("threads", 0)?)?;
+    if let Some(addr) = args.get("connect") {
+        return worker_announce_loop(addr, args, provider);
+    }
+    let listen = args.get("listen").unwrap_or("127.0.0.1:9090").to_string();
     cocoi::transport::tcp::serve(&listen, move |link| {
         let provider = provider.clone();
         let (tx, rx) = split_tcp(link.into_stream())?;
@@ -342,6 +355,56 @@ fn cmd_worker(args: &Args) -> Result<()> {
             },
         )
     })
+}
+
+/// `--connect`: dial a running master's membership listener, join, and
+/// serve. On link loss, reconnect with capped exponential backoff (the
+/// master assigns a fresh worker id each join). Exits cleanly when the
+/// master shuts this worker down, or errors once a dial exhausts
+/// `--retries` attempts (0 = keep trying forever).
+fn worker_announce_loop(
+    addr: &str,
+    args: &Args,
+    provider: Arc<dyn ConvProvider>,
+) -> Result<()> {
+    use cocoi::coordinator::{run_worker_announcing, JoinOptions, WorkerConfig, WorkerExit};
+    use cocoi::transport::tcp::{connect_with_backoff, Backoff};
+    use std::time::Duration;
+
+    let opts = JoinOptions {
+        name: args
+            .get("name")
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("worker-pid{}", std::process::id())),
+        model: args.get("model").unwrap_or("").to_string(),
+    };
+    let slots = args.get_usize("slots", 1)?;
+    let backoff = Backoff {
+        initial: Duration::from_millis(args.get_usize("retry-initial-ms", 200)? as u64),
+        max: Duration::from_millis(args.get_usize("retry-max-ms", 5000)? as u64),
+        factor: 2.0,
+        retries: args.get_usize("retries", 0)? as u32,
+    };
+    loop {
+        let link = connect_with_backoff(addr, &backoff)?;
+        let (tx, rx) = split_tcp(link.into_stream())?;
+        let exit = run_worker_announcing(
+            Box::new(tx),
+            Box::new(rx),
+            WorkerConfig {
+                id: 0, // reassigned from JoinAck
+                provider: provider.clone(),
+                faults: WorkerFaults::none(),
+                rng_seed: 0xDEC0DE,
+                slots,
+            },
+            &opts,
+        )?;
+        match exit {
+            WorkerExit::Shutdown => return Ok(()),
+            WorkerExit::LinkClosed => log::warn!("link to {addr} lost; reconnecting"),
+        }
+    }
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {

@@ -54,6 +54,17 @@ pub enum DriftScenario {
     /// transmission straggling moves the optimal split k° down, so this
     /// is the scenario where replanning (not just quarantine) pays.
     TransmissionCongestion { factor: f64, at: usize },
+    /// Membership churn: worker `leave` is evicted (link death) at
+    /// request `leave_at`, and a brand-new worker — stable id `n`,
+    /// beyond the initial pool — joins at request `join_at`. Unlike
+    /// [`DriftScenario::DieAndReturn`] the departure is a *membership*
+    /// transition (the pool shrinks; nothing is dispatched to the
+    /// ghost), mirroring the coordinator's evict/admit paths.
+    Churn {
+        leave: usize,
+        leave_at: usize,
+        join_at: usize,
+    },
 }
 
 impl DriftScenario {
@@ -71,6 +82,11 @@ impl DriftScenario {
             DriftScenario::TransmissionCongestion { factor, at } => {
                 format!("congestion(x{factor},at={at})")
             }
+            DriftScenario::Churn {
+                leave,
+                leave_at,
+                join_at,
+            } => format!("churn(leave={leave}@{leave_at},join@{join_at})"),
         }
     }
 
@@ -99,6 +115,40 @@ impl DriftScenario {
             DriftScenario::DieAndReturn { worker: w, down_at, up_at }
                 if worker == *w && (*down_at..*up_at).contains(&req)
         )
+    }
+
+    /// Is `worker` a pool *member* at request `req`, given an initial
+    /// pool of `n`? Beyond liveness: churn removes a member for good
+    /// and admits a new one (stable id `n`); every other scenario keeps
+    /// the initial `0..n` pool.
+    pub fn present(&self, worker: usize, n: usize, req: usize) -> bool {
+        match self {
+            DriftScenario::Churn {
+                leave,
+                leave_at,
+                join_at,
+            } => {
+                if worker == n {
+                    req >= *join_at
+                } else if worker == *leave {
+                    req < *leave_at
+                } else {
+                    worker < n
+                }
+            }
+            _ => worker < n,
+        }
+    }
+
+    /// Workers the trial draws phase times for: churn trials always
+    /// draw for the joiner too (ids `0..n+1`), so the static and
+    /// adaptive policies consume the RNG identically whatever the
+    /// membership at each request — the common-random-numbers contract.
+    pub fn draw_pool(&self, n: usize) -> usize {
+        match self {
+            DriftScenario::Churn { .. } => n + 1,
+            _ => n,
+        }
     }
 }
 
@@ -165,7 +215,26 @@ pub fn simulate_adaptive(
     let mut round: u64 = 0;
     let mut latencies = Vec::with_capacity(n_requests);
 
+    let draw_pool = drift.draw_pool(n);
     for req in 0..n_requests {
+        // Membership transitions feed the registry exactly like the
+        // coordinator's evict/admit paths (the static policy tracks
+        // membership through `present` alone).
+        if adaptive {
+            if let DriftScenario::Churn {
+                leave,
+                leave_at,
+                join_at,
+            } = drift
+            {
+                if req == leave_at {
+                    registry.evict(leave);
+                }
+                if req == join_at {
+                    registry.admit(n);
+                }
+            }
+        }
         let mut total = local_mean;
         for (node_id, dims) in &layers {
             round += 1;
@@ -179,7 +248,9 @@ pub fn simulate_adaptive(
             let targets = if adaptive {
                 registry.active_workers(round)
             } else {
-                (0..n).collect::<Vec<usize>>()
+                (0..draw_pool)
+                    .filter(|&w| drift.present(w, n, req))
+                    .collect::<Vec<usize>>()
             };
             let n_tasks = targets.len();
             // Keep one parity shard when quarantine shrank the dispatch
@@ -206,7 +277,7 @@ pub fn simulate_adaptive(
             // bitwise identical to the static one.
             let mut arrivals: Vec<(f64, usize, f64, f64)> = Vec::with_capacity(n_tasks);
             let mut failed: Vec<usize> = Vec::new();
-            for w in 0..n {
+            for w in 0..draw_pool {
                 let t_rec = rec.shift()
                     + rng.exponential(rec.mu / rec.n_scale) * drift.tr_excess(req);
                 let t_cmp = cmp.sample(rng) * drift.cmp_slowdown(w, req);
@@ -300,5 +371,45 @@ mod tests {
         assert_eq!(d.tr_excess(0), 1.0);
         assert_eq!(d.tr_excess(1), 8.0);
         assert!(DriftScenario::None.label() == "none");
+    }
+
+    /// Churn is a *membership* transition: the leaver disappears from
+    /// the pool, the joiner (stable id n) appears, the registry logs
+    /// Evicted/Joined, and the run stays deterministic (CRN holds with
+    /// the n+1 draw pool).
+    #[test]
+    fn churn_swaps_membership_and_stays_deterministic() {
+        use crate::telemetry::EventKind;
+        let drift = DriftScenario::Churn {
+            leave: 0,
+            leave_at: 3,
+            join_at: 5,
+        };
+        assert!(drift.present(0, 10, 2) && !drift.present(0, 10, 3));
+        assert!(!drift.present(10, 10, 4) && drift.present(10, 10, 5));
+        assert!(drift.present(4, 10, 9));
+        assert_eq!(drift.draw_pool(10), 11);
+
+        let a = run(drift, 8, true, 7);
+        let b = run(drift, 8, true, 7);
+        assert_eq!(a.latencies, b.latencies);
+        assert!(a.latencies.iter().all(|t| t.is_finite() && *t > 0.0));
+        assert!(a
+            .events
+            .iter()
+            .any(|e| e.kind == EventKind::Evicted && e.worker == 0));
+        assert!(a
+            .events
+            .iter()
+            .any(|e| e.kind == EventKind::Joined && e.worker == 10));
+        assert!(!a.registry.contains(0) && a.registry.contains(10));
+        // The joiner actually accumulated samples after admission.
+        assert!(a.registry.samples_of(10) > 0);
+
+        // The static policy survives the same churn (membership via the
+        // `present` predicate alone).
+        let s = run(drift, 8, false, 7);
+        assert!(s.latencies.iter().all(|t| t.is_finite() && *t > 0.0));
+        assert_eq!(s.switches, 0);
     }
 }

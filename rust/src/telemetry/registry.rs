@@ -22,6 +22,8 @@
 //! excluded from dispatch except for a periodic probe subtask whose
 //! sample can reintegrate it once it recovers.
 
+use std::collections::BTreeMap;
+
 use crate::latency::{ShiftExp, SystemProfile};
 use crate::planner::hetero::WorkerSpeed;
 use crate::util::json::Json;
@@ -73,7 +75,7 @@ impl Default for TelemetryConfig {
     }
 }
 
-/// Quarantine/reintegration log entry.
+/// Quarantine/reintegration/membership log entry.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EventKind {
     /// EWMA execution rate drifted past the quarantine score.
@@ -82,6 +84,14 @@ pub enum EventKind {
     QuarantineFail,
     /// A probe sample brought the worker back under the threshold.
     Reintegrate,
+    /// Membership: the worker joined the pool (at startup or at runtime).
+    Joined,
+    /// Membership: the worker's link died or its heartbeat deadline
+    /// lapsed — removed involuntarily.
+    Evicted,
+    /// Membership: the worker drained its in-flight subtasks and left
+    /// gracefully.
+    Retired,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -114,6 +124,21 @@ struct WorkerState {
     next_probe: u64,
 }
 
+impl WorkerState {
+    fn fresh(cfg: &TelemetryConfig) -> WorkerState {
+        WorkerState {
+            cmp: SlidingWindow::new(cfg.window, cfg.half_life),
+            tr: SlidingWindow::new(cfg.window, cfg.half_life),
+            last_round: 0,
+            last_failure_round: 0,
+            consecutive_failures: 0,
+            total_failures: 0,
+            quarantined: false,
+            next_probe: 0,
+        }
+    }
+}
+
 /// Median via the shared stats substrate (interpolated quantile: mean of
 /// the two middles for even counts); `NaN` when empty — every caller
 /// guards with a `> 0.0` / finiteness check.
@@ -121,33 +146,27 @@ fn median(xs: Vec<f64>) -> f64 {
     crate::util::stats::Summary::from_slice(&xs).median()
 }
 
-/// Per-worker capacity telemetry for one worker pool.
+/// Per-worker capacity telemetry for one worker pool, keyed by *stable
+/// worker id* (ids survive churn; a rejoining worker gets a fresh id and
+/// a fresh window). Record/query calls for absent ids are graceful
+/// no-ops — stale replies from an evicted worker must not panic the
+/// master.
 #[derive(Clone, Debug)]
 pub struct CapacityRegistry {
     cfg: TelemetryConfig,
-    workers: Vec<WorkerState>,
+    workers: BTreeMap<usize, WorkerState>,
     /// Latest observed round (monotone).
     round: u64,
     events: Vec<TelemetryEvent>,
 }
 
 impl CapacityRegistry {
+    /// A registry seeded with workers `0..n_workers`. `n_workers` may be
+    /// zero (an elastic master starts empty and admits at runtime).
     pub fn new(n_workers: usize, cfg: TelemetryConfig) -> CapacityRegistry {
-        assert!(n_workers >= 1);
         CapacityRegistry {
             cfg,
-            workers: (0..n_workers)
-                .map(|_| WorkerState {
-                    cmp: SlidingWindow::new(cfg.window, cfg.half_life),
-                    tr: SlidingWindow::new(cfg.window, cfg.half_life),
-                    last_round: 0,
-                    last_failure_round: 0,
-                    consecutive_failures: 0,
-                    total_failures: 0,
-                    quarantined: false,
-                    next_probe: 0,
-                })
-                .collect(),
+            workers: (0..n_workers).map(|i| (i, WorkerState::fresh(&cfg))).collect(),
             round: 0,
             events: Vec::new(),
         }
@@ -159,6 +178,62 @@ impl CapacityRegistry {
 
     pub fn n_workers(&self) -> usize {
         self.workers.len()
+    }
+
+    pub fn contains(&self, worker: usize) -> bool {
+        self.workers.contains_key(&worker)
+    }
+
+    /// Current member ids, ascending.
+    pub fn worker_ids(&self) -> Vec<usize> {
+        self.workers.keys().copied().collect()
+    }
+
+    /// Execution samples currently windowed for one worker (0 if absent).
+    pub fn samples_of(&self, worker: usize) -> usize {
+        self.workers.get(&worker).map_or(0, |w| w.cmp.len())
+    }
+
+    /// True when at least one member has a trusted fit.
+    pub fn any_estimate(&self) -> bool {
+        self.workers.keys().any(|&i| self.estimate(i).is_some())
+    }
+
+    /// Admit a worker under a (new) stable id with a fresh sample window.
+    /// Admitting an existing id is a no-op (re-admission keeps history).
+    pub fn admit(&mut self, worker: usize) {
+        if self.workers.contains_key(&worker) {
+            return;
+        }
+        self.workers.insert(worker, WorkerState::fresh(&self.cfg));
+        self.events.push(TelemetryEvent {
+            kind: EventKind::Joined,
+            worker,
+            round: self.round,
+        });
+    }
+
+    /// Remove a worker involuntarily (link death / heartbeat lapse).
+    /// No-op when absent — link-death events can race and double-fire.
+    pub fn evict(&mut self, worker: usize) {
+        if self.workers.remove(&worker).is_some() {
+            self.events.push(TelemetryEvent {
+                kind: EventKind::Evicted,
+                worker,
+                round: self.round,
+            });
+        }
+    }
+
+    /// Remove a worker that drained gracefully.
+    pub fn retire(&mut self, worker: usize) {
+        if self.workers.remove(&worker).is_some() {
+            self.events.push(TelemetryEvent {
+                kind: EventKind::Retired,
+                worker,
+                round: self.round,
+            });
+        }
     }
 
     pub fn events(&self) -> &[TelemetryEvent] {
@@ -182,7 +257,9 @@ impl CapacityRegistry {
         round: u64,
     ) {
         self.round = self.round.max(round);
-        let w = &mut self.workers[worker];
+        let Some(w) = self.workers.get_mut(&worker) else {
+            return; // stale reply from an evicted/retired worker
+        };
         // A *late* reply for an old round is still a capacity sample —
         // push it — but it must not rewind the staleness clock or wipe a
         // failure streak accumulated in newer rounds.
@@ -197,7 +274,7 @@ impl CapacityRegistry {
             w.consecutive_failures = 0;
         }
         let score = self.straggler_score(worker);
-        let w = &mut self.workers[worker];
+        let w = self.workers.get_mut(&worker).expect("present above");
         if w.quarantined && score < self.cfg.reintegrate_score {
             w.quarantined = false;
             self.events.push(TelemetryEvent {
@@ -220,7 +297,9 @@ impl CapacityRegistry {
     pub fn record_failure(&mut self, worker: usize, round: u64) {
         self.round = self.round.max(round);
         let cfg = self.cfg;
-        let w = &mut self.workers[worker];
+        let Some(w) = self.workers.get_mut(&worker) else {
+            return; // stale failure from an evicted/retired worker
+        };
         w.consecutive_failures += 1;
         w.total_failures += 1;
         w.last_failure_round = w.last_failure_round.max(round);
@@ -246,15 +325,16 @@ impl CapacityRegistry {
     /// with a self-inclusive median a slow worker in a 2-pool would
     /// always score exactly 1.0.
     pub fn straggler_score(&self, worker: usize) -> f64 {
-        let w = &self.workers[worker];
+        let Some(w) = self.workers.get(&worker) else {
+            return 1.0;
+        };
         if w.cmp.len() < self.cfg.min_samples {
             return 1.0;
         }
         let pool: Vec<f64> = self
             .workers
             .iter()
-            .enumerate()
-            .filter(|(i, s)| *i != worker && s.cmp.len() >= self.cfg.min_samples)
+            .filter(|(i, s)| **i != worker && s.cmp.len() >= self.cfg.min_samples)
             .map(|(_, s)| s.cmp.ewma())
             .collect();
         let med = median(pool);
@@ -266,23 +346,24 @@ impl CapacityRegistry {
     }
 
     pub fn is_quarantined(&self, worker: usize) -> bool {
-        self.workers[worker].quarantined
+        self.workers.get(&worker).is_some_and(|w| w.quarantined)
     }
 
     /// Workers currently trusted with shards (non-quarantined).
     pub fn healthy_count(&self) -> usize {
-        let n = self.workers.iter().filter(|w| !w.quarantined).count();
+        let n = self.workers.values().filter(|w| !w.quarantined).count();
         n.max(1)
     }
 
-    /// The dispatch set for `round`: every non-quarantined worker, plus
-    /// any quarantined worker whose probe is due (its next probe is then
-    /// rescheduled). Falls back to the full pool if everyone is
-    /// quarantined. Sorted ascending; never empty.
+    /// The dispatch set for `round`: every non-quarantined member, plus
+    /// any quarantined member whose probe is due (its next probe is then
+    /// rescheduled). Falls back to the full membership if everyone is
+    /// quarantined. Sorted ascending by stable id; empty only when the
+    /// pool itself is empty.
     pub fn active_workers(&mut self, round: u64) -> Vec<usize> {
         self.round = self.round.max(round);
         let mut act: Vec<usize> = Vec::with_capacity(self.workers.len());
-        for (i, w) in self.workers.iter_mut().enumerate() {
+        for (&i, w) in self.workers.iter_mut() {
             if !w.quarantined {
                 act.push(i);
             } else if round >= w.next_probe {
@@ -291,7 +372,7 @@ impl CapacityRegistry {
             }
         }
         if act.is_empty() {
-            return (0..self.workers.len()).collect();
+            return self.worker_ids();
         }
         act
     }
@@ -301,7 +382,7 @@ impl CapacityRegistry {
     /// heard from in a while might have slowed, so the planner should
     /// assume less of it.
     pub fn estimate(&self, worker: usize) -> Option<WorkerEstimate> {
-        let w = &self.workers[worker];
+        let w = self.workers.get(&worker)?;
         if w.cmp.len() < self.cfg.min_samples || w.tr.len() < self.cfg.min_samples {
             return None;
         }
@@ -332,9 +413,11 @@ impl CapacityRegistry {
     /// their sum, and the links are assumed symmetric.
     pub fn fitted_profile(&self, base: &SystemProfile) -> SystemProfile {
         let mut p = *base;
-        let fits: Vec<WorkerEstimate> = (0..self.workers.len())
-            .filter(|&i| !self.workers[i].quarantined)
-            .filter_map(|i| self.estimate(i))
+        let fits: Vec<WorkerEstimate> = self
+            .workers
+            .iter()
+            .filter(|(_, w)| !w.quarantined)
+            .filter_map(|(&i, _)| self.estimate(i))
             .collect();
         if fits.is_empty() {
             return p;
@@ -355,7 +438,7 @@ impl CapacityRegistry {
         let med = |pick: fn(&WorkerState) -> &SlidingWindow| -> f64 {
             median(
                 self.workers
-                    .iter()
+                    .values()
                     .filter(|w| pick(w).len() >= self.cfg.min_samples)
                     .map(|w| pick(w).ewma())
                     .collect(),
@@ -364,7 +447,7 @@ impl CapacityRegistry {
         let med_cmp = med(|w| &w.cmp);
         let med_tr = med(|w| &w.tr);
         self.workers
-            .iter()
+            .values()
             .map(|w| {
                 let ratio = |win: &SlidingWindow, median: f64| -> f64 {
                     if win.len() >= self.cfg.min_samples && median > 0.0 {
@@ -384,9 +467,10 @@ impl CapacityRegistry {
     /// Telemetry dump (the `--telemetry` CLI flag and the adaptive
     /// experiment both emit this).
     pub fn to_json(&self) -> Json {
-        let workers: Vec<Json> = (0..self.workers.len())
-            .map(|i| {
-                let w = &self.workers[i];
+        let workers: Vec<Json> = self
+            .workers
+            .iter()
+            .map(|(&i, w)| {
                 let mut pairs = vec![
                     ("worker", Json::Num(i as f64)),
                     ("samples", Json::Num(w.cmp.len() as f64)),
@@ -421,6 +505,9 @@ impl CapacityRegistry {
                                 EventKind::QuarantineSlow => "quarantine-slow",
                                 EventKind::QuarantineFail => "quarantine-fail",
                                 EventKind::Reintegrate => "reintegrate",
+                                EventKind::Joined => "joined",
+                                EventKind::Evicted => "evicted",
+                                EventKind::Retired => "retired",
                             }
                             .to_string(),
                         ),
@@ -432,6 +519,7 @@ impl CapacityRegistry {
             .collect();
         Json::obj(vec![
             ("round", Json::Num(self.round as f64)),
+            ("members", Json::Num(self.workers.len() as f64)),
             ("healthy", Json::Num(self.healthy_count() as f64)),
             ("workers", Json::Arr(workers)),
             ("events", Json::Arr(events)),
@@ -609,6 +697,53 @@ mod tests {
         let speeds = reg.speeds();
         assert!((speeds[0].cmp - 1.0).abs() < 1e-6);
         assert!((speeds[2].cmp - 3.0).abs() < 0.01, "{:?}", speeds[2]);
+    }
+
+    #[test]
+    fn membership_admit_evict_retire() {
+        let cfg = TelemetryConfig::default();
+        // Elastic start: empty pool is legal, dispatch set is empty.
+        let mut reg = CapacityRegistry::new(0, cfg);
+        assert_eq!(reg.n_workers(), 0);
+        assert!(reg.active_workers(1).is_empty());
+        assert!(!reg.any_estimate());
+
+        reg.admit(7);
+        reg.admit(9);
+        reg.admit(7); // duplicate admission is a no-op (no second event)
+        assert_eq!(reg.worker_ids(), vec![7, 9]);
+        assert!(reg.contains(7) && !reg.contains(8));
+        assert_eq!(reg.active_workers(2), vec![7, 9]);
+        assert_eq!(
+            reg.events().iter().filter(|e| e.kind == EventKind::Joined).count(),
+            2
+        );
+
+        feed(&mut reg, 7, 2e-9, 16, 0);
+        assert_eq!(reg.samples_of(7), 16);
+        assert!(reg.any_estimate());
+
+        // Eviction removes the worker everywhere; stale records no-op.
+        reg.evict(9);
+        reg.evict(9); // double link-death event: graceful
+        assert_eq!(reg.worker_ids(), vec![7]);
+        reg.record_success(9, 1e9, 1e6, 1.0, 1e-3, 50);
+        reg.record_failure(9, 51);
+        assert_eq!(reg.samples_of(9), 0);
+        assert_eq!(reg.straggler_score(9), 1.0);
+        assert!(!reg.is_quarantined(9));
+        assert!(reg.estimate(9).is_none());
+        assert_eq!(
+            reg.events().iter().filter(|e| e.kind == EventKind::Evicted).count(),
+            1
+        );
+
+        reg.retire(7);
+        assert!(reg.worker_ids().is_empty());
+        assert!(reg
+            .events()
+            .iter()
+            .any(|e| e.kind == EventKind::Retired && e.worker == 7));
     }
 
     #[test]

@@ -82,6 +82,15 @@ impl Replanner {
         round >= self.last_attempt_round + self.cfg.every_rounds
     }
 
+    /// Make the next `due` check pass as early as the cadence allows:
+    /// membership changed (join/evict/retire), so the (n, k) split
+    /// solved for the old pool is stale. Resets the attempt clock to 0 —
+    /// for very young clusters (`round < every_rounds`) the attempt
+    /// still waits for the cadence floor.
+    pub fn force(&mut self) {
+        self.last_attempt_round = 0;
+    }
+
     /// Re-solve `k` for every distributed layer of `plan` against the
     /// registry's fitted profile and the current healthy pool size;
     /// mutate the plan in place iff the predicted improvement beats the

@@ -63,6 +63,16 @@ pub fn split_inproc(link: InprocLink) -> (InprocTx, InprocRx) {
 pub struct TcpTx(TcpLink);
 pub struct TcpRx(TcpLink);
 
+impl TcpRx {
+    /// Bound how long `recv` may block (see [`TcpLink::set_read_timeout`]).
+    /// The master arms this with the heartbeat deadline on joined workers
+    /// so a silent peer surfaces as link death instead of wedging the
+    /// reader thread.
+    pub fn set_read_timeout(&self, dur: Option<std::time::Duration>) -> Result<()> {
+        self.0.set_read_timeout(dur)
+    }
+}
+
 impl FrameTx for TcpTx {
     fn send(&mut self, frame: &[u8]) -> Result<()> {
         self.0.send(frame)

@@ -1,9 +1,12 @@
 //! TCP transport: 4-byte little-endian length prefix + payload per frame.
-//! Used by the `cocoi worker --listen` / `--workers tcp:` deployment mode,
-//! the closest analogue of the paper's WiFi testbed.
+//! Used by the `cocoi worker --listen/--connect` / `--workers tcp:` /
+//! `infer --listen` deployment modes, the closest analogue of the paper's
+//! WiFi testbed.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -34,6 +37,15 @@ impl TcpLink {
     pub fn into_stream(self) -> TcpStream {
         self.stream
     }
+
+    /// Bound how long `recv` may block waiting for the peer. A silent
+    /// peer then surfaces as `Err` (kind `WouldBlock`/`TimedOut`), which
+    /// reader threads treat as link death — the heartbeat deadline.
+    /// `None` restores indefinite blocking.
+    pub fn set_read_timeout(&self, dur: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(dur)?;
+        Ok(())
+    }
 }
 
 impl Link for TcpLink {
@@ -61,17 +73,114 @@ impl Link for TcpLink {
         let len = u32::from_le_bytes(len4);
         anyhow::ensure!(len <= MAX_FRAME, "peer announced oversized frame: {len}");
         let mut buf = vec![0u8; len as usize];
-        self.stream.read_exact(&mut buf)?;
-        Ok(Some(buf))
+        match self.stream.read_exact(&mut buf) {
+            Ok(()) => Ok(Some(buf)),
+            // EOF/reset *mid-frame* is still a peer disconnect (the peer
+            // died while writing) — classify it like the prefix-boundary
+            // case so the link-death path fires instead of surfacing a
+            // generic io::Error.
+            Err(e)
+                if e.kind() == std::io::ErrorKind::UnexpectedEof
+                    || e.kind() == std::io::ErrorKind::ConnectionReset =>
+            {
+                log::warn!("peer disconnected mid-frame ({len} byte frame): {e}");
+                Ok(None)
+            }
+            Err(e) => Err(e.into()),
+        }
     }
 }
 
-/// Accept loop helper: bind and yield one `TcpLink` per connection.
-pub fn serve<F: FnMut(TcpLink) -> Result<()>>(addr: &str, mut handler: F) -> Result<()> {
+/// Capped exponential backoff policy for [`connect_with_backoff`].
+#[derive(Clone, Copy, Debug)]
+pub struct Backoff {
+    /// First retry delay.
+    pub initial: Duration,
+    /// Delay cap.
+    pub max: Duration,
+    /// Multiplier applied after each failed attempt.
+    pub factor: f64,
+    /// Max connection attempts; `0` = retry forever.
+    pub retries: u32,
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Backoff {
+            initial: Duration::from_millis(200),
+            max: Duration::from_secs(5),
+            factor: 2.0,
+            retries: 0,
+        }
+    }
+}
+
+/// Dial `addr`, retrying with capped exponential backoff until connected
+/// (or until `backoff.retries` attempts are exhausted, when non-zero).
+pub fn connect_with_backoff(addr: &str, backoff: &Backoff) -> Result<TcpLink> {
+    let mut delay = backoff.initial;
+    let mut attempt = 0u32;
+    loop {
+        attempt += 1;
+        match TcpLink::connect(addr) {
+            Ok(link) => return Ok(link),
+            Err(e) => {
+                if backoff.retries != 0 && attempt >= backoff.retries {
+                    return Err(e.context(format!(
+                        "giving up on {addr} after {attempt} attempts"
+                    )));
+                }
+                log::warn!(
+                    "connect to {addr} failed (attempt {attempt}): {e:#}; retrying in {delay:?}"
+                );
+                std::thread::sleep(delay);
+                let next = delay.as_secs_f64() * backoff.factor;
+                delay = Duration::from_secs_f64(next.min(backoff.max.as_secs_f64()));
+            }
+        }
+    }
+}
+
+/// Accept loop helper: bind and serve one `TcpLink` per connection, each
+/// on its own thread. A handler error affects only that connection — it
+/// is logged, never propagated (a single bad peer must not kill the
+/// accept loop). Never returns except on a bind error.
+pub fn serve<F>(addr: &str, handler: F) -> Result<()>
+where
+    F: Fn(TcpLink) -> Result<()> + Send + Sync + 'static,
+{
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    log::info!("worker listening on {}", listener.local_addr()?);
+    serve_listener(listener, handler)
+}
+
+/// [`serve`] over an already-bound listener (tests bind port 0 first).
+pub fn serve_listener<F>(listener: TcpListener, handler: F) -> Result<()>
+where
+    F: Fn(TcpLink) -> Result<()> + Send + Sync + 'static,
+{
+    log::info!("listening on {}", listener.local_addr()?);
+    let handler = Arc::new(handler);
     for stream in listener.incoming() {
-        handler(TcpLink::from_stream(stream?))?;
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                log::warn!("accept failed: {e}");
+                continue;
+            }
+        };
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "?".into());
+        let handler = Arc::clone(&handler);
+        std::thread::Builder::new()
+            .name(format!("conn-{peer}"))
+            .spawn(move || {
+                if let Err(e) = handler(TcpLink::from_stream(stream)) {
+                    log::warn!("connection {peer} handler failed: {e:#}");
+                }
+            })
+            .map_err(|e| anyhow::anyhow!("spawning connection thread: {e}"))?;
     }
     Ok(())
 }
@@ -97,5 +206,104 @@ mod tests {
         assert_eq!(client.recv().unwrap().unwrap(), payload);
         drop(client);
         server.join().unwrap();
+    }
+
+    #[test]
+    fn eof_mid_frame_is_peer_disconnect() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let killer = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            // Announce a 64-byte frame, deliver 10 bytes, then die.
+            stream.write_all(&64u32.to_le_bytes()).unwrap();
+            stream.write_all(&[0u8; 10]).unwrap();
+            stream.flush().unwrap();
+        });
+        let mut client = TcpLink::connect(&addr.to_string()).unwrap();
+        killer.join().unwrap();
+        // Mid-frame EOF must classify as clean peer-disconnect, not Err.
+        assert!(client.recv().unwrap().is_none());
+    }
+
+    #[test]
+    fn read_timeout_surfaces_as_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let holder = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            // Hold the connection open, silently, long enough for the
+            // client's timeout to fire.
+            std::thread::sleep(Duration::from_millis(400));
+            drop(stream);
+        });
+        let mut client = TcpLink::connect(&addr.to_string()).unwrap();
+        client
+            .set_read_timeout(Some(Duration::from_millis(50)))
+            .unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(client.recv().is_err(), "silent peer must surface as Err");
+        assert!(t0.elapsed() < Duration::from_millis(350));
+        holder.join().unwrap();
+    }
+
+    #[test]
+    fn serve_survives_bad_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _srv = std::thread::spawn(move || {
+            serve_listener(listener, |mut link: TcpLink| {
+                let frame = link.recv()?.ok_or_else(|| anyhow::anyhow!("no frame"))?;
+                if frame == b"boom" {
+                    anyhow::bail!("handler exploded");
+                }
+                link.send(&frame)?;
+                Ok(())
+            })
+            .unwrap();
+        });
+        // First connection makes its handler fail...
+        let mut bad = TcpLink::connect(&addr.to_string()).unwrap();
+        bad.send(b"boom").unwrap();
+        // ...the listener must still serve subsequent connections.
+        for _ in 0..3 {
+            let mut good = TcpLink::connect(&addr.to_string()).unwrap();
+            good.send(b"ok").unwrap();
+            assert_eq!(good.recv().unwrap().unwrap(), b"ok");
+        }
+    }
+
+    #[test]
+    fn backoff_reconnects_after_rebind() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener); // nothing bound yet: first attempts must fail
+        let rebinder = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(150));
+            let listener = TcpListener::bind(addr).unwrap();
+            let (stream, _) = listener.accept().unwrap();
+            let mut link = TcpLink::from_stream(stream);
+            assert_eq!(link.recv().unwrap().unwrap(), b"hello");
+        });
+        let backoff = Backoff {
+            initial: Duration::from_millis(50),
+            max: Duration::from_millis(200),
+            factor: 2.0,
+            retries: 0,
+        };
+        let mut link = connect_with_backoff(&addr.to_string(), &backoff).unwrap();
+        link.send(b"hello").unwrap();
+        rebinder.join().unwrap();
+
+        // Bounded retries against a dead address give up with an error.
+        let dead = TcpListener::bind("127.0.0.1:0").unwrap();
+        let dead_addr = dead.local_addr().unwrap();
+        drop(dead);
+        let bounded = Backoff {
+            initial: Duration::from_millis(10),
+            max: Duration::from_millis(20),
+            factor: 2.0,
+            retries: 2,
+        };
+        assert!(connect_with_backoff(&dead_addr.to_string(), &bounded).is_err());
     }
 }

@@ -1,0 +1,411 @@
+//! Elastic-membership churn suite, over REAL TCP links: workers join a
+//! running cluster (`Master::listen` + `run_worker_announcing`), die
+//! mid-round, time out their heartbeats, and reconnect — and every
+//! in-flight request must still complete with the right answer.
+//!
+//! Pool geometry: the plan is sized for `planned_workers = 3` with
+//! `Fixed(3)` so tinyvgg's conv6 is type-1 under the paper profile
+//! (L_int ≈ 124.7 ms < 130.3 ms local — deterministic planner math);
+//! a 2-worker plan would distribute nothing and the churn paths under
+//! test would silently no-op.
+
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use cocoi::conv::{ConvSpec, Tensor};
+use cocoi::coordinator::messages::{FromWorker, ToWorker, PROTOCOL_VERSION};
+use cocoi::coordinator::{
+    run_worker_announcing, InferenceRequest, InferenceServer, JoinOptions, Master, MasterConfig,
+    SchemeKind, ServerConfig, WorkerConfig, WorkerExit, WorkerFaults,
+};
+use cocoi::model::graph::forward_local;
+use cocoi::model::{zoo, WeightStore};
+use cocoi::planner::SplitPolicy;
+use cocoi::runtime::{ConvProvider, FallbackProvider};
+use cocoi::telemetry::EventKind;
+use cocoi::transport::split::split_tcp;
+use cocoi::transport::tcp::{connect_with_backoff, Backoff, TcpLink};
+use cocoi::transport::Link;
+use cocoi::util::Rng;
+
+/// [`ConvProvider`] wrapper for churn tests: counts conv calls, signals
+/// the test thread on each one (the only externally observable "this
+/// worker was admitted and received a dispatch" event), and optionally
+/// stalls so a subtask stays in flight while the test severs the link.
+struct ProbeSpy {
+    inner: FallbackProvider,
+    calls: AtomicUsize,
+    signal: Mutex<mpsc::Sender<()>>,
+    stall: Duration,
+}
+
+impl ProbeSpy {
+    fn new(stall: Duration) -> (Arc<ProbeSpy>, mpsc::Receiver<()>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Arc::new(ProbeSpy {
+                inner: FallbackProvider::new(),
+                calls: AtomicUsize::new(0),
+                signal: Mutex::new(tx),
+                stall,
+            }),
+            rx,
+        )
+    }
+}
+
+impl ConvProvider for ProbeSpy {
+    fn conv(&self, spec: &ConvSpec, input: &Tensor, weights: &[f32]) -> Result<Tensor> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        let _ = self.signal.lock().unwrap().send(());
+        if !self.stall.is_zero() {
+            thread::sleep(self.stall);
+        }
+        self.inner.conv(spec, input, weights)
+    }
+
+    fn name(&self) -> &'static str {
+        "probe-spy"
+    }
+}
+
+/// Elastic master on an ephemeral port, wrapped in a serving front-end
+/// (the engine's event loop is what folds membership churn into the
+/// pool, so it must be running before anyone joins).
+fn elastic_server(scheme: SchemeKind, heartbeat: Duration) -> (InferenceServer, SocketAddr) {
+    let config = MasterConfig {
+        scheme,
+        policy: SplitPolicy::Fixed(3),
+        heartbeat,
+        ..Default::default()
+    };
+    let mut master =
+        Master::new_elastic("tinyvgg", config, 3, Arc::new(FallbackProvider::new())).unwrap();
+    let addr = master.listen("127.0.0.1:0").unwrap();
+    (InferenceServer::start(master, ServerConfig::default()), addr)
+}
+
+/// Spawn an announcing worker thread; returns its join handle plus a
+/// clone of the TCP stream so the test can sever the link mid-flight.
+fn spawn_member(
+    addr: SocketAddr,
+    name: &str,
+    provider: Arc<dyn ConvProvider>,
+) -> (thread::JoinHandle<Result<WorkerExit>>, TcpStream) {
+    let stream = TcpStream::connect(addr).unwrap();
+    let severable = stream.try_clone().unwrap();
+    let name = name.to_string();
+    let handle = thread::Builder::new()
+        .name(format!("member-{name}"))
+        .spawn(move || {
+            let (tx, rx) = split_tcp(stream)?;
+            run_worker_announcing(
+                Box::new(tx),
+                Box::new(rx),
+                WorkerConfig {
+                    id: 0, // reassigned from JoinAck
+                    provider,
+                    faults: WorkerFaults::none(),
+                    rng_seed: 0xBEEF,
+                    slots: 1,
+                },
+                &JoinOptions {
+                    name,
+                    model: String::new(),
+                },
+            )
+        })
+        .unwrap();
+    (handle, severable)
+}
+
+fn input_for(seed: u64) -> Tensor {
+    let model = zoo::model("tinyvgg").unwrap();
+    let mut t = Tensor::zeros(model.input.0, model.input.1, model.input.2);
+    Rng::new(seed).fill_uniform_f32(&mut t.data, -1.0, 1.0);
+    t
+}
+
+fn local_ref(input: &Tensor) -> Tensor {
+    let model = zoo::model("tinyvgg").unwrap();
+    let weights = WeightStore::generate(&model, 42).unwrap();
+    forward_local(&model, &weights, input).unwrap()
+}
+
+/// Worker ids of the master's membership events matching `pred`.
+fn members_with(master: &Master, pred: fn(&EventKind) -> bool) -> Vec<usize> {
+    master
+        .registry()
+        .events()
+        .iter()
+        .filter(|e| pred(&e.kind))
+        .map(|e| e.worker)
+        .collect()
+}
+
+const JOIN_WAIT: Duration = Duration::from_secs(30);
+
+/// A worker killed mid-round — link severed while it holds a dispatched
+/// subtask — must be evicted and its orphan re-dispatched: the request
+/// completes on the survivor with the right answer. Uncoded and MDS at
+/// n = k both have zero slack, so the re-dispatch is mandatory.
+#[test]
+fn killed_worker_mid_round_redispatches_and_completes() {
+    for scheme in [SchemeKind::Uncoded, SchemeKind::Mds] {
+        let (server, addr) = elastic_server(scheme, Duration::from_secs(10));
+
+        let (spy_a, probe_a) = ProbeSpy::new(Duration::ZERO);
+        let (survivor, _keep) = spawn_member(addr, "survivor", spy_a.clone());
+        probe_a.recv_timeout(JOIN_WAIT).expect("survivor never probed");
+
+        // The victim stalls 3 s in every conv, so its join probe pins
+        // its only executor slot while the request round below assigns
+        // it a subtask it will never answer.
+        let (spy_v, probe_v) = ProbeSpy::new(Duration::from_secs(3));
+        let (victim, sever) = spawn_member(addr, "victim", spy_v.clone());
+        probe_v.recv_timeout(JOIN_WAIT).expect("victim never probed");
+
+        // Both admitted (the probe only runs post-admission). The
+        // survivor's SECOND conv call is its shard of the request's
+        // distributed round — at that instant the victim's shard is
+        // dispatched too (frames go out in one synchronous loop), so
+        // severing now is guaranteed to orphan a victim-held subtask.
+        let input = input_for(31);
+        let want = local_ref(&input);
+        let handle = server.submit(InferenceRequest::new(input)).unwrap();
+        probe_a
+            .recv_timeout(JOIN_WAIT)
+            .expect("request round never reached the survivor");
+        sever.shutdown(Shutdown::Both).unwrap();
+
+        let (out, metrics) = handle.wait().unwrap();
+        let err = out.max_abs_diff(&want);
+        assert!(err < 2e-2, "{scheme:?}: churn output off local by {err}");
+        assert!(metrics.layers.iter().any(|l| l.distributed));
+        assert!(
+            metrics.redispatches() >= 1,
+            "{scheme:?}: the orphaned subtask must be re-dispatched"
+        );
+
+        let master = server.shutdown().unwrap();
+        assert_eq!(
+            members_with(&master, |k| matches!(k, EventKind::Joined)).len(),
+            2
+        );
+        assert!(!members_with(&master, |k| matches!(k, EventKind::Evicted)).is_empty());
+        assert_eq!(
+            master.registry().worker_ids().len(),
+            1,
+            "only the survivor remains"
+        );
+        let json = master.telemetry_json().to_string();
+        assert!(json.contains("members"), "membership missing from telemetry");
+        master.shutdown();
+        assert_eq!(survivor.join().unwrap().unwrap(), WorkerExit::Shutdown);
+        let _ = victim.join().unwrap(); // LinkClosed: it was severed
+    }
+}
+
+/// A worker that joins a RUNNING cluster is admitted, probed, and starts
+/// receiving real dispatches — while requests served before, during,
+/// and after the join all stay correct.
+#[test]
+fn late_joiner_is_admitted_and_receives_dispatches() {
+    let (server, addr) = elastic_server(SchemeKind::Mds, Duration::from_secs(10));
+
+    let (spy_a, probe_a) = ProbeSpy::new(Duration::ZERO);
+    let (founder, _keep_a) = spawn_member(addr, "founder", spy_a.clone());
+    probe_a.recv_timeout(JOIN_WAIT).expect("founder never probed");
+
+    // Solo service first: a pool of one carries a request alone.
+    let i0 = input_for(41);
+    let w0 = local_ref(&i0);
+    let (out, _) = server
+        .submit(InferenceRequest::new(i0))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(out.max_abs_diff(&w0) < 2e-2);
+
+    // Join a second worker into the running cluster, then keep serving.
+    let (spy_b, probe_b) = ProbeSpy::new(Duration::ZERO);
+    let (joiner, _keep_b) = spawn_member(addr, "late-joiner", spy_b.clone());
+    probe_b.recv_timeout(JOIN_WAIT).expect("late joiner never probed");
+    let probed = spy_b.calls.load(Ordering::SeqCst);
+
+    for seed in [42u64, 43, 44] {
+        let input = input_for(seed);
+        let want = local_ref(&input);
+        let (out, metrics) = server
+            .submit(InferenceRequest::new(input))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(out.max_abs_diff(&want) < 2e-2);
+        assert!(metrics.layers.iter().any(|l| l.distributed));
+    }
+    assert!(
+        spy_b.calls.load(Ordering::SeqCst) > probed,
+        "late joiner never received a post-join dispatch"
+    );
+
+    let master = server.shutdown().unwrap();
+    assert_eq!(
+        members_with(&master, |k| matches!(k, EventKind::Joined)),
+        vec![0, 1]
+    );
+    assert_eq!(master.registry().worker_ids(), vec![0, 1]);
+    assert!(
+        master.registry().samples_of(1) > 0,
+        "join probe must seed the joiner's capacity estimate"
+    );
+    master.shutdown();
+    assert_eq!(founder.join().unwrap().unwrap(), WorkerExit::Shutdown);
+    assert_eq!(joiner.join().unwrap().unwrap(), WorkerExit::Shutdown);
+}
+
+/// A peer that completes the join handshake and then goes silent — no
+/// heartbeats, no replies — must be evicted once the master's heartbeat
+/// read-deadline lapses.
+#[test]
+fn silent_peer_is_evicted_on_heartbeat_timeout() {
+    let heartbeat = Duration::from_millis(300);
+    let (server, addr) = elastic_server(SchemeKind::Uncoded, heartbeat);
+
+    // Manual handshake: Join -> JoinAck -> Ready -> silence.
+    let mut link = TcpLink::connect(&addr.to_string()).unwrap();
+    link.send(
+        &FromWorker::Join {
+            name: "mute".into(),
+            protocol: PROTOCOL_VERSION,
+            model: String::new(),
+        }
+        .encode(),
+    )
+    .unwrap();
+    let frame = link.recv().unwrap().expect("master closed during handshake");
+    match ToWorker::decode(&frame).unwrap() {
+        ToWorker::JoinAck {
+            worker_id,
+            heartbeat_ms,
+            ..
+        } => {
+            assert_eq!(worker_id, 0);
+            // The master asks for beats at a third of the deadline.
+            assert_eq!(u128::from(heartbeat_ms), heartbeat.as_millis() / 3);
+        }
+        other => panic!("expected JoinAck, got {other:?}"),
+    }
+    link.send(&FromWorker::Ready.encode()).unwrap();
+
+    // Never beat. The per-link read-timeout (== the heartbeat deadline)
+    // lapses, the reader emits LinkDown, and the engine evicts.
+    thread::sleep(heartbeat * 8);
+
+    let master = server.shutdown().unwrap();
+    assert_eq!(
+        members_with(&master, |k| matches!(k, EventKind::Joined)),
+        vec![0]
+    );
+    assert_eq!(
+        members_with(&master, |k| matches!(k, EventKind::Evicted)),
+        vec![0]
+    );
+    assert!(master.registry().worker_ids().is_empty());
+    master.shutdown();
+}
+
+/// A worker whose link drops dials back with capped exponential backoff,
+/// re-joins under a FRESH id (the old membership was already evicted),
+/// and serves requests again.
+#[test]
+fn reconnect_after_link_drop_rejoins_and_serves() {
+    let (server, addr) = elastic_server(SchemeKind::Uncoded, Duration::from_secs(10));
+
+    let (spy, probes) = ProbeSpy::new(Duration::ZERO);
+    let current: Arc<Mutex<Option<TcpStream>>> = Arc::new(Mutex::new(None));
+    let stash = current.clone();
+    let provider: Arc<dyn ConvProvider> = spy.clone();
+    let addr_s = addr.to_string();
+    // The same dial loop `cocoi worker --connect` runs.
+    let worker = thread::Builder::new()
+        .name("reconnector".into())
+        .spawn(move || -> Result<()> {
+            let backoff = Backoff {
+                initial: Duration::from_millis(20),
+                max: Duration::from_millis(200),
+                factor: 2.0,
+                retries: 50,
+            };
+            loop {
+                let link = connect_with_backoff(&addr_s, &backoff)?;
+                let stream = link.into_stream();
+                *stash.lock().unwrap() = Some(stream.try_clone()?);
+                let (tx, rx) = split_tcp(stream)?;
+                let exit = run_worker_announcing(
+                    Box::new(tx),
+                    Box::new(rx),
+                    WorkerConfig {
+                        id: 0,
+                        provider: provider.clone(),
+                        faults: WorkerFaults::none(),
+                        rng_seed: 0xFEED,
+                        slots: 1,
+                    },
+                    &JoinOptions {
+                        name: "phoenix".into(),
+                        model: String::new(),
+                    },
+                )?;
+                match exit {
+                    WorkerExit::Shutdown => return Ok(()),
+                    WorkerExit::LinkClosed => continue, // dial again
+                }
+            }
+        })
+        .unwrap();
+
+    // First membership admitted (its probe ran) — now cut the link.
+    probes.recv_timeout(JOIN_WAIT).expect("first join never probed");
+    current
+        .lock()
+        .unwrap()
+        .as_ref()
+        .unwrap()
+        .shutdown(Shutdown::Both)
+        .unwrap();
+
+    // Second membership: the reconnect loop re-joins under a new id and
+    // gets probed again.
+    probes
+        .recv_timeout(JOIN_WAIT)
+        .expect("never re-joined after the link drop");
+
+    let input = input_for(53);
+    let want = local_ref(&input);
+    let (out, _) = server
+        .submit(InferenceRequest::new(input))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(out.max_abs_diff(&want) < 2e-2);
+
+    let master = server.shutdown().unwrap();
+    assert_eq!(
+        members_with(&master, |k| matches!(k, EventKind::Joined)),
+        vec![0, 1]
+    );
+    assert_eq!(
+        members_with(&master, |k| matches!(k, EventKind::Evicted)),
+        vec![0]
+    );
+    assert!(!master.registry().contains(0));
+    assert!(master.registry().contains(1));
+    master.shutdown();
+    worker.join().unwrap().unwrap();
+}
