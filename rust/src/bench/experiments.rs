@@ -851,7 +851,7 @@ pub fn serving(scale: Scale) -> Result<()> {
             "pipelined+coal4",
             ServeKnobs {
                 coalesce: 4,
-                worker_slots: 1,
+                ..ServeKnobs::default()
             },
         ),
         (
@@ -859,6 +859,7 @@ pub fn serving(scale: Scale) -> Result<()> {
             ServeKnobs {
                 coalesce: 4,
                 worker_slots: 2,
+                ..ServeKnobs::default()
             },
         ),
     ];
@@ -955,6 +956,84 @@ pub fn serving(scale: Scale) -> Result<()> {
     }
     table.print();
 
+    // -- sweep 1b: watchdog hedging under a chronic straggler ---------
+    // Hedging is the reliability layer's latency mechanism. The regime
+    // where it is the *only* defense: the uncoded method (needs every
+    // shard) with one worker computing 3x slow — every round waits on
+    // the straggler's shard unless the fitted-quantile backup races
+    // past it. HARD gate: hedged p95 <= unhedged p95 at every swept
+    // load, same seed per point.
+    let chronic = Scenario::FailuresPlusStraggler {
+        n_f: 0,
+        slowdown: 3.0,
+    };
+    let chronic_service = {
+        let mut rng = Rng::new(0x5E22);
+        let r = simulate_serving_open(
+            &model, &p, n, MethodSim::Uncoded, chronic,
+            ServeSimMode::Barrier, 1e-9, 16, None, &mut rng,
+        )?;
+        r.latencies.iter().sum::<f64>() / r.latencies.len() as f64
+    };
+    let mut hedge_gate_ok = true;
+    let mut table = Table::new(
+        &format!(
+            "Serving — watchdog hedging: uncoded under {} ({arrivals} Poisson \
+             arrivals per point)",
+            chronic.label()
+        ),
+        &["offered load", "mode", "p50", "p95", "p99", "mean"],
+    );
+    for &rho in &rhos {
+        let rate = rho / chronic_service;
+        let mut plain_p95 = f64::NAN;
+        for (label, q) in [("pipelined", 0.0), ("pipelined+hedge.95", 0.95)] {
+            let mut rng = Rng::new(0x5EE5 ^ (rho * 100.0) as u64);
+            let r = simulate_serving_open_with(
+                &model,
+                &p,
+                n,
+                MethodSim::Uncoded,
+                chronic,
+                ServeSimMode::Pipelined,
+                rate,
+                arrivals,
+                None,
+                ServeKnobs {
+                    hedge_quantile: q,
+                    ..ServeKnobs::default()
+                },
+                &mut rng,
+            )?;
+            if q == 0.0 {
+                plain_p95 = r.p95();
+            } else if !(r.p95() <= plain_p95 * (1.0 + 1e-9)) {
+                hedge_gate_ok = false;
+            }
+            table.row(vec![
+                format!("{rho:.2}"),
+                label.to_string(),
+                fmt_secs(r.p50()),
+                fmt_secs(r.p95()),
+                fmt_secs(r.p99()),
+                fmt_secs(r.mean()),
+            ]);
+            json.set(
+                &format!("straggler{:02.0}_{label}", rho * 100.0),
+                Json::obj(vec![
+                    ("rate_rps", Json::Num(rate)),
+                    ("hedge_quantile", Json::Num(q)),
+                    ("p50_s", Json::Num(r.p50())),
+                    ("p95_s", Json::Num(r.p95())),
+                    ("p99_s", Json::Num(r.p99())),
+                    ("mean_s", Json::Num(r.mean())),
+                    ("served", Json::Num(r.latencies.len() as f64)),
+                ]),
+            );
+        }
+    }
+    table.print();
+
     // -- sweep 2: deadline shedding in overload -----------------------
     let deadline = 3.0 * service;
     let rate = 1.2 / service; // past the barrier's capacity: sheds must kick in
@@ -994,13 +1073,16 @@ pub fn serving(scale: Scale) -> Result<()> {
 
     json.set("gate_pipelined_p95_le_barrier", Json::Bool(gate_ok));
     json.set("gate_coalesced_p95_le_uncoalesced", Json::Bool(coal_gate_ok));
+    json.set("gate_hedged_p95_le_unhedged", Json::Bool(hedge_gate_ok));
     let path = json.write()?;
     println!(
         "(open-loop Poisson arrivals through the serving stack; gates: pipelined \
-         p95 <= barrier p95 — {} — and coalesced p95 <= uncoalesced pipelined \
-         p95 — {} — at every swept load) results -> {}",
+         p95 <= barrier p95 — {} — coalesced p95 <= uncoalesced pipelined \
+         p95 — {} — and hedged p95 <= unhedged p95 under the chronic \
+         straggler — {} — at every swept load) results -> {}",
         if gate_ok { "PASS" } else { "FAIL" },
         if coal_gate_ok { "PASS" } else { "FAIL" },
+        if hedge_gate_ok { "PASS" } else { "FAIL" },
         path.display()
     );
     anyhow::ensure!(
@@ -1010,6 +1092,10 @@ pub fn serving(scale: Scale) -> Result<()> {
     anyhow::ensure!(
         coal_gate_ok,
         "coalesced serving lost to the uncoalesced pipelined engine on p95"
+    );
+    anyhow::ensure!(
+        hedge_gate_ok,
+        "hedged dispatch lost to the unhedged engine on p95 under the chronic straggler"
     );
     Ok(())
 }

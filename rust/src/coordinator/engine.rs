@@ -37,7 +37,22 @@
 //!   per-worker queues (see `coordinator::worker`) drop them and free
 //!   capacity for the next wave;
 //! * `maybe_replan` runs after every finished round, so the adaptive
-//!   plan tracks the *live* arrival stream rather than batch boundaries.
+//!   plan tracks the *live* arrival stream rather than batch boundaries
+//!   — and runs again the moment a worker joins, so a request admitted
+//!   against a small pool picks the joiner up at its next layer;
+//! * a **reliability layer** guarantees every admitted request
+//!   completes: a watchdog folded into the event wait *hedges* subtasks
+//!   that exceed their holder's fitted completion quantile
+//!   (`MasterConfig::hedge_quantile`; first reply wins, the loser is
+//!   cancelled), failure re-dispatches draw from a bounded per-round
+//!   budget (`MasterConfig::retry_budget`) with per-worker exponential
+//!   backoff instead of erroring on a storm, and when the pool cannot
+//!   deliver the missing shards at all — collapse to zero mid-round,
+//!   budget exhausted, deadline about to expire — the master computes
+//!   them *locally* through its own provider and finishes the decode
+//!   (`MasterConfig::local_fallback`; conv linearity makes an encoded
+//!   payload convolve to the matching encoded output, so this works for
+//!   every scheme).
 //!
 //! `Master::infer_batch` is a thin wrapper: it seeds the admission queue
 //! with the whole batch and drains it ([`StreamOptions::draining`]), so
@@ -45,13 +60,15 @@
 
 use std::cmp::Ordering;
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap};
-use std::time::Instant;
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::coding;
 use crate::conv::Tensor;
 use crate::model::{Node, Op};
+use crate::telemetry::EventKind;
 
 use super::master::{assemble_output, Master, MasterEvent, PreparedRound};
 use super::messages::{FromWorker, ToWorker};
@@ -141,10 +158,14 @@ struct RequestState {
     node_idx: usize,
     metrics: InferenceMetrics,
     t_start: Instant,
+    /// Carried past admission so in-flight rounds can clamp their hedge
+    /// and fallback timers: a tight-deadline request speculates *early*
+    /// instead of being served late.
+    deadline: Option<Instant>,
 }
 
 impl RequestState {
-    fn new(input: Tensor) -> RequestState {
+    fn new(input: Tensor, deadline: Option<Instant>) -> RequestState {
         let mut values = BTreeMap::new();
         values.insert("input".to_string(), input);
         RequestState {
@@ -152,6 +173,7 @@ impl RequestState {
             node_idx: 0,
             metrics: InferenceMetrics::default(),
             t_start: Instant::now(),
+            deadline,
         }
     }
 }
@@ -178,13 +200,121 @@ struct ActiveRound {
     parts: Vec<ActivePart>,
     received: Vec<usize>,
     outstanding: Vec<usize>,
-    /// task id -> worker currently holding it (for cancel accounting).
+    /// task id -> *primary* worker holding it (for cancel accounting).
+    /// A hedged task has additional live copies in `extra`.
     assigned: Vec<usize>,
+    /// task id -> extra hedge holders racing the primary. Absent for the
+    /// (overwhelmingly common) unhedged task.
+    extra: HashMap<usize, Vec<usize>>,
+    /// Extra dispatches this round has consumed — failure re-dispatches,
+    /// orphan recoveries, and hedges — against the per-round budget
+    /// `retry_budget * frames.len()`. Keyed on the round itself, not on
+    /// part 0's metrics: with coalesced rounds every part's
+    /// `lm.redispatches` counter moves per event, so metrics are the
+    /// wrong place to meter a budget.
+    spent_retries: usize,
+    /// Earliest deadline among the coalesced requests: hedge/fallback
+    /// timers never fire later than this.
+    deadline: Option<Instant>,
     /// The round's dispatch set (re-dispatch stays inside it).
     targets: Vec<usize>,
     t_dispatch: Instant,
     /// Master-local seconds already spent (remainder convs, all parts).
     t_local: f64,
+}
+
+impl ActiveRound {
+    /// Does `wid` hold a live copy of task `t`?
+    fn holds(&self, t: usize, wid: usize) -> bool {
+        self.assigned[t] == wid || self.extra.get(&t).is_some_and(|v| v.contains(&wid))
+    }
+
+    /// Remove `wid` from task `t`'s holder set, promoting a hedge copy
+    /// to primary when the primary is the one lost. Returns `true` when
+    /// NO live copy of `t` remains — the task is genuinely orphaned and
+    /// needs recovery.
+    fn drop_holder(&mut self, t: usize, wid: usize) -> bool {
+        if self.assigned[t] != wid {
+            if let Some(v) = self.extra.get_mut(&t) {
+                v.retain(|&w| w != wid);
+                if v.is_empty() {
+                    self.extra.remove(&t);
+                }
+            }
+            return false;
+        }
+        match self.extra.get_mut(&t).and_then(|v| v.pop()) {
+            Some(promoted) => {
+                if self.extra.get(&t).is_some_and(|v| v.is_empty()) {
+                    self.extra.remove(&t);
+                }
+                self.assigned[t] = promoted;
+                false
+            }
+            None => true,
+        }
+    }
+
+    /// Resolve a hedge race: `winner` delivered task `t`. Clears the
+    /// holder bookkeeping and returns the losing holders (possibly
+    /// empty) so the caller can cancel them.
+    fn resolve_race(&mut self, t: usize, winner: usize) -> Vec<usize> {
+        let mut losers = self.extra.remove(&t).unwrap_or_default();
+        if self.assigned[t] != winner {
+            losers.push(self.assigned[t]);
+            self.assigned[t] = winner;
+        }
+        losers.retain(|&w| w != winner);
+        losers
+    }
+
+    /// Every live holder of task `t`, clearing the hedge bookkeeping
+    /// (used when the master takes the task over locally).
+    fn take_holders(&mut self, t: usize) -> Vec<usize> {
+        let mut holders = self.extra.remove(&t).unwrap_or_default();
+        if !holders.contains(&self.assigned[t]) {
+            holders.push(self.assigned[t]);
+        }
+        holders
+    }
+
+    /// Is another extra dispatch (re-dispatch or hedge) within budget?
+    fn retry_allowed(&self, budget_per_task: usize) -> bool {
+        self.spent_retries < budget_per_task * self.pr.frames.len()
+    }
+}
+
+/// Per-worker re-dispatch backoff: each strike (a `Failed` reply, or a
+/// hedge fired against the worker) doubles the period during which the
+/// recovery paths prefer other workers. A successful reply clears it.
+/// Dispatch *placement* of fresh rounds is unaffected — redundancy
+/// already covers first-dispatch risk; backoff only keeps retries from
+/// hammering a worker that just demonstrated trouble.
+#[derive(Clone, Copy, Debug, Default)]
+struct WorkerBackoff {
+    strikes: u32,
+    eligible_at: Option<Instant>,
+}
+
+/// Base delay of the first strike; doubles per strike up to
+/// [`BACKOFF_CAP`].
+const BACKOFF_BASE: Duration = Duration::from_millis(100);
+const BACKOFF_CAP: Duration = Duration::from_secs(10);
+
+fn note_strike(backoff: &mut BTreeMap<usize, WorkerBackoff>, wid: usize, now: Instant) {
+    let b = backoff.entry(wid).or_default();
+    b.strikes = (b.strikes + 1).min(16);
+    let delay = BACKOFF_BASE
+        .saturating_mul(1u32 << (b.strikes - 1).min(10))
+        .min(BACKOFF_CAP);
+    b.eligible_at = Some(now + delay);
+}
+
+fn is_eligible(backoff: &BTreeMap<usize, WorkerBackoff>, wid: usize, now: Instant) -> bool {
+    backoff
+        .get(&wid)
+        .and_then(|b| b.eligible_at)
+        .map_or(true, |t| t <= now)
 }
 
 /// Least-loaded worker among `candidates`, lowest id on ties; avoids
@@ -209,6 +339,28 @@ fn pick_worker(
         }
     }
     best_w
+}
+
+/// [`pick_worker`] restricted to workers whose backoff has lapsed; when
+/// every candidate is backing off, recovery still has to land somewhere,
+/// so the filter degrades to the plain least-loaded pick.
+fn pick_recovery_target(
+    load: &BTreeMap<usize, usize>,
+    backoff: &BTreeMap<usize, WorkerBackoff>,
+    candidates: &[usize],
+    avoid: Option<usize>,
+    now: Instant,
+) -> usize {
+    let eligible: Vec<usize> = candidates
+        .iter()
+        .copied()
+        .filter(|&w| is_eligible(backoff, w, now))
+        .collect();
+    if eligible.is_empty() {
+        pick_worker(load, candidates, avoid)
+    } else {
+        pick_worker(load, &eligible, avoid)
+    }
 }
 
 /// Collects the batch wrapper's outcomes by submission index.
@@ -317,7 +469,12 @@ impl Master {
         let mut active: BTreeMap<u64, RequestState> = BTreeMap::new();
         let mut pending: BinaryHeap<Pending> = seed.into_iter().map(Pending::new).collect();
         let mut staged: Vec<u64> = Vec::new();
+        let mut backoff: BTreeMap<usize, WorkerBackoff> = BTreeMap::new();
         let mut draining = opts.draining;
+        // The reliability watchdog runs whenever either of its two
+        // mechanisms is on; with both off the loop keeps the original
+        // fail-fast recv_timeout behavior.
+        let watchdog = self.config.hedge_quantile > 0.0 || self.config.local_fallback;
 
         loop {
             // -- admission: start the most urgent pending requests ----
@@ -329,7 +486,7 @@ impl Master {
                     sink.deliver(req.id, Err(err));
                     continue;
                 }
-                active.insert(req.id, RequestState::new(req.input));
+                active.insert(req.id, RequestState::new(req.input, req.deadline));
                 self.advance_request(req.id, &nodes, &mut active, &mut staged, sink)?;
             }
 
@@ -346,18 +503,36 @@ impl Master {
                 return Ok(());
             }
 
-            // Liveness: a round with nothing outstanding can never decode.
-            for ar in rounds.values() {
-                if ar.outstanding.is_empty() && !ar.parts[0].decoder.ready() {
-                    bail!(
-                        "layer {} (requests {:?}): no outstanding subtasks but decoder \
-                         needs more (received {} of {})",
-                        ar.parts[0].lm.node_id,
-                        ar.parts.iter().map(|p| p.request).collect::<Vec<_>>(),
-                        ar.received.len(),
-                        ar.pr.scheme.min_completions()
-                    );
+            // Liveness: a round with nothing outstanding can never
+            // decode on its own. The local fallback completes it on the
+            // master (pool collapsed / retries exhausted); with the
+            // fallback off this is still the old fail-fast diagnosis.
+            let stuck: Vec<u64> = rounds
+                .iter()
+                .filter(|(_, ar)| ar.outstanding.is_empty() && !ar.parts[0].decoder.ready())
+                .map(|(&r, _)| r)
+                .collect();
+            if !stuck.is_empty() {
+                for r in stuck {
+                    let mut ar = rounds.remove(&r).unwrap();
+                    if !self.config.local_fallback {
+                        bail!(
+                            "layer {} (requests {:?}): no outstanding subtasks but decoder \
+                             needs more (received {} of {})",
+                            ar.parts[0].lm.node_id,
+                            ar.parts.iter().map(|p| p.request).collect::<Vec<_>>(),
+                            ar.received.len(),
+                            ar.pr.scheme.min_completions()
+                        );
+                    }
+                    self.fallback_complete(&mut ar)?;
+                    self.finish_round(ar, &nodes, &mut active, &mut staged, sink)?;
+                    self.maybe_replan();
                 }
+                // Rescued rounds staged their next layers: restart the
+                // iteration so they flush (and the drain-exit check
+                // re-runs) before blocking.
+                continue;
             }
 
             // -- block for the next event -----------------------------
@@ -365,30 +540,27 @@ impl Master {
             // (without a wedge timeout) for a submission, the drain
             // signal, or a membership event. Requests may still be
             // staged here — an empty (or fully-retiring) pool parks
-            // them until a worker joins.
+            // them until a worker joins. With work in flight the wait
+            // is bounded by the watchdog's next hedge/fallback timer; a
+            // lapse wakes the watchdog rather than killing the stream.
             let ev = if rounds.is_empty() {
-                self.events.recv().context("master event channel closed")?
+                Some(self.events.recv().context("master event channel closed")?)
+            } else if !watchdog {
+                Some(
+                    self.events
+                        .recv_timeout(self.config.recv_timeout)
+                        .context("pipelined engine: timed out waiting for workers")?,
+                )
             } else {
-                self.events
-                    .recv_timeout(self.config.recv_timeout)
-                    .context("pipelined engine: timed out waiting for workers")?
+                match self.events.recv_timeout(self.watchdog_wait(&rounds)) {
+                    Ok(ev) => Some(ev),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        bail!("master event channel closed")
+                    }
+                }
             };
-            self.on_event(
-                ev,
-                &mut draining,
-                &nodes,
-                &mut pending,
-                &mut active,
-                &mut rounds,
-                &mut worker_load,
-                &mut staged,
-                sink,
-            )?;
-            // Opportunistically drain whatever else is already queued
-            // before the next flush: replies/submissions that landed
-            // together stage together, which is what lets their rounds
-            // coalesce.
-            while let Ok(ev) = self.events.try_recv() {
+            if let Some(ev) = ev {
                 self.on_event(
                     ev,
                     &mut draining,
@@ -397,6 +569,39 @@ impl Master {
                     &mut active,
                     &mut rounds,
                     &mut worker_load,
+                    &mut backoff,
+                    &mut staged,
+                    sink,
+                )?;
+                // Opportunistically drain whatever else is already queued
+                // before the next flush: replies/submissions that landed
+                // together stage together, which is what lets their rounds
+                // coalesce.
+                while let Ok(ev) = self.events.try_recv() {
+                    self.on_event(
+                        ev,
+                        &mut draining,
+                        &nodes,
+                        &mut pending,
+                        &mut active,
+                        &mut rounds,
+                        &mut worker_load,
+                        &mut backoff,
+                        &mut staged,
+                        sink,
+                    )?;
+                }
+            }
+            // The watchdog runs on every wake — timer lapse or not:
+            // hedge overdue subtasks, locally complete any past their
+            // fallback point.
+            if watchdog && !rounds.is_empty() {
+                self.run_watchdog(
+                    &nodes,
+                    &mut active,
+                    &mut rounds,
+                    &mut worker_load,
+                    &mut backoff,
                     &mut staged,
                     sink,
                 )?;
@@ -426,6 +631,7 @@ impl Master {
         active: &mut BTreeMap<u64, RequestState>,
         rounds: &mut HashMap<u64, ActiveRound>,
         worker_load: &mut BTreeMap<usize, usize>,
+        backoff: &mut BTreeMap<usize, WorkerBackoff>,
         staged: &mut Vec<u64>,
         sink: &mut dyn EngineSink,
     ) -> Result<()> {
@@ -446,6 +652,11 @@ impl Master {
             MasterEvent::Joined { id, name, tx } => {
                 self.admit_worker(id, name, tx);
                 worker_load.insert(id, 0);
+                // A mid-request joiner must be visible at the *next
+                // layer boundary*, not just the next request:
+                // `admit_worker` forced the replanner, so run the
+                // replan now instead of waiting for a finished round.
+                self.maybe_replan();
                 // Staged requests parked on an empty pool flush on the
                 // next loop iteration now that a target exists.
                 self.probe_worker(id, worker_load)
@@ -455,7 +666,8 @@ impl Master {
                     return Ok(()); // double-fire: already evicted
                 }
                 worker_load.remove(&wid);
-                self.redispatch_orphans(wid, rounds, worker_load)
+                backoff.remove(&wid);
+                self.redispatch_orphans(wid, rounds, worker_load, backoff)
             }
             MasterEvent::Reply(wid, msg, arrival) => self.handle_reply(
                 wid,
@@ -465,6 +677,7 @@ impl Master {
                 active,
                 rounds,
                 worker_load,
+                backoff,
                 staged,
                 sink,
             ),
@@ -503,30 +716,49 @@ impl Master {
         Ok(())
     }
 
-    /// A member died mid-flight: every outstanding subtask it held is
-    /// orphaned. Re-dispatch each one inside its round's (shrunken)
+    /// A member died mid-flight: every outstanding subtask copy it held
+    /// is lost. A task whose *hedge* copy survives loses nothing; a task
+    /// with no copy left is re-dispatched inside its round's (shrunken)
     /// dispatch set, exactly like a `Failed` reply — the round decodes
     /// from whichever k subtasks land first, so churn costs latency, not
-    /// correctness.
+    /// correctness. When the set is empty or the retry budget is spent,
+    /// the task is handed to the master-local fallback instead of
+    /// failing the request.
     fn redispatch_orphans(
         &mut self,
         wid: usize,
         rounds: &mut HashMap<u64, ActiveRound>,
         worker_load: &mut BTreeMap<usize, usize>,
+        backoff: &mut BTreeMap<usize, WorkerBackoff>,
     ) -> Result<()> {
+        let now = Instant::now();
+        // Recovery placement draws on the CURRENT live pool, not the
+        // round's original dispatch set: a worker that joined after the
+        // round went out is a perfectly good home for an orphan.
+        let pool = self.dispatch_targets();
         for (&round, ar) in rounds.iter_mut() {
             ar.targets.retain(|&w| w != wid);
-            let orphaned: Vec<usize> = ar
+            let held: Vec<usize> = ar
                 .outstanding
                 .iter()
                 .copied()
-                .filter(|&t| ar.assigned[t] == wid)
+                .filter(|&t| ar.holds(t, wid))
                 .collect();
+            if held.is_empty() {
+                continue;
+            }
+            let mut orphaned: Vec<usize> = Vec::new();
+            for &t in &held {
+                if ar.drop_holder(t, wid) {
+                    orphaned.push(t);
+                }
+                // else: a hedge copy survives the eviction — the race
+                // simply lost one contestant.
+            }
             if orphaned.is_empty() {
                 continue;
             }
-            let assigned = &ar.assigned;
-            ar.outstanding.retain(|&t| assigned[t] != wid);
+            ar.outstanding.retain(|t| !orphaned.contains(t));
             for p in &mut ar.parts {
                 p.lm.failures += orphaned.len();
             }
@@ -538,13 +770,30 @@ impl Master {
                 {
                     continue;
                 }
-                anyhow::ensure!(
-                    !ar.targets.is_empty(),
-                    "layer {} (round {round}): worker {wid} died and no live workers \
-                     remain to take over its subtasks",
-                    ar.parts[0].lm.node_id
-                );
-                let target = pick_worker(worker_load, &ar.targets, None);
+                if pool.is_empty() || !ar.retry_allowed(self.config.retry_budget) {
+                    if self.config.local_fallback {
+                        // Leave the task un-redispatched: the liveness
+                        // sweep (or the per-task watchdog for the rest
+                        // of the round) completes the decode locally.
+                        log::warn!(
+                            "pipeline: task {t} of round {round} orphaned by dead worker \
+                             {wid} is unrecoverable on the pool; deferring to the \
+                             master-local fallback"
+                        );
+                        continue;
+                    }
+                    anyhow::ensure!(
+                        !pool.is_empty(),
+                        "layer {} (round {round}): worker {wid} died and no live workers \
+                         remain to take over its subtasks",
+                        ar.parts[0].lm.node_id
+                    );
+                    bail!(
+                        "layer {} (round {round}): re-dispatch storm; giving up",
+                        ar.parts[0].lm.node_id
+                    );
+                }
+                let target = pick_recovery_target(worker_load, backoff, &pool, None, now);
                 if let Some(rt) = self.round_log.get_mut(&round) {
                     rt.dispatched_at[t] = Instant::now();
                 }
@@ -552,6 +801,7 @@ impl Master {
                 *worker_load.entry(target).or_insert(0) += 1;
                 ar.assigned[t] = target;
                 ar.outstanding.push(t);
+                ar.spent_retries += 1;
                 for p in &mut ar.parts {
                     p.lm.redispatches += 1;
                 }
@@ -576,6 +826,7 @@ impl Master {
         active: &mut BTreeMap<u64, RequestState>,
         rounds: &mut HashMap<u64, ActiveRound>,
         worker_load: &mut BTreeMap<usize, usize>,
+        backoff: &mut BTreeMap<usize, WorkerBackoff>,
         staged: &mut Vec<u64>,
         sink: &mut dyn EngineSink,
     ) -> Result<()> {
@@ -611,11 +862,31 @@ impl Master {
                 // batched reply's exec_secs normalizes to the same
                 // per-FLOP sample a single-request conv would yield.
                 let wp = self.record_output(wid, round, task_id, arrival, exec_secs);
+                // A delivered subtask clears the worker's retry backoff.
+                backoff.remove(&wid);
                 let ready = {
                     let Some(ar) = rounds.get_mut(&round) else {
                         return Ok(()); // stale: round decoded + cancelled earlier
                     };
+                    if ar.received.contains(&task_id) || !ar.outstanding.contains(&task_id) {
+                        // A hedge race (or a master-local fallback) for
+                        // this task already resolved: the telemetry
+                        // above is the reply's whole value.
+                        for p in &mut ar.parts {
+                            p.lm.stale_results += 1;
+                        }
+                        return Ok(());
+                    }
                     ar.outstanding.retain(|&t| t != task_id);
+                    // Resolve the hedge race: cancel each losing holder
+                    // unless it still holds other work of this round
+                    // (Cancel is round-granular per worker).
+                    for loser in ar.resolve_race(task_id, wid) {
+                        let busy = ar.outstanding.iter().any(|&t| ar.holds(t, loser));
+                        if !busy {
+                            self.send_to(loser, &ToWorker::Cancel { round }.encode());
+                        }
+                    }
                     let n_parts = ar.parts.len();
                     if let Some(wp) = wp {
                         // Attribute the batched subtask's wall time
@@ -671,10 +942,15 @@ impl Master {
             }
             FromWorker::Skipped { round, task_id } => {
                 // Normally stale by construction (Cancel is only sent
-                // after a round decoded). Defensively unblock the round
-                // if one ever arrives live.
+                // after a round decoded or a hedge race resolved).
+                // Defensively unblock the round if one ever arrives
+                // live — holder-aware, so a skip from a hedge loser
+                // never drops a task whose primary copy is still out.
                 if let Some(ar) = rounds.get_mut(&round) {
-                    ar.outstanding.retain(|&t| t != task_id as usize);
+                    let t = task_id as usize;
+                    if ar.outstanding.contains(&t) && ar.drop_holder(t, wid) {
+                        ar.outstanding.retain(|&x| x != t);
+                    }
                 }
             }
             FromWorker::Failed { round, task_id } => {
@@ -682,12 +958,21 @@ impl Master {
                 // Symmetric with record_output: only rounds this master
                 // still tracks count toward failure streaks.
                 self.record_failed(wid, round);
+                note_strike(backoff, wid, arrival);
                 let Some(ar) = rounds.get_mut(&round) else {
                     return Ok(());
                 };
+                if ar.received.contains(&task_id) || !ar.outstanding.contains(&task_id) {
+                    return Ok(()); // late loser of an already-resolved race
+                }
                 // Every coalesced request experienced this failure.
                 for p in &mut ar.parts {
                     p.lm.failures += 1;
+                }
+                // Drop only this holder: a hedged copy may still be
+                // racing, in which case nothing needs re-dispatching.
+                if !ar.drop_holder(task_id, wid) {
+                    return Ok(());
                 }
                 ar.outstanding.retain(|&t| t != task_id);
                 if ar
@@ -695,19 +980,34 @@ impl Master {
                     .scheme
                     .needs_redispatch(task_id, &ar.received, &ar.outstanding)
                 {
-                    if ar.parts[0].lm.redispatches > 4 * ar.pr.frames.len() {
+                    // Current live pool, not the round's original target
+                    // set: mid-round joiners are valid recovery homes.
+                    let pool = self.dispatch_targets();
+                    if pool.is_empty() || !ar.retry_allowed(self.config.retry_budget) {
+                        if self.config.local_fallback {
+                            // Escalate to the master instead of failing
+                            // the request: the liveness sweep or the
+                            // watchdog completes the decode locally.
+                            log::warn!(
+                                "pipeline: task {task_id} of round {round} failed on \
+                                 worker {wid} and is unrecoverable on the pool; \
+                                 deferring to the master-local fallback"
+                            );
+                            return Ok(());
+                        }
+                        anyhow::ensure!(
+                            !pool.is_empty(),
+                            "layer {}: task {task_id} failed and no live workers remain \
+                             in the round's dispatch set",
+                            ar.parts[0].lm.node_id
+                        );
                         bail!(
                             "layer {}: re-dispatch storm; giving up",
                             ar.parts[0].lm.node_id
                         );
                     }
-                    anyhow::ensure!(
-                        !ar.targets.is_empty(),
-                        "layer {}: task {task_id} failed and no live workers remain \
-                         in the round's dispatch set",
-                        ar.parts[0].lm.node_id
-                    );
-                    let target = pick_worker(worker_load, &ar.targets, Some(wid));
+                    let target =
+                        pick_recovery_target(worker_load, backoff, &pool, Some(wid), arrival);
                     if let Some(rt) = self.round_log.get_mut(&round) {
                         rt.dispatched_at[task_id] = Instant::now();
                     }
@@ -715,6 +1015,7 @@ impl Master {
                     *worker_load.entry(target).or_insert(0) += 1;
                     ar.assigned[task_id] = target;
                     ar.outstanding.push(task_id);
+                    ar.spent_retries += 1;
                     for p in &mut ar.parts {
                         p.lm.redispatches += 1;
                     }
@@ -898,6 +1199,12 @@ impl Master {
             }
             let t_local = t0.elapsed().as_secs_f64();
             let outstanding: Vec<usize> = (0..pr.frames.len()).collect();
+            // Earliest deadline across the coalesced requests clamps the
+            // round's hedge/fallback timers.
+            let deadline = ids
+                .iter()
+                .filter_map(|rid| active.get(rid).and_then(|st| st.deadline))
+                .min();
             rounds.insert(
                 pr.round,
                 ActiveRound {
@@ -907,6 +1214,9 @@ impl Master {
                     received: Vec::new(),
                     outstanding,
                     assigned,
+                    extra: HashMap::new(),
+                    spent_retries: 0,
+                    deadline,
                     targets,
                     t_dispatch,
                     t_local,
@@ -942,6 +1252,14 @@ impl Master {
                     // Evicted holders are a no-op inside send_to.
                     self.send_to(w, &frame);
                 }
+                // Hedge copies still racing are stragglers too.
+                if let Some(extras) = ar.extra.get(&t) {
+                    for &w in extras {
+                        if notified.insert(w) {
+                            self.send_to(w, &frame);
+                        }
+                    }
+                }
             }
             for p in &mut ar.parts {
                 p.lm.cancelled += ar.outstanding.len();
@@ -975,6 +1293,228 @@ impl Master {
         for id in advanced {
             self.advance_request(id, nodes, active, staged, sink)?;
         }
+        Ok(())
+    }
+
+    /// How long the event wait may block before the watchdog must look
+    /// at the pool again: the earliest pending hedge or fallback timer
+    /// across every outstanding subtask, deadline-clamped, bounded by
+    /// `recv_timeout` above and a small floor below (no hot spin).
+    fn watchdog_wait(&self, rounds: &HashMap<u64, ActiveRound>) -> Duration {
+        let now = Instant::now();
+        let mut next: Option<Instant> = None;
+        for (&round, ar) in rounds {
+            let Some(rt) = self.round_log.get(&round) else {
+                continue;
+            };
+            for &t in &ar.outstanding {
+                let Some(&dispatched) = rt.dispatched_at.get(t) else {
+                    continue;
+                };
+                let delay = self.hedge_delay(
+                    ar.assigned[t],
+                    ar.pr.flops_per_task,
+                    ar.pr.bytes_per_task,
+                );
+                // An unhedged task wakes us at its hedge point; a task
+                // already hedged (or with hedging off) at its fallback
+                // point.
+                let hedge_pending =
+                    self.config.hedge_quantile > 0.0 && !ar.extra.contains_key(&t);
+                let mut at = if hedge_pending {
+                    dispatched + delay
+                } else {
+                    dispatched + delay * 2
+                };
+                if let Some(d) = ar.deadline {
+                    at = at.min(d);
+                }
+                next = Some(next.map_or(at, |n| n.min(at)));
+            }
+        }
+        next.map_or(self.config.recv_timeout, |at| at.saturating_duration_since(now))
+            .min(self.config.recv_timeout)
+            .max(Duration::from_millis(10))
+    }
+
+    /// The reliability watchdog: runs on every loop wake while work is
+    /// in flight. Each outstanding subtask carries two fitted timers
+    /// (clamped to the round's earliest request deadline, so
+    /// tight-deadline requests speculate *early*):
+    ///
+    /// * past `hedge_at = dispatched + p-quantile delay`, the subtask is
+    ///   *hedged*: its frame is speculatively re-sent to the
+    ///   least-loaded eligible worker and the copies race — first reply
+    ///   wins, the loser is cancelled ([`ActiveRound::resolve_race`]);
+    /// * past `fallback_at = dispatched + 2×delay`, the master stops
+    ///   waiting and computes the shard locally
+    ///   ([`Master::compute_task_locally`]), cancelling every live copy.
+    ///
+    /// With `local_fallback` off, a subtask outstanding longer than
+    /// `recv_timeout` keeps the old fail-fast wedge diagnosis instead.
+    #[allow(clippy::too_many_arguments)]
+    fn run_watchdog(
+        &mut self,
+        nodes: &[Node],
+        active: &mut BTreeMap<u64, RequestState>,
+        rounds: &mut HashMap<u64, ActiveRound>,
+        worker_load: &mut BTreeMap<usize, usize>,
+        backoff: &mut BTreeMap<usize, WorkerBackoff>,
+        staged: &mut Vec<u64>,
+        sink: &mut dyn EngineSink,
+    ) -> Result<()> {
+        let now = Instant::now();
+        // Hedge placement draws on the CURRENT live pool: a worker that
+        // joined after a round went out is exactly the rescue target a
+        // wedged 1-worker round needs (elastic follow-up (b)).
+        let pool = self.dispatch_targets();
+        let round_ids: Vec<u64> = rounds.keys().copied().collect();
+        for round in round_ids {
+            let mut completed = false;
+            if let Some(ar) = rounds.get_mut(&round) {
+                let tasks: Vec<usize> = ar.outstanding.clone();
+                for t in tasks {
+                    let Some(dispatched) = self
+                        .round_log
+                        .get(&round)
+                        .and_then(|rt| rt.dispatched_at.get(t).copied())
+                    else {
+                        continue;
+                    };
+                    if !self.config.local_fallback
+                        && now.duration_since(dispatched) >= self.config.recv_timeout
+                    {
+                        bail!(
+                            "pipelined engine: timed out waiting for workers \
+                             (task {t} of round {round} outstanding past recv_timeout)"
+                        );
+                    }
+                    let delay = self.hedge_delay(
+                        ar.assigned[t],
+                        ar.pr.flops_per_task,
+                        ar.pr.bytes_per_task,
+                    );
+                    let mut hedge_at = dispatched + delay;
+                    let mut fallback_at = dispatched + delay * 2;
+                    if let Some(d) = ar.deadline {
+                        hedge_at = hedge_at.min(d);
+                        fallback_at = fallback_at.min(d);
+                    }
+                    if self.config.local_fallback && now >= fallback_at {
+                        // The pool had two chances; the master takes
+                        // this shard over and cancels every live copy.
+                        let chunks = self.compute_task_locally(&ar.pr, t)?;
+                        self.registry.note_reliability(
+                            EventKind::LocalFallback,
+                            ar.assigned[t],
+                            round,
+                        );
+                        ar.outstanding.retain(|&x| x != t);
+                        for holder in ar.take_holders(t) {
+                            let busy = ar.outstanding.iter().any(|&x| ar.holds(x, holder));
+                            if !busy {
+                                self.send_to(holder, &ToWorker::Cancel { round }.encode());
+                            }
+                        }
+                        let mut ready = true;
+                        for (p, chunk) in ar.parts.iter_mut().zip(chunks) {
+                            let r = p.decoder.add(t, chunk);
+                            p.lm.fallbacks += 1;
+                            ready = ready && r;
+                        }
+                        log::warn!(
+                            "watchdog: round {round} task {t} computed locally \
+                             (master fallback)"
+                        );
+                        if ready {
+                            completed = true;
+                            break;
+                        }
+                        ar.received.push(t);
+                        continue;
+                    }
+                    if self.config.hedge_quantile > 0.0
+                        && now >= hedge_at
+                        && !ar.extra.contains_key(&t)
+                        && ar.retry_allowed(self.config.retry_budget)
+                    {
+                        let holder = ar.assigned[t];
+                        // Race an extra copy on a worker not already
+                        // holding one.
+                        let candidates: Vec<usize> = pool
+                            .iter()
+                            .copied()
+                            .filter(|&w| !ar.holds(t, w))
+                            .collect();
+                        if candidates.is_empty() {
+                            continue;
+                        }
+                        let target =
+                            pick_recovery_target(worker_load, backoff, &candidates, None, now);
+                        self.send_to(target, &ar.pr.frames[t]);
+                        *worker_load.entry(target).or_insert(0) += 1;
+                        ar.extra.entry(t).or_default().push(target);
+                        ar.spent_retries += 1;
+                        for p in &mut ar.parts {
+                            p.lm.hedges += 1;
+                        }
+                        self.registry
+                            .note_reliability(EventKind::Hedged, holder, round);
+                        note_strike(backoff, holder, now);
+                        // Restart the task's clock: the fallback timer
+                        // now counts from the hedge dispatch, and a
+                        // hedge-winner's telemetry sample measures the
+                        // winning dispatch (same convention as failure
+                        // re-dispatch).
+                        if let Some(rt) = self.round_log.get_mut(&round) {
+                            rt.dispatched_at[t] = Instant::now();
+                        }
+                        log::info!(
+                            "watchdog: round {round} task {t} overdue on worker \
+                             {holder}, hedged to {target}"
+                        );
+                    }
+                }
+            }
+            if completed {
+                let ar = rounds.remove(&round).unwrap();
+                self.finish_round(ar, nodes, active, staged, sink)?;
+                self.maybe_replan();
+            }
+        }
+        Ok(())
+    }
+
+    /// Complete a wedged round entirely on the master: compute missing
+    /// shards through the local provider until every part's decoder is
+    /// ready. Correct for every scheme — conv linearity means an encoded
+    /// payload convolves to the matching encoded output, so feeding
+    /// locally-computed shards to the decoder is indistinguishable from
+    /// a worker reply.
+    fn fallback_complete(&mut self, ar: &mut ActiveRound) -> Result<()> {
+        let round = ar.pr.round;
+        for t in 0..ar.pr.frames.len() {
+            if ar.parts[0].decoder.ready() {
+                break;
+            }
+            if ar.received.contains(&t) {
+                continue;
+            }
+            let chunks = self.compute_task_locally(&ar.pr, t)?;
+            self.registry
+                .note_reliability(EventKind::LocalFallback, ar.assigned[t], round);
+            for (p, chunk) in ar.parts.iter_mut().zip(chunks) {
+                p.decoder.add(t, chunk);
+                p.lm.fallbacks += 1;
+            }
+            ar.received.push(t);
+        }
+        anyhow::ensure!(
+            ar.parts[0].decoder.ready(),
+            "layer {} (round {round}): local fallback exhausted every shard but the \
+             decoder is still short",
+            ar.parts[0].lm.node_id
+        );
         Ok(())
     }
 }

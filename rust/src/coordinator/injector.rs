@@ -20,6 +20,12 @@ pub struct WorkerFaults {
     /// Compute slowdown factor (1.0 = nominal). The paper's
     /// "high-probability straggler" runs at ≈1.68× (85.2 s vs 50.8 s).
     pub cmp_slowdown: f64,
+    /// Rounds in which this worker *stalls*: it accepts the subtask and
+    /// then silently never replies — no Output, no Failed — while its
+    /// link (and heartbeat, on TCP workers) stays alive. The black-hole
+    /// failure mode only a watchdog can catch; neither the clean-failure
+    /// re-dispatch path nor heartbeat eviction ever fires.
+    pub stall_rounds: HashSet<u64>,
 }
 
 impl WorkerFaults {
@@ -48,6 +54,11 @@ impl WorkerFaults {
         self
     }
 
+    pub fn stalls_in(mut self, rounds: impl IntoIterator<Item = u64>) -> WorkerFaults {
+        self.stall_rounds.extend(rounds);
+        self
+    }
+
     /// Sample this round's extra send delay.
     pub fn sample_send_delay(&self, rng: &mut Rng) -> f64 {
         if self.extra_send_delay_mean <= 0.0 {
@@ -59,6 +70,10 @@ impl WorkerFaults {
 
     pub fn fails(&self, round: u64) -> bool {
         self.fail_rounds.contains(&round)
+    }
+
+    pub fn stalls(&self, round: u64) -> bool {
+        self.stall_rounds.contains(&round)
     }
 }
 
@@ -120,6 +135,14 @@ mod tests {
         let m: f64 = (0..20_000).map(|_| f.sample_send_delay(&mut rng)).sum::<f64>() / 20_000.0;
         assert!((m - 0.02).abs() < 0.002, "m={m}");
         assert_eq!(WorkerFaults::none().sample_send_delay(&mut rng), 0.0);
+    }
+
+    #[test]
+    fn stall_rounds_are_independent_of_fail_rounds() {
+        let f = WorkerFaults::none().stalls_in([2, 5]).fails_in([3]);
+        assert!(f.stalls(2) && f.stalls(5) && !f.stalls(3));
+        assert!(f.fails(3) && !f.fails(2));
+        assert!(!WorkerFaults::none().stalls(0));
     }
 
     #[test]

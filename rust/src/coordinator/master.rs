@@ -19,7 +19,7 @@ use crate::model::graph::execute_simple_op;
 use crate::model::{zoo, ModelPlan, ModelSpec, Node, Op, WeightStore};
 use crate::planner::SplitPolicy;
 use crate::runtime::ConvProvider;
-use crate::telemetry::{CapacityRegistry, ReplanConfig, Replanner, TelemetryConfig};
+use crate::telemetry::{CapacityRegistry, EventKind, ReplanConfig, Replanner, TelemetryConfig};
 use crate::transport::LinkPair;
 use crate::util::json::Json;
 use crate::util::Rng;
@@ -159,6 +159,27 @@ pub struct MasterConfig {
     /// the worker to beacon at a third of it. Silence past the deadline
     /// evicts the worker.
     pub heartbeat: Duration,
+    /// Hedged dispatch (pipelined engine): once an outstanding subtask
+    /// has been out longer than this quantile of its holder's fitted
+    /// service-time distribution (see
+    /// [`CapacityRegistry::service_quantile`]), the watchdog
+    /// speculatively re-dispatches the same shard to the least-loaded
+    /// other worker — first reply wins, the loser is cancelled. Must be
+    /// in `[0, 1)`; unfitted workers use a fixed floor ([`HEDGE_FLOOR`]),
+    /// and fitted delays are floored there too so millisecond-scale
+    /// jitter never triggers speculation. `0.0` disables hedging.
+    pub hedge_quantile: f64,
+    /// Per-round re-dispatch budget (failure re-dispatches + hedges).
+    /// Exceeding it no longer fails the request: the round stops burning
+    /// the pool and escalates to the master-local decode fallback.
+    pub retry_budget: usize,
+    /// Complete decodes on the master when the pool cannot: compute the
+    /// missing shards locally through the master's own provider (conv
+    /// linearity makes an encoded payload convolve to the corresponding
+    /// encoded output, so this works for every scheme). On by default —
+    /// the serving contract is that an admitted request never errors;
+    /// turning it off restores the old fail-fast behavior.
+    pub local_fallback: bool,
 }
 
 impl Default for MasterConfig {
@@ -176,9 +197,18 @@ impl Default for MasterConfig {
             replan: ReplanConfig::default(),
             coalesce: 1,
             heartbeat: Duration::from_secs(10),
+            hedge_quantile: 0.99,
+            retry_budget: 4,
+            local_fallback: true,
         }
     }
 }
+
+/// Minimum (and unfitted-worker default) hedge watchdog delay. Keeps the
+/// watchdog from speculating on ordinary scheduling jitter: tasks in the
+/// test models complete in milliseconds, so a healthy pool never crosses
+/// this, while a stalled shard always does.
+pub(super) const HEDGE_FLOOR: Duration = Duration::from_millis(500);
 
 /// Dispatch bookkeeping for one coded round, kept (bounded) *after* the
 /// round decodes so late straggler replies — the samples that matter
@@ -716,13 +746,64 @@ impl Master {
                 ])
             })
             .collect();
+        let count = |kind: EventKind| {
+            self.registry.events().iter().filter(|e| e.kind == kind).count() as f64
+        };
         Json::obj(vec![
             ("adaptive", Json::Bool(self.config.adaptive)),
             ("plan_switches", Json::Num(self.replanner.switches as f64)),
+            ("hedges", Json::Num(count(EventKind::Hedged))),
+            ("fallbacks", Json::Num(count(EventKind::LocalFallback))),
             ("plan", Json::Arr(plan)),
             ("members", Json::Arr(members)),
             ("registry", self.registry.to_json()),
         ])
+    }
+
+    /// How long the hedge watchdog lets a subtask of `flops`/`bytes`
+    /// scale stay outstanding on `worker` before speculating: the fitted
+    /// `hedge_quantile` of the worker's service-time prediction, floored
+    /// at [`HEDGE_FLOOR`] (also the delay when the worker is unfitted)
+    /// and capped at `recv_timeout` so hedging always beats the old
+    /// wedge diagnosis.
+    pub(super) fn hedge_delay(&self, worker: usize, flops: f64, bytes: f64) -> Duration {
+        let fitted = self
+            .registry
+            .service_quantile(worker, self.config.hedge_quantile, flops, bytes)
+            .map(Duration::from_secs_f64);
+        fitted
+            .map_or(HEDGE_FLOOR, |d| d.max(HEDGE_FLOOR))
+            .min(self.config.recv_timeout)
+    }
+
+    /// Master-local compute of one dispatched subtask — the decode
+    /// fallback's workhorse. Decodes the round's cached dispatch frame
+    /// and runs each payload through the master's own provider with the
+    /// round's weights. Conv linearity means an *encoded* payload
+    /// convolves to the corresponding encoded output, so the chunks feed
+    /// the decoders exactly as a worker reply would — for every scheme,
+    /// with no systematic-shard special-casing. Returns one flattened
+    /// output chunk per coalesced payload, in payload order.
+    pub(super) fn compute_task_locally(
+        &self,
+        pr: &PreparedRound,
+        task_id: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let frame = pr.frames.get(task_id).with_context(|| {
+            format!("local fallback: round {} has no task {task_id}", pr.round)
+        })?;
+        let order = match ToWorker::decode(frame)? {
+            ToWorker::Work(order) => order,
+            other => bail!("local fallback: cached frame for task {task_id} is {other:?}"),
+        };
+        let spec = order.spec();
+        let mut chunks = Vec::with_capacity(order.payloads.len());
+        for i in 0..order.payloads.len() {
+            let input = order.input_tensor(i)?;
+            let out = self.provider.conv(&spec, &input, &pr.params.weights)?;
+            chunks.push(out.flatten());
+        }
+        Ok(chunks)
     }
 
     /// The dispatch set for the upcoming round, by stable worker id:

@@ -51,6 +51,12 @@ pub struct LayerMetrics {
     /// Straggler subtasks cancelled after the round decoded (pipelined
     /// engine only; the round-barrier path lets them finish as stale).
     pub cancelled: usize,
+    /// Watchdog hedges: subtasks speculatively re-dispatched after
+    /// exceeding their fitted completion quantile (first result wins).
+    pub hedges: usize,
+    /// Shards the master computed locally to complete the decode when
+    /// the pool could not deliver them (`--local-fallback`).
+    pub fallbacks: usize,
     /// Per-subtask worker breakdown (one entry per useful reply), in
     /// arrival order.
     pub per_worker: Vec<WorkerPhase>,
@@ -84,6 +90,8 @@ impl LayerMetrics {
             ("failures", Json::Num(self.failures as f64)),
             ("redispatches", Json::Num(self.redispatches as f64)),
             ("cancelled", Json::Num(self.cancelled as f64)),
+            ("hedges", Json::Num(self.hedges as f64)),
+            ("fallbacks", Json::Num(self.fallbacks as f64)),
             (
                 "per_worker",
                 Json::Arr(self.per_worker.iter().map(|w| w.to_json()).collect()),
@@ -119,6 +127,14 @@ impl InferenceMetrics {
 
     pub fn cancelled(&self) -> usize {
         self.layers.iter().map(|l| l.cancelled).sum()
+    }
+
+    pub fn hedges(&self) -> usize {
+        self.layers.iter().map(|l| l.hedges).sum()
+    }
+
+    pub fn fallbacks(&self) -> usize {
+        self.layers.iter().map(|l| l.fallbacks).sum()
     }
 
     pub fn to_json(&self) -> Json {

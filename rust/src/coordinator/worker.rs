@@ -344,7 +344,7 @@ fn run_worker_core(
                         }
                         match execute_order(&order, &model, &*provider, &faults, &mut scratch, &mut rng, id)
                         {
-                            Ok(reply) => {
+                            Ok(Some(reply)) => {
                                 // A failed send means the master has shut
                                 // down while this worker was draining
                                 // queued subtasks — a normal exit.
@@ -353,6 +353,12 @@ fn run_worker_core(
                                     break;
                                 }
                             }
+                            // Injected stall: the subtask is swallowed —
+                            // no reply ever — but the executor keeps
+                            // draining, so the worker stays live (and a
+                            // TCP worker keeps heartbeating). Only the
+                            // master's watchdog can recover the shard.
+                            Ok(None) => {}
                             Err(e) => {
                                 let _ = err_tx.send(WorkerEvent::Error(e));
                                 break;
@@ -443,7 +449,10 @@ fn run_worker_core(
 /// runs the classic prepacked single conv; a multi-payload order runs
 /// ONE batched pass whose GEMM N dimension spans every payload — each
 /// payload's slice is bitwise identical to a solo run — and replies
-/// with the concatenated outputs in payload order.
+/// with the concatenated outputs in payload order. `Ok(None)` is the
+/// injected *stall* fault: the order was accepted but no reply will
+/// ever be sent (breaking the one-reply-per-dispatch contract is the
+/// point — it is what the master-side watchdog exists to catch).
 fn execute_order(
     order: &WorkOrder,
     model: &LoadedModel,
@@ -452,7 +461,7 @@ fn execute_order(
     scratch: &mut Scratch,
     rng: &mut Rng,
     worker_id: usize,
-) -> Result<FromWorker> {
+) -> Result<Option<FromWorker>> {
     let spec = order.spec();
     // Sanity: the wire spec must match the preloaded layer's.
     if let Some(known) = model.specs.get(&order.node_id) {
@@ -474,6 +483,17 @@ fn execute_order(
     let params = model.store.get(&order.node_id)?;
 
     let t0 = std::time::Instant::now();
+    // Injected stall: accept the subtask and go silent. No Failed, no
+    // Output — the worker looks perfectly healthy (heartbeats continue)
+    // while this shard black-holes.
+    if faults.stalls(order.round) {
+        log::debug!(
+            "worker {worker_id}: injected stall (round {}, task {})",
+            order.round,
+            order.task_id
+        );
+        return Ok(None);
+    }
     // Injected failure: signal the master after "noticing" (half the
     // nominal compute, approximated by the work done so far: zero here,
     // so we charge a small fixed notice delay instead of computing).
@@ -483,10 +503,10 @@ fn execute_order(
             order.round,
             order.task_id
         );
-        return Ok(FromWorker::Failed {
+        return Ok(Some(FromWorker::Failed {
             round: order.round,
             task_id: order.task_id,
-        });
+        }));
     }
 
     // Steady-state execution path: prepacked weights when Setup packed
@@ -525,7 +545,7 @@ fn execute_order(
         debug_assert_eq!((out.c, out.h, out.w), (c, h, w));
         data.extend_from_slice(&out.data);
     }
-    Ok(FromWorker::Output {
+    Ok(Some(FromWorker::Output {
         round: order.round,
         task_id: order.task_id,
         c: c as u32,
@@ -533,7 +553,7 @@ fn execute_order(
         w: w as u32,
         exec_secs,
         data,
-    })
+    }))
 }
 
 #[cfg(test)]
@@ -695,6 +715,37 @@ mod tests {
             FromWorker::Output { .. }
         ));
         drop(tx);
+        handle.join().unwrap();
+    }
+
+    /// The stall fault is a silent black hole: the stalled round never
+    /// gets ANY reply, but the worker stays alive and serves later
+    /// rounds normally (the exact signature the watchdog must catch).
+    #[test]
+    fn stalled_round_swallows_reply_but_worker_lives() {
+        let (mut tx, mut rx, handle) =
+            spawn_test_worker(WorkerFaults::none().stalls_in([0]));
+        tx.send(
+            &ToWorker::Setup {
+                model: "tinyvgg".into(),
+                weight_seed: 1,
+            }
+            .encode(),
+        )
+        .unwrap();
+        rx.recv().unwrap().unwrap(); // Ready
+        let order =
+            WorkOrder::single(0, 0, 2, "conv1".into(), 3, 32, 3, 1, 5, 5, vec![0.0; 75]);
+        tx.send(&ToWorker::Work(order.clone()).encode()).unwrap();
+        // Round 1 right behind it: the FIRST frame back must be round
+        // 1's Output — round 0 produced nothing at all.
+        let order1 = WorkOrder { round: 1, ..order };
+        tx.send(&ToWorker::Work(order1).encode()).unwrap();
+        match FromWorker::decode(&rx.recv().unwrap().unwrap()).unwrap() {
+            FromWorker::Output { round, .. } => assert_eq!(round, 1),
+            other => panic!("expected round-1 output, got {other:?}"),
+        }
+        tx.send(&ToWorker::Shutdown.encode()).unwrap();
         handle.join().unwrap();
     }
 

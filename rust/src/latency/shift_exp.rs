@@ -47,6 +47,18 @@ impl ShiftExp {
         self.n_scale * (self.theta + 1.0 / self.mu)
     }
 
+    /// Quantile (inverse CDF): `t_q = Nθ + (N/μ)·ln(1/(1−q))` for
+    /// `q ∈ [0, 1)`. The hedging watchdog uses this as "if the subtask
+    /// isn't back by the fitted p-q point, speculate". Zero-scale
+    /// distributions are instant at every quantile.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..1.0).contains(&q), "quantile requires q in [0, 1)");
+        if self.n_scale == 0.0 {
+            return 0.0;
+        }
+        self.shift() + (self.n_scale / self.mu) * (1.0 / (1.0 - q)).ln()
+    }
+
     /// Draw one sample.
     pub fn sample(&self, rng: &mut Rng) -> f64 {
         if self.n_scale == 0.0 {
@@ -146,6 +158,21 @@ mod tests {
         // Median above shift: shift + ln2 * N/μ.
         let median = 5.0 + (10.0 / 2.0) * std::f64::consts::LN_2;
         assert!((d.cdf(median) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        let d = ShiftExp::new(2.0, 0.5, 10.0);
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99] {
+            let t = d.quantile(q);
+            assert!((d.cdf(t) - q).abs() < 1e-9, "q={q} t={t}");
+            assert!(t >= d.shift());
+        }
+        // Degenerate fit: quantile collapses to (almost exactly) the shift.
+        let f = ShiftExp::fit(&[4.0], 8.0);
+        assert!((f.quantile(0.99) - 4.0).abs() < 1e-6);
+        // Zero scale: instant.
+        assert_eq!(ShiftExp::new(1.0, 1.0, 0.0).quantile(0.99), 0.0);
     }
 
     #[test]

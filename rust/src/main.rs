@@ -15,6 +15,9 @@
 //!              [--concurrent M]                     # engine concurrency limit (0 = unlimited)
 //!              [--coalesce C]                       # merge ≤C same-layer requests per round (1 = off)
 //!              [--worker-slots S]                   # convs in flight per worker (1 = sequential)
+//!              [--hedge-quantile Q]                 # watchdog hedge quantile (0 = no hedging)
+//!              [--retry-budget B]                   # extra dispatches per round = B x subtasks
+//!              [--local-fallback on|off]            # master computes undeliverable shards
 //! cocoi worker --listen 0.0.0.0:9090 [--pjrt] [--threads T] [--slots S]   # TCP worker process
 //! cocoi worker --connect host:9095 [--name N] [--model M]                 # announce to a running master
 //!              [--retry-initial-ms 200] [--retry-max-ms 5000] [--retries 0]  # reconnect backoff (0 = forever)
@@ -161,6 +164,14 @@ fn cmd_infer(args: &Args) -> Result<()> {
         },
         adaptive: args.has("adaptive"),
         coalesce: args.get_usize("coalesce", 1)?,
+        hedge_quantile: args.get_f64("hedge-quantile", MasterConfig::default().hedge_quantile)?,
+        retry_budget: args.get_usize("retry-budget", MasterConfig::default().retry_budget)?,
+        local_fallback: match args.get("local-fallback") {
+            None => MasterConfig::default().local_fallback,
+            Some("on") | Some("true") | Some("1") => true,
+            Some("off") | Some("false") | Some("0") => false,
+            Some(v) => bail!("--local-fallback {v}: expected on|off"),
+        },
         ..Default::default()
     };
     let telemetry_path = args.get("telemetry").map(std::path::PathBuf::from);

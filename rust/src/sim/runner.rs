@@ -149,6 +149,11 @@ impl Default for LtOverheadCache {
 
 /// One trial of one distributed layer under an MDS-semantics scheme
 /// (mds / uncoded / replication). Returns (enc, workers, dec) seconds.
+/// `hedge` mirrors the engine's watchdog: `Some(q)` gives any subtask
+/// whose completion exceeds the q-quantile of its nominal phase model a
+/// speculative backup draw on a random surviving worker, started at the
+/// threshold — first copy wins. `None` consumes no extra rng draws, so
+/// unhedged traces stay bitwise-pinned.
 #[allow(clippy::too_many_arguments)]
 fn trial_mds_like(
     dims: &LayerDims,
@@ -158,6 +163,7 @@ fn trial_mds_like(
     needed: Needed,
     coded: bool,
     scenario: &Scenario,
+    hedge: Option<f64>,
     rng: &mut Rng,
 ) -> (f64, f64, f64) {
     let rec = p.rec_dist(dims, k);
@@ -222,6 +228,31 @@ fn trial_mds_like(
             + 2.0 * p.theta_msg;
         arrivals[task] = Some(t);
         own_finish[host] = t;
+    }
+
+    // Watchdog hedging: a subtask past its fitted completion quantile
+    // races a backup copy dispatched at the threshold; the earlier of
+    // the two arrivals wins (exactly-one-result semantics — the loser
+    // is cancelled, so it costs pool occupancy, not correctness).
+    if let Some(q) = hedge.filter(|q| *q > 0.0 && *q < 1.0) {
+        if !alive.is_empty() {
+            let tau =
+                rec.quantile(q) + cmp.quantile(q) + sen.quantile(q) + 2.0 * p.theta_msg;
+            for a in arrivals.iter_mut() {
+                if let Some(t) = *a {
+                    if t > tau {
+                        let host = alive[rng.below(alive.len())];
+                        let slow = scenario.cmp_slowdown(host);
+                        let backup = tau
+                            + rec.sample(rng)
+                            + cmp.sample(rng) * slow
+                            + sen.sample(rng)
+                            + 2.0 * p.theta_msg;
+                        *a = Some(t.min(backup));
+                    }
+                }
+            }
+        }
     }
 
     let mut done: Vec<f64> = arrivals.iter().flatten().copied().collect();
@@ -321,7 +352,10 @@ fn trial_lt(
     (enc, workers, dec)
 }
 
-/// One layer draw under `method`: (enc, workers, dec) seconds.
+/// One layer draw under `method`: (enc, workers, dec) seconds. `hedge`
+/// enables the watchdog-backup model for the MDS-semantics schemes (LT's
+/// rateless stream hedges by construction — extra symbols — so the knob
+/// is a no-op there).
 #[allow(clippy::too_many_arguments)]
 fn draw_layer(
     method: MethodSim,
@@ -330,18 +364,19 @@ fn draw_layer(
     profile: &SystemProfile,
     n: usize,
     scenario: &Scenario,
+    hedge: Option<f64>,
     lt_cache: &mut LtOverheadCache,
     rng: &mut Rng,
 ) -> (f64, f64, f64) {
     match method {
         MethodSim::CocoiKStar { .. } | MethodSim::CocoiKCirc => {
-            trial_mds_like(dims, profile, n, k, Needed::KOfN(k), true, scenario, rng)
+            trial_mds_like(dims, profile, n, k, Needed::KOfN(k), true, scenario, hedge, rng)
         }
         MethodSim::Uncoded => {
-            trial_mds_like(dims, profile, n, k, Needed::All, false, scenario, rng)
+            trial_mds_like(dims, profile, n, k, Needed::All, false, scenario, hedge, rng)
         }
         MethodSim::Replication => {
-            trial_mds_like(dims, profile, n, k, Needed::PerSource(k), false, scenario, rng)
+            trial_mds_like(dims, profile, n, k, Needed::PerSource(k), false, scenario, hedge, rng)
         }
         MethodSim::LtFine | MethodSim::LtCoarse => {
             let budget = 2 * k + 16;
@@ -389,6 +424,7 @@ fn plan_layers(
                                 Needed::KOfN(k),
                                 true,
                                 scenario,
+                                None,
                                 rng,
                             );
                             e + w + d
@@ -438,7 +474,7 @@ pub fn simulate_model(
         let mut total = local_mean;
         for (li, (_, dims, k)) in layer_cfg.iter().enumerate() {
             let (enc, workers, dec) =
-                draw_layer(method, dims, *k, profile, n, &scenario, &mut lt_cache, rng);
+                draw_layer(method, dims, *k, profile, n, &scenario, None, &mut lt_cache, rng);
             sums[li].enc += enc;
             sums[li].workers += workers;
             sums[li].dec += dec;
@@ -548,7 +584,9 @@ pub fn simulate_serving(
                 layer_cfg
                     .iter()
                     .map(|(_, dims, k)| {
-                        draw_layer(method, dims, *k, profile, n, &scenario, &mut lt_cache, rng)
+                        draw_layer(
+                            method, dims, *k, profile, n, &scenario, None, &mut lt_cache, rng,
+                        )
                     })
                     .collect()
             })
@@ -766,9 +804,10 @@ fn schedule_master_pool_open(
 }
 
 /// Engine knobs mirrored into the open-loop model: cross-request shard
-/// coalescing and intra-worker concurrency (the `MasterConfig::coalesce`
-/// and `--worker-slots` counterparts).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// coalescing, intra-worker concurrency, and watchdog hedging (the
+/// `MasterConfig::coalesce`, `--worker-slots`, and `--hedge-quantile`
+/// counterparts).
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ServeKnobs {
     /// Max same-layer requests batched into one pool round (≤1 = off).
     /// A batch occupies the pool once for `w_max + β_co · Σ(others)`
@@ -785,6 +824,12 @@ pub struct ServeKnobs {
     /// round's compute, which is what a second in-flight conv buys; the
     /// request still experiences the full duration.
     pub worker_slots: usize,
+    /// Watchdog hedge quantile (0 = off): subtasks past the q-quantile
+    /// of their nominal phase model race a backup draw — the sim mirror
+    /// of the engine's fitted-quantile hedged dispatch. Affects the
+    /// phase *draws*, not the schedule, so it composes with both knobs
+    /// above.
+    pub hedge_quantile: f64,
 }
 
 impl Default for ServeKnobs {
@@ -792,6 +837,7 @@ impl Default for ServeKnobs {
         ServeKnobs {
             coalesce: 1,
             worker_slots: 1,
+            hedge_quantile: 0.0,
         }
     }
 }
@@ -982,12 +1028,17 @@ pub fn simulate_serving_open_with(
         .collect();
 
     // Per-request phase draws, in arrival order (scheduling-independent).
+    // `hedge = None` (the default knob) consumes no extra rng draws, so
+    // unhedged traces stay bitwise-pinned.
+    let hedge = (knobs.hedge_quantile > 0.0).then_some(knobs.hedge_quantile);
     let draws: Vec<Vec<(f64, f64, f64)>> = (0..arrivals)
         .map(|_| {
             layer_cfg
                 .iter()
                 .map(|(_, dims, k)| {
-                    draw_layer(method, dims, *k, profile, n, &scenario, &mut lt_cache, rng)
+                    draw_layer(
+                        method, dims, *k, profile, n, &scenario, hedge, &mut lt_cache, rng,
+                    )
                 })
                 .collect()
         })
@@ -1067,6 +1118,7 @@ pub fn simulate_serving_open_with(
                             profile,
                             n,
                             &scenario,
+                            None,
                             &mut lt_cache,
                             &mut pilot_rng,
                         )
@@ -1377,7 +1429,7 @@ mod tests {
                 200,
                 ServeKnobs {
                     coalesce: 4,
-                    worker_slots: 1,
+                    ..ServeKnobs::default()
                 },
                 11,
             );
@@ -1402,8 +1454,8 @@ mod tests {
             rate,
             160,
             ServeKnobs {
-                coalesce: 1,
                 worker_slots: 2,
+                ..ServeKnobs::default()
             },
             17,
         );
@@ -1415,12 +1467,63 @@ mod tests {
         );
     }
 
+    /// The reliability layer's sim mirror: under a chronic straggler,
+    /// watchdog-hedged draws must beat the unhedged trace on tail *and*
+    /// mean — every uncoded round waits on the slow worker's shard, and
+    /// the backup draw races past it. Fixed seed: this is the serving
+    /// experiment's hedging gate at test scale.
+    #[test]
+    fn hedged_tail_not_worse_under_chronic_straggler() {
+        let model = zoo::model("vgg16").unwrap();
+        let p = SystemProfile::paper_default();
+        let scenario = Scenario::FailuresPlusStraggler {
+            n_f: 0,
+            slowdown: 3.0,
+        };
+        let run = |hedge_quantile: f64| {
+            let mut rng = Rng::new(31);
+            simulate_serving_open_with(
+                &model,
+                &p,
+                10,
+                MethodSim::Uncoded,
+                scenario,
+                ServeSimMode::Pipelined,
+                0.01,
+                40,
+                None,
+                ServeKnobs {
+                    hedge_quantile,
+                    ..ServeKnobs::default()
+                },
+                &mut rng,
+            )
+            .unwrap()
+        };
+        let plain = run(0.0);
+        let hedged = run(0.9);
+        assert_eq!(plain.shed + hedged.shed, 0);
+        assert!(
+            hedged.p95() <= plain.p95() * (1.0 + 1e-9),
+            "hedged p95 {} > unhedged p95 {}",
+            hedged.p95(),
+            plain.p95()
+        );
+        assert!(
+            hedged.mean() < plain.mean(),
+            "hedged mean {} >= unhedged mean {}",
+            hedged.mean(),
+            plain.mean()
+        );
+    }
+
     /// Fixed seed ⇒ bitwise-identical trace with knobs on, too.
     #[test]
     fn knobs_trace_is_reproducible() {
         let knobs = ServeKnobs {
             coalesce: 3,
             worker_slots: 2,
+            ..ServeKnobs::default()
         };
         let a = open_knobs(ServeSimMode::Pipelined, 0.02, 40, knobs, 23);
         let b = open_knobs(ServeSimMode::Pipelined, 0.02, 40, knobs, 23);

@@ -92,6 +92,14 @@ pub enum EventKind {
     /// Membership: the worker drained its in-flight subtasks and left
     /// gracefully.
     Retired,
+    /// Reliability: an outstanding subtask on this worker exceeded its
+    /// fitted completion quantile and was speculatively re-dispatched
+    /// (hedged) to another worker.
+    Hedged,
+    /// Reliability: the master computed this worker's undelivered shard
+    /// locally to complete a decode (pool collapse / retries exhausted /
+    /// deadline pressure).
+    LocalFallback,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -238,6 +246,16 @@ impl CapacityRegistry {
 
     pub fn events(&self) -> &[TelemetryEvent] {
         &self.events
+    }
+
+    /// Log a reliability event (hedge fired / local fallback computed a
+    /// shard) against the worker that failed to deliver. Absent ids are
+    /// logged too: the interesting case — a fallback for a shard whose
+    /// holder was already evicted — must not vanish from the record.
+    pub fn note_reliability(&mut self, kind: EventKind, worker: usize, round: u64) {
+        debug_assert!(matches!(kind, EventKind::Hedged | EventKind::LocalFallback));
+        self.round = self.round.max(round);
+        self.events.push(TelemetryEvent { kind, worker, round });
     }
 
     pub fn round(&self) -> u64 {
@@ -404,6 +422,21 @@ impl CapacityRegistry {
         })
     }
 
+    /// Fitted service-time quantile for one subtask on one worker: the
+    /// time by which a dispatch of `flops` FLOPs / `bytes` wire bytes
+    /// should have replied with probability `q`, per this worker's
+    /// current `SE(μ, θ)` fits. The execution and transmission phases
+    /// are summed quantile-by-quantile — an upper bound on the true
+    /// sum-distribution quantile, which is the conservative direction
+    /// for a hedging watchdog (it only ever fires *later* than the exact
+    /// quantile would). `None` below `min_samples` — the caller applies
+    /// its own floor for unfitted workers.
+    pub fn service_quantile(&self, worker: usize, q: f64, flops: f64, bytes: f64) -> Option<f64> {
+        let est = self.estimate(worker)?;
+        let at = |fit: ShiftExp, n: f64| ShiftExp::new(fit.mu, fit.theta, n.max(0.0)).quantile(q);
+        Some(at(est.cmp, flops) + at(est.tr, bytes))
+    }
+
     /// Pool-level fitted profile for the iid planner (`solve_k_circ`):
     /// median per-unit μ/θ over the healthy workers with enough samples,
     /// falling back to `base` per phase class when nobody qualifies.
@@ -508,6 +541,8 @@ impl CapacityRegistry {
                                 EventKind::Joined => "joined",
                                 EventKind::Evicted => "evicted",
                                 EventKind::Retired => "retired",
+                                EventKind::Hedged => "hedged",
+                                EventKind::LocalFallback => "local-fallback",
                             }
                             .to_string(),
                         ),
@@ -744,6 +779,28 @@ mod tests {
             .events()
             .iter()
             .any(|e| e.kind == EventKind::Retired && e.worker == 7));
+    }
+
+    #[test]
+    fn service_quantile_scales_with_subtask_size() {
+        let mut reg = CapacityRegistry::new(2, TelemetryConfig::default());
+        // Below min_samples: no quantile (caller falls back to a floor).
+        assert!(reg.service_quantile(0, 0.99, 1e9, 1e6).is_none());
+        feed(&mut reg, 0, 2e-9, 16, 0);
+        feed(&mut reg, 1, 2e-9, 16, 0);
+        // Deterministic 2 ns/FLOP + 100 ns/byte fits are near-pure
+        // shifts (μ degenerate ⇒ negligible tail term), so the p99 is
+        // within a fraction of a percent of the shift, linear in scale.
+        let q = reg.service_quantile(0, 0.99, 1e9, 1e6).unwrap();
+        let want = 2e-9 * 1e9 + 1e-7 * 1e6;
+        assert!((q - want).abs() / want < 1e-2, "q={q} want={want}");
+        let double = reg.service_quantile(0, 0.99, 2e9, 2e6).unwrap();
+        assert!((double - 2.0 * q).abs() / q < 1e-9, "quantile not linear in scale");
+        // Reliability events land in the log and the JSON dump.
+        reg.note_reliability(EventKind::Hedged, 0, 5);
+        reg.note_reliability(EventKind::LocalFallback, 1, 6);
+        let json = reg.to_json().to_string();
+        assert!(json.contains("hedged") && json.contains("local-fallback"));
     }
 
     #[test]

@@ -269,6 +269,56 @@ fn late_joiner_is_admitted_and_receives_dispatches() {
     assert_eq!(joiner.join().unwrap().unwrap(), WorkerExit::Shutdown);
 }
 
+/// Elastic follow-up (b), pinned: a request in flight on a ONE-worker
+/// pool must pick up a mid-request joiner instead of staying serial.
+/// The `Joined` arm forces a replan and admits the joiner into the
+/// dispatch set immediately, so the reliability watchdog's next pass
+/// hedges the founder's wedged shards onto the fresh worker — the
+/// joiner computes shards of the SAME request (its conv calls move past
+/// the join probe before the handle resolves), and the uncoded decode
+/// stays bitwise-local because every copy computes identical bytes.
+#[test]
+fn mid_request_joiner_rescues_inflight_round() {
+    let (server, addr) = elastic_server(SchemeKind::Uncoded, Duration::from_secs(10));
+
+    // The founder stalls 1.2 s in every conv — its join probe pins the
+    // slot, so every shard of the request's distributed round sits
+    // outstanding far past the watchdog's hedge floor.
+    let (spy_f, probe_f) = ProbeSpy::new(Duration::from_millis(1200));
+    let (founder, _keep_f) = spawn_member(addr, "founder", spy_f.clone());
+    probe_f.recv_timeout(JOIN_WAIT).expect("founder never probed");
+
+    let input = input_for(61);
+    let want = local_ref(&input);
+    let handle = server.submit(InferenceRequest::new(input)).unwrap();
+
+    // Join a fast worker while the round is wedged on the founder.
+    let (spy_j, probe_j) = ProbeSpy::new(Duration::ZERO);
+    let (joiner, _keep_j) = spawn_member(addr, "rescuer", spy_j.clone());
+    probe_j.recv_timeout(JOIN_WAIT).expect("joiner never probed");
+    let probed = spy_j.calls.load(Ordering::SeqCst);
+
+    let (out, metrics) = handle.wait().unwrap();
+    assert_eq!(out.data, want.data, "rescued round output not bitwise-local");
+    assert!(
+        metrics.hedges() >= 1,
+        "watchdog never hedged the wedged shards onto the joiner"
+    );
+    assert!(
+        spy_j.calls.load(Ordering::SeqCst) > probed,
+        "mid-request joiner never received a shard of the in-flight request"
+    );
+
+    let master = server.shutdown().unwrap();
+    assert_eq!(
+        members_with(&master, |k| matches!(k, EventKind::Joined)),
+        vec![0, 1]
+    );
+    master.shutdown();
+    assert_eq!(founder.join().unwrap().unwrap(), WorkerExit::Shutdown);
+    assert_eq!(joiner.join().unwrap().unwrap(), WorkerExit::Shutdown);
+}
+
 /// A peer that completes the join handshake and then goes silent — no
 /// heartbeats, no replies — must be evicted once the master's heartbeat
 /// read-deadline lapses.

@@ -1,0 +1,243 @@
+//! Reliability suite: the request-never-fails layer under faults the
+//! clean-failure path cannot catch. A *stalled* worker (accepts the
+//! subtask, never replies, link stays healthy) must be caught by the
+//! fitted-quantile watchdog and hedged to a healthy worker; a pool
+//! where EVERY copy stalls must be completed by the master-local
+//! decode fallback; a fault-free run must never speculate; and a
+//! coalesced stream must survive persistent failures under both a
+//! generous and an exhausted retry budget (budget exhaustion escalates
+//! to the fallback instead of erroring the request).
+//!
+//! Completion contract pinned here: with `local_fallback` on, every
+//! admitted request resolves with output matching local compute —
+//! bitwise on the uncoded path, within decode tolerance under MDS —
+//! and the per-request metrics report how it got there (hedges /
+//! redispatches / fallbacks).
+
+use std::sync::Arc;
+
+use cocoi::conv::Tensor;
+use cocoi::coordinator::{
+    ExecMode, InferenceRequest, InferenceServer, LocalCluster, MasterConfig, PoolOptions,
+    SchemeKind, ServerConfig, WorkerFaults, WorkerHandles,
+};
+use cocoi::model::graph::forward_local;
+use cocoi::model::{zoo, WeightStore};
+use cocoi::planner::SplitPolicy;
+use cocoi::runtime::FallbackProvider;
+use cocoi::util::Rng;
+
+fn inputs_for(model_name: &str, count: usize, seed: u64) -> Vec<Tensor> {
+    let model = zoo::model(model_name).unwrap();
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            let mut t = Tensor::zeros(model.input.0, model.input.1, model.input.2);
+            rng.fill_uniform_f32(&mut t.data, -1.0, 1.0);
+            t
+        })
+        .collect()
+}
+
+fn local_refs(model_name: &str, inputs: &[Tensor]) -> Vec<Tensor> {
+    let model = zoo::model(model_name).unwrap();
+    let weights = WeightStore::generate(&model, 42).unwrap();
+    inputs
+        .iter()
+        .map(|i| forward_local(&model, &weights, i).unwrap())
+        .collect()
+}
+
+fn base_config(scheme: SchemeKind, k: usize) -> MasterConfig {
+    MasterConfig {
+        scheme,
+        policy: SplitPolicy::Fixed(k),
+        mode: ExecMode::Pipelined,
+        ..Default::default()
+    }
+}
+
+fn spawn(
+    config: MasterConfig,
+    n: usize,
+    faults: Vec<WorkerFaults>,
+) -> (InferenceServer, WorkerHandles) {
+    let cluster = LocalCluster::spawn_with(
+        "tinyvgg",
+        n,
+        config,
+        Arc::new(FallbackProvider::new()),
+        faults,
+        PoolOptions { worker_slots: 1 },
+    )
+    .unwrap();
+    let (master, workers) = cluster.into_parts();
+    (InferenceServer::start(master, ServerConfig::default()), workers)
+}
+
+fn stop(server: InferenceServer, workers: WorkerHandles) {
+    let master = server.shutdown().unwrap();
+    master.shutdown();
+    workers.join().unwrap();
+}
+
+/// A black-hole stall on one worker — no Output, no Failed, link alive —
+/// is exactly the fault only the watchdog can catch: the hedge fires
+/// past the fitted/floored completion quantile, the copy races on a
+/// healthy worker, and the uncoded output stays BITWISE-equal to local
+/// (an encoded frame computes the same bytes on any worker).
+#[test]
+fn stalled_worker_is_hedged_bitwise() {
+    let inputs = inputs_for("tinyvgg", 2, 920);
+    let want = local_refs("tinyvgg", &inputs);
+    let mut faults: Vec<WorkerFaults> = (0..3).map(|_| WorkerFaults::none()).collect();
+    faults[0] = WorkerFaults::none().stalls_in(0..4096);
+    let (server, workers) = spawn(base_config(SchemeKind::Uncoded, 3), 3, faults);
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|i| server.submit(InferenceRequest::new(i.clone())).unwrap())
+        .collect();
+    for (h, want) in handles.into_iter().zip(&want) {
+        let (out, m) = h.wait().expect("request wedged behind a stalled worker");
+        assert_eq!(out.data, want.data, "hedged uncoded output not bitwise-local");
+        assert!(m.hedges() >= 1, "no hedge fired against the stalled worker");
+        assert_eq!(
+            m.fallbacks(),
+            0,
+            "the hedge should complete the round before the fallback timer"
+        );
+    }
+    let stats = server.stats();
+    assert_eq!(stats.completed, inputs.len() as u64);
+    assert_eq!(stats.failed, 0);
+    // The registry's event log agrees with the per-request metrics.
+    let master = server.shutdown().unwrap();
+    assert!(master.telemetry_json().req_f64("hedges").unwrap() >= 1.0);
+    master.shutdown();
+    workers.join().unwrap();
+}
+
+/// Total pool collapse: every worker stalls every round, so no hedge
+/// target can help (hedging is disabled to pin the fallback path
+/// alone). The master must compute the missing shards locally and
+/// complete the decode — bitwise on the uncoded path.
+#[test]
+fn pool_collapse_completes_via_local_fallback() {
+    let inputs = inputs_for("tinyvgg", 1, 921);
+    let want = local_refs("tinyvgg", &inputs);
+    let faults: Vec<WorkerFaults> = (0..3)
+        .map(|_| WorkerFaults::none().stalls_in(0..4096))
+        .collect();
+    let mut config = base_config(SchemeKind::Uncoded, 3);
+    config.hedge_quantile = 0.0;
+    let (server, workers) = spawn(config, 3, faults);
+    let h = server.submit(InferenceRequest::new(inputs[0].clone())).unwrap();
+    let (out, m) = h.wait().expect("request wedged on a fully-stalled pool");
+    assert_eq!(out.data, want[0].data, "fallback output not bitwise-local");
+    assert!(m.fallbacks() >= 1, "master never took a shard over locally");
+    let master = server.shutdown().unwrap();
+    assert!(master.telemetry_json().req_f64("fallbacks").unwrap() >= 1.0);
+    master.shutdown();
+    workers.join().unwrap();
+}
+
+/// Pool collapse under MDS: the locally-computed shards feed the same
+/// decoder a worker reply would, so the decoded output stays within
+/// decode tolerance of local inference.
+#[test]
+fn pool_collapse_mds_within_tolerance() {
+    let inputs = inputs_for("tinyvgg", 1, 924);
+    let want = local_refs("tinyvgg", &inputs);
+    let faults: Vec<WorkerFaults> = (0..4)
+        .map(|_| WorkerFaults::none().stalls_in(0..4096))
+        .collect();
+    let mut config = base_config(SchemeKind::Mds, 3);
+    config.hedge_quantile = 0.0;
+    let (server, workers) = spawn(config, 4, faults);
+    let h = server.submit(InferenceRequest::new(inputs[0].clone())).unwrap();
+    let (out, m) = h.wait().expect("MDS request wedged on a fully-stalled pool");
+    let err = out.max_abs_diff(&want[0]);
+    assert!(err < 2e-2, "MDS fallback output off local by {err}");
+    assert!(m.fallbacks() >= 1);
+    stop(server, workers);
+}
+
+/// No faults ⇒ no speculation: the watchdog's floor keeps ms-scale
+/// subtasks far below the hedge threshold, so a healthy run reports
+/// zero hedges and zero fallbacks (the no-false-positive contract).
+#[test]
+fn fault_free_run_never_speculates() {
+    let inputs = inputs_for("tinyvgg", 4, 922);
+    let want = local_refs("tinyvgg", &inputs);
+    let (server, workers) = spawn(
+        base_config(SchemeKind::Mds, 3),
+        4,
+        (0..4).map(|_| WorkerFaults::none()).collect(),
+    );
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|i| server.submit(InferenceRequest::new(i.clone())).unwrap())
+        .collect();
+    for (h, want) in handles.into_iter().zip(&want) {
+        let (out, m) = h.wait().unwrap();
+        let err = out.max_abs_diff(want);
+        assert!(err < 2e-2, "healthy run off local by {err}");
+        assert_eq!(m.hedges(), 0, "hedge fired on a healthy pool");
+        assert_eq!(m.fallbacks(), 0, "fallback fired on a healthy pool");
+    }
+    stop(server, workers);
+}
+
+/// Storm-cap accounting regression: the retry budget is per *round*
+/// (`retry_budget × subtasks`), not read off a coalesced part's metrics
+/// counter. A worker failing every round inside coalesced rounds burns
+/// one retry per round — far inside budget — and every merged request
+/// stays bitwise-correct with no fallback needed.
+#[test]
+fn coalesced_rounds_survive_persistent_failures() {
+    let inputs = inputs_for("tinyvgg", 8, 923);
+    let want = local_refs("tinyvgg", &inputs);
+    let mut faults: Vec<WorkerFaults> = (0..3).map(|_| WorkerFaults::none()).collect();
+    faults[0] = WorkerFaults::none().fails_in(0..4096);
+    let mut config = base_config(SchemeKind::Uncoded, 3);
+    config.coalesce = 4;
+    let (server, workers) = spawn(config, 3, faults);
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|i| server.submit(InferenceRequest::new(i.clone())).unwrap())
+        .collect();
+    for (h, want) in handles.into_iter().zip(&want) {
+        let (out, m) = h.wait().expect("coalesced request failed under persistent failures");
+        assert_eq!(out.data, want.data, "coalesced chaos output not bitwise-local");
+        assert!(m.redispatches() >= 1, "the failing worker was never retried");
+        assert_eq!(m.fallbacks(), 0, "retries within budget must not escalate");
+    }
+    assert_eq!(server.stats().completed, inputs.len() as u64);
+    stop(server, workers);
+}
+
+/// Budget exhaustion escalates instead of erroring: with a zero retry
+/// budget, a failed shard cannot be re-dispatched — the old engine
+/// bailed with "re-dispatch storm" — and is handed to the master-local
+/// fallback, so the request still completes bitwise.
+#[test]
+fn exhausted_retry_budget_escalates_to_fallback() {
+    let inputs = inputs_for("tinyvgg", 2, 925);
+    let want = local_refs("tinyvgg", &inputs);
+    let mut faults: Vec<WorkerFaults> = (0..3).map(|_| WorkerFaults::none()).collect();
+    faults[0] = WorkerFaults::none().fails_in(0..4096);
+    let mut config = base_config(SchemeKind::Uncoded, 3);
+    config.coalesce = 2;
+    config.retry_budget = 0;
+    let (server, workers) = spawn(config, 3, faults);
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|i| server.submit(InferenceRequest::new(i.clone())).unwrap())
+        .collect();
+    for (h, want) in handles.into_iter().zip(&want) {
+        let (out, m) = h.wait().expect("request failed instead of escalating to fallback");
+        assert_eq!(out.data, want.data, "escalated output not bitwise-local");
+        assert!(m.fallbacks() >= 1, "exhausted budget must escalate to the fallback");
+    }
+    stop(server, workers);
+}
