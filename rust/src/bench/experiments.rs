@@ -1071,6 +1071,191 @@ pub fn serving(scale: Scale) -> Result<()> {
     }
     table.print();
 
+    // -- sweep 3: live traced run through the real serving stack ------
+    // Everything above is the event-driven sim; this drives the actual
+    // LocalCluster + InferenceServer with the span recorder attached and
+    // faults injected, so the hedge-win / hedge-loss / fallback latency
+    // percentiles below come from the obs::hist histograms the engine
+    // fills on a real run. Two runs share the load:
+    //   A) one black-hole worker → the watchdog hedges every round
+    //      (hedge_win/hedge_loss samples, full span trees, the scrape);
+    //   B) total pool stall with hedging off → the master-local decode
+    //      fallback (fallback_latency samples). Its histograms are
+    //      MERGED into A's — the property that makes them aggregable
+    //      across masters.
+    // Artifacts land next to BENCH_serving.json: TRACE_serving.json
+    // (Chrome trace-event JSON, Perfetto-loadable) and
+    // SCRAPE_serving.prom (Prometheus text, schema-checked here).
+    let live = {
+        use crate::conv::Tensor;
+        use crate::coordinator::{
+            ExecMode, InferenceRequest, InferenceServer, LocalCluster, MasterConfig, PoolOptions,
+            SchemeKind, ServerConfig, WorkerFaults,
+        };
+        use crate::model::graph::forward_local;
+        use crate::model::WeightStore;
+        use crate::obs::trace::TraceHandle;
+        use crate::planner::SplitPolicy;
+        use crate::runtime::FallbackProvider;
+        use std::sync::Arc;
+
+        let live_model = zoo::model("tinyvgg")?;
+        let weights = WeightStore::generate(&live_model, 42)?;
+        let n_req = (scale.trials / 4).clamp(4, 8);
+        let mut rng = Rng::new(0x0B5E);
+        let inputs: Vec<Tensor> = (0..n_req)
+            .map(|_| {
+                let mut t = Tensor::zeros(live_model.input.0, live_model.input.1, live_model.input.2);
+                rng.fill_uniform_f32(&mut t.data, -1.0, 1.0);
+                t
+            })
+            .collect();
+        let refs: Vec<Tensor> = inputs
+            .iter()
+            .map(|i| forward_local(&live_model, &weights, i))
+            .collect::<Result<_>>()?;
+
+        // Run A: uncoded n=3, worker 0 stalls forever → every round is
+        // completed by a hedge racing past the fitted-quantile watchdog.
+        let trace = TraceHandle::new(16_384);
+        let mut faults: Vec<WorkerFaults> = (0..3).map(|_| WorkerFaults::none()).collect();
+        faults[0] = WorkerFaults::none().stalls_in(0..4096);
+        let cluster = LocalCluster::spawn_with(
+            "tinyvgg",
+            3,
+            MasterConfig {
+                scheme: SchemeKind::Uncoded,
+                policy: SplitPolicy::Fixed(3),
+                mode: ExecMode::Pipelined,
+                trace: Some(trace.clone()),
+                ..Default::default()
+            },
+            Arc::new(FallbackProvider::new()),
+            faults,
+            PoolOptions { worker_slots: 1 },
+        )?;
+        let (master, workers) = cluster.into_parts();
+        let hub = master.metrics_hub();
+        let server = InferenceServer::start(master, ServerConfig::default());
+        let handles: Vec<_> = inputs
+            .iter()
+            .map(|i| server.submit(InferenceRequest::new(i.clone())))
+            .collect::<std::result::Result<_, _>>()?;
+        for (h, want) in handles.into_iter().zip(&refs) {
+            let (out, _m) = h.wait()?;
+            // Uncoded shards are bitwise-reproducible on any worker, and
+            // tracing must not perturb the numerics.
+            anyhow::ensure!(
+                out.data == want.data,
+                "traced live run diverged from local inference"
+            );
+        }
+        let prom = server.scrape().to_prometheus();
+        let master = server.shutdown()?;
+        master.shutdown();
+        workers.join()?;
+        let mut hub = hub.snapshot();
+
+        // Run B: every worker stalls, hedging off → only the master's
+        // local decode fallback can finish the request.
+        let cluster = LocalCluster::spawn_with(
+            "tinyvgg",
+            3,
+            MasterConfig {
+                scheme: SchemeKind::Uncoded,
+                policy: SplitPolicy::Fixed(3),
+                mode: ExecMode::Pipelined,
+                hedge_quantile: 0.0,
+                ..Default::default()
+            },
+            Arc::new(FallbackProvider::new()),
+            (0..3).map(|_| WorkerFaults::none().stalls_in(0..4096)).collect(),
+            PoolOptions { worker_slots: 1 },
+        )?;
+        let (master, workers) = cluster.into_parts();
+        let hub_b = master.metrics_hub();
+        let server = InferenceServer::start(master, ServerConfig::default());
+        let h = server.submit(InferenceRequest::new(inputs[0].clone()))?;
+        let (out, _m) = h.wait()?;
+        anyhow::ensure!(out.data == refs[0].data, "fallback live run diverged from local");
+        let master = server.shutdown()?;
+        master.shutdown();
+        workers.join()?;
+        let hub_b = hub_b.snapshot();
+        hub.fallback_latency.merge(&hub_b.fallback_latency);
+        hub.sojourn.merge(&hub_b.sojourn);
+        hub.gauges.fallbacks += hub_b.gauges.fallbacks;
+
+        // Hard gates: the observability surface must actually have seen
+        // the reliability machinery fire, the span trees must be
+        // well-formed, and the scrape must pass the schema check.
+        anyhow::ensure!(hub.gauges.hedges >= 1, "live run fired no hedges");
+        anyhow::ensure!(
+            hub.hedge_win.count() + hub.hedge_loss.count() >= 1,
+            "no hedge outcome latency was recorded"
+        );
+        anyhow::ensure!(hub.gauges.fallbacks >= 1, "live run took no local fallback");
+        anyhow::ensure!(hub.fallback_latency.count() >= 1, "no fallback latency was recorded");
+        let viol = trace.violations();
+        anyhow::ensure!(viol.is_empty(), "trace invariant violations: {viol:?}");
+        let families = crate::obs::export::check_exposition(&prom)?;
+        anyhow::ensure!(
+            families == 24,
+            "serving scrape schema drifted: {families} families, expected 24"
+        );
+
+        let out_dir =
+            std::path::PathBuf::from(std::env::var("COCOI_BENCH_OUT").unwrap_or_else(|_| ".".into()));
+        let trace_path = out_dir.join("TRACE_serving.json");
+        trace.export_chrome().write_file(&trace_path)?;
+        let scrape_path = out_dir.join("SCRAPE_serving.prom");
+        std::fs::write(&scrape_path, &prom)?;
+
+        let mut table = Table::new(
+            &format!(
+                "Serving — live traced run (tinyvgg, {n_req}+1 requests): latency \
+                 percentiles from the mergeable obs::hist histograms"
+            ),
+            &["histogram", "count", "p50", "p95", "p99"],
+        );
+        for (label, hist) in [
+            ("queue_wait", &hub.queue_wait),
+            ("sojourn", &hub.sojourn),
+            ("hedge_win", &hub.hedge_win),
+            ("hedge_loss", &hub.hedge_loss),
+            ("fallback", &hub.fallback_latency),
+        ] {
+            table.row(vec![
+                label.to_string(),
+                format!("{}", hist.count()),
+                fmt_secs(hist.quantile(0.50)),
+                fmt_secs(hist.quantile(0.95)),
+                fmt_secs(hist.quantile(0.99)),
+            ]);
+        }
+        table.print();
+        println!(
+            "(live artifacts: trace -> {} [{} request trees, {} dropped], \
+             scrape -> {} [{families} families])",
+            trace_path.display(),
+            trace.requests().len(),
+            trace.dropped_requests(),
+            scrape_path.display(),
+        );
+
+        Json::obj(vec![
+            ("requests", Json::Num((n_req + 1) as f64)),
+            ("hedges", Json::Num(hub.gauges.hedges as f64)),
+            ("fallbacks", Json::Num(hub.gauges.fallbacks as f64)),
+            ("queue_wait_s", hub.queue_wait.to_json()),
+            ("sojourn_s", hub.sojourn.to_json()),
+            ("hedge_win_s", hub.hedge_win.to_json()),
+            ("hedge_loss_s", hub.hedge_loss.to_json()),
+            ("fallback_s", hub.fallback_latency.to_json()),
+        ])
+    };
+    json.set("live_traced", live);
+
     json.set("gate_pipelined_p95_le_barrier", Json::Bool(gate_ok));
     json.set("gate_coalesced_p95_le_uncoalesced", Json::Bool(coal_gate_ok));
     json.set("gate_hedged_p95_le_unhedged", Json::Bool(hedge_gate_ok));

@@ -83,6 +83,9 @@ pub(super) struct EngineRequest {
     /// deadline).
     pub(super) priority: u8,
     pub(super) deadline: Option<Instant>,
+    /// When the caller handed the request over (server submit / batch
+    /// seed). Queue-wait and sojourn measure from this stamp.
+    pub(super) submitted_at: Instant,
 }
 
 /// Where terminal request outcomes go: the batch wrapper collects them
@@ -162,10 +165,19 @@ struct RequestState {
     /// and fallback timers: a tight-deadline request speculates *early*
     /// instead of being served late.
     deadline: Option<Instant>,
+    /// Submission stamp (sojourn = delivery − submitted_at).
+    submitted_at: Instant,
+    /// Root span id of this request's trace tree (`None` = tracing off).
+    root_span: Option<u64>,
 }
 
 impl RequestState {
-    fn new(input: Tensor, deadline: Option<Instant>) -> RequestState {
+    fn new(
+        input: Tensor,
+        deadline: Option<Instant>,
+        submitted_at: Instant,
+        root_span: Option<u64>,
+    ) -> RequestState {
         let mut values = BTreeMap::new();
         values.insert("input".to_string(), input);
         RequestState {
@@ -174,6 +186,8 @@ impl RequestState {
             metrics: InferenceMetrics::default(),
             t_start: Instant::now(),
             deadline,
+            submitted_at,
+            root_span,
         }
     }
 }
@@ -186,6 +200,9 @@ struct ActivePart {
     decoder: Box<dyn coding::Decoder>,
     remainder: Option<Tensor>,
     lm: LayerMetrics,
+    /// This part's open `round` span in its request's trace tree
+    /// (`None` = tracing off).
+    span: Option<u64>,
 }
 
 /// One in-flight coded round: a distributed conv of one *or several
@@ -221,6 +238,10 @@ struct ActiveRound {
     t_dispatch: Instant,
     /// Master-local seconds already spent (remainder convs, all parts).
     t_local: f64,
+    /// (task, worker) → open `subtask` span id in the *lead* request's
+    /// trace tree. Empty when tracing is off. Hedge/retry dispatches add
+    /// entries; replies (and cancels at round finish) close them.
+    task_spans: HashMap<(usize, usize), u64>,
 }
 
 impl ActiveRound {
@@ -394,6 +415,7 @@ impl Master {
                 input: input.clone(),
                 priority: 0,
                 deadline: None,
+                submitted_at: Instant::now(),
             })
             .collect();
         let mut sink = BatchSink {
@@ -482,11 +504,31 @@ impl Master {
                 && (opts.max_concurrent == 0 || active.len() < opts.max_concurrent)
             {
                 let req = pending.pop().unwrap().req;
+                let now = Instant::now();
+                let wait = now.saturating_duration_since(req.submitted_at).as_secs_f64();
+                self.hub.lock().queue_wait.record(wait);
                 if let Some(err) = self.shed_decision(req.deadline) {
+                    // A shed request still gets a (tiny) trace tree, so a
+                    // traced run shows *why* nothing else was recorded.
+                    if let Some(tr) = &self.config.trace {
+                        let root = tr.begin_request(req.id, req.submitted_at);
+                        tr.instant(req.id, "shed", None, Some(wait), now);
+                        tr.end_request(req.id, root, now);
+                    }
+                    log::debug!("engine: req={} shed wait_secs={wait:.4}", req.id);
                     sink.deliver(req.id, Err(err));
                     continue;
                 }
-                active.insert(req.id, RequestState::new(req.input, req.deadline));
+                let root_span = self.config.trace.as_ref().map(|tr| {
+                    let root = tr.begin_request(req.id, req.submitted_at);
+                    tr.span_closed(req.id, root, "queue-wait", None, req.submitted_at, now);
+                    root
+                });
+                log::debug!("engine: req={} admitted wait_secs={wait:.4}", req.id);
+                active.insert(
+                    req.id,
+                    RequestState::new(req.input, req.deadline, req.submitted_at, root_span),
+                );
                 self.advance_request(req.id, &nodes, &mut active, &mut staged, sink)?;
             }
 
@@ -749,6 +791,11 @@ impl Master {
             }
             let mut orphaned: Vec<usize> = Vec::new();
             for &t in &held {
+                if let Some(tr) = &self.config.trace {
+                    if let Some(sid) = ar.task_spans.remove(&(t, wid)) {
+                        tr.span_end(ar.parts[0].request, sid, now);
+                    }
+                }
                 if ar.drop_holder(t, wid) {
                     orphaned.push(t);
                 }
@@ -794,8 +841,9 @@ impl Master {
                     );
                 }
                 let target = pick_recovery_target(worker_load, backoff, &pool, None, now);
+                let redispatched_at = Instant::now();
                 if let Some(rt) = self.round_log.get_mut(&round) {
-                    rt.dispatched_at[t] = Instant::now();
+                    rt.dispatched_at[t] = redispatched_at;
                 }
                 self.send_to(target, &ar.pr.frames[t]);
                 *worker_load.entry(target).or_insert(0) += 1;
@@ -805,9 +853,24 @@ impl Master {
                 for p in &mut ar.parts {
                     p.lm.redispatches += 1;
                 }
+                self.hub.lock().gauges.retries += 1;
+                if let Some(tr) = &self.config.trace {
+                    let lead = ar.parts[0].request;
+                    tr.instant(lead, "retry", Some(target), None, redispatched_at);
+                    if let Some(parent) = ar.parts[0].span {
+                        let sid = tr.span_start(
+                            lead,
+                            parent,
+                            &format!("task:{t}"),
+                            Some(target),
+                            redispatched_at,
+                        );
+                        ar.task_spans.insert((t, target), sid);
+                    }
+                }
                 log::warn!(
-                    "pipeline: task {t} of round {round} orphaned by dead worker \
-                     {wid}, re-dispatched to {target}"
+                    "pipeline: round={round} task={t} orphaned by dead worker={wid}, \
+                     re-dispatched to worker={target}"
                 );
             }
         }
@@ -868,16 +931,70 @@ impl Master {
                     let Some(ar) = rounds.get_mut(&round) else {
                         return Ok(()); // stale: round decoded + cancelled earlier
                     };
+                    let lead = ar.parts[0].request;
                     if ar.received.contains(&task_id) || !ar.outstanding.contains(&task_id) {
                         // A hedge race (or a master-local fallback) for
                         // this task already resolved: the telemetry
                         // above is the reply's whole value.
+                        if let Some(tr) = &self.config.trace {
+                            if let Some(sid) = ar.task_spans.remove(&(task_id, wid)) {
+                                tr.span_end(lead, sid, arrival);
+                            }
+                        }
                         for p in &mut ar.parts {
                             p.lm.stale_results += 1;
                         }
                         return Ok(());
                     }
                     ar.outstanding.retain(|&t| t != task_id);
+                    // Hedge outcome, observed *before* the race resolves:
+                    // the registry is scored from the primary worker's
+                    // perspective (a backup win is the primary's loss),
+                    // the histograms from the system's (a backup win is
+                    // latency the hedge bought). The task's dispatch
+                    // clock was restarted at hedge fire, so
+                    // arrival − dispatched_at is the race window.
+                    let was_hedged = ar.extra.contains_key(&task_id);
+                    if was_hedged {
+                        let primary = ar.assigned[task_id];
+                        let backup_won = wid != primary;
+                        let latency = self
+                            .round_log
+                            .get(&round)
+                            .and_then(|rt| rt.dispatched_at.get(task_id).copied())
+                            .map(|d| arrival.saturating_duration_since(d).as_secs_f64());
+                        if let Some(lat) = latency {
+                            let mut h = self.hub.lock();
+                            if backup_won {
+                                h.hedge_win.record(lat);
+                            } else {
+                                h.hedge_loss.record(lat);
+                            }
+                        }
+                        self.registry.note_reliability(
+                            if backup_won {
+                                EventKind::HedgeLost
+                            } else {
+                                EventKind::HedgeWon
+                            },
+                            primary,
+                            round,
+                        );
+                        let name = if backup_won { "hedge-won" } else { "hedge-lost" };
+                        if let Some(tr) = &self.config.trace {
+                            tr.instant(lead, name, Some(wid), latency, arrival);
+                        }
+                        log::debug!(
+                            "engine: req={lead} round={round} task={task_id} worker={wid} \
+                             {name} latency_secs={:.4}",
+                            latency.unwrap_or(f64::NAN)
+                        );
+                    }
+                    if let Some(tr) = &self.config.trace {
+                        if let Some(sid) = ar.task_spans.remove(&(task_id, wid)) {
+                            tr.span_end(lead, sid, arrival);
+                        }
+                    }
                     // Resolve the hedge race: cancel each losing holder
                     // unless it still holds other work of this round
                     // (Cancel is round-granular per worker).
@@ -948,6 +1065,11 @@ impl Master {
                 // never drops a task whose primary copy is still out.
                 if let Some(ar) = rounds.get_mut(&round) {
                     let t = task_id as usize;
+                    if let Some(tr) = &self.config.trace {
+                        if let Some(sid) = ar.task_spans.remove(&(t, wid)) {
+                            tr.span_end(ar.parts[0].request, sid, arrival);
+                        }
+                    }
                     if ar.outstanding.contains(&t) && ar.drop_holder(t, wid) {
                         ar.outstanding.retain(|&x| x != t);
                     }
@@ -962,6 +1084,11 @@ impl Master {
                 let Some(ar) = rounds.get_mut(&round) else {
                     return Ok(());
                 };
+                if let Some(tr) = &self.config.trace {
+                    if let Some(sid) = ar.task_spans.remove(&(task_id, wid)) {
+                        tr.span_end(ar.parts[0].request, sid, arrival);
+                    }
+                }
                 if ar.received.contains(&task_id) || !ar.outstanding.contains(&task_id) {
                     return Ok(()); // late loser of an already-resolved race
                 }
@@ -1008,8 +1135,9 @@ impl Master {
                     }
                     let target =
                         pick_recovery_target(worker_load, backoff, &pool, Some(wid), arrival);
+                    let redispatched_at = Instant::now();
                     if let Some(rt) = self.round_log.get_mut(&round) {
-                        rt.dispatched_at[task_id] = Instant::now();
+                        rt.dispatched_at[task_id] = redispatched_at;
                     }
                     self.send_to(target, &ar.pr.frames[task_id]);
                     *worker_load.entry(target).or_insert(0) += 1;
@@ -1019,9 +1147,24 @@ impl Master {
                     for p in &mut ar.parts {
                         p.lm.redispatches += 1;
                     }
+                    self.hub.lock().gauges.retries += 1;
+                    if let Some(tr) = &self.config.trace {
+                        let lead = ar.parts[0].request;
+                        tr.instant(lead, "retry", Some(target), None, redispatched_at);
+                        if let Some(parent) = ar.parts[0].span {
+                            let sid = tr.span_start(
+                                lead,
+                                parent,
+                                &format!("task:{task_id}"),
+                                Some(target),
+                                redispatched_at,
+                            );
+                            ar.task_spans.insert((task_id, target), sid);
+                        }
+                    }
                     log::debug!(
-                        "pipeline: task {task_id} of round {round} failed on \
-                         worker {wid}, re-dispatched to {target}"
+                        "pipeline: round={round} task={task_id} failed on worker={wid}, \
+                         re-dispatched to worker={target}"
                     );
                 }
             }
@@ -1059,6 +1202,13 @@ impl Master {
                 let last = nodes.last().unwrap();
                 let out = st.values.remove(&last.id).context("missing model output")?;
                 st.metrics.total_seconds = st.t_start.elapsed().as_secs_f64();
+                let now = Instant::now();
+                let sojourn = now.saturating_duration_since(st.submitted_at).as_secs_f64();
+                self.hub.lock().sojourn.record(sojourn);
+                if let (Some(tr), Some(root)) = (&self.config.trace, st.root_span) {
+                    tr.end_request(id, root, now);
+                }
+                log::debug!("engine: req={id} delivered sojourn_secs={sojourn:.4}");
                 sink.deliver(id, Ok((out, st.metrics)));
                 return Ok(());
             }
@@ -1179,6 +1329,13 @@ impl Master {
                 *worker_load.entry(w).or_insert(0) += 1;
                 assigned[t] = w;
             }
+            // Tracing needs the per-task stamps after log_round takes
+            // the vector; copy only on traced runs.
+            let dispatched_at_copy = if self.config.trace.is_some() {
+                dispatched_at.clone()
+            } else {
+                Vec::new()
+            };
             self.log_round(pr.round, pr.flops_per_task, pr.bytes_per_task, dispatched_at);
             // Master-local remainder pieces while workers run (one per
             // coalesced request).
@@ -1190,14 +1347,47 @@ impl Master {
                     Some(piece) => Some(self.provider.conv(&spec, piece, &pr.params.weights)?),
                     None => None,
                 };
+                // One `round` span per coalesced part, under its own
+                // request's root — every member of a coalesced round
+                // shows the layer window on its own track.
+                let span = self.config.trace.as_ref().and_then(|tr| {
+                    let root = active.get(&pp.request).and_then(|st| st.root_span)?;
+                    Some(tr.span_start(
+                        pp.request,
+                        root,
+                        &format!("round:{}", node.id),
+                        None,
+                        t_dispatch,
+                    ))
+                });
                 parts.push(ActivePart {
                     request: pp.request,
                     decoder: pr.scheme.decoder(),
                     remainder,
                     lm: pp.lm,
+                    span,
                 });
             }
             let t_local = t0.elapsed().as_secs_f64();
+            // Subtask dispatch spans live under the *lead* part's round
+            // span (one track carries the shared fan-out; duplicating it
+            // per coalesced request would only multiply identical bars).
+            let mut task_spans: HashMap<(usize, usize), u64> = HashMap::new();
+            if let Some(tr) = &self.config.trace {
+                if let Some(parent) = parts.first().and_then(|p| p.span) {
+                    let lead = parts[0].request;
+                    for (t, &w) in assigned.iter().enumerate() {
+                        let sid = tr.span_start(
+                            lead,
+                            parent,
+                            &format!("task:{t}"),
+                            Some(w),
+                            dispatched_at_copy[t],
+                        );
+                        task_spans.insert((t, w), sid);
+                    }
+                }
+            }
             let outstanding: Vec<usize> = (0..pr.frames.len()).collect();
             // Earliest deadline across the coalesced requests clamps the
             // round's hedge/fallback timers.
@@ -1220,6 +1410,7 @@ impl Master {
                     targets,
                     t_dispatch,
                     t_local,
+                    task_spans,
                 },
             );
         }
@@ -1264,11 +1455,32 @@ impl Master {
             for p in &mut ar.parts {
                 p.lm.cancelled += ar.outstanding.len();
             }
+            self.hub.lock().gauges.cancels += ar.outstanding.len() as u64;
+            if let Some(tr) = &self.config.trace {
+                tr.instant(
+                    ar.parts[0].request,
+                    "cancel",
+                    None,
+                    Some(ar.outstanding.len() as f64),
+                    Instant::now(),
+                );
+            }
             ar.outstanding.clear();
         }
         let t_workers = ar.t_dispatch.elapsed().as_secs_f64() - ar.t_local;
         let t_local_share = ar.t_local / ar.parts.len() as f64;
         self.retire_round(ar.pr.round);
+        self.hub.lock().t_workers.record(t_workers);
+        // Cancelled stragglers' dispatch spans never see a live reply;
+        // close them at the round boundary so the tree is sealed before
+        // the owning request can be delivered.
+        if let Some(tr) = &self.config.trace {
+            let now = Instant::now();
+            let lead = ar.parts[0].request;
+            for (_, sid) in ar.task_spans.drain() {
+                tr.span_end(lead, sid, now);
+            }
+        }
 
         let mut advanced = Vec::with_capacity(ar.parts.len());
         for mut part in std::mem::take(&mut ar.parts) {
@@ -1281,6 +1493,14 @@ impl Master {
             let t0 = Instant::now();
             let out = assemble_output(&ar.pr, decoded, part.remainder.take(), ar.relu)?;
             part.lm.t_local = t_local_share + t0.elapsed().as_secs_f64();
+            {
+                let mut h = self.hub.lock();
+                h.t_decode.record(part.lm.t_decode);
+                h.t_local.record(part.lm.t_local);
+            }
+            if let (Some(tr), Some(sid)) = (&self.config.trace, part.span) {
+                tr.span_end(part.request, sid, Instant::now());
+            }
 
             let id = part.request;
             let st = active.get_mut(&id).context("finished round for unknown request")?;
@@ -1409,8 +1629,30 @@ impl Master {
                             ar.assigned[t],
                             round,
                         );
+                        let done_at = Instant::now();
+                        let fb_latency =
+                            done_at.saturating_duration_since(dispatched).as_secs_f64();
+                        {
+                            let mut h = self.hub.lock();
+                            h.fallback_latency.record(fb_latency);
+                            h.gauges.fallbacks += 1;
+                        }
+                        if let Some(tr) = &self.config.trace {
+                            tr.instant(
+                                ar.parts[0].request,
+                                "local-fallback",
+                                Some(ar.assigned[t]),
+                                Some(fb_latency),
+                                done_at,
+                            );
+                        }
                         ar.outstanding.retain(|&x| x != t);
                         for holder in ar.take_holders(t) {
+                            if let Some(tr) = &self.config.trace {
+                                if let Some(sid) = ar.task_spans.remove(&(t, holder)) {
+                                    tr.span_end(ar.parts[0].request, sid, done_at);
+                                }
+                            }
                             let busy = ar.outstanding.iter().any(|&x| ar.holds(x, holder));
                             if !busy {
                                 self.send_to(holder, &ToWorker::Cancel { round }.encode());
@@ -1423,8 +1665,8 @@ impl Master {
                             ready = ready && r;
                         }
                         log::warn!(
-                            "watchdog: round {round} task {t} computed locally \
-                             (master fallback)"
+                            "watchdog: round={round} task={t} computed locally \
+                             (master fallback) latency_secs={fb_latency:.4}"
                         );
                         if ready {
                             completed = true;
@@ -1458,6 +1700,7 @@ impl Master {
                         for p in &mut ar.parts {
                             p.lm.hedges += 1;
                         }
+                        self.hub.lock().gauges.hedges += 1;
                         self.registry
                             .note_reliability(EventKind::Hedged, holder, round);
                         note_strike(backoff, holder, now);
@@ -1466,12 +1709,27 @@ impl Master {
                         // hedge-winner's telemetry sample measures the
                         // winning dispatch (same convention as failure
                         // re-dispatch).
+                        let hedged_at = Instant::now();
                         if let Some(rt) = self.round_log.get_mut(&round) {
-                            rt.dispatched_at[t] = Instant::now();
+                            rt.dispatched_at[t] = hedged_at;
+                        }
+                        if let Some(tr) = &self.config.trace {
+                            let lead = ar.parts[0].request;
+                            tr.instant(lead, "hedge-fired", Some(holder), None, hedged_at);
+                            if let Some(parent) = ar.parts[0].span {
+                                let sid = tr.span_start(
+                                    lead,
+                                    parent,
+                                    &format!("task:{t}"),
+                                    Some(target),
+                                    hedged_at,
+                                );
+                                ar.task_spans.insert((t, target), sid);
+                            }
                         }
                         log::info!(
-                            "watchdog: round {round} task {t} overdue on worker \
-                             {holder}, hedged to {target}"
+                            "watchdog: round={round} task={t} overdue on worker={holder}, \
+                             hedged to worker={target}"
                         );
                     }
                 }
@@ -1503,6 +1761,28 @@ impl Master {
             let chunks = self.compute_task_locally(&ar.pr, t)?;
             self.registry
                 .note_reliability(EventKind::LocalFallback, ar.assigned[t], round);
+            let done_at = Instant::now();
+            let fb_latency = self
+                .round_log
+                .get(&round)
+                .and_then(|rt| rt.dispatched_at.get(t).copied())
+                .map(|d| done_at.saturating_duration_since(d).as_secs_f64());
+            {
+                let mut h = self.hub.lock();
+                if let Some(lat) = fb_latency {
+                    h.fallback_latency.record(lat);
+                }
+                h.gauges.fallbacks += 1;
+            }
+            if let Some(tr) = &self.config.trace {
+                tr.instant(
+                    ar.parts[0].request,
+                    "local-fallback",
+                    Some(ar.assigned[t]),
+                    fb_latency,
+                    done_at,
+                );
+            }
             for (p, chunk) in ar.parts.iter_mut().zip(chunks) {
                 p.decoder.add(t, chunk);
                 p.lm.fallbacks += 1;
@@ -1530,6 +1810,7 @@ mod tests {
             input: Tensor::zeros(1, 1, 1),
             priority,
             deadline,
+            submitted_at: Instant::now(),
         })
     }
 

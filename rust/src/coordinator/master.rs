@@ -17,6 +17,8 @@ use crate::conv::{SplitPlan, Tensor};
 use crate::latency::SystemProfile;
 use crate::model::graph::execute_simple_op;
 use crate::model::{zoo, ModelPlan, ModelSpec, Node, Op, WeightStore};
+use crate::obs::trace::TraceHandle;
+use crate::obs::MetricsHub;
 use crate::planner::SplitPolicy;
 use crate::runtime::ConvProvider;
 use crate::telemetry::{CapacityRegistry, EventKind, ReplanConfig, Replanner, TelemetryConfig};
@@ -180,6 +182,12 @@ pub struct MasterConfig {
     /// the serving contract is that an admitted request never errors;
     /// turning it off restores the old fail-fast behavior.
     pub local_fallback: bool,
+    /// Opt-in span tracing (`cocoi infer --trace out.json`): when set,
+    /// the engine records a span tree per request plus pool-level events
+    /// into this bounded recorder. `None` (the default) costs one branch
+    /// per would-be emit site and allocates nothing — outputs are
+    /// bitwise identical either way (`rust/tests/obs.rs`).
+    pub trace: Option<TraceHandle>,
 }
 
 impl Default for MasterConfig {
@@ -200,6 +208,7 @@ impl Default for MasterConfig {
             hedge_quantile: 0.99,
             retry_budget: 4,
             local_fallback: true,
+            trace: None,
         }
     }
 }
@@ -261,6 +270,9 @@ pub struct Master {
     pub(super) replanner: Replanner,
     /// Recent rounds' dispatch bookkeeping (see [`RoundTelemetry`]).
     pub(super) round_log: std::collections::BTreeMap<u64, RoundTelemetry>,
+    /// Always-on latency histograms + pool gauges, shared with the
+    /// serving front-end's scrape (see [`Master::metrics_hub`]).
+    pub(super) hub: MetricsHub,
 }
 
 /// Forward one link's frames into the shared event channel, tagging the
@@ -503,8 +515,10 @@ impl Master {
             registry,
             replanner,
             round_log: std::collections::BTreeMap::new(),
+            hub: MetricsHub::new(),
         };
         master.setup_workers(model_name)?;
+        master.refresh_pool_gauges();
         Ok(master)
     }
 
@@ -551,6 +565,7 @@ impl Master {
             registry,
             replanner,
             round_log: std::collections::BTreeMap::new(),
+            hub: MetricsHub::new(),
         })
     }
 
@@ -654,6 +669,10 @@ impl Master {
         );
         self.registry.admit(id);
         self.replanner.force();
+        if let Some(tr) = &self.config.trace {
+            tr.pool_instant("joined", Some(id), Instant::now());
+        }
+        self.refresh_pool_gauges();
     }
 
     /// Evict a worker whose link died. Idempotent (link-death events can
@@ -666,6 +685,10 @@ impl Master {
         log::warn!("worker {id}: link down; evicted from pool");
         self.registry.evict(id);
         self.replanner.force();
+        if let Some(tr) = &self.config.trace {
+            tr.pool_instant("evicted", Some(id), Instant::now());
+        }
+        self.refresh_pool_gauges();
         true
     }
 
@@ -698,7 +721,11 @@ impl Master {
             }
             self.registry.retire(id);
             self.replanner.force();
+            if let Some(tr) = &self.config.trace {
+                tr.pool_instant("retired", Some(id), Instant::now());
+            }
         }
+        self.refresh_pool_gauges();
     }
 
     /// A sender into the master's event channel — the serving
@@ -718,6 +745,26 @@ impl Master {
     /// The live capacity registry (telemetry dumps, tests).
     pub fn registry(&self) -> &CapacityRegistry {
         &self.registry
+    }
+
+    /// A clone of the always-on metrics hub. The serving front-end grabs
+    /// one before the master moves onto the engine thread, so `scrape()`
+    /// reads the same histograms the engine records into.
+    pub fn metrics_hub(&self) -> MetricsHub {
+        self.hub.clone()
+    }
+
+    /// Mirror pool membership + round progress into the hub's gauges.
+    pub(super) fn refresh_pool_gauges(&self) {
+        let mut h = self.hub.lock();
+        h.gauges.members = self.workers.len();
+        h.gauges.healthy = if self.workers.is_empty() {
+            0
+        } else {
+            self.registry.healthy_count().min(self.workers.len())
+        };
+        h.gauges.round = self.round;
+        h.gauges.plan_switches = self.replanner.switches as u64;
     }
 
     /// Telemetry dump: fitted per-worker capacities, quarantine log,
@@ -753,6 +800,8 @@ impl Master {
             ("adaptive", Json::Bool(self.config.adaptive)),
             ("plan_switches", Json::Num(self.replanner.switches as f64)),
             ("hedges", Json::Num(count(EventKind::Hedged))),
+            ("hedge_wins", Json::Num(count(EventKind::HedgeWon))),
+            ("hedge_losses", Json::Num(count(EventKind::HedgeLost))),
             ("fallbacks", Json::Num(count(EventKind::LocalFallback))),
             ("plan", Json::Arr(plan)),
             ("members", Json::Arr(members)),
@@ -1194,6 +1243,12 @@ impl Master {
             })
             .collect();
         let t_encode = t0.elapsed().as_secs_f64() / n_req as f64;
+        {
+            let mut h = self.hub.lock();
+            h.t_split.record(t_split);
+            h.t_encode.record(t_encode);
+            h.gauges.round = round;
+        }
 
         let parts: Vec<PreparedPart> = requests
             .iter()
@@ -1467,6 +1522,12 @@ impl Master {
         let out = assemble_output(&pr, decoded, remainder, relu)?;
         t_local += t0.elapsed().as_secs_f64();
         lm.t_local = t_local;
+        {
+            let mut h = self.hub.lock();
+            h.t_workers.record(lm.t_workers);
+            h.t_decode.record(lm.t_decode);
+            h.t_local.record(lm.t_local);
+        }
         self.retire_round(round);
         // Barrier mode runs one round at a time, so once this round
         // decodes no retiring worker holds work we still need — any

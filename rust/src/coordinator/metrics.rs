@@ -89,6 +89,7 @@ impl LayerMetrics {
             ("t_local", Json::Num(self.t_local)),
             ("failures", Json::Num(self.failures as f64)),
             ("redispatches", Json::Num(self.redispatches as f64)),
+            ("stale_results", Json::Num(self.stale_results as f64)),
             ("cancelled", Json::Num(self.cancelled as f64)),
             ("hedges", Json::Num(self.hedges as f64)),
             ("fallbacks", Json::Num(self.fallbacks as f64)),
@@ -187,10 +188,14 @@ mod tests {
             t_workers: 0.9,
             t_decode: 0.03,
             t_local: 0.04,
+            stale_results: 3,
             ..Default::default()
         };
         assert!((l.total() - 1.0).abs() < 1e-12);
         assert!((l.coding_share() - 0.05).abs() < 1e-12);
+        // Every maintained counter must survive the JSON emit —
+        // `stale_results` used to be silently dropped here.
+        assert_eq!(l.to_json().req_f64("stale_results").unwrap(), 3.0);
         let m = InferenceMetrics {
             layers: vec![l],
             total_seconds: 1.2,
@@ -198,6 +203,7 @@ mod tests {
         assert!((m.coding_seconds() - 0.05).abs() < 1e-12);
         assert!(m.table().contains("conv2"));
         assert!(m.to_json().to_string_compact().contains("t_encode"));
+        assert!(m.to_json().to_string_compact().contains("stale_results"));
     }
 
     #[test]
@@ -211,6 +217,7 @@ mod tests {
             ..Default::default()
         };
         let j = l.to_json();
+        assert_eq!(j.req_f64("stale_results").unwrap(), 0.0);
         let pw = j.get("per_worker").as_arr().unwrap();
         assert_eq!(pw.len(), 2);
         assert_eq!(pw[0].req_f64("worker").unwrap(), 1.0);

@@ -102,6 +102,9 @@ impl LocalCluster {
             links.push((Box::new(mtx), Box::new(mrx)));
             let (wtx, wrx) = split_inproc(worker_side);
             let provider = provider.clone();
+            // In-proc workers share the master's span recorder, so slot
+            // occupancy lands on the same timeline as the request trees.
+            let trace = config.trace.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("worker-{i}"))
@@ -115,6 +118,7 @@ impl LocalCluster {
                                 faults: f,
                                 rng_seed: 0xC0C0 + i as u64,
                                 slots: opts.worker_slots,
+                                trace,
                             },
                         )
                     })?,

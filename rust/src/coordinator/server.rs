@@ -30,6 +30,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::conv::Tensor;
+use crate::obs::{export, MetricsHub};
 
 use super::engine::{EngineRequest, EngineSink, StreamOptions};
 use super::master::{ExecMode, Master, MasterEvent};
@@ -242,6 +243,9 @@ pub(super) struct ServerRequest {
     pub(super) input: Tensor,
     pub(super) priority: u8,
     pub(super) deadline: Option<Instant>,
+    /// Stamped in `submit`; the engine's queue-wait and sojourn
+    /// histograms (and the trace root span) measure from here.
+    pub(super) submitted_at: Instant,
     /// Terminal result + the engine-stamped completion instant, so
     /// sojourn measurements don't depend on when the caller polls.
     reply: mpsc::Sender<(ServeResult, Instant)>,
@@ -272,6 +276,7 @@ impl EngineSink for ServerSink {
             input,
             priority,
             deadline,
+            submitted_at,
             reply,
             shared: _,
         } = req;
@@ -281,6 +286,7 @@ impl EngineSink for ServerSink {
             input,
             priority,
             deadline,
+            submitted_at,
         }
     }
 
@@ -386,6 +392,9 @@ pub struct InferenceServer {
     shared: Arc<Shared>,
     capacity: usize,
     next_id: AtomicU64,
+    /// The master's metrics hub, captured before the master moves onto
+    /// the engine thread — `scrape()` reads it live, no engine round-trip.
+    hub: MetricsHub,
     engine: Option<std::thread::JoinHandle<Result<Master>>>,
 }
 
@@ -397,6 +406,7 @@ impl InferenceServer {
     pub fn start(master: Master, config: ServerConfig) -> InferenceServer {
         let shared = Arc::new(Shared::new());
         let tx = master.event_sender();
+        let hub = master.metrics_hub();
         let max_concurrent = if master.config().mode == ExecMode::RoundBarrier {
             1
         } else {
@@ -448,6 +458,7 @@ impl InferenceServer {
             shared,
             capacity: config.queue_capacity.max(1),
             next_id: AtomicU64::new(0),
+            hub,
             engine: Some(engine),
         }
     }
@@ -475,9 +486,11 @@ impl InferenceServer {
             input: req.input,
             priority: req.priority,
             deadline: req.deadline.map(|d| submitted_at + d),
+            submitted_at,
             reply,
             shared: self.shared.clone(),
         };
+        log::debug!("server: req={id} submitted priority={}", sreq.priority);
         if self.tx.send(MasterEvent::Submit(sreq)).is_err() {
             // Engine gone; roll the admission back.
             let mut st = self.shared.state.lock().unwrap();
@@ -498,6 +511,47 @@ impl InferenceServer {
     /// root cause is logged at `error` level when it happens.
     pub fn failure(&self) -> Option<String> {
         self.shared.state.lock().unwrap().dead_reason.clone()
+    }
+
+    /// One unified metrics snapshot: server admission counters plus the
+    /// engine/master hub (latency histograms + pool gauges), ready to
+    /// render as Prometheus text exposition (`.to_prometheus()`) or JSON
+    /// (`.to_json()`). Live — callable while requests are in flight.
+    pub fn scrape(&self) -> export::Snapshot {
+        let st = self.stats();
+        let mut snap = export::Snapshot::new();
+        snap.counter(
+            "cocoi_server_submitted_total",
+            "Requests accepted by submit().",
+            st.submitted as f64,
+        )
+        .counter(
+            "cocoi_server_completed_total",
+            "Requests delivered successfully.",
+            st.completed as f64,
+        )
+        .counter(
+            "cocoi_server_shed_total",
+            "Requests shed at dispatch (deadline).",
+            st.shed as f64,
+        )
+        .counter(
+            "cocoi_server_failed_total",
+            "Admitted requests terminated abnormally.",
+            st.failed as f64,
+        )
+        .counter(
+            "cocoi_server_rejected_queue_full_total",
+            "Submissions refused by backpressure.",
+            st.rejected_queue_full as f64,
+        )
+        .gauge(
+            "cocoi_server_open_requests",
+            "Admitted but not yet delivered.",
+            st.open as f64,
+        );
+        self.hub.export_into(&mut snap);
+        snap
     }
 
     pub fn stats(&self) -> ServerStats {

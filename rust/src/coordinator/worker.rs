@@ -33,6 +33,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use anyhow::Result;
 
 use crate::model::{zoo, WeightStore};
+use crate::obs::trace::TraceHandle;
 use crate::runtime::{ConvProvider, PackedWeights, Scratch};
 use crate::transport::{FrameRx, FrameTx};
 use crate::util::Rng;
@@ -52,6 +53,10 @@ pub struct WorkerConfig {
     /// payload-exact at any setting — only completion *order* can
     /// change.
     pub slots: usize,
+    /// Span recorder for executor slot occupancy (in-proc pools share
+    /// the master's handle via `MasterConfig::trace`). `None` — the
+    /// default — records nothing and costs one branch per subtask.
+    pub trace: Option<TraceHandle>,
 }
 
 /// Everything `Setup` loads, shared read-only with the executor threads.
@@ -305,6 +310,7 @@ fn run_worker_core(
         let err_tx = queue_tx.clone();
         let provider = config.provider.clone();
         let faults = config.faults.clone();
+        let trace = config.trace.clone();
         let id = config.id;
         // Slot 0 inherits the worker's seed verbatim, so a 1-slot
         // executor samples the exact fault sequence the old sequential
@@ -342,8 +348,23 @@ fn run_worker_core(
                             }
                             continue;
                         }
-                        match execute_order(&order, &model, &*provider, &faults, &mut scratch, &mut rng, id)
-                        {
+                        let exec_started = std::time::Instant::now();
+                        let outcome = execute_order(
+                            &order, &model, &*provider, &faults, &mut scratch, &mut rng, id,
+                        );
+                        // Slot occupancy: one pool-level span per executed
+                        // order (stalls show as near-zero bars going
+                        // silent; the master-side subtask span keeps
+                        // running — that gap IS the straggler signature).
+                        if let Some(tr) = &trace {
+                            tr.pool_span(
+                                &format!("exec r{} t{}", order.round, order.task_id),
+                                Some(id),
+                                exec_started,
+                                std::time::Instant::now(),
+                            );
+                        }
+                        match outcome {
                             Ok(Some(reply)) => {
                                 // A failed send means the master has shut
                                 // down while this worker was draining
@@ -580,6 +601,7 @@ mod tests {
                     faults,
                     rng_seed: 1,
                     slots,
+                    trace: None,
                 },
             )
             .unwrap();
@@ -904,6 +926,7 @@ mod tests {
                     faults: WorkerFaults::none(),
                     rng_seed: 1,
                     slots: 2,
+                    trace: None,
                 },
             )
         });

@@ -27,6 +27,7 @@
 //! * [`transport`] — in-proc and TCP transports with a binary codec.
 //! * [`coordinator`] — the master/worker pipeline with fault injection.
 //! * [`telemetry`] — online capacity estimation + adaptive replanning.
+//! * [`obs`] — span tracing, mergeable histograms, metrics scrape.
 //! * [`sim`] — calibrated discrete-event simulator for the paper figures.
 //! * [`bench`] — shared experiment drivers for `cargo bench` targets.
 
@@ -36,6 +37,7 @@ pub mod conv;
 pub mod coordinator;
 pub mod latency;
 pub mod model;
+pub mod obs;
 pub mod planner;
 pub mod runtime;
 pub mod sim;

@@ -18,6 +18,9 @@
 //!              [--hedge-quantile Q]                 # watchdog hedge quantile (0 = no hedging)
 //!              [--retry-budget B]                   # extra dispatches per round = B x subtasks
 //!              [--local-fallback on|off]            # master computes undeliverable shards
+//!              [--trace PATH]                       # record span trees, write Chrome trace JSON
+//!              [--trace-cap N]                      # trace ring capacity in spans (default 8192)
+//!              [--metrics PATH]                     # write a Prometheus text scrape after the runs
 //! cocoi worker --listen 0.0.0.0:9090 [--pjrt] [--threads T] [--slots S]   # TCP worker process
 //! cocoi worker --connect host:9095 [--name N] [--model M]                 # announce to a running master
 //!              [--retry-initial-ms 200] [--retry-max-ms 5000] [--retries 0]  # reconnect backoff (0 = forever)
@@ -151,6 +154,16 @@ fn cmd_infer(args: &Args) -> Result<()> {
         (0..n).map(|_| WorkerFaults::none()).collect()
     };
 
+    // `--trace PATH` turns the span recorder on; the handle is shared
+    // with the master (and, for in-proc pools, the workers) and drained
+    // into Chrome trace-event JSON after the runs.
+    let trace_path = args.get("trace").map(std::path::PathBuf::from);
+    let trace_cap = args.get_usize("trace-cap", 8192)?;
+    let trace_handle = trace_path
+        .as_ref()
+        .map(|_| cocoi::obs::trace::TraceHandle::new(trace_cap));
+    let metrics_path = args.get("metrics").map(std::path::PathBuf::from);
+
     let config = MasterConfig {
         scheme,
         policy: match args.get("k") {
@@ -172,6 +185,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
             Some("off") | Some("false") | Some("0") => false,
             Some(v) => bail!("--local-fallback {v}: expected on|off"),
         },
+        trace: trace_handle.clone(),
         ..Default::default()
     };
     let telemetry_path = args.get("telemetry").map(std::path::PathBuf::from);
@@ -213,6 +227,27 @@ fn cmd_infer(args: &Args) -> Result<()> {
         master = run_stream(master, &model_name, args)?;
     } else {
         run_inferences(&mut master, &model_name, runs)?;
+        // The streamed path scrapes through the server front-end (which
+        // adds its own counters); batch runs scrape the hub directly.
+        if let Some(path) = &metrics_path {
+            let mut snap = cocoi::obs::export::Snapshot::new();
+            master.metrics_hub().export_into(&mut snap);
+            std::fs::write(path, snap.to_prometheus())
+                .with_context(|| format!("writing {}", path.display()))?;
+            println!("metrics scrape -> {}", path.display());
+        }
+    }
+    if let (Some(path), Some(tr)) = (trace_path.as_deref(), trace_handle.as_ref()) {
+        tr.export_chrome().write_file(path)?;
+        println!(
+            "trace -> {} ({} request trees kept, {} dropped; load in Perfetto / chrome://tracing)",
+            path.display(),
+            tr.requests().len(),
+            tr.dropped_requests()
+        );
+        for v in tr.violations() {
+            log::warn!("trace invariant violated: {v}");
+        }
     }
     dump_telemetry(&master, telemetry_path.as_deref())?;
     master.shutdown();
@@ -305,6 +340,12 @@ fn run_stream(
         "server: {} submitted, {} completed, {} shed, {} failed, {} queue-full",
         stats.submitted, stats.completed, stats.shed, stats.failed, stats.rejected_queue_full
     );
+    if let Some(path) = args.get("metrics") {
+        let path = std::path::Path::new(path);
+        std::fs::write(path, server.scrape().to_prometheus())
+            .with_context(|| format!("writing {}", path.display()))?;
+        println!("metrics scrape -> {}", path.display());
+    }
     server.shutdown()
 }
 
@@ -363,6 +404,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
                 faults: WorkerFaults::none(),
                 rng_seed: 0xDEC0DE,
                 slots,
+                trace: None,
             },
         )
     })
@@ -408,6 +450,7 @@ fn worker_announce_loop(
                 faults: WorkerFaults::none(),
                 rng_seed: 0xDEC0DE,
                 slots,
+                trace: None,
             },
             &opts,
         )?;

@@ -1,0 +1,265 @@
+//! The scrapeable metrics surface: one [`Snapshot`] of counters, gauges,
+//! and histograms rendered as Prometheus text exposition *and* as JSON.
+//!
+//! `obs` stays dependency-free: a snapshot is a flat list of named metric
+//! families, and the coordinator layers (`InferenceServer::scrape`,
+//! `Master::telemetry_json`) assemble one from their own state. Names
+//! follow Prometheus conventions (`cocoi_` prefix, `_total` counters,
+//! `_seconds` histograms); [`check_exposition`] is the hard schema check
+//! CI runs against every emitted scrape — exactly one `# TYPE` per
+//! family, cumulative bucket counts monotone, `_count` matching the
+//! `+Inf` bucket.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+use super::hist::LogHistogram;
+
+#[derive(Clone, Debug)]
+struct Family<T> {
+    name: String,
+    help: String,
+    value: T,
+}
+
+/// One coherent scrape of the system: counters, gauges, histograms.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    counters: Vec<Family<f64>>,
+    gauges: Vec<Family<f64>>,
+    hists: Vec<Family<LogHistogram>>,
+}
+
+impl Snapshot {
+    pub fn new() -> Snapshot {
+        Snapshot::default()
+    }
+
+    /// Add a monotone counter family (name should end in `_total`).
+    pub fn counter(&mut self, name: &str, help: &str, value: f64) -> &mut Snapshot {
+        self.counters.push(Family {
+            name: name.to_string(),
+            help: help.to_string(),
+            value,
+        });
+        self
+    }
+
+    /// Add a gauge family (instantaneous value).
+    pub fn gauge(&mut self, name: &str, help: &str, value: f64) -> &mut Snapshot {
+        self.gauges.push(Family {
+            name: name.to_string(),
+            help: help.to_string(),
+            value,
+        });
+        self
+    }
+
+    /// Add a histogram family (name should end in `_seconds`).
+    pub fn histogram(&mut self, name: &str, help: &str, hist: &LogHistogram) -> &mut Snapshot {
+        self.hists.push(Family {
+            name: name.to_string(),
+            help: help.to_string(),
+            value: hist.clone(),
+        });
+        self
+    }
+
+    /// Prometheus text exposition format (version 0.0.4).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for f in &self.counters {
+            out.push_str(&format!("# HELP {} {}\n", f.name, f.help));
+            out.push_str(&format!("# TYPE {} counter\n", f.name));
+            out.push_str(&format!("{} {}\n", f.name, fmt_num(f.value)));
+        }
+        for f in &self.gauges {
+            out.push_str(&format!("# HELP {} {}\n", f.name, f.help));
+            out.push_str(&format!("# TYPE {} gauge\n", f.name));
+            out.push_str(&format!("{} {}\n", f.name, fmt_num(f.value)));
+        }
+        for f in &self.hists {
+            out.push_str(&format!("# HELP {} {}\n", f.name, f.help));
+            out.push_str(&format!("# TYPE {} histogram\n", f.name));
+            for (le, cum) in f.value.cumulative_buckets() {
+                out.push_str(&format!("{}_bucket{{le=\"{}\"}} {}\n", f.name, fmt_num(le), cum));
+            }
+            out.push_str(&format!("{}_bucket{{le=\"+Inf\"}} {}\n", f.name, f.value.count()));
+            out.push_str(&format!("{}_sum {}\n", f.name, fmt_num(f.value.sum())));
+            out.push_str(&format!("{}_count {}\n", f.name, f.value.count()));
+        }
+        out
+    }
+
+    /// The same snapshot as JSON (quantile summaries instead of buckets).
+    pub fn to_json(&self) -> Json {
+        let fam = |fs: &[Family<f64>]| -> Json {
+            Json::obj(fs.iter().map(|f| (f.name.as_str(), Json::Num(f.value))).collect())
+        };
+        Json::obj(vec![
+            ("counters", fam(&self.counters)),
+            ("gauges", fam(&self.gauges)),
+            (
+                "histograms",
+                Json::obj(
+                    self.hists
+                        .iter()
+                        .map(|f| (f.name.as_str(), f.value.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Family names in emit order (tests pin stability against this).
+    pub fn family_names(&self) -> Vec<String> {
+        self.counters
+            .iter()
+            .map(|f| f.name.clone())
+            .chain(self.gauges.iter().map(|f| f.name.clone()))
+            .chain(self.hists.iter().map(|f| f.name.clone()))
+            .collect()
+    }
+}
+
+/// Render a float the exposition way: integers without a fraction, other
+/// values in shortest round-trip form.
+fn fmt_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Hard schema check for an emitted exposition: every sample line belongs
+/// to a family with exactly one `# TYPE`, histogram bucket counts are
+/// cumulative-monotone with ascending `le` edges, and `_count` equals the
+/// `+Inf` bucket. Returns the number of families on success.
+pub fn check_exposition(text: &str) -> Result<usize> {
+    use std::collections::BTreeMap;
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let (Some(name), Some(ty)) = (it.next(), it.next()) else {
+                bail!("malformed TYPE line: {line}");
+            };
+            if types.insert(name.to_string(), ty.to_string()).is_some() {
+                bail!("duplicate # TYPE for family {name}");
+            }
+        }
+    }
+    if types.is_empty() {
+        bail!("no # TYPE lines");
+    }
+    // Histogram structure: walk buckets per family.
+    for (name, ty) in types.iter().filter(|(_, t)| t.as_str() == "histogram") {
+        let bucket_prefix = format!("{name}_bucket{{le=\"");
+        let mut last_le = f64::NEG_INFINITY;
+        let mut last_cum: i64 = -1;
+        let mut inf_count: Option<i64> = None;
+        let mut count: Option<i64> = None;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix(&bucket_prefix) {
+                let Some((le_str, cnt_str)) = rest.split_once("\"}") else {
+                    bail!("malformed bucket line: {line}");
+                };
+                let cum: i64 = cnt_str.trim().parse()?;
+                if le_str == "+Inf" {
+                    inf_count = Some(cum);
+                } else {
+                    let le: f64 = le_str.parse()?;
+                    if le <= last_le {
+                        bail!("{name}: bucket edges not ascending at le={le}");
+                    }
+                    last_le = le;
+                }
+                if cum < last_cum {
+                    bail!("{name}: bucket counts not monotone at {line}");
+                }
+                last_cum = cum;
+            } else if let Some(rest) = line.strip_prefix(&format!("{name}_count ")) {
+                count = Some(rest.trim().parse()?);
+            }
+        }
+        match (inf_count, count) {
+            (Some(i), Some(c)) if i == c => {}
+            (i, c) => bail!("{name}: +Inf bucket {i:?} != _count {c:?}"),
+        }
+    }
+    // Every sample line's family must have a TYPE.
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some(metric) = line.split([' ', '{']).next() else {
+            continue;
+        };
+        let family = metric
+            .strip_suffix("_bucket")
+            .or_else(|| metric.strip_suffix("_sum"))
+            .or_else(|| metric.strip_suffix("_count"))
+            .unwrap_or(metric);
+        if !types.contains_key(family) && !types.contains_key(metric) {
+            bail!("sample {metric} has no # TYPE");
+        }
+    }
+    Ok(types.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Snapshot {
+        let mut h = LogHistogram::new();
+        for i in 1..=50 {
+            h.record(i as f64 * 1e-3);
+        }
+        let mut s = Snapshot::new();
+        s.counter("cocoi_requests_submitted_total", "Requests accepted.", 50.0)
+            .gauge("cocoi_pool_members", "Current pool size.", 4.0)
+            .histogram("cocoi_sojourn_seconds", "End-to-end sojourn.", &h);
+        s
+    }
+
+    #[test]
+    fn exposition_passes_schema_check() {
+        let s = demo();
+        let text = s.to_prometheus();
+        assert!(text.contains("# TYPE cocoi_requests_submitted_total counter"));
+        assert!(text.contains("# TYPE cocoi_sojourn_seconds histogram"));
+        assert!(text.contains("cocoi_sojourn_seconds_bucket{le=\"+Inf\"} 50"));
+        assert!(text.contains("cocoi_sojourn_seconds_count 50"));
+        assert_eq!(check_exposition(&text).unwrap(), 3);
+    }
+
+    #[test]
+    fn schema_check_rejects_duplicates_and_tears() {
+        let s = demo();
+        let good = s.to_prometheus();
+        let dup = format!("{good}# TYPE cocoi_pool_members gauge\n");
+        assert!(check_exposition(&dup).is_err(), "duplicate TYPE accepted");
+        let untyped = format!("{good}mystery_metric 3\n");
+        assert!(check_exposition(&untyped).is_err(), "untyped sample accepted");
+        let torn = good.replace("cocoi_sojourn_seconds_count 50", "cocoi_sojourn_seconds_count 49");
+        assert!(check_exposition(&torn).is_err(), "+Inf/_count mismatch accepted");
+        assert!(check_exposition("").is_err(), "empty scrape accepted");
+    }
+
+    #[test]
+    fn json_mirror_has_all_families() {
+        let s = demo();
+        let j = s.to_json();
+        assert_eq!(
+            j.get("counters").req_f64("cocoi_requests_submitted_total").unwrap(),
+            50.0
+        );
+        assert_eq!(j.get("gauges").req_f64("cocoi_pool_members").unwrap(), 4.0);
+        let h = j.get("histograms").get("cocoi_sojourn_seconds");
+        assert_eq!(h.req_f64("count").unwrap(), 50.0);
+        assert_eq!(s.family_names().len(), 3);
+    }
+}

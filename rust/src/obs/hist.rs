@@ -1,0 +1,310 @@
+//! Log-bucketed mergeable latency histograms.
+//!
+//! Fixed memory (one `u64` per bucket), exact `count`/`sum`/`min`/`max`,
+//! and a documented relative-error bound on quantiles: bucket edges grow
+//! geometrically by `GROWTH = 2^(1/8)`, so any reported quantile is within
+//! `sqrt(GROWTH) - 1 ≈ 4.4%` of the true sample value (the estimate is the
+//! geometric mean of the enclosing bucket's edges, clamped to the exact
+//! observed `[min, max]`). Two histograms built with the same layout merge
+//! by bucket-wise addition, and `merge(a, b)` is exactly the histogram of
+//! the concatenated samples — the property the scrape endpoint relies on
+//! when it sums per-phase histograms across restarts or shards.
+//!
+//! The layout spans `LOWEST = 1 µs` up to ~10⁴ s in `N_BUCKETS` buckets;
+//! values below `LOWEST` clamp into bucket 0 and values above the top edge
+//! clamp into the last bucket (both still contribute exactly to
+//! `count`/`sum`/`min`/`max`, so means stay exact even when tails clamp).
+
+use crate::util::json::Json;
+
+/// Smallest resolved latency (seconds). Everything below lands in bucket 0.
+pub const LOWEST: f64 = 1e-6;
+/// Geometric growth per bucket: 2^(1/8).
+pub const GROWTH: f64 = 1.090_507_732_665_257_7;
+/// Bucket count: covers `LOWEST * GROWTH^N_BUCKETS ≈ 1e4 s`, comfortably
+/// past any latency this system can produce.
+pub const N_BUCKETS: usize = 268;
+
+/// Documented quantile relative-error bound: `sqrt(GROWTH) - 1`.
+pub fn quantile_error_bound() -> f64 {
+    GROWTH.sqrt() - 1.0
+}
+
+/// A mergeable log-bucketed histogram of nonnegative latencies (seconds).
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> LogHistogram {
+        LogHistogram::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram {
+            buckets: vec![0; N_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Bucket index for a value (clamped into `[0, N_BUCKETS)`).
+    fn index(v: f64) -> usize {
+        if !(v > LOWEST) {
+            return 0;
+        }
+        let i = (v / LOWEST).ln() / GROWTH.ln();
+        (i as usize).min(N_BUCKETS - 1)
+    }
+
+    /// Lower edge of bucket `i` (seconds).
+    pub fn edge(i: usize) -> f64 {
+        LOWEST * GROWTH.powi(i as i32)
+    }
+
+    /// Record one latency sample (negative values clamp to 0).
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let v = v.max(0.0);
+        self.buckets[Self::index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// Quantile estimate for `q ∈ [0, 1]`: geometric mean of the enclosing
+    /// bucket's edges, clamped to the exact observed `[min, max]`. `NaN`
+    /// when empty. Relative error ≤ [`quantile_error_bound`].
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // Rank of the sample the quantile falls on (1-based, ceil), so
+        // q=0 → first sample, q=1 → last sample.
+        let rank = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let est = if i == 0 {
+                    // Bucket 0 spans [0, LOWEST·GROWTH): no useful geometric
+                    // mean; the clamp below does the work.
+                    LOWEST
+                } else {
+                    Self::edge(i) * GROWTH.sqrt()
+                };
+                return est.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Bucket-wise sum; exactly the histogram of the concatenated samples.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Non-empty buckets as `(upper_edge_seconds, cumulative_count)`,
+    /// ascending — the shape Prometheus `_bucket{le=...}` lines want. The
+    /// final implicit `+Inf` bucket is `count()`.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c > 0 {
+                cum += c;
+                out.push((Self::edge(i + 1), cum));
+            }
+        }
+        out
+    }
+
+    /// Compact JSON: count/sum/min/max plus selected quantiles.
+    pub fn to_json(&self) -> Json {
+        let q = |p: f64| -> Json {
+            let v = self.quantile(p);
+            if v.is_finite() {
+                Json::Num(v)
+            } else {
+                Json::Null
+            }
+        };
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum", Json::Num(self.sum)),
+            ("mean", if self.count == 0 { Json::Null } else { Json::Num(self.mean()) }),
+            ("min", if self.count == 0 { Json::Null } else { Json::Num(self.min) }),
+            ("max", if self.count == 0 { Json::Null } else { Json::Num(self.max) }),
+            ("p50", q(0.50)),
+            ("p95", q(0.95)),
+            ("p99", q(0.99)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::percentile;
+
+    #[test]
+    fn empty_histogram_is_nan_and_zero() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum(), 0.0);
+        assert!(h.quantile(0.5).is_nan());
+        assert!(h.mean().is_nan());
+        assert!(h.cumulative_buckets().is_empty());
+    }
+
+    #[test]
+    fn count_sum_min_max_exact() {
+        let mut h = LogHistogram::new();
+        for v in [0.003, 0.5, 12.0, 1e-9, 0.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - (0.003 + 0.5 + 12.0 + 1e-9)).abs() < 1e-15);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 12.0);
+        h.record(f64::NAN); // ignored
+        assert_eq!(h.count(), 5);
+    }
+
+    #[test]
+    fn quantiles_within_documented_bound() {
+        let mut rng = Rng::new(0xC0C0_0B5);
+        let mut h = LogHistogram::new();
+        let mut xs = Vec::new();
+        for _ in 0..4000 {
+            // Log-uniform over ~[50 µs, 5 s]: exercises many buckets.
+            let v = 5e-5 * (11.5 * rng.uniform()).exp();
+            h.record(v);
+            xs.push(v);
+        }
+        let bound = quantile_error_bound();
+        for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 0.999] {
+            let exact = percentile(&xs, q);
+            let est = h.quantile(q);
+            let rel = (est - exact).abs() / exact;
+            // The exact percentile interpolates between two samples that
+            // can straddle a bucket edge; allow 2x the single-value bound.
+            assert!(rel <= 2.0 * bound, "q={q}: est={est} exact={exact} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn merge_equals_concat() {
+        let mut rng = Rng::new(7);
+        let mut all = LogHistogram::new();
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for i in 0..1000 {
+            let v = 1e-4 * (9.0 * rng.uniform()).exp();
+            all.record(v);
+            if i % 3 == 0 { a.record(v) } else { b.record(v) }
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.count(), all.count());
+        assert!((merged.sum() - all.sum()).abs() < 1e-9);
+        assert_eq!(merged.min(), all.min());
+        assert_eq!(merged.max(), all.max());
+        assert_eq!(merged.cumulative_buckets(), all.cumulative_buckets());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(merged.quantile(q), all.quantile(q));
+        }
+    }
+
+    #[test]
+    fn cumulative_buckets_monotone() {
+        let mut rng = Rng::new(42);
+        let mut h = LogHistogram::new();
+        for _ in 0..500 {
+            h.record(1e-5 * (10.0 * rng.uniform()).exp());
+        }
+        let cb = h.cumulative_buckets();
+        assert!(!cb.is_empty());
+        for w in cb.windows(2) {
+            assert!(w[1].0 > w[0].0, "edges ascending");
+            assert!(w[1].1 >= w[0].1, "counts monotone");
+        }
+        assert_eq!(cb.last().unwrap().1, h.count());
+    }
+
+    #[test]
+    fn clamps_do_not_lose_samples() {
+        let mut h = LogHistogram::new();
+        h.record(1e-9); // below LOWEST → bucket 0
+        h.record(1e9); // above top edge → last bucket
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.cumulative_buckets().last().unwrap().1, 2);
+        // Quantiles clamp to exact extremes.
+        assert_eq!(h.quantile(0.0), 1e-9);
+        assert_eq!(h.quantile(1.0), 1e9);
+    }
+
+    #[test]
+    fn json_has_percentiles() {
+        let mut h = LogHistogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        let j = h.to_json();
+        assert_eq!(j.req_f64("count").unwrap(), 100.0);
+        let p50 = j.req_f64("p50").unwrap();
+        assert!((p50 - 0.050).abs() / 0.050 < 2.0 * quantile_error_bound());
+    }
+}

@@ -1,0 +1,173 @@
+//! Observability: per-request span tracing, mergeable latency histograms,
+//! and the scrapeable metrics surface.
+//!
+//! * [`hist`] — log-bucketed mergeable histograms (constant memory,
+//!   ~4.4% quantile relative error, exact count/sum/min/max).
+//! * [`trace`] — bounded per-request span trees + pool-level events,
+//!   exportable as Chrome trace-event JSON (Perfetto) or compact text.
+//! * [`export`] — the [`export::Snapshot`] rendered as Prometheus text
+//!   exposition and JSON, plus the hard schema check CI runs on scrapes.
+//!
+//! [`MetricsHub`] is the always-on recording surface the master, engine,
+//! and server all write through: one mutex-guarded set of histograms and
+//! gauges, cloned (`Arc`) into whichever thread stamps the `Instant`.
+//! Tracing, by contrast, is opt-in (`MasterConfig::trace`) and costs one
+//! `Option` branch when off.
+
+pub mod export;
+pub mod hist;
+pub mod trace;
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use hist::LogHistogram;
+
+/// Instantaneous pool/engine gauges mirrored into the scrape.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolGauges {
+    pub members: usize,
+    pub healthy: usize,
+    pub round: u64,
+    pub hedges: u64,
+    pub fallbacks: u64,
+    pub retries: u64,
+    pub cancels: u64,
+    pub plan_switches: u64,
+}
+
+/// The histogram set every latency-stamping layer records into. Field per
+/// phase rather than a name-keyed map: call sites stay `grep`-able and the
+/// scrape's family list stays stable.
+#[derive(Clone, Debug, Default)]
+pub struct HubInner {
+    /// Submit → engine admission (server queue wait).
+    pub queue_wait: LogHistogram,
+    /// Submit → delivery (end-to-end sojourn).
+    pub sojourn: LogHistogram,
+    /// Per-distributed-layer phase times (one sample per layer execution).
+    pub t_split: LogHistogram,
+    pub t_encode: LogHistogram,
+    pub t_workers: LogHistogram,
+    pub t_decode: LogHistogram,
+    pub t_local: LogHistogram,
+    /// Hedge raced and the *backup* replied first: time from hedge
+    /// dispatch to the winning reply (what the hedge bought).
+    pub hedge_win: LogHistogram,
+    /// Hedge raced and the *primary* replied first: time from hedge
+    /// dispatch to that reply (what the hedge cost, wasted work).
+    pub hedge_loss: LogHistogram,
+    /// Local-fallback shard compute: last dispatch → local result ready.
+    pub fallback_latency: LogHistogram,
+    pub gauges: PoolGauges,
+}
+
+/// Shared, thread-safe metrics recording surface. Cheap to clone.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsHub {
+    inner: Arc<Mutex<HubInner>>,
+}
+
+impl MetricsHub {
+    pub fn new() -> MetricsHub {
+        MetricsHub::default()
+    }
+
+    /// Lock the hub for recording or reading. Holds are short — a few
+    /// `record` calls — and only ever taken from coordinator threads.
+    pub fn lock(&self) -> MutexGuard<'_, HubInner> {
+        self.inner.lock().unwrap()
+    }
+
+    /// Deep-copied snapshot for export (scrape builds run unlocked).
+    pub fn snapshot(&self) -> HubInner {
+        self.lock().clone()
+    }
+
+    /// Fill an [`export::Snapshot`] with this hub's histogram + gauge
+    /// families under stable `cocoi_`-prefixed names.
+    pub fn export_into(&self, snap: &mut export::Snapshot) {
+        let h = self.snapshot();
+        let g = h.gauges;
+        snap.gauge("cocoi_pool_members", "Current worker pool size.", g.members as f64)
+            .gauge("cocoi_pool_healthy", "Non-quarantined pool members.", g.healthy as f64)
+            .gauge("cocoi_round", "Latest dispatch round id.", g.round as f64)
+            .counter("cocoi_hedges_total", "Watchdog hedges fired.", g.hedges as f64)
+            .counter(
+                "cocoi_fallbacks_total",
+                "Shards computed by master-local fallback.",
+                g.fallbacks as f64,
+            )
+            .counter("cocoi_retries_total", "Subtask retry dispatches.", g.retries as f64)
+            .counter(
+                "cocoi_cancels_total",
+                "Straggler subtasks cancelled after decode.",
+                g.cancels as f64,
+            )
+            .counter(
+                "cocoi_plan_switches_total",
+                "Adaptive replanner (n, k) switches.",
+                g.plan_switches as f64,
+            );
+        let hists: [(&str, &str, &LogHistogram); 10] = [
+            ("cocoi_queue_wait_seconds", "Submit to engine admission.", &h.queue_wait),
+            ("cocoi_sojourn_seconds", "Submit to delivery, end to end.", &h.sojourn),
+            ("cocoi_layer_split_seconds", "Per-layer input split time.", &h.t_split),
+            ("cocoi_layer_encode_seconds", "Per-layer encode time.", &h.t_encode),
+            (
+                "cocoi_layer_workers_seconds",
+                "Per-layer dispatch to k-th useful reply.",
+                &h.t_workers,
+            ),
+            ("cocoi_layer_decode_seconds", "Per-layer decode time.", &h.t_decode),
+            ("cocoi_layer_local_seconds", "Per-layer master-local work.", &h.t_local),
+            (
+                "cocoi_hedge_win_seconds",
+                "Hedge dispatch to winning backup reply.",
+                &h.hedge_win,
+            ),
+            (
+                "cocoi_hedge_loss_seconds",
+                "Hedge dispatch to primary reply that beat it.",
+                &h.hedge_loss,
+            ),
+            (
+                "cocoi_fallback_seconds",
+                "Last dispatch to local fallback shard ready.",
+                &h.fallback_latency,
+            ),
+        ];
+        for (name, help, hist) in hists {
+            snap.histogram(name, help, hist);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hub_records_and_exports_stable_names() {
+        let hub = MetricsHub::new();
+        {
+            let mut h = hub.lock();
+            h.sojourn.record(0.25);
+            h.queue_wait.record(0.01);
+            h.hedge_win.record(0.05);
+            h.gauges.members = 4;
+            h.gauges.hedges = 2;
+        }
+        let mut snap = export::Snapshot::new();
+        hub.export_into(&mut snap);
+        let text = snap.to_prometheus();
+        assert_eq!(export::check_exposition(&text).unwrap(), 18);
+        assert!(text.contains("cocoi_pool_members 4"));
+        assert!(text.contains("cocoi_hedges_total 2"));
+        assert!(text.contains("cocoi_sojourn_seconds_count 1"));
+        assert!(text.contains("cocoi_hedge_win_seconds_count 1"));
+        // A second export sees the same family list (stability).
+        let mut snap2 = export::Snapshot::new();
+        hub.export_into(&mut snap2);
+        assert_eq!(snap.family_names(), snap2.family_names());
+    }
+}

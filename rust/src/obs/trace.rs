@@ -1,0 +1,601 @@
+//! Bounded per-request span tracing.
+//!
+//! A [`TraceHandle`] records one span *tree* per request — root `request`
+//! span, `queue-wait` child, one `round` span per distributed layer
+//! execution, one `subtask` span per dispatch→reply — plus instant events
+//! (hedge fired/won/lost, retry, cancel, local fallback, shed) and a small
+//! global side ring for pool-level happenings (membership changes, worker
+//! slot occupancy). Memory is fixed: when the total recorded span+event
+//! count exceeds the configured capacity, the *oldest completed request's
+//! whole tree* is dropped — a tree is never torn, and open (in-flight)
+//! requests are never evicted.
+//!
+//! All timestamps are monotonic (`Instant`s against a shared epoch taken
+//! at handle creation), so spans recorded on different threads — the
+//! server front-end, the engine thread, in-proc worker slots — land on one
+//! consistent timeline. Export targets:
+//!
+//! * **Chrome trace-event JSON** (`export_chrome`) — load the file in
+//!   Perfetto (ui.perfetto.dev) or `chrome://tracing`. Request trees
+//!   render as pid 1 with one track per request; worker slot spans render
+//!   as pid 2 with one track per worker.
+//! * **Compact text** (`export_text`) — an indented tree per request for
+//!   terminals and test assertions.
+//!
+//! Tracing is opt-in and the hot path pays only an `Option` branch when
+//! off: every emit site in the engine/server/worker is guarded by
+//! `if let Some(trace) = ...`. A global allocation counter
+//! ([`spans_allocated`]) lets tests pin the zero-cost-off property.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Spans + instant events allocated process-wide (all handles). Tests use
+/// the delta across a run to pin that tracing-off allocates nothing.
+static SPANS_ALLOCATED: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide span/event allocation counter (monotone).
+pub fn spans_allocated() -> u64 {
+    SPANS_ALLOCATED.load(Ordering::Relaxed)
+}
+
+/// One closed-or-open span in a request tree (times in µs since epoch).
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub id: u64,
+    pub parent: Option<u64>,
+    pub name: String,
+    pub worker: Option<usize>,
+    pub start_us: f64,
+    pub end_us: Option<f64>,
+}
+
+/// One instant event (µs since epoch).
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub name: String,
+    pub worker: Option<usize>,
+    pub ts_us: f64,
+    /// Optional latency payload (seconds) — e.g. hedge win margin.
+    pub value: Option<f64>,
+}
+
+/// One request's span tree plus its instant events.
+#[derive(Clone, Debug, Default)]
+pub struct RequestTrace {
+    pub request: u64,
+    pub spans: Vec<Span>,
+    pub events: Vec<TraceEvent>,
+    pub done: bool,
+}
+
+impl RequestTrace {
+    fn weight(&self) -> usize {
+        self.spans.len() + self.events.len()
+    }
+
+    pub fn open_spans(&self) -> usize {
+        self.spans.iter().filter(|s| s.end_us.is_none()).count()
+    }
+}
+
+#[derive(Debug, Default)]
+struct TraceBuf {
+    requests: BTreeMap<u64, RequestTrace>,
+    /// Completed request ids in completion order (eviction queue).
+    completed: Vec<u64>,
+    /// Pool-level spans (worker slot occupancy), bounded separately.
+    pool_spans: Vec<Span>,
+    /// Pool-level instant events (membership), bounded separately.
+    pool_events: Vec<TraceEvent>,
+    /// Spans+events across all request trees (pool entries not counted —
+    /// they have their own fixed share).
+    total_weight: usize,
+    dropped_requests: u64,
+    next_span_id: u64,
+    /// Well-formedness violations (closed twice, child of a dead parent,
+    /// emit on an unknown request) — empty in a correct integration.
+    violations: Vec<String>,
+}
+
+impl TraceBuf {
+    fn alloc_id(&mut self) -> u64 {
+        self.next_span_id += 1;
+        self.next_span_id
+    }
+
+    /// Drop oldest completed trees while the total weight exceeds `cap`.
+    /// Open trees are never touched, so a tree is never torn mid-flight.
+    fn evict(&mut self, cap: usize) {
+        while self.total_weight > cap && !self.completed.is_empty() {
+            let victim = self.completed.remove(0);
+            if let Some(rt) = self.requests.remove(&victim) {
+                self.total_weight -= rt.weight();
+                self.dropped_requests += 1;
+            }
+        }
+    }
+}
+
+/// Shared, thread-safe trace recorder. Cheap to clone; all emits take one
+/// short mutex hold on the handful of traced runs that opt in.
+#[derive(Clone, Debug)]
+pub struct TraceHandle {
+    epoch: Instant,
+    cap: usize,
+    buf: Arc<Mutex<TraceBuf>>,
+}
+
+impl TraceHandle {
+    /// A recorder bounded at `cap` total spans+events (min 64).
+    pub fn new(cap: usize) -> TraceHandle {
+        TraceHandle {
+            epoch: Instant::now(),
+            cap: cap.max(64),
+            buf: Arc::new(Mutex::new(TraceBuf::default())),
+        }
+    }
+
+    /// Microseconds since the handle's epoch for an explicit instant —
+    /// back-dating support (e.g. a queue-wait span whose start was stamped
+    /// before admission).
+    pub fn us_of(&self, t: Instant) -> f64 {
+        t.saturating_duration_since(self.epoch).as_secs_f64() * 1e6
+    }
+
+    /// Open a request tree with its root `request` span. Returns the root
+    /// span id (parent for the request's children).
+    pub fn begin_request(&self, request: u64, start: Instant) -> u64 {
+        let start_us = self.us_of(start);
+        let mut b = self.buf.lock().unwrap();
+        let id = b.alloc_id();
+        let rt = b.requests.entry(request).or_default();
+        rt.request = request;
+        rt.spans.push(Span {
+            id,
+            parent: None,
+            name: "request".to_string(),
+            worker: None,
+            start_us,
+            end_us: None,
+        });
+        b.total_weight += 1;
+        SPANS_ALLOCATED.fetch_add(1, Ordering::Relaxed);
+        id
+    }
+
+    /// Open a child span in a request tree. The parent must exist and be
+    /// open (violation logged otherwise). Returns the new span id.
+    pub fn span_start(
+        &self,
+        request: u64,
+        parent: u64,
+        name: &str,
+        worker: Option<usize>,
+        start: Instant,
+    ) -> u64 {
+        let start_us = self.us_of(start);
+        let mut b = self.buf.lock().unwrap();
+        let id = b.alloc_id();
+        // Parent liveness check first (immutable), then the mutation —
+        // keeps the borrow checker and the violation log both happy.
+        let parent_open = b
+            .requests
+            .get(&request)
+            .map(|rt| rt.spans.iter().find(|s| s.id == parent).map(|s| s.end_us.is_none()));
+        match parent_open {
+            None => {
+                b.violations.push(format!("span {name}: unknown request {request}"));
+                return id;
+            }
+            Some(None) => b.violations.push(format!("span {name}: parent {parent} missing")),
+            Some(Some(false)) => {
+                b.violations.push(format!("span {name}: parent {parent} already closed"))
+            }
+            Some(Some(true)) => {}
+        }
+        if let Some(rt) = b.requests.get_mut(&request) {
+            rt.spans.push(Span {
+                id,
+                parent: Some(parent),
+                name: name.to_string(),
+                worker,
+                start_us,
+                end_us: None,
+            });
+        }
+        b.total_weight += 1;
+        SPANS_ALLOCATED.fetch_add(1, Ordering::Relaxed);
+        id
+    }
+
+    /// Close a span opened by [`span_start`] / [`begin_request`].
+    pub fn span_end(&self, request: u64, span: u64, end: Instant) {
+        let end_us = self.us_of(end);
+        let mut b = self.buf.lock().unwrap();
+        enum Outcome {
+            Ok,
+            ClosedTwice,
+            NoSpan,
+            NoRequest,
+        }
+        let outcome = match b.requests.get_mut(&request) {
+            None => Outcome::NoRequest,
+            Some(rt) => match rt.spans.iter_mut().find(|s| s.id == span) {
+                Some(s) if s.end_us.is_none() => {
+                    s.end_us = Some(end_us.max(s.start_us));
+                    Outcome::Ok
+                }
+                Some(_) => Outcome::ClosedTwice,
+                None => Outcome::NoSpan,
+            },
+        };
+        match outcome {
+            Outcome::Ok => {}
+            Outcome::ClosedTwice => b.violations.push(format!("span {span}: closed twice")),
+            Outcome::NoSpan => b.violations.push(format!("span_end: unknown span {span}")),
+            Outcome::NoRequest => {
+                b.violations.push(format!("span_end: unknown request {request}"))
+            }
+        }
+    }
+
+    /// Record an already-closed span (convenience for spans measured with
+    /// two stamps in hand, e.g. a subtask dispatch→reply window).
+    pub fn span_closed(
+        &self,
+        request: u64,
+        parent: u64,
+        name: &str,
+        worker: Option<usize>,
+        start: Instant,
+        end: Instant,
+    ) -> u64 {
+        let id = self.span_start(request, parent, name, worker, start);
+        self.span_end(request, id, end);
+        id
+    }
+
+    /// Record an instant event in a request tree.
+    pub fn instant(
+        &self,
+        request: u64,
+        name: &str,
+        worker: Option<usize>,
+        value: Option<f64>,
+        at: Instant,
+    ) {
+        let ts_us = self.us_of(at);
+        let mut b = self.buf.lock().unwrap();
+        let known = b.requests.contains_key(&request);
+        if known {
+            let rt = b.requests.get_mut(&request).expect("checked above");
+            rt.events.push(TraceEvent { name: name.to_string(), worker, ts_us, value });
+            b.total_weight += 1;
+            SPANS_ALLOCATED.fetch_add(1, Ordering::Relaxed);
+        } else {
+            b.violations.push(format!("instant {name}: unknown request {request}"));
+        }
+    }
+
+    /// Close a request's root span, mark its tree complete, and run the
+    /// eviction sweep (drop oldest *completed* trees while over capacity).
+    pub fn end_request(&self, request: u64, root: u64, end: Instant) {
+        let end_us = self.us_of(end);
+        let mut b = self.buf.lock().unwrap();
+        let known = b.requests.contains_key(&request);
+        if !known {
+            b.violations.push(format!("end_request: unknown request {request}"));
+            return;
+        }
+        let rt = b.requests.get_mut(&request).expect("checked above");
+        // Close the root and any straggler children still open (a shed or
+        // engine-death delivery can leave a round span open — closing at
+        // the request boundary keeps the tree well-formed by construction).
+        for s in rt.spans.iter_mut() {
+            if s.end_us.is_none() && (s.id == root || s.parent.is_some()) {
+                s.end_us = Some(end_us.max(s.start_us));
+            }
+        }
+        rt.done = true;
+        b.completed.push(request);
+        let cap = self.cap;
+        b.evict(cap);
+    }
+
+    /// Record a pool-level (non-request) span, e.g. worker slot occupancy.
+    /// Pool spans keep a fixed share of the capacity to themselves.
+    pub fn pool_span(&self, name: &str, worker: Option<usize>, start: Instant, end: Instant) {
+        let (start_us, end_us) = (self.us_of(start), self.us_of(end));
+        let mut b = self.buf.lock().unwrap();
+        let id = b.alloc_id();
+        b.pool_spans.push(Span {
+            id,
+            parent: None,
+            name: name.to_string(),
+            worker,
+            start_us,
+            end_us: Some(end_us.max(start_us)),
+        });
+        SPANS_ALLOCATED.fetch_add(1, Ordering::Relaxed);
+        let share = (self.cap / 4).max(64);
+        let len = b.pool_spans.len();
+        if len > share {
+            b.pool_spans.drain(..len - share);
+        }
+    }
+
+    /// Record a pool-level instant event (membership: joined/evicted/...).
+    pub fn pool_instant(&self, name: &str, worker: Option<usize>, at: Instant) {
+        let ts_us = self.us_of(at);
+        let mut b = self.buf.lock().unwrap();
+        b.pool_events.push(TraceEvent { name: name.to_string(), worker, ts_us, value: None });
+        SPANS_ALLOCATED.fetch_add(1, Ordering::Relaxed);
+        let share = (self.cap / 4).max(64);
+        let len = b.pool_events.len();
+        if len > share {
+            b.pool_events.drain(..len - share);
+        }
+    }
+
+    /// Snapshot of the currently-held request trees, ascending request id.
+    pub fn requests(&self) -> Vec<RequestTrace> {
+        self.buf.lock().unwrap().requests.values().cloned().collect()
+    }
+
+    /// Well-formedness violations recorded so far (empty when correct).
+    pub fn violations(&self) -> Vec<String> {
+        self.buf.lock().unwrap().violations.clone()
+    }
+
+    /// Whole trees dropped by the capacity sweep.
+    pub fn dropped_requests(&self) -> u64 {
+        self.buf.lock().unwrap().dropped_requests
+    }
+
+    /// Total spans+events currently held across request trees.
+    pub fn weight(&self) -> usize {
+        self.buf.lock().unwrap().total_weight
+    }
+
+    /// Chrome trace-event JSON (`{"traceEvents": [...]}`): request trees
+    /// as pid 1 / tid = request id, pool spans as pid 2 / tid = worker id.
+    /// Timestamps and durations in µs as the format requires.
+    pub fn export_chrome(&self) -> Json {
+        let b = self.buf.lock().unwrap();
+        let mut evs: Vec<Json> = Vec::new();
+        evs.push(meta_event(1.0, 0.0, "requests"));
+        evs.push(meta_event(2.0, 0.0, "worker-pool"));
+        for rt in b.requests.values() {
+            let tid = rt.request as f64;
+            for s in &rt.spans {
+                let dur = s.end_us.unwrap_or(s.start_us) - s.start_us;
+                let mut args = vec![("request", Json::Num(rt.request as f64))];
+                if let Some(w) = s.worker {
+                    args.push(("worker", Json::Num(w as f64)));
+                }
+                evs.push(Json::obj(vec![
+                    ("name", Json::Str(s.name.clone())),
+                    ("ph", Json::Str("X".to_string())),
+                    ("pid", Json::Num(1.0)),
+                    ("tid", Json::Num(tid)),
+                    ("ts", Json::Num(s.start_us)),
+                    ("dur", Json::Num(dur)),
+                    ("args", Json::obj(args)),
+                ]));
+            }
+            for e in &rt.events {
+                evs.push(instant_event(1.0, tid, e, Some(rt.request)));
+            }
+        }
+        for s in &b.pool_spans {
+            let tid = s.worker.unwrap_or(0) as f64;
+            evs.push(Json::obj(vec![
+                ("name", Json::Str(s.name.clone())),
+                ("ph", Json::Str("X".to_string())),
+                ("pid", Json::Num(2.0)),
+                ("tid", Json::Num(tid)),
+                ("ts", Json::Num(s.start_us)),
+                ("dur", Json::Num(s.end_us.unwrap_or(s.start_us) - s.start_us)),
+                ("args", Json::obj(vec![])),
+            ]));
+        }
+        for e in &b.pool_events {
+            evs.push(instant_event(2.0, e.worker.unwrap_or(0) as f64, e, None));
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(evs)),
+            ("displayTimeUnit", Json::Str("ms".to_string())),
+        ])
+    }
+
+    /// Compact indented text, one tree per request.
+    pub fn export_text(&self) -> String {
+        let b = self.buf.lock().unwrap();
+        let mut out = String::new();
+        for rt in b.requests.values() {
+            out.push_str(&format!(
+                "request {} ({}{} spans, {} events)\n",
+                rt.request,
+                if rt.done { "" } else { "open, " },
+                rt.spans.len(),
+                rt.events.len()
+            ));
+            walk_text(&mut out, &rt.spans, None, 0);
+            for e in &rt.events {
+                let worker = e.worker.map(|w| format!(" w{w}")).unwrap_or_default();
+                let val = e.value.map(|v| format!(" {:.3} ms", v * 1e3)).unwrap_or_default();
+                out.push_str(&format!("  ! {}{}{}\n", e.name, worker, val));
+            }
+        }
+        out
+    }
+}
+
+fn walk_text(out: &mut String, spans: &[Span], parent: Option<u64>, depth: usize) {
+    for s in spans.iter().filter(|s| s.parent == parent) {
+        let worker = s.worker.map(|w| format!(" w{w}")).unwrap_or_default();
+        match s.end_us {
+            Some(e) => out.push_str(&format!(
+                "{:indent$}{}{} {:.3} ms\n",
+                "",
+                s.name,
+                worker,
+                (e - s.start_us) / 1e3,
+                indent = 2 + depth * 2
+            )),
+            None => out.push_str(&format!(
+                "{:indent$}{}{} (open)\n",
+                "",
+                s.name,
+                worker,
+                indent = 2 + depth * 2
+            )),
+        }
+        walk_text(out, spans, Some(s.id), depth + 1);
+    }
+}
+
+fn meta_event(pid: f64, tid: f64, process: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str("process_name".to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(pid)),
+        ("tid", Json::Num(tid)),
+        ("args", Json::obj(vec![("name", Json::Str(process.to_string()))])),
+    ])
+}
+
+fn instant_event(pid: f64, tid: f64, e: &TraceEvent, request: Option<u64>) -> Json {
+    let mut args = Vec::new();
+    if let Some(r) = request {
+        args.push(("request", Json::Num(r as f64)));
+    }
+    if let Some(w) = e.worker {
+        args.push(("worker", Json::Num(w as f64)));
+    }
+    if let Some(v) = e.value {
+        args.push(("seconds", Json::Num(v)));
+    }
+    Json::obj(vec![
+        ("name", Json::Str(e.name.clone())),
+        ("ph", Json::Str("i".to_string())),
+        ("s", Json::Str("t".to_string())),
+        ("pid", Json::Num(pid)),
+        ("tid", Json::Num(tid)),
+        ("ts", Json::Num(e.ts_us)),
+        ("args", Json::obj(args)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn now() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn span_tree_records_and_closes() {
+        let tr = TraceHandle::new(1024);
+        let t0 = now();
+        let root = tr.begin_request(1, t0);
+        let round = tr.span_start(1, root, "round", None, t0);
+        tr.span_closed(1, round, "subtask", Some(3), t0, t0 + Duration::from_millis(2));
+        tr.instant(1, "hedge-fired", Some(3), None, t0);
+        tr.span_end(1, round, t0 + Duration::from_millis(3));
+        tr.end_request(1, root, t0 + Duration::from_millis(4));
+        assert!(tr.violations().is_empty(), "{:?}", tr.violations());
+        let reqs = tr.requests();
+        assert_eq!(reqs.len(), 1);
+        assert!(reqs[0].done);
+        assert_eq!(reqs[0].open_spans(), 0);
+        assert_eq!(reqs[0].spans.len(), 3);
+        assert_eq!(reqs[0].events.len(), 1);
+    }
+
+    #[test]
+    fn eviction_drops_oldest_whole_tree_only_when_completed() {
+        let tr = TraceHandle::new(64); // floor cap
+        let t0 = now();
+        // An open tree survives any pressure.
+        let open_root = tr.begin_request(0, t0);
+        for r in 1..40u64 {
+            let root = tr.begin_request(r, t0);
+            tr.span_closed(r, root, "round", None, t0, t0);
+            tr.instant(r, "cancel", None, None, t0);
+            tr.end_request(r, root, t0);
+        }
+        assert!(tr.weight() <= 64 + 3, "weight={}", tr.weight());
+        assert!(tr.dropped_requests() > 0);
+        let reqs = tr.requests();
+        // Request 0 (still open) was never evicted; survivors are the
+        // newest completed trees, each intact (3 entries).
+        assert!(reqs.iter().any(|r| r.request == 0 && !r.done));
+        for r in reqs.iter().filter(|r| r.done) {
+            assert_eq!(r.spans.len() + r.events.len(), 3, "torn tree: {:?}", r);
+        }
+        // Oldest completed ids are gone, newest retained.
+        assert!(!reqs.iter().any(|r| r.request == 1));
+        assert!(reqs.iter().any(|r| r.request == 39));
+        tr.end_request(0, open_root, t0);
+        assert!(tr.violations().is_empty());
+    }
+
+    #[test]
+    fn violations_catch_bad_parents() {
+        let tr = TraceHandle::new(256);
+        let t0 = now();
+        let root = tr.begin_request(9, t0);
+        tr.span_end(9, root, t0);
+        tr.span_start(9, root, "late-child", None, t0); // parent closed
+        tr.span_start(3, 999, "orphan", None, t0); // unknown request
+        assert_eq!(tr.violations().len(), 2);
+    }
+
+    #[test]
+    fn chrome_export_round_trips_through_json() {
+        let tr = TraceHandle::new(256);
+        let t0 = now();
+        let root = tr.begin_request(5, t0);
+        tr.span_closed(5, root, "round", Some(1), t0, t0 + Duration::from_millis(1));
+        tr.instant(5, "hedge-won", Some(1), Some(0.012), t0);
+        tr.end_request(5, root, t0 + Duration::from_millis(2));
+        tr.pool_span("slot", Some(1), t0, t0 + Duration::from_millis(1));
+        tr.pool_instant("joined", Some(2), t0);
+        let j = tr.export_chrome();
+        let text = j.to_string_pretty();
+        let back = Json::parse(&text).expect("chrome trace JSON parses");
+        let evs = back.get("traceEvents").as_arr().expect("traceEvents array");
+        // 2 metadata + 2 request spans + 1 instant + 1 pool span + 1 pool instant.
+        assert_eq!(evs.len(), 7);
+        assert!(evs
+            .iter()
+            .any(|e| e.get("ph").as_str() == Some("X")
+                && e.get("name").as_str() == Some("request")));
+        assert!(evs
+            .iter()
+            .any(|e| e.get("ph").as_str() == Some("i")
+                && e.get("name").as_str() == Some("hedge-won")));
+        let text_dump = tr.export_text();
+        assert!(text_dump.contains("request 5"));
+        assert!(text_dump.contains("hedge-won"));
+    }
+
+    #[test]
+    fn allocation_counter_moves_only_when_recording() {
+        let before = spans_allocated();
+        let tr = TraceHandle::new(256);
+        let mid = spans_allocated();
+        assert_eq!(before, mid, "constructing a handle allocates no spans");
+        let root = tr.begin_request(1, now());
+        tr.end_request(1, root, now());
+        assert!(spans_allocated() > mid);
+    }
+}

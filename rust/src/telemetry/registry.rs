@@ -100,6 +100,15 @@ pub enum EventKind {
     /// locally to complete a decode (pool collapse / retries exhausted /
     /// deadline pressure).
     LocalFallback,
+    /// Reliability: a hedge raced against this worker and the worker
+    /// *won* — its own reply beat the speculative backup. The hedge was
+    /// wasted work; the worker redeemed itself.
+    HedgeWon,
+    /// Reliability: a hedge raced against this worker and the worker
+    /// *lost* — the backup replied first. Chronic losses are the
+    /// straggler signal EWMA timing can miss (a stalled worker produces
+    /// no samples at all), so they feed [`CapacityRegistry::straggler_score`].
+    HedgeLost,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -127,6 +136,10 @@ struct WorkerState {
     last_failure_round: u64,
     consecutive_failures: usize,
     total_failures: u64,
+    /// Hedge races this worker won (its reply beat the backup).
+    hedge_wins: u64,
+    /// Hedge races this worker lost (the backup beat it).
+    hedge_losses: u64,
     quarantined: bool,
     /// Next round at (or after) which a quarantined worker gets a probe.
     next_probe: u64,
@@ -141,6 +154,8 @@ impl WorkerState {
             last_failure_round: 0,
             consecutive_failures: 0,
             total_failures: 0,
+            hedge_wins: 0,
+            hedge_losses: 0,
             quarantined: false,
             next_probe: 0,
         }
@@ -248,13 +263,28 @@ impl CapacityRegistry {
         &self.events
     }
 
-    /// Log a reliability event (hedge fired / local fallback computed a
-    /// shard) against the worker that failed to deliver. Absent ids are
-    /// logged too: the interesting case — a fallback for a shard whose
-    /// holder was already evicted — must not vanish from the record.
+    /// Log a reliability event (hedge fired / hedge resolved / local
+    /// fallback computed a shard) against the worker that held the
+    /// shard. Absent ids are logged too: the interesting case — a
+    /// fallback for a shard whose holder was already evicted — must not
+    /// vanish from the record. Hedge *outcomes* additionally feed the
+    /// per-worker win/loss counters the straggler score reads.
     pub fn note_reliability(&mut self, kind: EventKind, worker: usize, round: u64) {
-        debug_assert!(matches!(kind, EventKind::Hedged | EventKind::LocalFallback));
+        debug_assert!(matches!(
+            kind,
+            EventKind::Hedged
+                | EventKind::LocalFallback
+                | EventKind::HedgeWon
+                | EventKind::HedgeLost
+        ));
         self.round = self.round.max(round);
+        if let Some(w) = self.workers.get_mut(&worker) {
+            match kind {
+                EventKind::HedgeWon => w.hedge_wins += 1,
+                EventKind::HedgeLost => w.hedge_losses += 1,
+                _ => {}
+            }
+        }
         self.events.push(TelemetryEvent { kind, worker, round });
     }
 
@@ -342,25 +372,36 @@ impl CapacityRegistry {
     /// signal alive even when it (or half the pool) is the slow part —
     /// with a self-inclusive median a slow worker in a 2-pool would
     /// always score exactly 1.0.
+    ///
+    /// Hedge outcomes multiply in on top: each *net* lost hedge race
+    /// (losses minus wins, capped at 8) adds 25% — a worker whose hedges
+    /// always lose is a chronic straggler even when it produces too few
+    /// timing samples for the EWMA to say so. Six net losses push an
+    /// otherwise-nominal worker (`1.0 × 2.5`) past the default
+    /// `quarantine_score` of 2.2; balanced win/loss records multiply by
+    /// exactly 1.0, leaving the timing-only score untouched.
     pub fn straggler_score(&self, worker: usize) -> f64 {
         let Some(w) = self.workers.get(&worker) else {
             return 1.0;
         };
-        if w.cmp.len() < self.cfg.min_samples {
-            return 1.0;
-        }
-        let pool: Vec<f64> = self
-            .workers
-            .iter()
-            .filter(|(i, s)| **i != worker && s.cmp.len() >= self.cfg.min_samples)
-            .map(|(_, s)| s.cmp.ewma())
-            .collect();
-        let med = median(pool);
-        if med.is_finite() && med > 0.0 {
-            w.cmp.ewma() / med
-        } else {
+        let base = if w.cmp.len() < self.cfg.min_samples {
             1.0
-        }
+        } else {
+            let pool: Vec<f64> = self
+                .workers
+                .iter()
+                .filter(|(i, s)| **i != worker && s.cmp.len() >= self.cfg.min_samples)
+                .map(|(_, s)| s.cmp.ewma())
+                .collect();
+            let med = median(pool);
+            if med.is_finite() && med > 0.0 {
+                w.cmp.ewma() / med
+            } else {
+                1.0
+            }
+        };
+        let net_losses = w.hedge_losses.saturating_sub(w.hedge_wins).min(8);
+        base * (1.0 + 0.25 * net_losses as f64)
     }
 
     pub fn is_quarantined(&self, worker: usize) -> bool {
@@ -514,6 +555,8 @@ impl CapacityRegistry {
                     ("quarantined", Json::Bool(w.quarantined)),
                     ("consecutive_failures", Json::Num(w.consecutive_failures as f64)),
                     ("total_failures", Json::Num(w.total_failures as f64)),
+                    ("hedge_wins", Json::Num(w.hedge_wins as f64)),
+                    ("hedge_losses", Json::Num(w.hedge_losses as f64)),
                     ("last_round", Json::Num(w.last_round as f64)),
                 ];
                 if let Some(est) = self.estimate(i) {
@@ -543,6 +586,8 @@ impl CapacityRegistry {
                                 EventKind::Retired => "retired",
                                 EventKind::Hedged => "hedged",
                                 EventKind::LocalFallback => "local-fallback",
+                                EventKind::HedgeWon => "hedge-won",
+                                EventKind::HedgeLost => "hedge-lost",
                             }
                             .to_string(),
                         ),
@@ -801,6 +846,39 @@ mod tests {
         reg.note_reliability(EventKind::LocalFallback, 1, 6);
         let json = reg.to_json().to_string();
         assert!(json.contains("hedged") && json.contains("local-fallback"));
+    }
+
+    #[test]
+    fn chronic_hedge_loser_score_rises_and_quarantines() {
+        let mut reg = CapacityRegistry::new(3, TelemetryConfig::default());
+        feed(&mut reg, 0, 1e-9, 16, 0);
+        feed(&mut reg, 1, 1e-9, 16, 0);
+        feed(&mut reg, 2, 1e-9, 16, 0);
+        let base = reg.straggler_score(2);
+        assert!((base - 1.0).abs() < 0.05, "timing-identical pool scores ~1.0");
+        // Six hedges fire against worker 2 and the backup wins every one.
+        for r in 0..6u64 {
+            reg.note_reliability(EventKind::Hedged, 2, 20 + r);
+            reg.note_reliability(EventKind::HedgeLost, 2, 20 + r);
+        }
+        let penalized = reg.straggler_score(2);
+        assert!(penalized > base, "losses must raise the score");
+        assert!(
+            penalized > reg.config().quarantine_score,
+            "six net losses cross the threshold: {penalized}"
+        );
+        // The next timing sample lets the quarantine transition see it.
+        reg.record_success(2, 1e9, 1e6, 1e-9 * 1e9, 1e-7 * 1e6, 30);
+        assert!(reg.is_quarantined(2));
+        // Balanced outcomes are not punished: a win offsets a loss.
+        reg.note_reliability(EventKind::Hedged, 1, 40);
+        reg.note_reliability(EventKind::HedgeLost, 1, 40);
+        reg.note_reliability(EventKind::Hedged, 1, 41);
+        reg.note_reliability(EventKind::HedgeWon, 1, 41);
+        assert!((reg.straggler_score(1) - 1.0).abs() < 0.3);
+        // Outcomes land in the JSON dump alongside the counters.
+        let json = reg.to_json().to_string_compact();
+        assert!(json.contains("hedge-lost") && json.contains("hedge_wins"));
     }
 
     #[test]

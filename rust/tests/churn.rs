@@ -113,6 +113,7 @@ fn spawn_member(
                     faults: WorkerFaults::none(),
                     rng_seed: 0xBEEF,
                     slots: 1,
+                    trace: None,
                 },
                 &JoinOptions {
                     name,
@@ -406,6 +407,7 @@ fn reconnect_after_link_drop_rejoins_and_serves() {
                         faults: WorkerFaults::none(),
                         rng_seed: 0xFEED,
                         slots: 1,
+                        trace: None,
                     },
                     &JoinOptions {
                         name: "phoenix".into(),

@@ -141,6 +141,7 @@ fn tcp_worker_end_to_end() {
                 faults: WorkerFaults::none(),
                 rng_seed: 1,
                 slots: 1,
+                trace: None,
             },
         )
         .unwrap();

@@ -1,0 +1,326 @@
+//! Observability suite: the span recorder, histograms, and scrape
+//! surface wired through the REAL serving stack.
+//!
+//! Pinned here:
+//! * a fault-injected traced run produces well-formed span trees (no
+//!   invariant violations, every delivered tree closed) whose hedge
+//!   events carry nonzero win/loss latencies consistent with the
+//!   per-request `InferenceMetrics` and the hub histograms;
+//! * tracing off (the default) allocates ZERO spans and the outputs are
+//!   bitwise identical with tracing on — observability never perturbs
+//!   the numerics;
+//! * `InferenceServer::scrape` passes the hard Prometheus schema check
+//!   with the full stable family set;
+//! * the histogram quantile estimate honours its documented ~4.4%
+//!   relative-error bound against exact order statistics, and merging
+//!   two histograms equals the histogram of the concatenated samples.
+//!
+//! Tests that record spans serialize on a file-local gate: the
+//! allocation counter is process-global, so the zero-alloc delta must
+//! not race another test's traced run.
+
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use cocoi::conv::Tensor;
+use cocoi::coordinator::{
+    ExecMode, InferenceRequest, InferenceServer, LocalCluster, MasterConfig, PoolOptions,
+    SchemeKind, ServerConfig, WorkerFaults, WorkerHandles,
+};
+use cocoi::model::graph::forward_local;
+use cocoi::model::{zoo, WeightStore};
+use cocoi::obs::export::check_exposition;
+use cocoi::obs::hist::{quantile_error_bound, LogHistogram};
+use cocoi::obs::trace::{spans_allocated, TraceHandle};
+use cocoi::planner::SplitPolicy;
+use cocoi::runtime::FallbackProvider;
+use cocoi::util::json::Json;
+use cocoi::util::Rng;
+
+fn gate() -> MutexGuard<'static, ()> {
+    static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+    GATE.get_or_init(Mutex::default)
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+fn inputs_for(count: usize, seed: u64) -> Vec<Tensor> {
+    let model = zoo::model("tinyvgg").unwrap();
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            let mut t = Tensor::zeros(model.input.0, model.input.1, model.input.2);
+            rng.fill_uniform_f32(&mut t.data, -1.0, 1.0);
+            t
+        })
+        .collect()
+}
+
+fn local_refs(inputs: &[Tensor]) -> Vec<Tensor> {
+    let model = zoo::model("tinyvgg").unwrap();
+    let weights = WeightStore::generate(&model, 42).unwrap();
+    inputs
+        .iter()
+        .map(|i| forward_local(&model, &weights, i).unwrap())
+        .collect()
+}
+
+/// Uncoded n=3 with worker 0 stalling forever: every round needs the
+/// watchdog hedge, and uncoded shards stay bitwise-reproducible on any
+/// worker — the sharpest fixture for tracing under faults.
+fn spawn_stalled(trace: Option<TraceHandle>) -> (InferenceServer, WorkerHandles) {
+    let mut faults: Vec<WorkerFaults> = (0..3).map(|_| WorkerFaults::none()).collect();
+    faults[0] = WorkerFaults::none().stalls_in(0..4096);
+    let config = MasterConfig {
+        scheme: SchemeKind::Uncoded,
+        policy: SplitPolicy::Fixed(3),
+        mode: ExecMode::Pipelined,
+        trace,
+        ..Default::default()
+    };
+    let cluster = LocalCluster::spawn_with(
+        "tinyvgg",
+        3,
+        config,
+        Arc::new(FallbackProvider::new()),
+        faults,
+        PoolOptions { worker_slots: 1 },
+    )
+    .unwrap();
+    let (master, workers) = cluster.into_parts();
+    (InferenceServer::start(master, ServerConfig::default()), workers)
+}
+
+/// Fault-injected traced run: well-formed trees, hedge events with
+/// nonzero latencies, and agreement between the trace, the per-request
+/// metrics, and the hub histograms.
+#[test]
+fn traced_stalled_run_has_wellformed_trees_and_hedge_latencies() {
+    let _g = gate();
+    let inputs = inputs_for(3, 930);
+    let want = local_refs(&inputs);
+    let trace = TraceHandle::new(16_384);
+    let (server, workers) = spawn_stalled(Some(trace.clone()));
+    let pre = server.scrape(); // pre-run scrape must already be schema-clean
+    assert!(check_exposition(&pre.to_prometheus()).unwrap() >= 24);
+
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|i| server.submit(InferenceRequest::new(i.clone())).unwrap())
+        .collect();
+    let mut total_hedges = 0u64;
+    for (h, want) in handles.into_iter().zip(&want) {
+        let (out, m) = h.wait().expect("traced request wedged");
+        assert_eq!(out.data, want.data, "traced hedged output not bitwise-local");
+        assert!(m.hedges() >= 1, "stalled worker never hedged");
+        total_hedges += m.hedges() as u64;
+    }
+    let scrape = server.scrape();
+    let master = server.shutdown().unwrap();
+    let hub = master.metrics_hub().snapshot();
+    master.shutdown();
+    workers.join().unwrap();
+
+    let viol = trace.violations();
+    assert!(viol.is_empty(), "trace invariant violations: {viol:?}");
+    let reqs = trace.requests();
+    assert_eq!(reqs.len(), inputs.len());
+    let (mut fired, mut outcomes) = (0u64, 0u64);
+    for rt in &reqs {
+        assert!(rt.done, "request {} tree still open", rt.request);
+        assert_eq!(rt.open_spans(), 0, "request {} has open spans", rt.request);
+        for name in ["request", "queue-wait"] {
+            assert!(
+                rt.spans.iter().any(|s| s.name == name),
+                "request {} missing '{name}' span",
+                rt.request
+            );
+        }
+        assert!(rt.spans.iter().any(|s| s.name.starts_with("round:")));
+        assert!(rt.spans.iter().any(|s| s.name.starts_with("task:")));
+        for e in &rt.events {
+            match e.name.as_str() {
+                "hedge-fired" => fired += 1,
+                "hedge-won" | "hedge-lost" => {
+                    outcomes += 1;
+                    let v = e.value.expect("hedge outcome event carries a latency");
+                    assert!(v.is_finite() && v > 0.0, "hedge latency {v} not positive");
+                }
+                _ => {}
+            }
+        }
+    }
+    assert_eq!(
+        fired, total_hedges,
+        "traced hedge-fired events disagree with InferenceMetrics::hedges()"
+    );
+    assert!(outcomes >= 1, "no hedge outcome event was traced");
+    // The hub saw exactly the traced outcomes, with positive latencies.
+    assert_eq!(hub.hedge_win.count() + hub.hedge_loss.count(), outcomes);
+    if hub.hedge_win.count() > 0 {
+        assert!(hub.hedge_win.quantile(0.5) > 0.0);
+    }
+    // The final scrape reflects the served requests.
+    let j = scrape.to_json();
+    assert_eq!(
+        j.get("counters").req_f64("cocoi_server_completed_total").unwrap(),
+        inputs.len() as f64
+    );
+    assert_eq!(
+        j.get("histograms").get("cocoi_sojourn_seconds").req_f64("count").unwrap(),
+        inputs.len() as f64
+    );
+
+    // Chrome export round-trips through the JSON parser and carries the
+    // request tracks.
+    let back = Json::parse(&trace.export_chrome().to_string_pretty()).unwrap();
+    let evs = back.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(evs.len() > 10, "suspiciously small trace: {} events", evs.len());
+    assert!(evs
+        .iter()
+        .any(|e| e.get("ph").as_str() == Some("X") && e.get("name").as_str() == Some("request")));
+    let text = trace.export_text();
+    assert!(text.contains("queue-wait"));
+}
+
+/// Zero-cost-off: the identical fault-injected workload with
+/// `trace: None` allocates not a single span, and its outputs are
+/// bitwise identical to the traced run's.
+#[test]
+fn tracing_off_allocates_nothing_and_matches_traced_outputs() {
+    let _g = gate();
+    let inputs = inputs_for(2, 931);
+    let want = local_refs(&inputs);
+    let run = |trace: Option<TraceHandle>| -> Vec<Tensor> {
+        let (server, workers) = spawn_stalled(trace);
+        let handles: Vec<_> = inputs
+            .iter()
+            .map(|i| server.submit(InferenceRequest::new(i.clone())).unwrap())
+            .collect();
+        let outs = handles
+            .into_iter()
+            .map(|h| h.wait().expect("request wedged").0)
+            .collect();
+        let master = server.shutdown().unwrap();
+        master.shutdown();
+        workers.join().unwrap();
+        outs
+    };
+
+    let before = spans_allocated();
+    let untraced = run(None);
+    assert_eq!(
+        spans_allocated(),
+        before,
+        "tracing off must allocate zero spans"
+    );
+
+    let trace = TraceHandle::new(4096);
+    let traced = run(Some(trace.clone()));
+    assert!(spans_allocated() > before, "traced run recorded nothing");
+    assert!(trace.violations().is_empty(), "{:?}", trace.violations());
+
+    for ((a, b), w) in untraced.iter().zip(&traced).zip(&want) {
+        assert_eq!(a.data, b.data, "tracing changed the output bytes");
+        assert_eq!(a.data, w.data, "run diverged from local inference");
+    }
+}
+
+/// A healthy pool's scrape: full stable family set, hard schema check,
+/// and counters that add up.
+#[test]
+fn server_scrape_passes_schema_check_with_stable_families() {
+    let inputs = inputs_for(3, 932);
+    let config = MasterConfig {
+        scheme: SchemeKind::Mds,
+        policy: SplitPolicy::Fixed(2),
+        mode: ExecMode::Pipelined,
+        ..Default::default()
+    };
+    let cluster = LocalCluster::spawn_with(
+        "tinyvgg",
+        3,
+        config,
+        Arc::new(FallbackProvider::new()),
+        (0..3).map(|_| WorkerFaults::none()).collect(),
+        PoolOptions { worker_slots: 1 },
+    )
+    .unwrap();
+    let (master, workers) = cluster.into_parts();
+    let server = InferenceServer::start(master, ServerConfig::default());
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|i| server.submit(InferenceRequest::new(i.clone())).unwrap())
+        .collect();
+    for h in handles {
+        h.wait().unwrap();
+    }
+
+    let snap = server.scrape();
+    let text = snap.to_prometheus();
+    // 6 server families + 18 hub families, every one schema-clean.
+    assert_eq!(check_exposition(&text).unwrap(), 24);
+    assert!(text.contains("cocoi_server_submitted_total 3"));
+    assert!(text.contains("cocoi_server_completed_total 3"));
+    assert!(text.contains("cocoi_server_open_requests 0"));
+    assert!(text.contains("# TYPE cocoi_sojourn_seconds histogram"));
+    assert!(text.contains("cocoi_hedges_total 0"));
+    // Family order is stable scrape over scrape.
+    assert_eq!(snap.family_names(), server.scrape().family_names());
+
+    let master = server.shutdown().unwrap();
+    master.shutdown();
+    workers.join().unwrap();
+}
+
+/// The quantile estimate stays within the documented relative-error
+/// bound of the exact order statistic at the same rank.
+#[test]
+fn histogram_quantile_honours_documented_error_bound() {
+    let mut rng = Rng::new(77);
+    let mut h = LogHistogram::new();
+    // Latencies spread over ~4 decades, the regime the log buckets target.
+    let mut vals: Vec<f64> = (0..20_000)
+        .map(|_| 1e-4 * (9.0 * rng.uniform()).exp())
+        .collect();
+    for &v in &vals {
+        h.record(v);
+    }
+    vals.sort_by(f64::total_cmp);
+    let bound = quantile_error_bound() + 1e-12;
+    for q in [0.01, 0.25, 0.50, 0.90, 0.95, 0.99, 1.0] {
+        let rank = ((q * vals.len() as f64).ceil() as usize).max(1);
+        let exact = vals[rank - 1];
+        let est = h.quantile(q);
+        let rel = (est - exact).abs() / exact;
+        assert!(
+            rel <= bound,
+            "q={q}: estimate {est} vs exact {exact} → rel err {rel:.4} > {bound:.4}"
+        );
+    }
+}
+
+/// merge(a, b) is exactly the histogram of the concatenated samples —
+/// identical buckets, count, sum, min/max, and therefore quantiles.
+#[test]
+fn histogram_merge_equals_concatenation() {
+    let mut rng = Rng::new(88);
+    let (mut a, mut b, mut all) = (LogHistogram::new(), LogHistogram::new(), LogHistogram::new());
+    for i in 0..5_000 {
+        let v = 1e-5 * (10.0 * rng.uniform()).exp();
+        all.record(v);
+        if i % 2 == 0 {
+            a.record(v);
+        } else {
+            b.record(v);
+        }
+    }
+    a.merge(&b);
+    assert_eq!(a.count(), all.count());
+    assert!((a.sum() - all.sum()).abs() <= 1e-9 * all.sum());
+    assert_eq!(a.min().to_bits(), all.min().to_bits());
+    assert_eq!(a.max().to_bits(), all.max().to_bits());
+    assert_eq!(a.cumulative_buckets(), all.cumulative_buckets());
+    for q in [0.1, 0.5, 0.9, 0.99] {
+        assert_eq!(a.quantile(q).to_bits(), all.quantile(q).to_bits());
+    }
+}
