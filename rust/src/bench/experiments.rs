@@ -956,6 +956,93 @@ pub fn serving(scale: Scale) -> Result<()> {
     }
     table.print();
 
+    // -- sweep 1c: per-layer scheme selection (`--scheme auto`) -------
+    // The selector's contract: never lose to the always-k° MDS plan.
+    // Calm and drifted pools tie *bitwise* (the selector keeps the MDS
+    // plan, so the rng stream is identical — see
+    // `sim::runner::auto_select_delegates_bitwise`); under mass churn
+    // (9 of 10 workers lost every round) the LT flip must win outright:
+    // a fixed-rate round pays the failure timeout plus a serial
+    // re-dispatch chain on the lone survivor, while the rateless round
+    // just loses symbols and completes from the bounded local fallback.
+    // HARD gate: auto p95 <= k-circ p95 at every swept scenario x load
+    // point, with and without the deadline shedder.
+    let sel_deadline = 3.0 * service;
+    let sel_arms: [(&str, Scenario, Option<f64>); 5] = [
+        ("calm", Scenario::None, None),
+        ("calm+deadline", Scenario::None, Some(sel_deadline)),
+        ("drift", Scenario::Straggling { lambda_tr: 0.5 }, None),
+        (
+            "drift+deadline",
+            Scenario::Straggling { lambda_tr: 0.5 },
+            Some(sel_deadline),
+        ),
+        ("churn9", Scenario::Failures { n_f: 9 }, None),
+    ];
+    let mut sel_gate_ok = true;
+    let mut table = Table::new(
+        &format!(
+            "Serving — scheme selector: `--scheme auto` vs always-k° MDS \
+             (vgg16, n={n}, {arrivals} Poisson arrivals per point)"
+        ),
+        &["scenario", "offered load", "method", "p50", "p95", "shed", "gate"],
+    );
+    for (label, sc, dl) in sel_arms {
+        for &rho in &rhos {
+            let rate = rho / service;
+            let mut kcirc_p95 = f64::NAN;
+            for method in [MethodSim::CocoiKCirc, MethodSim::AutoSelect] {
+                let mut rng = Rng::new(0x5EE5 ^ (rho * 100.0) as u64);
+                let r = simulate_serving_open(
+                    &model,
+                    &p,
+                    n,
+                    method,
+                    sc,
+                    ServeSimMode::Pipelined,
+                    rate,
+                    arrivals,
+                    dl,
+                    &mut rng,
+                )?;
+                let gate = if method == MethodSim::CocoiKCirc {
+                    kcirc_p95 = r.p95();
+                    "-".to_string()
+                } else {
+                    let ok = r.p95() <= kcirc_p95 * (1.0 + 1e-9);
+                    if !ok {
+                        sel_gate_ok = false;
+                    }
+                    (if ok { "ok" } else { "LOST" }).to_string()
+                };
+                table.row(vec![
+                    label.to_string(),
+                    format!("{rho:.2}"),
+                    method.label().to_string(),
+                    fmt_secs(r.p50()),
+                    fmt_secs(r.p95()),
+                    format!("{:.1}%", 100.0 * r.shed_rate()),
+                    gate,
+                ]);
+                json.set(
+                    &format!("sel_{label}_load{:02.0}_{}", rho * 100.0, method.label()),
+                    Json::obj(vec![
+                        ("rate_rps", Json::Num(rate)),
+                        ("scenario", Json::Str(sc.label())),
+                        ("deadline_s", Json::Num(dl.unwrap_or(0.0))),
+                        ("p50_s", Json::Num(r.p50())),
+                        ("p95_s", Json::Num(r.p95())),
+                        ("p99_s", Json::Num(r.p99())),
+                        ("mean_s", Json::Num(r.mean())),
+                        ("shed_rate", Json::Num(r.shed_rate())),
+                        ("served", Json::Num(r.latencies.len() as f64)),
+                    ]),
+                );
+            }
+        }
+    }
+    table.print();
+
     // -- sweep 1b: watchdog hedging under a chronic straggler ---------
     // Hedging is the reliability layer's latency mechanism. The regime
     // where it is the *only* defense: the uncoded method (needs every
@@ -1259,15 +1346,18 @@ pub fn serving(scale: Scale) -> Result<()> {
     json.set("gate_pipelined_p95_le_barrier", Json::Bool(gate_ok));
     json.set("gate_coalesced_p95_le_uncoalesced", Json::Bool(coal_gate_ok));
     json.set("gate_hedged_p95_le_unhedged", Json::Bool(hedge_gate_ok));
+    json.set("gate_auto_p95_le_kcirc", Json::Bool(sel_gate_ok));
     let path = json.write()?;
     println!(
         "(open-loop Poisson arrivals through the serving stack; gates: pipelined \
          p95 <= barrier p95 — {} — coalesced p95 <= uncoalesced pipelined \
-         p95 — {} — and hedged p95 <= unhedged p95 under the chronic \
-         straggler — {} — at every swept load) results -> {}",
+         p95 — {} — hedged p95 <= unhedged p95 under the chronic \
+         straggler — {} — and `--scheme auto` p95 <= always-k° p95 across \
+         the selector sweep — {} — at every swept point) results -> {}",
         if gate_ok { "PASS" } else { "FAIL" },
         if coal_gate_ok { "PASS" } else { "FAIL" },
         if hedge_gate_ok { "PASS" } else { "FAIL" },
+        if sel_gate_ok { "PASS" } else { "FAIL" },
         path.display()
     );
     anyhow::ensure!(
@@ -1281,6 +1371,10 @@ pub fn serving(scale: Scale) -> Result<()> {
     anyhow::ensure!(
         hedge_gate_ok,
         "hedged dispatch lost to the unhedged engine on p95 under the chronic straggler"
+    );
+    anyhow::ensure!(
+        sel_gate_ok,
+        "`--scheme auto` lost to the always-k-circ plan on p95 in the selector sweep"
     );
     Ok(())
 }

@@ -13,11 +13,13 @@ pub mod lt;
 pub mod matrix;
 pub mod mds;
 pub mod replication;
+pub mod select;
 pub mod uncoded;
 
 pub use lt::LtCode;
 pub use mds::MdsCode;
 pub use replication::Replication;
+pub use select::{SchemeChoice, SchemeKind, SchemeSelector, SelectorConfig};
 pub use uncoded::Uncoded;
 
 /// One encoded subtask produced by a scheme's `encode`.

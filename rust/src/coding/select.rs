@@ -1,0 +1,396 @@
+//! Per-layer, per-request coding-scheme selection — the decision layer
+//! between the planner and the wire.
+//!
+//! [`SchemeKind`] names the redundancy schemes the coordinator can put
+//! on a round (it used to live in `coordinator::master`; it moved here
+//! so the model plan can carry a per-layer scheme without depending on
+//! the coordinator). [`SchemeSelector`] is the policy that picks one:
+//!
+//! * **k-circ MDS** is the default mid-range choice — the paper's
+//!   mean-optimal split.
+//! * **Replication** wins when the fitted profile says the master's
+//!   encode/decode cost outweighs replication's larger-shard
+//!   transmission — compute-light ("tiny") layers on fast links, or a
+//!   master busy enough that coding FLOPs are the bottleneck.
+//!   Replication encodes by memcpy and decodes by picking the surviving
+//!   copy: zero master FLOPs.
+//! * **LT (rateless)** wins under churn and impossible deadlines: a
+//!   round completes the moment *any* k' useful symbols arrive, so a
+//!   mid-round eviction needs no re-dispatch and a joiner needs no
+//!   (n, k) re-solve — symbols just keep streaming.
+//!
+//! Redundancy under a deadline is Dutta-style: instead of a fixed
+//! (n, k) split, the largest k whose fitted *tail quantile*
+//! ([`l_tail_quantile`]) fits the request's remaining slack is used —
+//! and when even k = 1 misses, the layer flips to LT.
+
+use super::lt::robust_soliton;
+use super::{LtCode, MdsCode, RedundancyScheme, Replication, Uncoded};
+use crate::latency::approx::{l_integer, l_tail_quantile};
+use crate::latency::order_stats::harmonic_factor;
+use crate::latency::phases::{LayerDims, SystemProfile};
+use crate::planner::deadline::solve_deadline_k;
+
+/// Redundancy scheme selector (the §V method column).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchemeKind {
+    /// CoCoI: (n, k)-MDS with planner-chosen k.
+    Mds,
+    /// Uncoded [8]: k = n, re-dispatch on failure.
+    Uncoded,
+    /// Replication [15]: k = ⌊n/2⌋, two copies each.
+    Replication,
+    /// LtCoI-k_l: LT with finest split k_l = W_O.
+    LtFine,
+    /// LtCoI-k_s: LT with the planner's k (≤ n).
+    LtCoarse,
+    /// Per-layer, per-request selection by [`SchemeSelector`]: the
+    /// master resolves this to one of the concrete kinds above at each
+    /// round from fitted profiles, churn, and deadline slack.
+    Auto,
+}
+
+impl SchemeKind {
+    /// Instantiate for one layer round. `Auto` must be resolved by the
+    /// selector before a round is prepared; as a defensive fallback it
+    /// instantiates the MDS default.
+    pub fn make(
+        &self,
+        n_workers: usize,
+        k_planned: usize,
+        w_o: usize,
+        seed: u64,
+    ) -> Box<dyn RedundancyScheme> {
+        match self {
+            SchemeKind::Mds | SchemeKind::Auto => {
+                Box::new(MdsCode::new(n_workers, k_planned.min(n_workers)))
+            }
+            SchemeKind::Uncoded => Box::new(Uncoded::new(n_workers.min(w_o).max(1))),
+            SchemeKind::Replication => Box::new(Replication::new(n_workers.max(2))),
+            SchemeKind::LtFine => Box::new(LtCode::new(n_workers, w_o, seed)),
+            SchemeKind::LtCoarse => {
+                Box::new(LtCode::new(n_workers, k_planned.min(n_workers), seed))
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchemeKind::Mds => "cocoi-mds",
+            SchemeKind::Uncoded => "uncoded",
+            SchemeKind::Replication => "replication",
+            SchemeKind::LtFine => "ltcoi-kl",
+            SchemeKind::LtCoarse => "ltcoi-ks",
+            SchemeKind::Auto => "auto",
+        }
+    }
+}
+
+/// Selector tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct SelectorConfig {
+    /// Membership events (join/evict/retire) inside the master's recent
+    /// churn window that flip distributed layers to rateless LT.
+    pub churn_threshold: usize,
+    /// Normal-style quantile score the deadline rule budgets for
+    /// (1.65 ≈ p95): redundancy is sized so the layer's *tail*, not its
+    /// mean, fits the remaining slack.
+    pub z_quantile: f64,
+}
+
+impl Default for SelectorConfig {
+    fn default() -> Self {
+        SelectorConfig {
+            churn_threshold: 2,
+            z_quantile: 1.65,
+        }
+    }
+}
+
+/// One resolved choice: the scheme, its split, and the predicted layer
+/// latency the choice was ranked by (seconds; the replanner's
+/// hysteresis compares these).
+#[derive(Clone, Copy, Debug)]
+pub struct SchemeChoice {
+    pub kind: SchemeKind,
+    pub k: usize,
+    pub predicted: f64,
+}
+
+/// The per-layer scheme policy. Deterministic: same inputs, same choice.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SchemeSelector {
+    pub config: SelectorConfig,
+}
+
+/// Symbols an LT decoder at split `k` typically needs before the GE
+/// rank reaches `k` (robust-soliton overhead ≈ O(√k·ln²) — matches the
+/// repo's measured ~1.2–1.7k for small k).
+pub fn lt_symbols_needed(k: usize) -> usize {
+    k + (2.0 * (k as f64).sqrt()).ceil() as usize + 2
+}
+
+/// The dispatch budget [`LtCode::new`] uses for split `k` (kept in sync
+/// with `coding::lt`).
+pub fn lt_budget(k: usize) -> usize {
+    2 * k + 16
+}
+
+impl SchemeSelector {
+    pub fn new(config: SelectorConfig) -> SchemeSelector {
+        SchemeSelector { config }
+    }
+
+    /// Predicted expected latency (seconds) of one round of `kind` at
+    /// split `k` on an `n`-worker pool — the ranking function behind
+    /// [`SchemeSelector::choose`]. Mirrors [`l_integer`]'s phase model,
+    /// extended with the per-message floor `θ_msg` (which is what makes
+    /// fine-grained LT pay for its symbol count) and each scheme's own
+    /// master-side encode/decode cost.
+    pub fn predict(
+        &self,
+        kind: SchemeKind,
+        dims: &LayerDims,
+        p: &SystemProfile,
+        n: usize,
+        k: usize,
+    ) -> f64 {
+        let n = n.max(1);
+        let cap = n.min(dims.w_o).max(1);
+        let k = k.clamp(1, cap);
+        let kf = k as f64;
+        let worker_theta = |kf: f64| {
+            dims.n_rec(kf) * p.theta_rec
+                + dims.n_cmp(kf) * p.theta_cmp
+                + dims.n_sen(kf) * p.theta_sen
+                + 2.0 * p.theta_msg
+        };
+        let worker_mu = |kf: f64| {
+            dims.n_rec(kf) / p.mu_rec + dims.n_cmp(kf) / p.mu_cmp + dims.n_sen(kf) / p.mu_sen
+        };
+        match kind {
+            SchemeKind::Mds | SchemeKind::Auto => {
+                let enc_dec =
+                    (dims.n_enc(n, kf) + dims.n_dec(kf)) * (1.0 / p.mu_m + p.theta_m);
+                enc_dec + worker_theta(kf) + worker_mu(kf) * harmonic_factor(n, k)
+            }
+            SchemeKind::Uncoded => {
+                // All n_u = min(n, W_O) pieces needed: the order factor
+                // is the max (H_{n_u}); no master coding at all.
+                let nu = n.min(dims.w_o).max(1);
+                let nf = nu as f64;
+                worker_theta(nf) + worker_mu(nf) * harmonic_factor(nu, nu)
+            }
+            SchemeKind::Replication => {
+                // k_rep = ⌊n/2⌋ sources, two copies each. Each pair's
+                // min-of-2 halves the exponential scale; completion is
+                // the max over the k_rep pairs ⇒ H_{k_rep}/2. Encode is
+                // a memcpy and decode picks the surviving copy: zero
+                // master FLOPs — replication's whole appeal.
+                let k_rep = (n / 2).max(1).min(cap);
+                let kf = k_rep as f64;
+                worker_theta(kf) + worker_mu(kf) * harmonic_factor(k_rep, k_rep) / 2.0
+            }
+            SchemeKind::LtFine | SchemeKind::LtCoarse => {
+                let k = if kind == SchemeKind::LtFine { cap } else { k };
+                let kf = k as f64;
+                let budget = lt_budget(k) as f64;
+                let pmf = robust_soliton(k);
+                let mean_degree: f64 = pmf
+                    .iter()
+                    .enumerate()
+                    .map(|(i, pr)| (i + 1) as f64 * pr)
+                    .sum();
+                // Encode: budget symbols, each a mean-degree-deep sum
+                // over rows of n_rec(k)/4 f32 elements; decode: GE of
+                // the same order as MDS decode.
+                let row_elems = dims.n_rec(kf) / 4.0;
+                let master = (mean_degree * budget * row_elems + dims.n_dec(kf))
+                    * (1.0 / p.mu_m + p.theta_m);
+                // Workers stream ~budget/n symbols each; the round ends
+                // when `needed` useful symbols arrived. Each extra wave
+                // of symbols costs another full per-symbol service (and
+                // another message), which is exactly the §V-C
+                // "excessive transmission overhead" of fine-grained LT.
+                let needed = lt_symbols_needed(k);
+                let waves = needed.div_ceil(n) as f64;
+                let order = harmonic_factor(n, needed.min(n));
+                master + (worker_theta(kf) + worker_mu(kf) * order) * waves
+            }
+        }
+    }
+
+    /// The full per-layer policy (replanner cadence + plan seeding):
+    /// LT under churn, deadline-fitted MDS (or LT when no split fits)
+    /// under slack pressure, otherwise the cheaper of k-circ MDS and
+    /// replication by predicted latency.
+    pub fn choose(
+        &self,
+        dims: &LayerDims,
+        p: &SystemProfile,
+        n: usize,
+        k_planned: usize,
+        slack: Option<f64>,
+        churn_events: usize,
+    ) -> SchemeChoice {
+        let cap = n.min(dims.w_o).max(1);
+        let k = k_planned.clamp(1, cap);
+        let pick = |kind: SchemeKind, k: usize| SchemeChoice {
+            kind,
+            k,
+            predicted: self.predict(kind, dims, p, n, k),
+        };
+        if n <= 1 {
+            return pick(SchemeKind::Uncoded, 1);
+        }
+        if churn_events >= self.config.churn_threshold {
+            return pick(SchemeKind::LtCoarse, k);
+        }
+        if let Some(s) = slack {
+            return match solve_deadline_k(dims, p, n, k, s, self.config.z_quantile) {
+                Some(kd) => pick(SchemeKind::Mds, kd),
+                // Even maximum redundancy misses the deadline: go
+                // rateless and take whatever symbols arrive in time.
+                None => pick(SchemeKind::LtCoarse, k),
+            };
+        }
+        let mds = pick(SchemeKind::Mds, k);
+        let rep = pick(SchemeKind::Replication, (n / 2).max(1).min(cap));
+        if rep.predicted < mds.predicted {
+            rep
+        } else {
+            mds
+        }
+    }
+
+    /// Per-round refinement of a plan-held base choice: churn and
+    /// deadline pressure override it for *this* round; otherwise the
+    /// (hysteresis-stable) base stands. The deadline rule only tightens
+    /// — it never raises k above the base.
+    #[allow(clippy::too_many_arguments)]
+    pub fn refine(
+        &self,
+        base_kind: SchemeKind,
+        base_k: usize,
+        dims: &LayerDims,
+        p: &SystemProfile,
+        n: usize,
+        slack: Option<f64>,
+        churn_events: usize,
+    ) -> (SchemeKind, usize) {
+        let cap = n.min(dims.w_o).max(1);
+        let k = base_k.clamp(1, cap);
+        if n <= 1 {
+            return (SchemeKind::Uncoded, 1);
+        }
+        if churn_events >= self.config.churn_threshold {
+            return (SchemeKind::LtCoarse, k);
+        }
+        if let Some(s) = slack {
+            return match solve_deadline_k(dims, p, n, k, s, self.config.z_quantile) {
+                Some(kd) => (SchemeKind::Mds, kd),
+                None => (SchemeKind::LtCoarse, k),
+            };
+        }
+        (base_kind, k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvSpec;
+
+    fn heavy() -> LayerDims {
+        // VGG-class: compute- and transmission-heavy.
+        LayerDims::new(ConvSpec::new(128, 128, 3, 1, 1), 112, 112)
+    }
+
+    #[test]
+    fn calm_midrange_layer_picks_kcirc_mds() {
+        let sel = SchemeSelector::default();
+        let p = SystemProfile::paper_default();
+        let c = sel.choose(&heavy(), &p, 8, 6, None, 0);
+        assert_eq!(c.kind, SchemeKind::Mds);
+        assert_eq!(c.k, 6);
+    }
+
+    #[test]
+    fn churn_flips_to_lt_and_single_worker_to_uncoded() {
+        let sel = SchemeSelector::default();
+        let p = SystemProfile::paper_default();
+        let c = sel.choose(&heavy(), &p, 8, 6, None, 3);
+        assert_eq!(c.kind, SchemeKind::LtCoarse);
+        assert_eq!(c.k, 6);
+        let c1 = sel.choose(&heavy(), &p, 1, 6, None, 0);
+        assert_eq!((c1.kind, c1.k), (SchemeKind::Uncoded, 1));
+    }
+
+    #[test]
+    fn master_bound_profile_picks_replication() {
+        // Fast links + a master whose coding FLOPs are the bottleneck:
+        // replication's zero encode/decode wins even though its shards
+        // are larger. This is the "tiny layer / fast link" regime.
+        let sel = SchemeSelector::default();
+        let mut p = SystemProfile::paper_default();
+        p.mu_rec = 1e12;
+        p.mu_sen = 1e12;
+        p.theta_rec = 1e-12;
+        p.theta_sen = 1e-12;
+        p.mu_m = 1e7;
+        p.theta_m = 1e-7;
+        let c = sel.choose(&heavy(), &p, 8, 6, None, 0);
+        assert_eq!(c.kind, SchemeKind::Replication);
+        assert_eq!(c.k, 4);
+        assert!(c.predicted < sel.predict(SchemeKind::Mds, &heavy(), &p, 8, 6));
+    }
+
+    #[test]
+    fn deadline_rule_tightens_k_then_flips_to_lt() {
+        let sel = SchemeSelector::default();
+        let p = SystemProfile::paper_default();
+        let d = heavy();
+        let (n, k) = (8, 6);
+        // Generous slack: keep the mean-optimal split.
+        let roomy = l_tail_quantile(&d, &p, n, k, sel.config.z_quantile) * 2.0;
+        let c = sel.choose(&d, &p, n, k, Some(roomy), 0);
+        assert_eq!((c.kind, c.k), (SchemeKind::Mds, k));
+        // Slack between the k=1 and k=6 tails: k must drop below 6.
+        let k1 = l_tail_quantile(&d, &p, n, 1, sel.config.z_quantile);
+        let k6 = l_tail_quantile(&d, &p, n, 6, sel.config.z_quantile);
+        if k1 < k6 {
+            let c = sel.choose(&d, &p, n, k, Some((k1 + k6) / 2.0), 0);
+            assert_eq!(c.kind, SchemeKind::Mds);
+            assert!(c.k < 6, "slack pressure must add redundancy, got k={}", c.k);
+        }
+        // Impossible slack: rateless.
+        let c = sel.choose(&d, &p, n, k, Some(1e-9), 0);
+        assert_eq!(c.kind, SchemeKind::LtCoarse);
+        // refine() applies the same rules on a plan-held base.
+        let (kind, _) =
+            sel.refine(SchemeKind::Replication, 4, &d, &p, n, Some(1e-9), 0);
+        assert_eq!(kind, SchemeKind::LtCoarse);
+        let (kind, k_r) = sel.refine(SchemeKind::Replication, 4, &d, &p, n, None, 0);
+        assert_eq!((kind, k_r), (SchemeKind::Replication, 4));
+    }
+
+    #[test]
+    fn auto_makes_a_usable_scheme_defensively() {
+        let s = SchemeKind::Auto.make(4, 3, 16, 1);
+        assert_eq!(s.source_count(), 3);
+        assert_eq!(s.num_subtasks(), 4);
+        assert_eq!(SchemeKind::Auto.name(), "auto");
+    }
+
+    #[test]
+    fn lt_prediction_penalizes_fine_splits() {
+        // θ_msg makes symbol count expensive: the finest split must
+        // predict worse than the planner-k split (§V-C).
+        let sel = SchemeSelector::default();
+        let p = SystemProfile::paper_default();
+        let d = heavy();
+        let fine = sel.predict(SchemeKind::LtFine, &d, &p, 8, 6);
+        let coarse = sel.predict(SchemeKind::LtCoarse, &d, &p, 8, 6);
+        assert!(coarse < fine, "coarse={coarse} fine={fine}");
+    }
+}

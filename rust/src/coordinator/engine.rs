@@ -70,7 +70,7 @@ use crate::conv::Tensor;
 use crate::model::{Node, Op};
 use crate::telemetry::EventKind;
 
-use super::master::{assemble_output, Master, MasterEvent, PreparedRound};
+use super::master::{assemble_output, Master, MasterEvent, PreparedRound, SchemeKind};
 use super::messages::{FromWorker, ToWorker};
 use super::metrics::{InferenceMetrics, LayerMetrics, WorkerPhase};
 use super::server::ServeError;
@@ -497,6 +497,12 @@ impl Master {
         // mechanisms is on; with both off the loop keeps the original
         // fail-fast recv_timeout behavior.
         let watchdog = self.config.hedge_quantile > 0.0 || self.config.local_fallback;
+        // Trace-sampling counter (`--trace-sample N`): admissions are
+        // numbered in admission order and one in every N gets a span
+        // tree. A sampled-out request's `root_span` stays `None`, which
+        // every per-request emit site already gates on — it allocates
+        // zero spans end to end.
+        let mut trace_seq: u64 = 0;
 
         loop {
             // -- admission: start the most urgent pending requests ----
@@ -507,23 +513,35 @@ impl Master {
                 let now = Instant::now();
                 let wait = now.saturating_duration_since(req.submitted_at).as_secs_f64();
                 self.hub.lock().queue_wait.record(wait);
+                // Sampling decision, made once per admission attempt
+                // (shed or started) so the 1-in-N cadence follows the
+                // arrival stream.
+                trace_seq += 1;
+                let sampled = self.config.trace_sample <= 1
+                    || (trace_seq - 1) % self.config.trace_sample as u64 == 0;
                 if let Some(err) = self.shed_decision(req.deadline) {
                     // A shed request still gets a (tiny) trace tree, so a
                     // traced run shows *why* nothing else was recorded.
-                    if let Some(tr) = &self.config.trace {
-                        let root = tr.begin_request(req.id, req.submitted_at);
-                        tr.instant(req.id, "shed", None, Some(wait), now);
-                        tr.end_request(req.id, root, now);
+                    if sampled {
+                        if let Some(tr) = &self.config.trace {
+                            let root = tr.begin_request(req.id, req.submitted_at);
+                            tr.instant(req.id, "shed", None, Some(wait), now);
+                            tr.end_request(req.id, root, now);
+                        }
                     }
                     log::debug!("engine: req={} shed wait_secs={wait:.4}", req.id);
                     sink.deliver(req.id, Err(err));
                     continue;
                 }
-                let root_span = self.config.trace.as_ref().map(|tr| {
-                    let root = tr.begin_request(req.id, req.submitted_at);
-                    tr.span_closed(req.id, root, "queue-wait", None, req.submitted_at, now);
-                    root
-                });
+                let root_span = if sampled {
+                    self.config.trace.as_ref().map(|tr| {
+                        let root = tr.begin_request(req.id, req.submitted_at);
+                        tr.span_closed(req.id, root, "queue-wait", None, req.submitted_at, now);
+                        root
+                    })
+                } else {
+                    None
+                };
                 log::debug!("engine: req={} admitted wait_secs={wait:.4}", req.id);
                 active.insert(
                     req.id,
@@ -746,7 +764,15 @@ impl Master {
         let input = Tensor::from_vec(spec.c_in, h, w, vec![0.5; spec.c_in * h * w])?;
         // u64::MAX marks the probe's pseudo-request; no decoder ever
         // sees it. n = k = 1: the smallest real subtask on this layer.
-        let pr = self.prepare_round(&[(u64::MAX, &input)], &c.node_id, &spec, 1, 1)?;
+        // Rateless kinds are mapped to uncoded for probing — an LT probe
+        // would dispatch its whole symbol budget (~18 frames) at one
+        // just-joined worker when a single sample is all the registry
+        // needs.
+        let probe_scheme = match self.config.scheme {
+            SchemeKind::LtFine | SchemeKind::LtCoarse | SchemeKind::Auto => SchemeKind::Uncoded,
+            s => s,
+        };
+        let pr = self.prepare_round(&[(u64::MAX, &input)], &c.node_id, &spec, probe_scheme, 1, 1)?;
         let dispatched_at: Vec<Instant> = pr.frames.iter().map(|_| Instant::now()).collect();
         *worker_load.entry(id).or_insert(0) += pr.frames.len();
         for frame in &pr.frames {
@@ -855,9 +881,12 @@ impl Master {
                 }
                 self.hub.lock().gauges.retries += 1;
                 if let Some(tr) = &self.config.trace {
-                    let lead = ar.parts[0].request;
-                    tr.instant(lead, "retry", Some(target), None, redispatched_at);
+                    // Gated on the lead part's round span: a sampled-out
+                    // request has none, and emitting under its id would
+                    // be an orphan event.
                     if let Some(parent) = ar.parts[0].span {
+                        let lead = ar.parts[0].request;
+                        tr.instant(lead, "retry", Some(target), None, redispatched_at);
                         let sid = tr.span_start(
                             lead,
                             parent,
@@ -982,7 +1011,9 @@ impl Master {
                         );
                         let name = if backup_won { "hedge-won" } else { "hedge-lost" };
                         if let Some(tr) = &self.config.trace {
-                            tr.instant(lead, name, Some(wid), latency, arrival);
+                            if ar.parts[0].span.is_some() {
+                                tr.instant(lead, name, Some(wid), latency, arrival);
+                            }
                         }
                         log::debug!(
                             "engine: req={lead} round={round} task={task_id} worker={wid} \
@@ -1149,9 +1180,9 @@ impl Master {
                     }
                     self.hub.lock().gauges.retries += 1;
                     if let Some(tr) = &self.config.trace {
-                        let lead = ar.parts[0].request;
-                        tr.instant(lead, "retry", Some(target), None, redispatched_at);
                         if let Some(parent) = ar.parts[0].span {
+                            let lead = ar.parts[0].request;
+                            tr.instant(lead, "retry", Some(target), None, redispatched_at);
                             let sid = tr.span_start(
                                 lead,
                                 parent,
@@ -1299,7 +1330,16 @@ impl Master {
                 staged.extend(ids.iter().copied());
                 continue;
             }
-            let k_eff = self.effective_k(k_planned, targets.len());
+            // Earliest deadline across the coalesced requests: it clamps
+            // the round's hedge/fallback timers below AND feeds the
+            // selector's deadline-redundancy rule (remaining slack sizes
+            // n - k, or flips the layer to rateless when no k fits).
+            let deadline = ids
+                .iter()
+                .filter_map(|rid| active.get(rid).and_then(|st| st.deadline))
+                .min();
+            let (scheme_kind, k_eff) =
+                self.choose_scheme(&node.id, k_planned, targets.len(), deadline);
             let reqs: Vec<(u64, &Tensor)> = ids
                 .iter()
                 .map(|rid| {
@@ -1312,7 +1352,8 @@ impl Master {
                     )
                 })
                 .collect();
-            let mut pr = self.prepare_round(&reqs, &node.id, &spec, k_eff, targets.len())?;
+            let mut pr =
+                self.prepare_round(&reqs, &node.id, &spec, scheme_kind, k_eff, targets.len())?;
             let t_dispatch = Instant::now();
             // Spread the round's shards over *distinct* workers (the
             // MDS resilience model assumes one shard per device),
@@ -1389,12 +1430,6 @@ impl Master {
                 }
             }
             let outstanding: Vec<usize> = (0..pr.frames.len()).collect();
-            // Earliest deadline across the coalesced requests clamps the
-            // round's hedge/fallback timers.
-            let deadline = ids
-                .iter()
-                .filter_map(|rid| active.get(rid).and_then(|st| st.deadline))
-                .min();
             rounds.insert(
                 pr.round,
                 ActiveRound {
@@ -1457,13 +1492,15 @@ impl Master {
             }
             self.hub.lock().gauges.cancels += ar.outstanding.len() as u64;
             if let Some(tr) = &self.config.trace {
-                tr.instant(
-                    ar.parts[0].request,
-                    "cancel",
-                    None,
-                    Some(ar.outstanding.len() as f64),
-                    Instant::now(),
-                );
+                if ar.parts[0].span.is_some() {
+                    tr.instant(
+                        ar.parts[0].request,
+                        "cancel",
+                        None,
+                        Some(ar.outstanding.len() as f64),
+                        Instant::now(),
+                    );
+                }
             }
             ar.outstanding.clear();
         }
@@ -1638,13 +1675,15 @@ impl Master {
                             h.gauges.fallbacks += 1;
                         }
                         if let Some(tr) = &self.config.trace {
-                            tr.instant(
-                                ar.parts[0].request,
-                                "local-fallback",
-                                Some(ar.assigned[t]),
-                                Some(fb_latency),
-                                done_at,
-                            );
+                            if ar.parts[0].span.is_some() {
+                                tr.instant(
+                                    ar.parts[0].request,
+                                    "local-fallback",
+                                    Some(ar.assigned[t]),
+                                    Some(fb_latency),
+                                    done_at,
+                                );
+                            }
                         }
                         ar.outstanding.retain(|&x| x != t);
                         for holder in ar.take_holders(t) {
@@ -1714,9 +1753,9 @@ impl Master {
                             rt.dispatched_at[t] = hedged_at;
                         }
                         if let Some(tr) = &self.config.trace {
-                            let lead = ar.parts[0].request;
-                            tr.instant(lead, "hedge-fired", Some(holder), None, hedged_at);
                             if let Some(parent) = ar.parts[0].span {
+                                let lead = ar.parts[0].request;
+                                tr.instant(lead, "hedge-fired", Some(holder), None, hedged_at);
                                 let sid = tr.span_start(
                                     lead,
                                     parent,
@@ -1751,50 +1790,67 @@ impl Master {
     /// a worker reply.
     fn fallback_complete(&mut self, ar: &mut ActiveRound) -> Result<()> {
         let round = ar.pr.round;
-        for t in 0..ar.pr.frames.len() {
-            if ar.parts[0].decoder.ready() {
-                break;
-            }
-            if ar.received.contains(&t) {
-                continue;
-            }
-            let chunks = self.compute_task_locally(&ar.pr, t)?;
-            self.registry
-                .note_reliability(EventKind::LocalFallback, ar.assigned[t], round);
-            let done_at = Instant::now();
-            let fb_latency = self
-                .round_log
-                .get(&round)
-                .and_then(|rt| rt.dispatched_at.get(t).copied())
-                .map(|d| done_at.saturating_duration_since(d).as_secs_f64());
-            {
-                let mut h = self.hub.lock();
-                if let Some(lat) = fb_latency {
-                    h.fallback_latency.record(lat);
+        // Missing shards are recovered in waves of at most
+        // `fallback_concurrency` so a wedged wide round (LT budgets
+        // especially) overlaps its shard convolutions instead of
+        // grinding through them one by one — while never computing
+        // unboundedly past what the decoder needs.
+        let cap = self.config.fallback_concurrency.max(1);
+        let mut next_t = 0usize;
+        while !ar.parts[0].decoder.ready() {
+            let mut wave = Vec::with_capacity(cap);
+            while wave.len() < cap && next_t < ar.pr.frames.len() {
+                if !ar.received.contains(&next_t) {
+                    wave.push(next_t);
                 }
-                h.gauges.fallbacks += 1;
+                next_t += 1;
             }
-            if let Some(tr) = &self.config.trace {
-                tr.instant(
-                    ar.parts[0].request,
-                    "local-fallback",
-                    Some(ar.assigned[t]),
-                    fb_latency,
-                    done_at,
-                );
+            anyhow::ensure!(
+                !wave.is_empty(),
+                "layer {} (round {round}): local fallback exhausted every shard but the \
+                 decoder is still short",
+                ar.parts[0].lm.node_id
+            );
+            let all_chunks = self.compute_tasks_locally(&ar.pr, &wave)?;
+            let done_at = Instant::now();
+            for (&t, chunks) in wave.iter().zip(all_chunks) {
+                if ar.parts[0].decoder.ready() {
+                    // An earlier shard in this wave finished the decode;
+                    // surplus shards are dropped unfed and unreported.
+                    break;
+                }
+                self.registry
+                    .note_reliability(EventKind::LocalFallback, ar.assigned[t], round);
+                let fb_latency = self
+                    .round_log
+                    .get(&round)
+                    .and_then(|rt| rt.dispatched_at.get(t).copied())
+                    .map(|d| done_at.saturating_duration_since(d).as_secs_f64());
+                {
+                    let mut h = self.hub.lock();
+                    if let Some(lat) = fb_latency {
+                        h.fallback_latency.record(lat);
+                    }
+                    h.gauges.fallbacks += 1;
+                }
+                if let Some(tr) = &self.config.trace {
+                    if ar.parts[0].span.is_some() {
+                        tr.instant(
+                            ar.parts[0].request,
+                            "local-fallback",
+                            Some(ar.assigned[t]),
+                            fb_latency,
+                            done_at,
+                        );
+                    }
+                }
+                for (p, chunk) in ar.parts.iter_mut().zip(chunks) {
+                    p.decoder.add(t, chunk);
+                    p.lm.fallbacks += 1;
+                }
+                ar.received.push(t);
             }
-            for (p, chunk) in ar.parts.iter_mut().zip(chunks) {
-                p.decoder.add(t, chunk);
-                p.lm.fallbacks += 1;
-            }
-            ar.received.push(t);
         }
-        anyhow::ensure!(
-            ar.parts[0].decoder.ready(),
-            "layer {} (round {round}): local fallback exhausted every shard but the \
-             decoder is still short",
-            ar.parts[0].lm.node_id
-        );
         Ok(())
     }
 }

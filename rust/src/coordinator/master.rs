@@ -10,9 +10,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::coding::{
-    LtCode, MdsCode, RedundancyScheme, Replication, Uncoded,
-};
+use crate::coding::{RedundancyScheme, SchemeSelector};
 use crate::conv::{SplitPlan, Tensor};
 use crate::latency::SystemProfile;
 use crate::model::graph::execute_simple_op;
@@ -67,51 +65,11 @@ pub(super) struct WorkerLink {
     pub(super) retiring: bool,
 }
 
-/// Redundancy scheme selector (the §V method column).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SchemeKind {
-    /// CoCoI: (n, k)-MDS with planner-chosen k.
-    Mds,
-    /// Uncoded [8]: k = n, re-dispatch on failure.
-    Uncoded,
-    /// Replication [15]: k = ⌊n/2⌋, two copies each.
-    Replication,
-    /// LtCoI-k_l: LT with finest split k_l = W_O.
-    LtFine,
-    /// LtCoI-k_s: LT with the planner's k (≤ n).
-    LtCoarse,
-}
-
-impl SchemeKind {
-    /// Instantiate for one layer round.
-    pub fn make(
-        &self,
-        n_workers: usize,
-        k_planned: usize,
-        w_o: usize,
-        seed: u64,
-    ) -> Box<dyn RedundancyScheme> {
-        match self {
-            SchemeKind::Mds => Box::new(MdsCode::new(n_workers, k_planned.min(n_workers))),
-            SchemeKind::Uncoded => Box::new(Uncoded::new(n_workers.min(w_o).max(1))),
-            SchemeKind::Replication => Box::new(Replication::new(n_workers.max(2))),
-            SchemeKind::LtFine => Box::new(LtCode::new(n_workers, w_o, seed)),
-            SchemeKind::LtCoarse => {
-                Box::new(LtCode::new(n_workers, k_planned.min(n_workers), seed))
-            }
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            SchemeKind::Mds => "cocoi-mds",
-            SchemeKind::Uncoded => "uncoded",
-            SchemeKind::Replication => "replication",
-            SchemeKind::LtFine => "ltcoi-kl",
-            SchemeKind::LtCoarse => "ltcoi-ks",
-        }
-    }
-}
+// The scheme enum + selection policy moved to `coding::select` so the
+// model plan and the replanner can reason about schemes without a
+// coordinator dependency; re-exported here so `coordinator::SchemeKind`
+// keeps resolving for existing callers.
+pub use crate::coding::select::SchemeKind;
 
 /// How the master schedules coded rounds over the worker pool.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -188,6 +146,20 @@ pub struct MasterConfig {
     /// per would-be emit site and allocates nothing — outputs are
     /// bitwise identical either way (`rust/tests/obs.rs`).
     pub trace: Option<TraceHandle>,
+    /// Trace sampling (`--trace-sample N`): record the full span tree of
+    /// one admitted request in every `N`. Sampled-out requests allocate
+    /// zero spans — their root span is never created, and every
+    /// per-request emit site is gated on it — while pool-level events
+    /// (join/evict/retire) are always recorded. `0`/`1` trace every
+    /// request (the old behavior).
+    pub trace_sample: usize,
+    /// Concurrency cap of the master-local decode fallback: at most this
+    /// many of a round's missing shards are convolved at once (scoped
+    /// threads sharing the master's provider). Keeps a worst-case
+    /// fallback — every shard missing on a wide round — from fanning out
+    /// unbounded CPU work next to the engine's event loop. `0` and `1`
+    /// both mean serial.
+    pub fallback_concurrency: usize,
 }
 
 impl Default for MasterConfig {
@@ -209,6 +181,8 @@ impl Default for MasterConfig {
             retry_budget: 4,
             local_fallback: true,
             trace: None,
+            trace_sample: 1,
+            fallback_concurrency: 4,
         }
     }
 }
@@ -236,6 +210,10 @@ pub(super) struct RoundTelemetry {
 
 /// How many recently-dispatched rounds keep telemetry bookkeeping.
 const ROUND_LOG_CAP: usize = 64;
+
+/// How many rounds back a membership event still counts as "recent
+/// churn" for the scheme selector.
+const CHURN_WINDOW: u64 = 48;
 
 /// The master device.
 pub struct Master {
@@ -268,6 +246,13 @@ pub struct Master {
     /// and replanning only when `config.adaptive`).
     pub(super) registry: CapacityRegistry,
     pub(super) replanner: Replanner,
+    /// The per-layer scheme policy (consulted only under
+    /// [`SchemeKind::Auto`]; see [`Master::choose_scheme`]).
+    pub(super) selector: SchemeSelector,
+    /// Rounds at which membership changed (join/evict/retire), bounded
+    /// to the recent [`CHURN_WINDOW`] — the selector flips churning
+    /// pools to rateless LT.
+    churn_rounds: Vec<u64>,
     /// Recent rounds' dispatch bookkeeping (see [`RoundTelemetry`]).
     pub(super) round_log: std::collections::BTreeMap<u64, RoundTelemetry>,
     /// Always-on latency histograms + pool gauges, shared with the
@@ -461,6 +446,25 @@ pub(super) fn assemble_output(
     Ok(out)
 }
 
+/// Seed a freshly built plan's per-layer schemes from the selector (the
+/// `--scheme auto` start state, before any telemetry exists): each
+/// distributed layer gets the scheme + split the selector predicts
+/// cheapest under the base profile on an `n`-worker pool. The replanner
+/// (`Replanner::replan_auto`) revisits these against fitted profiles.
+fn seed_auto_plan(
+    plan: &mut ModelPlan,
+    selector: &SchemeSelector,
+    profile: &SystemProfile,
+    n_workers: usize,
+) {
+    for c in plan.convs.iter_mut().filter(|c| c.distributed) {
+        let choice = selector.choose(&c.dims, profile, n_workers, c.k, None, 0);
+        c.scheme = choice.kind;
+        c.k = choice.k;
+        c.est_distributed = choice.predicted;
+    }
+}
+
 impl Master {
     /// Connect to `links` workers, load `model_name`, and plan splits.
     pub fn new(
@@ -473,13 +477,17 @@ impl Master {
         let model = zoo::model(model_name)?;
         let weights = WeightStore::generate(&model, config.weight_seed)?;
         let mut rng = Rng::new(config.seed);
-        let plan = ModelPlan::build(
+        let selector = SchemeSelector::default();
+        let mut plan = ModelPlan::build(
             &model,
             &config.profile,
             links.len(),
             config.policy,
             &mut rng,
         )?;
+        if config.scheme == SchemeKind::Auto {
+            seed_auto_plan(&mut plan, &selector, &config.profile, links.len());
+        }
 
         // One reader thread per worker feeding a single channel.
         let (agg_tx, events) = mpsc::channel();
@@ -514,6 +522,8 @@ impl Master {
             rng,
             registry,
             replanner,
+            selector,
+            churn_rounds: Vec::new(),
             round_log: std::collections::BTreeMap::new(),
             hub: MetricsHub::new(),
         };
@@ -539,13 +549,17 @@ impl Master {
         let model = zoo::model(model_name)?;
         let weights = WeightStore::generate(&model, config.weight_seed)?;
         let mut rng = Rng::new(config.seed);
-        let plan = ModelPlan::build(
+        let selector = SchemeSelector::default();
+        let mut plan = ModelPlan::build(
             &model,
             &config.profile,
             planned_workers,
             config.policy,
             &mut rng,
         )?;
+        if config.scheme == SchemeKind::Auto {
+            seed_auto_plan(&mut plan, &selector, &config.profile, planned_workers);
+        }
         let (agg_tx, events) = mpsc::channel();
         let registry = CapacityRegistry::new(0, config.telemetry);
         let replanner = Replanner::new(config.replan);
@@ -564,6 +578,8 @@ impl Master {
             rng,
             registry,
             replanner,
+            selector,
+            churn_rounds: Vec::new(),
             round_log: std::collections::BTreeMap::new(),
             hub: MetricsHub::new(),
         })
@@ -669,6 +685,7 @@ impl Master {
         );
         self.registry.admit(id);
         self.replanner.force();
+        self.note_churn();
         if let Some(tr) = &self.config.trace {
             tr.pool_instant("joined", Some(id), Instant::now());
         }
@@ -685,6 +702,7 @@ impl Master {
         log::warn!("worker {id}: link down; evicted from pool");
         self.registry.evict(id);
         self.replanner.force();
+        self.note_churn();
         if let Some(tr) = &self.config.trace {
             tr.pool_instant("evicted", Some(id), Instant::now());
         }
@@ -721,11 +739,30 @@ impl Master {
             }
             self.registry.retire(id);
             self.replanner.force();
+            self.note_churn();
             if let Some(tr) = &self.config.trace {
                 tr.pool_instant("retired", Some(id), Instant::now());
             }
         }
         self.refresh_pool_gauges();
+    }
+
+    /// Record one membership event at the current round and trim the
+    /// window (see [`CHURN_WINDOW`]).
+    fn note_churn(&mut self) {
+        let now = self.round;
+        self.churn_rounds.push(now);
+        self.churn_rounds
+            .retain(|&r| now.saturating_sub(r) <= CHURN_WINDOW);
+    }
+
+    /// Membership events within the last [`CHURN_WINDOW`] rounds — the
+    /// selector's churn signal.
+    pub(super) fn churn_events(&self) -> usize {
+        self.churn_rounds
+            .iter()
+            .filter(|&&r| self.round.saturating_sub(r) <= CHURN_WINDOW)
+            .count()
     }
 
     /// A sender into the master's event channel — the serving
@@ -779,6 +816,7 @@ impl Master {
                 Json::obj(vec![
                     ("layer", Json::Str(c.node_id.clone())),
                     ("k", Json::Num(c.k as f64)),
+                    ("scheme", Json::Str(c.scheme.name().to_string())),
                 ])
             })
             .collect();
@@ -855,6 +893,84 @@ impl Master {
         Ok(chunks)
     }
 
+    /// [`Master::compute_task_locally`] over several shards, at most
+    /// `config.fallback_concurrency` at a time: frames decode on the
+    /// caller's thread (cheap), the convolutions stride over scoped
+    /// worker threads sharing the master's provider. Results come back
+    /// in `task_ids` order. Bounding the fan-out keeps a worst-case
+    /// fallback (every shard of a wide round missing) from saturating
+    /// the host the engine's event loop runs on.
+    pub(super) fn compute_tasks_locally(
+        &self,
+        pr: &PreparedRound,
+        task_ids: &[usize],
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        let mut orders = Vec::with_capacity(task_ids.len());
+        for &t in task_ids {
+            let frame = pr.frames.get(t).with_context(|| {
+                format!("local fallback: round {} has no task {t}", pr.round)
+            })?;
+            match ToWorker::decode(frame)? {
+                ToWorker::Work(order) => orders.push(order),
+                other => bail!("local fallback: cached frame for task {t} is {other:?}"),
+            }
+        }
+        let provider: &dyn ConvProvider = &*self.provider;
+        let weights = &pr.params.weights;
+        let compute_one = move |order: &WorkOrder| -> Result<Vec<Vec<f32>>> {
+            let spec = order.spec();
+            let mut chunks = Vec::with_capacity(order.payloads.len());
+            for i in 0..order.payloads.len() {
+                let input = order.input_tensor(i)?;
+                chunks.push(provider.conv(&spec, &input, weights)?.flatten());
+            }
+            Ok(chunks)
+        };
+        let cap = self.config.fallback_concurrency.max(1).min(orders.len());
+        let mut merged: Vec<Option<Vec<Vec<f32>>>> =
+            (0..orders.len()).map(|_| None).collect();
+        if cap <= 1 {
+            for (slot, order) in merged.iter_mut().zip(&orders) {
+                *slot = Some(compute_one(order)?);
+            }
+        } else {
+            // The master itself is not Sync (it owns an mpsc receiver),
+            // so the lanes capture only the Sync pieces: the provider,
+            // the weights, and the decoded orders.
+            let lanes: Vec<Vec<(usize, Result<Vec<Vec<f32>>>)>> =
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = (0..cap)
+                        .map(|lane| {
+                            let orders = &orders;
+                            let compute_one = &compute_one;
+                            s.spawn(move || {
+                                orders
+                                    .iter()
+                                    .enumerate()
+                                    .skip(lane)
+                                    .step_by(cap)
+                                    .map(|(i, o)| (i, compute_one(o)))
+                                    .collect()
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("fallback lane panicked"))
+                        .collect()
+                });
+            for lane in lanes {
+                for (i, r) in lane {
+                    merged[i] = Some(r?);
+                }
+            }
+        }
+        Ok(merged
+            .into_iter()
+            .map(|m| m.expect("every fallback shard computed"))
+            .collect())
+    }
+
     /// The dispatch set for the upcoming round, by stable worker id:
     /// the registry's active workers under the adaptive policy, every
     /// pool member otherwise — minus retiring workers either way. Empty
@@ -873,16 +989,31 @@ impl Master {
     }
 
     /// Run a replan attempt if one is due (no-op unless adaptive).
+    /// Under `--scheme auto` the attempt also re-ranks each layer's
+    /// scheme (`Replanner::replan_auto`); fixed-scheme configs keep the
+    /// k-only path.
     pub(super) fn maybe_replan(&mut self) {
         if !self.config.adaptive || !self.replanner.due(self.round) {
             return;
         }
-        self.replanner.replan(
-            &mut self.plan,
-            &self.registry,
-            &self.config.profile,
-            self.round,
-        );
+        if self.config.scheme == SchemeKind::Auto {
+            let churn = self.churn_events();
+            self.replanner.replan_auto(
+                &mut self.plan,
+                &self.registry,
+                &self.config.profile,
+                self.round,
+                &self.selector,
+                churn,
+            );
+        } else {
+            self.replanner.replan(
+                &mut self.plan,
+                &self.registry,
+                &self.config.profile,
+                self.round,
+            );
+        }
     }
 
     /// Predicted end-to-end service seconds of one request under the
@@ -968,6 +1099,65 @@ impl Master {
         } else {
             k_planned
         }
+    }
+
+    /// Resolve the scheme + split for the upcoming round of one layer.
+    /// Fixed-scheme configs behave exactly as before: the configured
+    /// scheme at [`Master::effective_k`]. Under [`SchemeKind::Auto`] the
+    /// plan's per-layer base choice (seeded at build, revisited by
+    /// `replan_auto`) is refined for *this* round: recent churn flips to
+    /// rateless LT, and a request deadline becomes per-layer slack for
+    /// the deadline-redundancy rule (the remaining time split evenly
+    /// over the distributed layers still ahead of this one).
+    pub(super) fn choose_scheme(
+        &self,
+        node_id: &str,
+        k_planned: usize,
+        n_targets: usize,
+        deadline: Option<Instant>,
+    ) -> (SchemeKind, usize) {
+        if self.config.scheme != SchemeKind::Auto {
+            return (self.config.scheme, self.effective_k(k_planned, n_targets));
+        }
+        let Some(c) = self.plan.conv(node_id) else {
+            return (SchemeKind::Mds, self.effective_k(k_planned, n_targets));
+        };
+        let fitted = if self.config.adaptive && self.registry.any_estimate() {
+            self.registry.fitted_profile(&self.config.profile)
+        } else {
+            self.config.profile
+        };
+        let slack = deadline.map(|d| {
+            let idx = self
+                .plan
+                .convs
+                .iter()
+                .position(|p| p.node_id == node_id)
+                .unwrap_or(0);
+            let left = self.plan.convs[idx..]
+                .iter()
+                .filter(|p| p.distributed)
+                .count()
+                .max(1);
+            d.saturating_duration_since(Instant::now()).as_secs_f64() / left as f64
+        });
+        let (kind, k) = self.selector.refine(
+            c.scheme,
+            k_planned,
+            &c.dims,
+            &fitted,
+            n_targets,
+            slack,
+            self.churn_events(),
+        );
+        // The quarantine-shrunken-pool parity guard applies to the MDS
+        // shape only: LT sizes its own symbol budget, and uncoded /
+        // replication derive k from n inside `SchemeKind::make`.
+        let k = match kind {
+            SchemeKind::Mds => self.effective_k(k, n_targets),
+            _ => k,
+        };
+        (kind, k)
     }
 
     /// Fold one successful subtask reply (current *or* stale) into the
@@ -1169,11 +1359,16 @@ impl Master {
     /// policy) — the redundancy scheme is sized to it. One scheme
     /// instance encodes every request, and frame `i` interleaves each
     /// request's shard `i` as one multi-payload [`WorkOrder`].
+    /// `scheme_kind` is the (already resolved — see
+    /// [`Master::choose_scheme`]) redundancy scheme for this round;
+    /// passing it per-round is what lets `--scheme auto` vary the code
+    /// per layer and per request.
     pub(super) fn prepare_round(
         &mut self,
         requests: &[(u64, &Tensor)],
         node_id: &str,
         spec: &crate::conv::ConvSpec,
+        scheme_kind: SchemeKind,
         k_planned: usize,
         n_tasks: usize,
     ) -> Result<PreparedRound> {
@@ -1186,7 +1381,7 @@ impl Master {
         // -- input splitting phase ------------------------------------
         let t0 = Instant::now();
         let padded: Vec<Tensor> = requests.iter().map(|(_, t)| t.pad(spec.pad)).collect();
-        let scheme = self.config.scheme.make(
+        let scheme = scheme_kind.make(
             n,
             k_planned,
             spec.out_dim_padded(padded[0].w),
@@ -1318,9 +1513,15 @@ impl Master {
             !targets.is_empty(),
             "layer {node_id}: no live workers to dispatch to"
         );
-        let k_eff = self.effective_k(k_planned, targets.len());
-        let mut pr =
-            self.prepare_round(&[(0, input)], node_id, spec, k_eff, targets.len())?;
+        let (scheme_kind, k_eff) = self.choose_scheme(node_id, k_planned, targets.len(), None);
+        let mut pr = self.prepare_round(
+            &[(0, input)],
+            node_id,
+            spec,
+            scheme_kind,
+            k_eff,
+            targets.len(),
+        )?;
         let round = pr.round;
         let mut lm = std::mem::take(&mut pr.parts[0].lm);
 

@@ -3,7 +3,7 @@
 //! `E[T^u(n)]` (App. F, eq. 20), and the `h1..h5` / `R` theory quantities
 //! behind Lemma 1 and Propositions 1–3.
 
-use super::order_stats::harmonic_factor;
+use super::order_stats::{harmonic_factor, harmonic_variance};
 use super::phases::{LayerDims, SystemProfile};
 
 /// The layer/profile constants of App. C:
@@ -91,6 +91,26 @@ pub fn l_integer(dims: &LayerDims, p: &SystemProfile, n: usize, k: usize) -> f64
     enc_dec + theta_sum + mu_sum * harmonic_factor(n, k)
 }
 
+/// Tail-quantile analogue of [`l_integer`]: the same per-phase means,
+/// but the worker order factor is `mean + z·sd` of the k-th order
+/// statistic (Rényi representation: mean `H_n − H_{n−k}`, variance
+/// `Σ_{i=n−k+1..n} 1/i²`). `z` is a normal-style quantile score (1.65 ≈
+/// p95). This is what the deadline-redundancy rule compares against a
+/// request's remaining slack (Dutta-style "coded convolution within a
+/// deadline"): pick the largest k — least redundancy — whose *tail*,
+/// not just whose mean, still fits.
+pub fn l_tail_quantile(dims: &LayerDims, p: &SystemProfile, n: usize, k: usize, z: f64) -> f64 {
+    assert!(k >= 1 && k <= n);
+    let kf = k as f64;
+    let enc_dec = (dims.n_enc(n, kf) + dims.n_dec(kf)) * (1.0 / p.mu_m + p.theta_m);
+    let theta_sum =
+        dims.n_rec(kf) * p.theta_rec + dims.n_cmp(kf) * p.theta_cmp + dims.n_sen(kf) * p.theta_sen;
+    let mu_sum =
+        dims.n_rec(kf) / p.mu_rec + dims.n_cmp(kf) / p.mu_cmp + dims.n_sen(kf) / p.mu_sen;
+    let order = harmonic_factor(n, k) + z.max(0.0) * harmonic_variance(n, k).sqrt();
+    enc_dec + theta_sum + mu_sum * order
+}
+
 /// Canonical `P(k)` (App. C eq. 18): `L(k)` minus its k-independent
 /// constant, expressed through `h1..h4`. Used by the Lemma-1 tests.
 pub fn p_canonical(c: &TheoryConsts, p: &SystemProfile, n: usize, k: f64) -> f64 {
@@ -152,6 +172,21 @@ mod tests {
             // mu_sum this stays a small relative error.
             assert!((li - lr).abs() / li < 0.25, "k={k}: {li} vs {lr}");
             assert!(li <= lr, "harmonic factor underestimates log factor");
+        }
+    }
+
+    #[test]
+    fn tail_quantile_dominates_mean_and_grows_with_z() {
+        let d = dims();
+        let p = SystemProfile::paper_default();
+        let n = 10;
+        for k in 1..=n {
+            let mean = l_integer(&d, &p, n, k);
+            let q0 = l_tail_quantile(&d, &p, n, k, 0.0);
+            let q95 = l_tail_quantile(&d, &p, n, k, 1.65);
+            let q99 = l_tail_quantile(&d, &p, n, k, 2.33);
+            assert!((q0 - mean).abs() / mean < 1e-12, "z=0 must equal the mean");
+            assert!(q95 > mean && q99 > q95, "k={k}: {mean} {q95} {q99}");
         }
     }
 

@@ -27,6 +27,17 @@ pub fn harmonic_factor(n: usize, k: usize) -> f64 {
     harmonic(n) - harmonic(n - k)
 }
 
+/// Variance factor of the k-th order statistic under the Rényi
+/// representation: the k-th smallest of `n` iid exponentials is a sum of
+/// `k` independent scaled spacings `E_i/(n−i)`, so its variance (in the
+/// same normalized units as [`harmonic_factor`]) is
+/// `Σ_{i=n−k+1..n} 1/i²`. The deadline-redundancy rule uses
+/// `mean + z·sqrt(var)` as a tail-quantile surrogate.
+pub fn harmonic_variance(n: usize, k: usize) -> f64 {
+    assert!(k >= 1 && k <= n);
+    (n - k + 1..=n).map(|i| 1.0 / (i as f64 * i as f64)).sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -63,6 +74,19 @@ mod tests {
                 assert!(hm <= lg + 1e-12, "harmonic must underestimate log");
                 assert!(lg - hm < 1.0 / (n - k) as f64 - 1.0 / n as f64 + 1e-9);
             }
+        }
+    }
+
+    #[test]
+    fn harmonic_variance_matches_renyi_sum() {
+        // k = 1: min of n exps has variance 1/n². k = n: max has
+        // Σ_{i=1..n} 1/i². Monotone in k (adding spacings adds variance).
+        let n = 12;
+        assert!((harmonic_variance(n, 1) - 1.0 / (n * n) as f64).abs() < 1e-12);
+        let full: f64 = (1..=n).map(|i| 1.0 / (i * i) as f64).sum();
+        assert!((harmonic_variance(n, n) - full).abs() < 1e-12);
+        for k in 1..n {
+            assert!(harmonic_variance(n, k) < harmonic_variance(n, k + 1));
         }
     }
 

@@ -3,7 +3,7 @@
 //! Subcommands (hand-rolled arg parsing; no clap in the vendor set):
 //!
 //! ```text
-//! cocoi infer  --model tinyvgg --workers 4 [--scheme mds|uncoded|rep|lt-fine|lt-coarse]
+//! cocoi infer  --model tinyvgg --workers 4 [--scheme auto|mds|uncoded|rep|lt|lt-fine]
 //!              [--k N] [--lambda-tr X] [--fail N] [--pjrt] [--runs R] [--pipeline]
 //!              [--adaptive]                         # telemetry-driven replanning
 //!              [--telemetry PATH]                   # dump registry/plan JSON after the runs
@@ -18,8 +18,10 @@
 //!              [--hedge-quantile Q]                 # watchdog hedge quantile (0 = no hedging)
 //!              [--retry-budget B]                   # extra dispatches per round = B x subtasks
 //!              [--local-fallback on|off]            # master computes undeliverable shards
+//!              [--fallback-concurrency N]           # concurrent fallback shards (default 4; 1 = serial)
 //!              [--trace PATH]                       # record span trees, write Chrome trace JSON
 //!              [--trace-cap N]                      # trace ring capacity in spans (default 8192)
+//!              [--trace-sample N]                   # trace 1-in-N requests (default 1 = all)
 //!              [--metrics PATH]                     # write a Prometheus text scrape after the runs
 //! cocoi worker --listen 0.0.0.0:9090 [--pjrt] [--threads T] [--slots S]   # TCP worker process
 //! cocoi worker --connect host:9095 [--name N] [--model M]                 # announce to a running master
@@ -111,8 +113,9 @@ fn scheme_from_str(s: &str) -> Result<SchemeKind> {
         "mds" | "cocoi" => SchemeKind::Mds,
         "uncoded" => SchemeKind::Uncoded,
         "rep" | "replication" => SchemeKind::Replication,
+        "lt" | "lt-coarse" | "lt-ks" => SchemeKind::LtCoarse,
         "lt-fine" | "lt-kl" => SchemeKind::LtFine,
-        "lt-coarse" | "lt-ks" => SchemeKind::LtCoarse,
+        "auto" => SchemeKind::Auto,
         other => bail!("unknown scheme '{other}'"),
     })
 }
@@ -185,7 +188,12 @@ fn cmd_infer(args: &Args) -> Result<()> {
             Some("off") | Some("false") | Some("0") => false,
             Some(v) => bail!("--local-fallback {v}: expected on|off"),
         },
+        fallback_concurrency: args.get_usize(
+            "fallback-concurrency",
+            MasterConfig::default().fallback_concurrency,
+        )?,
         trace: trace_handle.clone(),
+        trace_sample: args.get_usize("trace-sample", MasterConfig::default().trace_sample)?,
         ..Default::default()
     };
     let telemetry_path = args.get("telemetry").map(std::path::PathBuf::from);

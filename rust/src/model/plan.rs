@@ -4,6 +4,7 @@
 
 use anyhow::Result;
 
+use crate::coding::SchemeKind;
 use crate::latency::approx::l_integer;
 use crate::latency::phases::LayerDims;
 use crate::latency::SystemProfile;
@@ -21,6 +22,11 @@ pub struct ConvPlan {
     pub distributed: bool,
     /// Chosen source-piece count (meaningful when `distributed`).
     pub k: usize,
+    /// Redundancy scheme for this layer. `ModelPlan::build` seeds the
+    /// MDS default; a master running `--scheme auto` re-seeds each
+    /// distributed layer from its [`crate::coding::SchemeSelector`] and
+    /// the replanner may swap it between requests.
+    pub scheme: SchemeKind,
     /// Estimated local latency (master executes the full layer).
     pub est_local: f64,
     /// Estimated distributed latency at the chosen `k`.
@@ -58,6 +64,7 @@ impl ModelPlan {
                 dims,
                 distributed,
                 k,
+                scheme: SchemeKind::Mds,
                 est_local,
                 est_distributed,
             });

@@ -1,0 +1,82 @@
+//! Deadline-driven redundancy (Dutta et al., "Coded convolution within a
+//! deadline"): instead of minimizing the *expected* layer latency, pick
+//! the split `k` — and therefore the redundancy `n − k` — whose fitted
+//! *tail quantile* still fits the request's remaining slack. Less
+//! redundancy (large k) is cheaper in encode/decode and per-task work
+//! but has a heavier straggler tail; the solver walks down from the
+//! mean-optimal cap until the tail fits, and reports `None` when even
+//! maximum redundancy (`k = 1`) misses — the scheme selector's cue to
+//! flip the layer to rateless LT.
+
+use crate::latency::approx::l_tail_quantile;
+use crate::latency::phases::LayerDims;
+use crate::latency::SystemProfile;
+
+/// Largest `k ∈ [1, k_max]` whose `z`-quantile latency estimate fits
+/// within `slack` seconds, preferring less redundancy (mean-optimal
+/// splits are at the top of the range; walking down only buys tail).
+/// `None` when no k fits — including non-finite or non-positive slack.
+pub fn solve_deadline_k(
+    dims: &LayerDims,
+    profile: &SystemProfile,
+    n: usize,
+    k_max: usize,
+    slack: f64,
+    z: f64,
+) -> Option<usize> {
+    if n == 0 || !slack.is_finite() || slack <= 0.0 {
+        return None;
+    }
+    let cap = k_max.clamp(1, n.min(dims.w_o).max(1));
+    (1..=cap)
+        .rev()
+        .find(|&k| l_tail_quantile(dims, profile, n, k, z) <= slack)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvSpec;
+    use crate::latency::approx::l_integer;
+
+    fn dims() -> LayerDims {
+        LayerDims::new(ConvSpec::new(64, 64, 3, 1, 1), 56, 56)
+    }
+
+    #[test]
+    fn generous_slack_keeps_the_cap_and_none_when_impossible() {
+        let d = dims();
+        let p = SystemProfile::paper_default();
+        let (n, k_max) = (8, 6);
+        // Slack far above any estimate: keep the mean-optimal cap.
+        assert_eq!(solve_deadline_k(&d, &p, n, k_max, 1e9, 1.65), Some(k_max));
+        // Slack below even the k = 1 tail: impossible.
+        let floor = l_tail_quantile(&d, &p, n, 1, 1.65);
+        assert_eq!(solve_deadline_k(&d, &p, n, k_max, floor * 0.5, 1.65), None);
+        assert_eq!(solve_deadline_k(&d, &p, n, k_max, f64::NAN, 1.65), None);
+        assert_eq!(solve_deadline_k(&d, &p, n, k_max, -1.0, 1.65), None);
+    }
+
+    #[test]
+    fn tighter_slack_never_raises_k() {
+        let d = dims();
+        let p = SystemProfile::paper_default();
+        let (n, k_max) = (8, 6);
+        let hi = l_tail_quantile(&d, &p, n, k_max, 1.65) * 2.0;
+        let mut slack = hi;
+        let mut prev = usize::MAX;
+        // Shrink slack geometrically: the chosen k must be monotone
+        // non-increasing until it disappears.
+        while slack > l_integer(&d, &p, n, 1) * 1e-4 {
+            match solve_deadline_k(&d, &p, n, k_max, slack, 1.65) {
+                Some(k) => {
+                    assert!(k <= prev.min(k_max), "slack={slack}: k={k} prev={prev}");
+                    prev = k;
+                }
+                None => prev = 0,
+            }
+            slack *= 0.7;
+        }
+        assert_eq!(prev, 0, "slack shrank to ~0 but a k still fit");
+    }
+}

@@ -3,11 +3,13 @@
 //! parameter sensitivity (Prop. 1), and the per-model split plan the
 //! coordinator consumes.
 
+pub mod deadline;
 pub mod hetero;
 pub mod montecarlo;
 pub mod sensitivity;
 pub mod solver;
 
+pub use deadline::solve_deadline_k;
 pub use sensitivity::Param;
 pub use solver::{solve_k_circ, KCircle};
 

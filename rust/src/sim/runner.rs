@@ -31,6 +31,14 @@ pub enum MethodSim {
     LtFine,
     /// LtCoI-k_s (planner k ≤ n).
     LtCoarse,
+    /// The live `--scheme auto` selector: per-layer k° MDS while the
+    /// pool is calm, rateless LT under worker churn — the sim mirror of
+    /// `SchemeSelector::refine`, which flips a layer to LT when recent
+    /// membership events make fixed-rate rounds pay timeout +
+    /// re-dispatch. Calm draws are bitwise those of [`Self::CocoiKCirc`]
+    /// (same rng stream); failure-scenario draws are bitwise those of
+    /// [`Self::LtCoarse`].
+    AutoSelect,
 }
 
 impl MethodSim {
@@ -42,6 +50,7 @@ impl MethodSim {
             MethodSim::Replication => "replication",
             MethodSim::LtFine => "ltcoi-kl",
             MethodSim::LtCoarse => "ltcoi-ks",
+            MethodSim::AutoSelect => "cocoi-auto",
         }
     }
 }
@@ -382,6 +391,27 @@ fn draw_layer(
             let budget = 2 * k + 16;
             trial_lt(dims, profile, n, k, budget, lt_cache, scenario, rng)
         }
+        MethodSim::AutoSelect => match scenario {
+            // Churn (failure scenarios): the selector flips the layer to
+            // rateless LT — lost symbols are just lost, no timeout wait
+            // or re-dispatch round trip.
+            Scenario::Failures { .. } | Scenario::FailuresPlusStraggler { .. } => {
+                let budget = 2 * k + 16;
+                trial_lt(dims, profile, n, k, budget, lt_cache, scenario, rng)
+            }
+            // Calm pool: k° MDS, identical draws to CocoiKCirc.
+            _ => trial_mds_like(
+                dims,
+                profile,
+                n,
+                k,
+                Needed::KOfN(k),
+                true,
+                scenario,
+                hedge,
+                rng,
+            ),
+        },
     }
 }
 
@@ -440,7 +470,7 @@ fn plan_layers(
             MethodSim::Uncoded => n.min(c.dims.w_o),
             MethodSim::Replication => (n / 2).max(1).min(c.dims.w_o),
             MethodSim::LtFine => c.dims.w_o,
-            MethodSim::LtCoarse => solve_k_circ(&c.dims, profile, n).k,
+            MethodSim::LtCoarse | MethodSim::AutoSelect => solve_k_circ(&c.dims, profile, n).k,
         };
         layer_cfg.push((c.node_id.clone(), c.dims, k));
     }
@@ -1008,7 +1038,10 @@ pub fn simulate_serving_open_with(
     // methods, whose k comes from the solver.)
     let fitted = straggling_profile(profile, scenario.lambda_tr());
     let adaptive = mode == ServeSimMode::PipelinedAdaptive
-        && matches!(method, MethodSim::CocoiKCirc | MethodSim::CocoiKStar { .. });
+        && matches!(
+            method,
+            MethodSim::CocoiKCirc | MethodSim::CocoiKStar { .. } | MethodSim::AutoSelect
+        );
     if adaptive {
         for (_, dims, k) in layer_cfg.iter_mut() {
             *k = solve_k_circ(dims, &fitted, n).k.clamp(1, n.min(dims.w_o));
@@ -1187,6 +1220,22 @@ mod tests {
                 r.trials
             );
         }
+    }
+
+    /// `--scheme auto`'s sim mirror: calm draws are bitwise those of
+    /// CoCoI-k° (the selector keeps the MDS plan), failure-scenario
+    /// draws are bitwise those of LtCoI-k_s (the churn flip). Both
+    /// delegations share the rng stream, so equality is exact.
+    #[test]
+    fn auto_select_delegates_bitwise() {
+        let calm_auto = quick(MethodSim::AutoSelect, Scenario::None, 7);
+        let calm_circ = quick(MethodSim::CocoiKCirc, Scenario::None, 7);
+        assert_eq!(calm_auto.trials, calm_circ.trials);
+
+        let churn = Scenario::Failures { n_f: 2 };
+        let churn_auto = quick(MethodSim::AutoSelect, churn, 7);
+        let churn_lt = quick(MethodSim::LtCoarse, churn, 7);
+        assert_eq!(churn_auto.trials, churn_lt.trials);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //!   `k` for one layer. Too expensive for every round; the adaptive
 //!   experiment and examples use it as the offline refinement step.
 
+use crate::coding::{SchemeKind, SchemeSelector};
 use crate::latency::approx::l_integer;
 use crate::latency::phases::LayerDims;
 use crate::latency::SystemProfile;
@@ -147,6 +148,76 @@ impl Replanner {
         }
     }
 
+    /// The `--scheme auto` replan path: re-solve `k` per layer as
+    /// [`Replanner::replan`] does, then let the [`SchemeSelector`] rank
+    /// schemes at that split under the fitted profile (and the master's
+    /// recent churn count). The same hysteresis bar gates the swap —
+    /// scheme churn is plan thrash too, so a marginally-better
+    /// replication prediction does not evict a working MDS plan. The
+    /// incumbent's cost is scored with the *same* selector predictor so
+    /// the comparison is apples-to-apples.
+    pub fn replan_auto(
+        &mut self,
+        plan: &mut ModelPlan,
+        registry: &CapacityRegistry,
+        base: &SystemProfile,
+        round: u64,
+        selector: &SchemeSelector,
+        churn_events: usize,
+    ) -> ReplanOutcome {
+        self.last_attempt_round = round;
+        let fitted = registry.fitted_profile(base);
+        let n_active = registry.healthy_count();
+        if n_active == 0 {
+            return ReplanOutcome {
+                swapped: false,
+                predicted: 0.0,
+                incumbent: 0.0,
+            };
+        }
+        let mut l_new = 0.0;
+        let mut l_cur = 0.0;
+        let mut picks: Vec<(usize, SchemeKind, usize)> = Vec::new();
+        for (i, c) in plan.convs.iter().enumerate() {
+            if !c.distributed {
+                continue;
+            }
+            let k_solved = solve_k_circ(&c.dims, &fitted, n_active)
+                .k
+                .clamp(1, n_active.min(c.dims.w_o));
+            let choice =
+                selector.choose(&c.dims, &fitted, n_active, k_solved, None, churn_events);
+            let k_cur = c.k.clamp(1, n_active.min(c.dims.w_o).max(1));
+            l_new += choice.predicted;
+            l_cur += selector.predict(c.scheme, &c.dims, &fitted, n_active, k_cur);
+            picks.push((i, choice.kind, choice.k));
+        }
+        if l_new < (1.0 - self.cfg.hysteresis) * l_cur {
+            for (i, kind, k) in picks {
+                let c = &mut plan.convs[i];
+                c.scheme = kind;
+                c.k = k;
+                c.est_distributed = selector.predict(kind, &c.dims, &fitted, n_active, k);
+            }
+            self.switches += 1;
+            log::info!(
+                "replan(auto) at round {round}: swapped plan (predicted {l_new:.3}s vs \
+                 incumbent {l_cur:.3}s, n_active={n_active}, churn={churn_events})"
+            );
+            ReplanOutcome {
+                swapped: true,
+                predicted: l_new,
+                incumbent: l_cur,
+            }
+        } else {
+            ReplanOutcome {
+                swapped: false,
+                predicted: l_cur,
+                incumbent: l_cur,
+            }
+        }
+    }
+
     /// Monte-Carlo heterogeneous refinement for one layer: jointly pick
     /// the worker subset and `k` from the registry's fitted per-worker
     /// speeds (see `planner::hetero`).
@@ -206,6 +277,32 @@ mod tests {
         }
         assert!(out.predicted <= out.incumbent * (1.0 + 1e-12));
         assert_eq!(rp.switches, u64::from(out.swapped));
+    }
+
+    #[test]
+    fn auto_replan_is_stable_on_a_calm_fitted_pool() {
+        let base = SystemProfile::paper_default();
+        let mut plan = vgg_plan(&base);
+        let mut reg = CapacityRegistry::new(10, TelemetryConfig::default());
+        feed_profile(&mut reg, &base, 10, 32);
+        let mut rp = Replanner::new(ReplanConfig::default());
+        let selector = SchemeSelector::default();
+        let out = rp.replan_auto(&mut plan, &reg, &base, 32, &selector, 0);
+        assert!(out.predicted <= out.incumbent * (1.0 + 1e-12));
+        // Calm pool, no churn, no deadline: the selector ranks MDS
+        // against replication under the fitted profile, and under the
+        // paper profile MDS wins at every VGG layer (replication's
+        // k = n/2 doubles per-shard transmission while MDS encode is
+        // cheap on the 5 GFLOPS master). The plan must hold MDS — a
+        // swap here would be scheme thrash on a stable pool.
+        for c in plan.convs.iter().filter(|c| c.distributed) {
+            assert_eq!(
+                c.scheme,
+                SchemeKind::Mds,
+                "calm auto replan drifted off MDS on {}",
+                c.node_id
+            );
+        }
     }
 
     #[test]

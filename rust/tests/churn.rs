@@ -212,6 +212,54 @@ fn killed_worker_mid_round_redispatches_and_completes() {
     }
 }
 
+/// The rateless inverse of the kill case above: under `--scheme lt` the
+/// same mid-round kill needs NO re-dispatch. The LT round spreads a
+/// `2k + 16` symbol budget over both workers, so after the victim's
+/// eviction the survivor's outstanding symbols still exceed the
+/// decoder's rank-`k` need — `needs_redispatch` stays false and the
+/// round completes on whatever useful symbols arrive.
+#[test]
+fn killed_worker_mid_round_lt_round_completes_without_redispatch() {
+    let (server, addr) = elastic_server(SchemeKind::LtCoarse, Duration::from_secs(10));
+
+    let (spy_a, probe_a) = ProbeSpy::new(Duration::ZERO);
+    let (survivor, _keep) = spawn_member(addr, "survivor", spy_a.clone());
+    probe_a.recv_timeout(JOIN_WAIT).expect("survivor never probed");
+
+    let (spy_v, probe_v) = ProbeSpy::new(Duration::from_secs(3));
+    let (victim, sever) = spawn_member(addr, "victim", spy_v.clone());
+    probe_v.recv_timeout(JOIN_WAIT).expect("victim never probed");
+
+    let input = input_for(37);
+    let want = local_ref(&input);
+    let handle = server.submit(InferenceRequest::new(input)).unwrap();
+    probe_a
+        .recv_timeout(JOIN_WAIT)
+        .expect("request round never reached the survivor");
+    sever.shutdown(Shutdown::Both).unwrap();
+
+    let (out, metrics) = handle.wait().unwrap();
+    let err = out.max_abs_diff(&want);
+    assert!(err < 2e-2, "lt churn output off local by {err}");
+    assert!(metrics.layers.iter().any(|l| l.distributed));
+    assert_eq!(
+        metrics.redispatches(),
+        0,
+        "a rateless round must absorb the eviction without re-dispatch"
+    );
+
+    let master = server.shutdown().unwrap();
+    assert!(!members_with(&master, |k| matches!(k, EventKind::Evicted)).is_empty());
+    assert_eq!(
+        master.registry().worker_ids().len(),
+        1,
+        "only the survivor remains"
+    );
+    master.shutdown();
+    assert_eq!(survivor.join().unwrap().unwrap(), WorkerExit::Shutdown);
+    let _ = victim.join().unwrap(); // LinkClosed: it was severed
+}
+
 /// A worker that joins a RUNNING cluster is admitted, probed, and starts
 /// receiving real dispatches — while requests served before, during,
 /// and after the join all stay correct.

@@ -19,12 +19,13 @@
 //! allocation counter is process-global, so the zero-alloc delta must
 //! not race another test's traced run.
 
-use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard, OnceLock};
 
-use cocoi::conv::Tensor;
+use cocoi::conv::{ConvSpec, Tensor};
 use cocoi::coordinator::{
-    ExecMode, InferenceRequest, InferenceServer, LocalCluster, MasterConfig, PoolOptions,
-    SchemeKind, ServerConfig, WorkerFaults, WorkerHandles,
+    run_worker_announcing, ExecMode, InferenceRequest, InferenceServer, JoinOptions, LocalCluster,
+    Master, MasterConfig, PoolOptions, SchemeKind, ServerConfig, WorkerConfig, WorkerExit,
+    WorkerFaults, WorkerHandles,
 };
 use cocoi::model::graph::forward_local;
 use cocoi::model::{zoo, WeightStore};
@@ -32,7 +33,8 @@ use cocoi::obs::export::check_exposition;
 use cocoi::obs::hist::{quantile_error_bound, LogHistogram};
 use cocoi::obs::trace::{spans_allocated, TraceHandle};
 use cocoi::planner::SplitPolicy;
-use cocoi::runtime::FallbackProvider;
+use cocoi::runtime::{ConvProvider, FallbackProvider};
+use cocoi::transport::split::split_tcp;
 use cocoi::util::json::Json;
 use cocoi::util::Rng;
 
@@ -223,6 +225,143 @@ fn tracing_off_allocates_nothing_and_matches_traced_outputs() {
         assert_eq!(a.data, b.data, "tracing changed the output bytes");
         assert_eq!(a.data, w.data, "run diverged from local inference");
     }
+}
+
+/// [`ConvProvider`] that signals the test thread on every conv call —
+/// the join probe runs post-admission, so the first signal means "this
+/// wire worker is in the dispatch set".
+struct SignalProvider {
+    inner: FallbackProvider,
+    tx: Mutex<mpsc::Sender<()>>,
+}
+
+impl SignalProvider {
+    fn new() -> (Arc<SignalProvider>, mpsc::Receiver<()>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Arc::new(SignalProvider {
+                inner: FallbackProvider::new(),
+                tx: Mutex::new(tx),
+            }),
+            rx,
+        )
+    }
+}
+
+impl ConvProvider for SignalProvider {
+    fn conv(&self, spec: &ConvSpec, input: &Tensor, weights: &[f32]) -> anyhow::Result<Tensor> {
+        let _ = self.tx.lock().unwrap().send(());
+        self.inner.conv(spec, input, weights)
+    }
+
+    fn name(&self) -> &'static str {
+        "signal"
+    }
+}
+
+/// Satellite of the scheme-selection PR: `--trace-sample N` records one
+/// request tree in every N. The pin is on the WIRE deployment shape —
+/// remote workers have no recorder handle, so the span-allocation
+/// counter measures exactly the engine's per-request emits — and a
+/// sampled-out request must cost ZERO span allocations end to end:
+/// admission leaves its `root_span` as `None`, and every round/task/
+/// hedge/retry/fallback emit site gates on that. (In-proc `LocalCluster`
+/// pools still record bounded pool-level slot spans; those are per-slot
+/// observability, not part of any request tree.)
+#[test]
+fn trace_sampling_records_one_in_n_with_zero_spans_for_the_rest() {
+    let _g = gate();
+    let inputs = inputs_for(3, 933);
+    let want = local_refs(&inputs);
+    let trace = TraceHandle::new(8192);
+    let config = MasterConfig {
+        scheme: SchemeKind::Uncoded,
+        policy: SplitPolicy::Fixed(3),
+        mode: ExecMode::Pipelined,
+        trace: Some(trace.clone()),
+        trace_sample: 3, // requests 1, 4, 7, … get a tree
+        ..Default::default()
+    };
+    let mut master =
+        Master::new_elastic("tinyvgg", config, 3, Arc::new(FallbackProvider::new())).unwrap();
+    let addr = master.listen("127.0.0.1:0").unwrap();
+    let server = InferenceServer::start(master, ServerConfig::default());
+
+    let mut members = Vec::new();
+    for name in ["wire-a", "wire-b"] {
+        let (provider, probed) = SignalProvider::new();
+        let stream = std::net::TcpStream::connect(addr).unwrap();
+        let name = name.to_string();
+        members.push(
+            std::thread::Builder::new()
+                .name(format!("member-{name}"))
+                .spawn(move || {
+                    let (tx, rx) = split_tcp(stream)?;
+                    run_worker_announcing(
+                        Box::new(tx),
+                        Box::new(rx),
+                        WorkerConfig {
+                            id: 0, // reassigned from JoinAck
+                            provider,
+                            faults: WorkerFaults::none(),
+                            rng_seed: 0xABCD,
+                            slots: 1,
+                            trace: None, // wire workers share no recorder
+                        },
+                        &JoinOptions {
+                            name,
+                            model: String::new(),
+                        },
+                    )
+                })
+                .unwrap(),
+        );
+        probed
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .expect("wire worker never probed");
+    }
+
+    // Request 1 is the 1-in-N sample; wait for it so its tree is closed
+    // before measuring the sampled-out delta.
+    let (out0, m0) = server
+        .submit(InferenceRequest::new(inputs[0].clone()))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(out0.data, want[0].data, "uncoded run not bitwise-local");
+    assert!(m0.layers.iter().any(|l| l.distributed));
+    let after_sampled = spans_allocated();
+
+    for (inp, w) in inputs.iter().zip(&want).skip(1) {
+        let (out, m) = server
+            .submit(InferenceRequest::new(inp.clone()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(out.data, w.data, "sampling changed the output bytes");
+        assert!(
+            m.layers.iter().any(|l| l.distributed),
+            "sampled-out request must still distribute"
+        );
+    }
+    assert_eq!(
+        spans_allocated(),
+        after_sampled,
+        "sampled-out requests must allocate zero spans"
+    );
+
+    let master = server.shutdown().unwrap();
+    master.shutdown();
+    for h in members {
+        assert_eq!(h.join().unwrap().unwrap(), WorkerExit::Shutdown);
+    }
+
+    assert!(trace.violations().is_empty(), "{:?}", trace.violations());
+    let reqs = trace.requests();
+    assert_eq!(reqs.len(), 1, "exactly the 1-in-N request is recorded");
+    assert!(reqs[0].done, "sampled tree left open");
+    assert_eq!(reqs[0].open_spans(), 0);
+    assert!(reqs[0].spans.iter().any(|s| s.name.starts_with("round:")));
 }
 
 /// A healthy pool's scrape: full stable family set, hard schema check,

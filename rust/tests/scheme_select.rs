@@ -1,0 +1,319 @@
+//! Scheme-selection suite: the rateless LT path and the per-layer
+//! selector exercised at the WIRE — real `LocalCluster` pools, real
+//! dispatch frames, real decoders — plus the coding-layer any-k
+//! property and the deadline-redundancy rule through the public API.
+//!
+//! Pinned here:
+//! * LT any-k completion is order-independent: the exact symbol subset
+//!   that first reaches rank `k` decodes identically under any arrival
+//!   permutation — the property that lets the engine finish a round on
+//!   whatever useful symbols land first;
+//! * `--scheme uncoded` at the wire is a bitwise-local oracle, and the
+//!   coded schemes (`mds`, `lt`, `auto`) stay within the 2e-2 float
+//!   tolerance of local inference;
+//! * an LT round with a forever-stalling worker completes from the
+//!   healthy workers' symbols with ZERO re-dispatches — any-k
+//!   completion on the real reply path, not just in the decoder;
+//! * the deadline rule (`solve_deadline_k`) is monotone: tighter slack
+//!   never *raises* k, and the chosen split's tail quantile fits.
+
+use std::sync::Arc;
+
+use cocoi::conv::{ConvSpec, Tensor};
+use cocoi::coding::select::{lt_budget, lt_symbols_needed};
+use cocoi::coding::{Decoder, LtCode, RedundancyScheme, SchemeKind, SchemeSelector};
+use cocoi::coordinator::{
+    ExecMode, InferenceRequest, InferenceServer, LocalCluster, MasterConfig, PoolOptions,
+    ServerConfig, WorkerFaults, WorkerHandles,
+};
+use cocoi::latency::approx::l_tail_quantile;
+use cocoi::latency::phases::LayerDims;
+use cocoi::latency::SystemProfile;
+use cocoi::model::graph::forward_local;
+use cocoi::model::{zoo, WeightStore};
+use cocoi::planner::deadline::solve_deadline_k;
+use cocoi::planner::SplitPolicy;
+use cocoi::runtime::FallbackProvider;
+use cocoi::util::{prop, Rng};
+
+// ---------------------------------------------------------------- coding
+
+/// Any-k, order-independent: run the decoder over a random arrival
+/// permutation to find the first useful subset, then re-feed exactly
+/// that subset under fresh shuffles — rank is a property of the SET of
+/// symbols, so every order must decode to the same sources.
+#[test]
+fn lt_useful_subset_decodes_under_any_arrival_order() {
+    prop::check("lt any-k order independence", 24, |rng| {
+        let n = 2 + rng.below(6); // 2..=7 "workers" (reporting only)
+        let k = 1 + rng.below(10); // 1..=10 source partitions
+        let len = 1 + rng.below(48);
+        let code = LtCode::new(n, k, rng.next_u64());
+        let sources: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..len).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect())
+            .collect();
+        let tasks = code.encode(&sources);
+        assert_eq!(tasks.len(), lt_budget(k), "budget helper out of sync");
+
+        // First pass: discover the useful subset under one arrival order.
+        let mut order: Vec<usize> = (0..tasks.len()).collect();
+        rng.shuffle(&mut order);
+        let mut dec = code.decoder();
+        let mut useful: Vec<usize> = Vec::new();
+        for &t in &order {
+            useful.push(t);
+            if dec.add(tasks[t].id, tasks[t].payload.clone()) {
+                break;
+            }
+        }
+        assert!(dec.ready(), "k={k}: budget {} never reached rank", tasks.len());
+        let want = dec.decode().unwrap();
+        for (w, s) in want.iter().zip(&sources) {
+            for (a, b) in w.iter().zip(s) {
+                assert!((a - b).abs() < 1e-3, "identity decode off: {a} vs {b}");
+            }
+        }
+
+        // Re-feed ONLY that subset in fresh random orders: same decode.
+        for _ in 0..3 {
+            rng.shuffle(&mut useful);
+            let mut dec = code.decoder();
+            for &t in &useful {
+                dec.add(tasks[t].id, tasks[t].payload.clone());
+            }
+            assert!(dec.ready(), "useful subset lost rank under reordering");
+            let again = dec.decode().unwrap();
+            for (a_row, b_row) in again.iter().zip(&want) {
+                for (a, b) in a_row.iter().zip(b_row) {
+                    assert!((a - b).abs() < 1e-3, "arrival order changed the decode");
+                }
+            }
+        }
+    });
+}
+
+/// The selector's symbol-count model brackets reality: the decoder's
+/// measured need sits at or above `k`, and within the dispatch budget
+/// for the split sizes the engine actually uses.
+#[test]
+fn lt_overhead_model_brackets_measured_need() {
+    let mut rng = Rng::new(0x5E1EC7);
+    for k in [1usize, 2, 3, 5, 8, 13] {
+        for trial in 0..8u64 {
+            let code = LtCode::new(4, k, 0xC0DE + 31 * trial + k as u64);
+            let sources: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..8).map(|_| rng.uniform_range(-1.0, 1.0) as f32).collect())
+                .collect();
+            let tasks = code.encode(&sources);
+            let mut dec = code.decoder();
+            let mut needed = tasks.len();
+            for (used, t) in tasks.iter().enumerate() {
+                if dec.add(t.id, t.payload.clone()) {
+                    needed = used + 1;
+                    break;
+                }
+            }
+            assert!(dec.ready(), "k={k} trial={trial}: rank never reached");
+            assert!(needed >= k, "decoded below the information bound");
+            assert!(
+                needed <= lt_budget(k),
+                "k={k}: needed {needed} > budget {}",
+                lt_budget(k)
+            );
+        }
+        assert!(
+            lt_symbols_needed(k) >= k && lt_symbols_needed(k) <= lt_budget(k),
+            "k={k}: selector estimate outside [k, budget]"
+        );
+    }
+}
+
+// ------------------------------------------------------------------ wire
+
+fn cluster_with(
+    scheme: SchemeKind,
+    faults: Vec<WorkerFaults>,
+) -> (InferenceServer, WorkerHandles) {
+    let n = faults.len();
+    let config = MasterConfig {
+        scheme,
+        policy: SplitPolicy::Fixed(3),
+        mode: ExecMode::Pipelined,
+        ..Default::default()
+    };
+    let cluster = LocalCluster::spawn_with(
+        "tinyvgg",
+        n,
+        config,
+        Arc::new(FallbackProvider::new()),
+        faults,
+        PoolOptions { worker_slots: 1 },
+    )
+    .unwrap();
+    let (master, workers) = cluster.into_parts();
+    (InferenceServer::start(master, ServerConfig::default()), workers)
+}
+
+fn inputs_for(count: usize, seed: u64) -> Vec<Tensor> {
+    let model = zoo::model("tinyvgg").unwrap();
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            let mut t = Tensor::zeros(model.input.0, model.input.1, model.input.2);
+            rng.fill_uniform_f32(&mut t.data, -1.0, 1.0);
+            t
+        })
+        .collect()
+}
+
+fn local_refs(inputs: &[Tensor]) -> Vec<Tensor> {
+    let model = zoo::model("tinyvgg").unwrap();
+    let weights = WeightStore::generate(&model, 42).unwrap();
+    inputs
+        .iter()
+        .map(|i| forward_local(&model, &weights, i).unwrap())
+        .collect()
+}
+
+fn run_requests(server: &InferenceServer, inputs: &[Tensor]) -> Vec<(Tensor, usize)> {
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|i| server.submit(InferenceRequest::new(i.clone())).unwrap())
+        .collect();
+    handles
+        .into_iter()
+        .map(|h| {
+            let (out, m) = h.wait().expect("request wedged");
+            assert!(
+                m.layers.iter().any(|l| l.distributed),
+                "pool never distributed a layer"
+            );
+            (out, m.redispatches())
+        })
+        .collect()
+}
+
+/// `--scheme uncoded` is the bitwise oracle: every shard is a verbatim
+/// input slice, so the wire output must equal local inference byte for
+/// byte. The coded schemes ride the same dispatch path and must land
+/// within the float-GE tolerance.
+#[test]
+fn wire_uncoded_is_bitwise_and_coded_schemes_are_close() {
+    let inputs = inputs_for(2, 1201);
+    let want = local_refs(&inputs);
+
+    let (server, workers) = cluster_with(SchemeKind::Uncoded, vec![WorkerFaults::none(); 3]);
+    for ((out, _), w) in run_requests(&server, &inputs).iter().zip(&want) {
+        assert_eq!(out.data, w.data, "uncoded wire run not bitwise-local");
+    }
+    server.shutdown().unwrap().shutdown();
+    workers.join().unwrap();
+
+    for scheme in [SchemeKind::Mds, SchemeKind::LtCoarse, SchemeKind::Auto] {
+        let (server, workers) = cluster_with(scheme, vec![WorkerFaults::none(); 3]);
+        for ((out, _), w) in run_requests(&server, &inputs).iter().zip(&want) {
+            let err = out.max_abs_diff(w);
+            assert!(err < 2e-2, "{scheme:?}: wire output off local by {err}");
+        }
+        server.shutdown().unwrap().shutdown();
+        workers.join().unwrap();
+    }
+}
+
+/// Any-k completion on the real reply path: with one worker stalling
+/// forever, an LT round must finish from the healthy workers' symbol
+/// share alone — no `Failed` replies, no eviction, and therefore ZERO
+/// re-dispatches. (Under MDS at n = k the same fixture needs the
+/// watchdog; rateless redundancy absorbs the straggler by design.)
+#[test]
+fn wire_lt_round_completes_from_healthy_symbol_share_without_redispatch() {
+    let mut faults = vec![WorkerFaults::none(); 3];
+    faults[0] = WorkerFaults::none().stalls_in(0..4096);
+    let inputs = inputs_for(2, 1301);
+    let want = local_refs(&inputs);
+
+    let (server, workers) = cluster_with(SchemeKind::LtCoarse, faults);
+    for ((out, redispatches), w) in run_requests(&server, &inputs).iter().zip(&want) {
+        let err = out.max_abs_diff(w);
+        assert!(err < 2e-2, "lt wire output off local by {err}");
+        assert_eq!(
+            *redispatches, 0,
+            "rateless round must absorb the straggler without re-dispatch"
+        );
+    }
+    let master = server.shutdown().unwrap();
+    let json = master.telemetry_json().to_string();
+    assert!(json.contains("ltcoi-ks"), "plan scheme missing from telemetry: {json}");
+    master.shutdown();
+    workers.join().unwrap();
+}
+
+/// `--scheme auto` on a calm pool resolves every distributed layer to
+/// the concrete MDS default (the selector's calm arm) — visible in the
+/// telemetry plan dump — and serves correct outputs.
+#[test]
+fn wire_auto_resolves_to_concrete_schemes_on_calm_pool() {
+    let inputs = inputs_for(1, 1401);
+    let want = local_refs(&inputs);
+
+    let (server, workers) = cluster_with(SchemeKind::Auto, vec![WorkerFaults::none(); 3]);
+    for ((out, _), w) in run_requests(&server, &inputs).iter().zip(&want) {
+        let err = out.max_abs_diff(w);
+        assert!(err < 2e-2, "auto wire output off local by {err}");
+    }
+    let master = server.shutdown().unwrap();
+    let json = master.telemetry_json().to_string();
+    assert!(
+        json.contains("cocoi-mds"),
+        "auto plan should seed concrete MDS on a calm pool: {json}"
+    );
+    assert!(
+        !json.contains("\"scheme\":\"auto\""),
+        "auto must never reach a dispatched plan unresolved: {json}"
+    );
+    master.shutdown();
+    workers.join().unwrap();
+}
+
+// -------------------------------------------------------------- deadline
+
+/// Dutta-style deadline redundancy through the public API: shrinking
+/// slack never raises k, every accepted split's tail quantile fits the
+/// slack it was solved for, and impossible slack returns `None` (the
+/// selector's LT flip).
+#[test]
+fn deadline_rule_is_monotone_and_tail_feasible() {
+    let p = SystemProfile::paper_default();
+    let dims = LayerDims::new(ConvSpec::new(64, 64, 3, 1, 1), 56, 56);
+    let (n, k_base, z) = (8, 6, 1.65);
+    let roomy = l_tail_quantile(&dims, &p, n, k_base, z) * 4.0;
+    let mut prev_k = usize::MAX;
+    let mut saw_some = false;
+    let mut saw_none = false;
+    for step in 0..40 {
+        let slack = roomy * (1.0 - step as f64 / 40.0);
+        match solve_deadline_k(&dims, &p, n, k_base, slack, z) {
+            Some(kd) => {
+                saw_some = true;
+                assert!(kd >= 1 && kd <= k_base, "kd={kd} outside [1, {k_base}]");
+                assert!(
+                    kd <= prev_k,
+                    "tighter slack raised k: {kd} after {prev_k}"
+                );
+                let tail = l_tail_quantile(&dims, &p, n, kd, z);
+                assert!(
+                    tail <= slack * (1.0 + 1e-9),
+                    "chosen k={kd} tail {tail} misses slack {slack}"
+                );
+                prev_k = kd;
+            }
+            None => saw_none = true,
+        }
+    }
+    assert!(saw_some, "roomy slack should admit a split");
+    assert!(saw_none, "near-zero slack should reject every split");
+    // And the selector flips those rejections to rateless.
+    let sel = SchemeSelector::default();
+    let c = sel.choose(&dims, &p, n, k_base, Some(1e-12), 0);
+    assert_eq!(c.kind, SchemeKind::LtCoarse, "impossible deadline must go rateless");
+}
