@@ -192,7 +192,7 @@ pub fn fig8() -> Result<()> {
         // a pure bulk-fit score.
         let trimmed = ShiftExp::fit_trimmed(samples, 1.0, 0.05);
         let mut sorted = samples.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let keep = &sorted[..(sorted.len() * 95) / 100];
         let s = Summary::from_slice(samples);
         table.row(vec![
@@ -804,7 +804,10 @@ pub fn throughput_with(
 // gate, validated per-trial in rust/tests as well).
 // ====================================================================
 pub fn serving(scale: Scale) -> Result<()> {
-    use crate::sim::{simulate_serving_open, simulate_serving_open_with, ServeKnobs, ServeSimMode};
+    use crate::sim::{
+        simulate_serving_open, simulate_serving_open_with, simulate_serving_tenants, ServeKnobs,
+        ServeSimMode, TenantLoad,
+    };
     use crate::util::json::Json;
 
     let model = zoo::model("vgg16")?;
@@ -1039,6 +1042,95 @@ pub fn serving(scale: Scale) -> Result<()> {
                     ]),
                 );
             }
+        }
+    }
+    table.print();
+
+    // -- sweep 1d: two-tenant starvation (the multi-tenant gate) ------
+    // A trickle "victim" tenant (0.25x capacity, weight 16) shares the
+    // box with a flooding tenant (rho x capacity, weight 1). Per-tenant
+    // rng seeds make the victim's arrival/service draws bitwise
+    // identical across the isolated, fair, and FIFO arms, so any latency
+    // difference is pure scheduling interference. HARD gate: under
+    // weighted fair sharing the victim's p95 stays within 1.2x of its
+    // isolated p95 at every swept flood level (its guaranteed share is
+    // 16/17, so the fluid bound is 1.0625x; 1.2x covers the DRR
+    // quantization the live engine adds). The FIFO arm is the
+    // pre-tenancy baseline the gate exists to rule out.
+    let victim = TenantLoad {
+        name: "victim".into(),
+        rate: 0.25 / service,
+        weight: 16.0,
+        seed: 0xF00D1,
+    };
+    let tenant_horizon = (arrivals as f64 / 2.0) * service;
+    let iso = simulate_serving_tenants(
+        &model, &p, n, method, scenario, std::slice::from_ref(&victim),
+        tenant_horizon, None, true,
+    )?;
+    json.set(
+        "tenant_isolated_victim",
+        Json::obj(vec![
+            ("rate_rps", Json::Num(victim.rate)),
+            ("arrivals", Json::Num(iso[0].arrivals as f64)),
+            ("p50_s", Json::Num(iso[0].p50())),
+            ("p95_s", Json::Num(iso[0].p95())),
+            ("mean_s", Json::Num(iso[0].mean())),
+        ]),
+    );
+    let mut starve_gate_ok = true;
+    let mut table = Table::new(
+        &format!(
+            "Serving — two-tenant starvation: victim (0.25x, weight 16) vs \
+             flooder (weight 1), isolated victim p95 {} ({} victim arrivals)",
+            fmt_secs(iso[0].p95()),
+            iso[0].arrivals
+        ),
+        &["flood load", "arm", "victim p50", "victim p95", "vs isolated", "gate"],
+    );
+    for &rho in &rhos {
+        let flooder = TenantLoad {
+            name: "flooder".into(),
+            rate: rho / service,
+            weight: 1.0,
+            seed: 0xF00D2,
+        };
+        for (arm, fair) in [("fair", true), ("fifo", false)] {
+            let out = simulate_serving_tenants(
+                &model, &p, n, method, scenario,
+                &[victim.clone(), flooder.clone()],
+                tenant_horizon, None, fair,
+            )?;
+            let ratio = out[0].p95() / iso[0].p95();
+            let gate = if fair {
+                let ok = ratio <= 1.2;
+                if !ok {
+                    starve_gate_ok = false;
+                }
+                (if ok { "ok" } else { "STARVED" }).to_string()
+            } else {
+                "-".to_string()
+            };
+            table.row(vec![
+                format!("{rho:.2}"),
+                arm.to_string(),
+                fmt_secs(out[0].p50()),
+                fmt_secs(out[0].p95()),
+                format!("{ratio:.2}x"),
+                gate,
+            ]);
+            json.set(
+                &format!("tenant_flood{:02.0}_{arm}", rho * 100.0),
+                Json::obj(vec![
+                    ("flood_rate_rps", Json::Num(flooder.rate)),
+                    ("victim_p50_s", Json::Num(out[0].p50())),
+                    ("victim_p95_s", Json::Num(out[0].p95())),
+                    ("victim_vs_isolated", Json::Num(ratio)),
+                    ("flooder_p50_s", Json::Num(out[1].p50())),
+                    ("flooder_p95_s", Json::Num(out[1].p95())),
+                    ("flooder_arrivals", Json::Num(out[1].arrivals as f64)),
+                ]),
+            );
         }
     }
     table.print();
@@ -1286,9 +1378,11 @@ pub fn serving(scale: Scale) -> Result<()> {
         let viol = trace.violations();
         anyhow::ensure!(viol.is_empty(), "trace invariant violations: {viol:?}");
         let families = crate::obs::export::check_exposition(&prom)?;
+        // 6 server + 19 hub + 5 tenant-labelled (requests flowed, so the
+        // per-tenant families are present).
         anyhow::ensure!(
-            families == 24,
-            "serving scrape schema drifted: {families} families, expected 24"
+            families == 30,
+            "serving scrape schema drifted: {families} families, expected 30"
         );
 
         let out_dir =
@@ -1347,17 +1441,21 @@ pub fn serving(scale: Scale) -> Result<()> {
     json.set("gate_coalesced_p95_le_uncoalesced", Json::Bool(coal_gate_ok));
     json.set("gate_hedged_p95_le_unhedged", Json::Bool(hedge_gate_ok));
     json.set("gate_auto_p95_le_kcirc", Json::Bool(sel_gate_ok));
+    json.set("gate_starvation", Json::Bool(starve_gate_ok));
     let path = json.write()?;
     println!(
         "(open-loop Poisson arrivals through the serving stack; gates: pipelined \
          p95 <= barrier p95 — {} — coalesced p95 <= uncoalesced pipelined \
          p95 — {} — hedged p95 <= unhedged p95 under the chronic \
-         straggler — {} — and `--scheme auto` p95 <= always-k° p95 across \
-         the selector sweep — {} — at every swept point) results -> {}",
+         straggler — {} — `--scheme auto` p95 <= always-k° p95 across \
+         the selector sweep — {} — and fair-shared victim p95 <= 1.2x its \
+         isolated p95 under tenant flooding — {} — at every swept point) \
+         results -> {}",
         if gate_ok { "PASS" } else { "FAIL" },
         if coal_gate_ok { "PASS" } else { "FAIL" },
         if hedge_gate_ok { "PASS" } else { "FAIL" },
         if sel_gate_ok { "PASS" } else { "FAIL" },
+        if starve_gate_ok { "PASS" } else { "FAIL" },
         path.display()
     );
     anyhow::ensure!(
@@ -1375,6 +1473,11 @@ pub fn serving(scale: Scale) -> Result<()> {
     anyhow::ensure!(
         sel_gate_ok,
         "`--scheme auto` lost to the always-k-circ plan on p95 in the selector sweep"
+    );
+    anyhow::ensure!(
+        starve_gate_ok,
+        "fair sharing failed to protect the victim tenant from the flooder \
+         (victim p95 > 1.2x isolated p95)"
     );
     Ok(())
 }

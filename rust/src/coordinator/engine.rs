@@ -11,9 +11,13 @@
 //!   blocks on the master's single event channel, which multiplexes
 //!   worker replies with [`MasterEvent::Submit`] from the serving
 //!   front-end ([`super::server::InferenceServer`]);
-//! * admitted requests wait in a queue ordered by **(priority, deadline,
-//!   submission order)** — not batch index — and start when a
-//!   concurrency slot frees up (`StreamOptions::max_concurrent`);
+//! * admitted requests wait in per-tenant queues served by **deficit
+//!   round robin** over the configured tenant weights
+//!   (`MasterConfig::tenant_weights`), with **(priority, deadline,
+//!   submission order)** EDF ordering inside each tenant's turn — a
+//!   single tenant (the default) reduces exactly to the old global
+//!   order — and start when a concurrency slot frees up
+//!   (`StreamOptions::max_concurrent`);
 //! * requests whose deadline has expired, or whose predicted completion
 //!   (from the telemetry-fitted profile, `--adaptive`) misses it, are
 //!   shed at dispatch time instead of served late;
@@ -59,7 +63,7 @@
 //! the batch path and the serving path cannot diverge.
 
 use std::cmp::Ordering;
-use std::collections::{BTreeMap, BTreeSet, BinaryHeap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::mpsc::RecvTimeoutError;
 use std::time::{Duration, Instant};
 
@@ -70,6 +74,7 @@ use crate::conv::Tensor;
 use crate::model::{Node, Op};
 use crate::telemetry::EventKind;
 
+use super::fair::{self, DrrQueue, DEFAULT_TENANT};
 use super::master::{assemble_output, Master, MasterEvent, PreparedRound, SchemeKind};
 use super::messages::{FromWorker, ToWorker};
 use super::metrics::{InferenceMetrics, LayerMetrics, WorkerPhase};
@@ -83,6 +88,9 @@ pub(super) struct EngineRequest {
     /// deadline).
     pub(super) priority: u8,
     pub(super) deadline: Option<Instant>,
+    /// Tenant the request bills to: keys its DRR admission queue and
+    /// the per-tenant metrics row.
+    pub(super) tenant: String,
     /// When the caller handed the request over (server submit / batch
     /// seed). Queue-wait and sojourn measure from this stamp.
     pub(super) submitted_at: Instant,
@@ -165,6 +173,8 @@ struct RequestState {
     /// and fallback timers: a tight-deadline request speculates *early*
     /// instead of being served late.
     deadline: Option<Instant>,
+    /// Tenant id, for the per-tenant sojourn/completion meters.
+    tenant: String,
     /// Submission stamp (sojourn = delivery − submitted_at).
     submitted_at: Instant,
     /// Root span id of this request's trace tree (`None` = tracing off).
@@ -175,6 +185,7 @@ impl RequestState {
     fn new(
         input: Tensor,
         deadline: Option<Instant>,
+        tenant: String,
         submitted_at: Instant,
         root_span: Option<u64>,
     ) -> RequestState {
@@ -186,6 +197,7 @@ impl RequestState {
             metrics: InferenceMetrics::default(),
             t_start: Instant::now(),
             deadline,
+            tenant,
             submitted_at,
             root_span,
         }
@@ -415,6 +427,7 @@ impl Master {
                 input: input.clone(),
                 priority: 0,
                 deadline: None,
+                tenant: DEFAULT_TENANT.to_string(),
                 submitted_at: Instant::now(),
             })
             .collect();
@@ -489,7 +502,15 @@ impl Master {
             self.workers.keys().map(|&w| (w, 0)).collect();
         let mut rounds: HashMap<u64, ActiveRound> = HashMap::new();
         let mut active: BTreeMap<u64, RequestState> = BTreeMap::new();
-        let mut pending: BinaryHeap<Pending> = seed.into_iter().map(Pending::new).collect();
+        // Admission order: DRR across weighted tenant queues, EDF
+        // (priority, deadline, id — the `Pending` Ord) inside each
+        // tenant's turn. With one tenant at weight 1 — the default —
+        // the pop sequence is exactly the old global heap's.
+        let mut pending: DrrQueue<Pending> = DrrQueue::new(&self.config.tenant_weights);
+        for req in seed {
+            let tenant = req.tenant.clone();
+            pending.push(&tenant, Pending::new(req));
+        }
         let mut staged: Vec<u64> = Vec::new();
         let mut backoff: BTreeMap<usize, WorkerBackoff> = BTreeMap::new();
         let mut draining = opts.draining;
@@ -545,7 +566,13 @@ impl Master {
                 log::debug!("engine: req={} admitted wait_secs={wait:.4}", req.id);
                 active.insert(
                     req.id,
-                    RequestState::new(req.input, req.deadline, req.submitted_at, root_span),
+                    RequestState::new(
+                        req.input,
+                        req.deadline,
+                        req.tenant,
+                        req.submitted_at,
+                        root_span,
+                    ),
                 );
                 self.advance_request(req.id, &nodes, &mut active, &mut staged, sink)?;
             }
@@ -687,7 +714,7 @@ impl Master {
         ev: MasterEvent,
         draining: &mut bool,
         nodes: &[Node],
-        pending: &mut BinaryHeap<Pending>,
+        pending: &mut DrrQueue<Pending>,
         active: &mut BTreeMap<u64, RequestState>,
         rounds: &mut HashMap<u64, ActiveRound>,
         worker_load: &mut BTreeMap<usize, usize>,
@@ -701,7 +728,9 @@ impl Master {
                     // Lost the race with drain(): refuse, don't hang.
                     sreq.reject();
                 } else {
-                    pending.push(Pending::new(sink.accept(sreq)));
+                    let req = sink.accept(sreq);
+                    let tenant = req.tenant.clone();
+                    pending.push(&tenant, Pending::new(req));
                 }
                 Ok(())
             }
@@ -1199,9 +1228,9 @@ impl Master {
                     );
                 }
             }
-            // Liveness signal only; the reader's read-timeout clock is
-            // what it actually services.
-            FromWorker::Heartbeat { .. } => {}
+            // Liveness is serviced by the reader's read-timeout clock;
+            // here the seq is checked for stale-beacon replay.
+            FromWorker::Heartbeat { seq } => self.note_heartbeat(wid, seq),
             // Graceful leave: stop dispatching to it; the main loop
             // finalizes (Shutdown + removal) once its charge drains.
             FromWorker::Retire => self.retire_worker(wid),
@@ -1235,7 +1264,13 @@ impl Master {
                 st.metrics.total_seconds = st.t_start.elapsed().as_secs_f64();
                 let now = Instant::now();
                 let sojourn = now.saturating_duration_since(st.submitted_at).as_secs_f64();
-                self.hub.lock().sojourn.record(sojourn);
+                {
+                    let mut h = self.hub.lock();
+                    h.sojourn.record(sojourn);
+                    let t = h.tenant(&st.tenant);
+                    t.completed += 1;
+                    t.sojourn.record(sojourn);
+                }
                 if let (Some(tr), Some(root)) = (&self.config.trace, st.root_span) {
                     tr.end_request(id, root, now);
                 }
@@ -1292,8 +1327,18 @@ impl Master {
         }
         let cap = self.config.coalesce.max(1);
         // Stable grouping: same layer cursor + same input shape, first
-        // open group wins, groups close at `cap` members.
-        let mut groups: Vec<(usize, (usize, usize, usize), Vec<u64>)> = Vec::new();
+        // open group wins, groups close at `cap` members. Deadline-aware
+        // exception: a *tight*-deadline request (remaining slack under a
+        // small multiple of the predicted service time — see
+        // `fair::tight_deadline`) rides alone in a closed singleton
+        // group. Folding it into a wide coalesced batch would put other
+        // requests' compute on its critical path, which is exactly how a
+        // feasible deadline gets missed; and conversely nothing may pile
+        // in behind it. With `coalesce <= 1` every group is a singleton
+        // anyway and this changes nothing.
+        let now = Instant::now();
+        let predicted = self.predicted_service_secs();
+        let mut groups: Vec<(usize, (usize, usize, usize), Vec<u64>, bool)> = Vec::new();
         for &id in staged.iter() {
             let st = active.get(&id).context("staged request not active")?;
             let node = &nodes[st.node_idx];
@@ -1302,17 +1347,24 @@ impl Master {
                 .get(&node.inputs[0])
                 .context("staged conv input missing")?;
             let key = (st.node_idx, (input.c, input.h, input.w));
+            let slack = st
+                .deadline
+                .map(|d| d.saturating_duration_since(now).as_secs_f64());
+            if cap > 1 && fair::tight_deadline(slack, predicted) {
+                groups.push((key.0, key.1, vec![id], true));
+                continue;
+            }
             match groups
                 .iter_mut()
-                .find(|(ni, sh, ids)| (*ni, *sh) == key && ids.len() < cap)
+                .find(|(ni, sh, ids, closed)| !*closed && (*ni, *sh) == key && ids.len() < cap)
             {
-                Some((_, _, ids)) => ids.push(id),
-                None => groups.push((key.0, key.1, vec![id])),
+                Some((_, _, ids, _)) => ids.push(id),
+                None => groups.push((key.0, key.1, vec![id], false)),
             }
         }
         staged.clear();
 
-        for (node_idx, _, ids) in groups {
+        for (node_idx, _, ids, _) in groups {
             let node = &nodes[node_idx];
             let (spec, relu) = match &node.op {
                 Op::Conv { spec, relu } => (*spec, *relu),
@@ -1858,6 +1910,7 @@ impl Master {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::BinaryHeap;
     use std::time::Duration;
 
     fn req(id: u64, priority: u8, deadline: Option<Instant>) -> Pending {
@@ -1866,6 +1919,7 @@ mod tests {
             input: Tensor::zeros(1, 1, 1),
             priority,
             deadline,
+            tenant: DEFAULT_TENANT.to_string(),
             submitted_at: Instant::now(),
         })
     }
@@ -1884,6 +1938,28 @@ mod tests {
         heap.push(req(5, 0, None));
         let order: Vec<u64> = std::iter::from_fn(|| heap.pop().map(|p| p.req.id)).collect();
         assert_eq!(order, vec![4, 3, 2, 1, 0, 5]);
+    }
+
+    /// Equal-weight tenants alternate admissions; inside each tenant's
+    /// turn the EDF (priority, deadline, id) order still holds.
+    #[test]
+    fn drr_alternates_tenants_edf_within() {
+        let mut q: DrrQueue<Pending> = DrrQueue::new(&[]);
+        for (id, tenant) in [(0, "a"), (1, "a"), (2, "b"), (3, "b")] {
+            q.push(
+                tenant,
+                Pending::new(EngineRequest {
+                    id,
+                    input: Tensor::zeros(1, 1, 1),
+                    priority: 0,
+                    deadline: None,
+                    tenant: tenant.to_string(),
+                    submitted_at: Instant::now(),
+                }),
+            );
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop().map(|p| p.req.id)).collect();
+        assert_eq!(order, vec![0, 2, 1, 3]);
     }
 
     #[test]

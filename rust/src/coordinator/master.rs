@@ -63,6 +63,11 @@ pub(super) struct WorkerLink {
     /// Graceful retirement in progress: excluded from new dispatches,
     /// removed once its in-flight subtasks drain.
     pub(super) retiring: bool,
+    /// Highest heartbeat `seq` seen from this worker. A beat at or
+    /// below it is a *regressed* beacon — a zombie half-open link (or a
+    /// replayed frame) that must not keep resetting the liveness
+    /// deadline — and takes a strike (log + telemetry counter).
+    pub(super) last_hb_seq: u64,
 }
 
 // The scheme enum + selection policy moved to `coding::select` so the
@@ -160,6 +165,13 @@ pub struct MasterConfig {
     /// unbounded CPU work next to the engine's event loop. `0` and `1`
     /// both mean serial.
     pub fallback_concurrency: usize,
+    /// Per-tenant DRR weights for the pipelined engine's admission
+    /// scheduler (`--tenant-weight a=2,b=1`): a backlogged tenant is
+    /// admitted in proportion to its weight per round-robin round.
+    /// Tenants not listed get weight 1; empty (the default) means every
+    /// tenant — including the implicit single default tenant — weighs 1,
+    /// which reproduces the old global-heap admission order exactly.
+    pub tenant_weights: Vec<(String, f64)>,
 }
 
 impl Default for MasterConfig {
@@ -183,6 +195,7 @@ impl Default for MasterConfig {
             trace: None,
             trace_sample: 1,
             fallback_concurrency: 4,
+            tenant_weights: Vec::new(),
         }
     }
 }
@@ -499,6 +512,7 @@ impl Master {
                     tx,
                     name: format!("worker-{i}"),
                     retiring: false,
+                    last_hb_seq: 0,
                 },
             );
             spawn_reader(i, rx, agg_tx.clone());
@@ -681,6 +695,7 @@ impl Master {
                 tx,
                 name,
                 retiring: false,
+                last_hb_seq: 0,
             },
         );
         self.registry.admit(id);
@@ -690,6 +705,30 @@ impl Master {
             tr.pool_instant("joined", Some(id), Instant::now());
         }
         self.refresh_pool_gauges();
+    }
+
+    /// Fold one heartbeat into the worker's liveness state. The `seq` a
+    /// worker beacons is strictly increasing on a healthy link; a beat
+    /// at or below the last-seen seq is a replayed/stale beacon from a
+    /// zombie half-open link and takes a strike (warn + the
+    /// `cocoi_heartbeat_regressions_total` counter) instead of silently
+    /// refreshing the liveness deadline's good name. Beats from unknown
+    /// ids (evicted while the frame was in flight) are ignored.
+    pub(super) fn note_heartbeat(&mut self, id: usize, seq: u64) {
+        let Some(w) = self.workers.get_mut(&id) else {
+            return;
+        };
+        if seq <= w.last_hb_seq {
+            log::warn!(
+                "worker {id} ({}): heartbeat seq regressed ({seq} <= {}) — \
+                 stale beacon replay on a half-open link",
+                w.name,
+                w.last_hb_seq
+            );
+            self.hub.lock().gauges.hb_regressions += 1;
+        } else {
+            w.last_hb_seq = seq;
+        }
     }
 
     /// Evict a worker whose link died. Idempotent (link-death events can
@@ -834,6 +873,28 @@ impl Master {
         let count = |kind: EventKind| {
             self.registry.events().iter().filter(|e| e.kind == kind).count() as f64
         };
+        // Per-tenant meters, each with its full sojourn histogram — the
+        // scrape only carries a labelled p95 gauge per tenant (labelled
+        // histograms would break the exposition's per-family bucket
+        // checks), so the JSON dump is where whole distributions live.
+        let hub = self.hub.snapshot();
+        let tenants = Json::obj(
+            hub.tenants
+                .iter()
+                .map(|(t, s)| {
+                    (
+                        t.as_str(),
+                        Json::obj(vec![
+                            ("submitted", Json::Num(s.submitted as f64)),
+                            ("completed", Json::Num(s.completed as f64)),
+                            ("quota_rejections", Json::Num(s.quota_rejections as f64)),
+                            ("open", Json::Num(s.open as f64)),
+                            ("sojourn", s.sojourn.to_json()),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
         Json::obj(vec![
             ("adaptive", Json::Bool(self.config.adaptive)),
             ("plan_switches", Json::Num(self.replanner.switches as f64)),
@@ -841,6 +902,11 @@ impl Master {
             ("hedge_wins", Json::Num(count(EventKind::HedgeWon))),
             ("hedge_losses", Json::Num(count(EventKind::HedgeLost))),
             ("fallbacks", Json::Num(count(EventKind::LocalFallback))),
+            (
+                "heartbeat_regressions",
+                Json::Num(hub.gauges.hb_regressions as f64),
+            ),
+            ("tenants", tenants),
             ("plan", Json::Arr(plan)),
             ("members", Json::Arr(members)),
             ("registry", self.registry.to_json()),
@@ -1218,7 +1284,9 @@ impl Master {
                 .context("waiting for worker Ready")?
             {
                 MasterEvent::Reply(_, FromWorker::Ready, _) => ready += 1,
-                MasterEvent::Reply(_, FromWorker::Heartbeat { .. }, _) => {}
+                MasterEvent::Reply(w, FromWorker::Heartbeat { seq }, _) => {
+                    self.note_heartbeat(w, seq)
+                }
                 MasterEvent::Reply(i, other, _) => {
                     bail!("worker {i}: unexpected {other:?} during setup")
                 }
@@ -1693,8 +1761,9 @@ impl Master {
                     lm.stale_results += 1;
                 }
                 // Liveness beacon from a TCP joiner: the read timeout on
-                // its link is what polices silence; nothing to do here.
-                FromWorker::Heartbeat { .. } => {}
+                // its link polices silence; here we only check the seq
+                // for stale-beacon replay.
+                FromWorker::Heartbeat { seq } => self.note_heartbeat(wid, seq),
                 // Graceful retirement: stop assigning new shards; the
                 // worker is finalized once this round's decode clears.
                 FromWorker::Retire => {

@@ -2,6 +2,7 @@
 //! workers, wire messages, fault injection, metrics, and the local pool.
 
 pub mod engine;
+pub mod fair;
 pub mod injector;
 pub mod master;
 pub mod messages;

@@ -33,6 +33,7 @@ use crate::conv::Tensor;
 use crate::obs::{export, MetricsHub};
 
 use super::engine::{EngineRequest, EngineSink, StreamOptions};
+use super::fair::DEFAULT_TENANT;
 use super::master::{ExecMode, Master, MasterEvent};
 use super::metrics::InferenceMetrics;
 
@@ -47,6 +48,10 @@ pub struct InferenceRequest {
     /// is predicted to have — see `Master::predicted_service_secs`) no
     /// chance of meeting it is shed at dispatch instead of served late.
     pub deadline: Option<Duration>,
+    /// Tenant the request bills to: quota admission, DRR fair-share
+    /// scheduling, and per-tenant metrics all key on this. Defaults to
+    /// [`DEFAULT_TENANT`].
+    pub tenant: String,
 }
 
 impl InferenceRequest {
@@ -55,6 +60,7 @@ impl InferenceRequest {
             input,
             priority: 0,
             deadline: None,
+            tenant: DEFAULT_TENANT.to_string(),
         }
     }
 
@@ -67,6 +73,11 @@ impl InferenceRequest {
         self.deadline = Some(deadline);
         self
     }
+
+    pub fn with_tenant(mut self, tenant: &str) -> InferenceRequest {
+        self.tenant = tenant.to_string();
+        self
+    }
 }
 
 /// Why a submission was refused (nothing was admitted).
@@ -75,6 +86,10 @@ pub enum SubmitError {
     /// The bounded admission queue is at capacity — the backpressure
     /// signal. Retry after some in-flight request completes.
     QueueFull,
+    /// The submitting tenant is at its per-tenant open-request quota
+    /// ([`ServerConfig::tenant_quota`]); other tenants may still be
+    /// admitted. Retry after one of this tenant's requests completes.
+    TenantQuota,
     /// The server is draining, shut down, or its engine died.
     ShuttingDown,
 }
@@ -83,6 +98,7 @@ impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             SubmitError::QueueFull => write!(f, "admission queue full"),
+            SubmitError::TenantQuota => write!(f, "tenant at open-request quota"),
             SubmitError::ShuttingDown => write!(f, "server shutting down"),
         }
     }
@@ -138,6 +154,11 @@ pub struct ServerConfig {
     /// unlimited); the rest wait in the admission queue in (priority,
     /// deadline, id) order.
     pub max_concurrent: usize,
+    /// Per-tenant bound on open (admitted-but-undelivered) requests;
+    /// a tenant at its quota gets [`SubmitError::TenantQuota`] while
+    /// other tenants keep being admitted. 0 = unlimited (the default:
+    /// single-tenant behaviour is unchanged).
+    pub tenant_quota: usize,
 }
 
 impl Default for ServerConfig {
@@ -145,6 +166,7 @@ impl Default for ServerConfig {
         ServerConfig {
             queue_capacity: 64,
             max_concurrent: 0,
+            tenant_quota: 0,
         }
     }
 }
@@ -166,33 +188,50 @@ struct Counters {
     /// with drain(), engine failure).
     failed: u64,
     rejected_queue_full: u64,
+    rejected_tenant_quota: u64,
+    /// Open requests per tenant — what [`ServerConfig::tenant_quota`]
+    /// is enforced against.
+    open_by_tenant: HashMap<String, usize>,
 }
 
 struct Shared {
     state: Mutex<Counters>,
     /// Signalled on every delivery (drain() waits on it).
     delivered: Condvar,
+    /// Mirror of the per-tenant admission meters (`cocoi_tenant_*`
+    /// scrape families) — the engine hub, shared with the master.
+    hub: MetricsHub,
 }
 
 impl Shared {
-    fn new() -> Shared {
+    fn new(hub: MetricsHub) -> Shared {
         Shared {
             state: Mutex::new(Counters {
                 accepting: true,
                 ..Default::default()
             }),
             delivered: Condvar::new(),
+            hub,
         }
     }
 
     /// Close out one open request and wake any drain() waiter.
-    fn finish(&self, outcome: &ServeResult) {
+    fn finish(&self, outcome: &ServeResult, tenant: &str) {
         let mut st = self.state.lock().unwrap();
         st.open = st.open.saturating_sub(1);
+        if let Some(n) = st.open_by_tenant.get_mut(tenant) {
+            *n = n.saturating_sub(1);
+        }
         match outcome {
             Ok(_) => st.completed += 1,
             Err(ServeError::DeadlineShed { .. }) => st.shed += 1,
             Err(_) => st.failed += 1,
+        }
+        drop(st);
+        {
+            let mut h = self.hub.lock();
+            let t = h.tenant(tenant);
+            t.open = t.open.saturating_sub(1);
         }
         self.delivered.notify_all();
     }
@@ -215,6 +254,14 @@ impl Shared {
             st.dead_reason = Some(reason.to_string());
         }
         st.open = 0;
+        st.open_by_tenant.clear();
+        drop(st);
+        // The hub mutex may itself be poisoned by the same panic.
+        let mut h = self.hub.lock_recover();
+        for t in h.tenants.values_mut() {
+            t.open = 0;
+        }
+        drop(h);
         self.delivered.notify_all();
     }
 }
@@ -243,6 +290,8 @@ pub(super) struct ServerRequest {
     pub(super) input: Tensor,
     pub(super) priority: u8,
     pub(super) deadline: Option<Instant>,
+    /// Tenant the request bills to (quota + DRR + metrics key).
+    pub(super) tenant: String,
     /// Stamped in `submit`; the engine's queue-wait and sojourn
     /// histograms (and the trace root span) measure from here.
     pub(super) submitted_at: Instant,
@@ -258,7 +307,7 @@ impl ServerRequest {
     pub(super) fn reject(self) {
         let outcome: ServeResult = Err(ServeError::Rejected);
         let _ = self.reply.send((outcome.clone(), Instant::now()));
-        self.shared.finish(&outcome);
+        self.shared.finish(&outcome, &self.tenant);
     }
 }
 
@@ -267,6 +316,8 @@ impl ServerRequest {
 struct ServerSink {
     shared: Arc<Shared>,
     replies: HashMap<u64, mpsc::Sender<(ServeResult, Instant)>>,
+    /// id → tenant, so `deliver` can close out the right quota slot.
+    tenants: HashMap<u64, String>,
 }
 
 impl EngineSink for ServerSink {
@@ -276,23 +327,30 @@ impl EngineSink for ServerSink {
             input,
             priority,
             deadline,
+            tenant,
             submitted_at,
             reply,
             shared: _,
         } = req;
         self.replies.insert(id, reply);
+        self.tenants.insert(id, tenant.clone());
         EngineRequest {
             id,
             input,
             priority,
             deadline,
+            tenant,
             submitted_at,
         }
     }
 
     fn deliver(&mut self, id: u64, result: ServeResult) {
         let completed_at = Instant::now();
-        self.shared.finish(&result);
+        let tenant = self
+            .tenants
+            .remove(&id)
+            .unwrap_or_else(|| DEFAULT_TENANT.to_string());
+        self.shared.finish(&result, &tenant);
         if let Some(tx) = self.replies.remove(&id) {
             let _ = tx.send((result, completed_at)); // receiver may be gone
         }
@@ -382,6 +440,8 @@ pub struct ServerStats {
     /// engine failure).
     pub failed: u64,
     pub rejected_queue_full: u64,
+    /// Submissions refused by a per-tenant quota (all tenants).
+    pub rejected_tenant_quota: u64,
     /// Admitted but not yet delivered.
     pub open: usize,
 }
@@ -391,6 +451,8 @@ pub struct InferenceServer {
     tx: mpsc::Sender<MasterEvent>,
     shared: Arc<Shared>,
     capacity: usize,
+    /// Per-tenant open-request bound (0 = unlimited).
+    tenant_quota: usize,
     next_id: AtomicU64,
     /// The master's metrics hub, captured before the master moves onto
     /// the engine thread — `scrape()` reads it live, no engine round-trip.
@@ -404,9 +466,9 @@ impl InferenceServer {
     /// loop; a `RoundBarrier`-mode master is served with one request in
     /// flight at a time (the sequential baseline).
     pub fn start(master: Master, config: ServerConfig) -> InferenceServer {
-        let shared = Arc::new(Shared::new());
         let tx = master.event_sender();
         let hub = master.metrics_hub();
+        let shared = Arc::new(Shared::new(hub.clone()));
         let max_concurrent = if master.config().mode == ExecMode::RoundBarrier {
             1
         } else {
@@ -429,6 +491,7 @@ impl InferenceServer {
                 let mut sink = ServerSink {
                     shared: guard.shared.clone(),
                     replies: HashMap::new(),
+                    tenants: HashMap::new(),
                 };
                 match master.serve_stream(
                     Vec::new(),
@@ -457,16 +520,19 @@ impl InferenceServer {
             tx,
             shared,
             capacity: config.queue_capacity.max(1),
+            tenant_quota: config.tenant_quota,
             next_id: AtomicU64::new(0),
             hub,
             engine: Some(engine),
         }
     }
 
-    /// Non-blocking submission. `Err(QueueFull)` is backpressure —
-    /// nothing was admitted; retry after a completion.
+    /// Non-blocking submission. `Err(QueueFull)` / `Err(TenantQuota)`
+    /// are backpressure — nothing was admitted; retry after a
+    /// completion (of anything / of this tenant's, respectively).
     pub fn submit(&self, req: InferenceRequest) -> Result<RequestHandle, SubmitError> {
         let submitted_at = Instant::now();
+        let tenant = req.tenant;
         {
             let mut st = self.shared.state.lock().unwrap();
             if !st.accepting || st.engine_dead {
@@ -476,8 +542,25 @@ impl InferenceServer {
                 st.rejected_queue_full += 1;
                 return Err(SubmitError::QueueFull);
             }
+            if self.tenant_quota > 0 {
+                let tenant_open =
+                    st.open_by_tenant.get(&tenant).copied().unwrap_or(0);
+                if tenant_open >= self.tenant_quota {
+                    st.rejected_tenant_quota += 1;
+                    drop(st);
+                    self.shared.hub.lock().tenant(&tenant).quota_rejections += 1;
+                    return Err(SubmitError::TenantQuota);
+                }
+            }
             st.open += 1;
             st.submitted += 1;
+            *st.open_by_tenant.entry(tenant.clone()).or_insert(0) += 1;
+        }
+        {
+            let mut h = self.shared.hub.lock();
+            let t = h.tenant(&tenant);
+            t.submitted += 1;
+            t.open += 1;
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::channel();
@@ -486,16 +569,27 @@ impl InferenceServer {
             input: req.input,
             priority: req.priority,
             deadline: req.deadline.map(|d| submitted_at + d),
+            tenant: tenant.clone(),
             submitted_at,
             reply,
             shared: self.shared.clone(),
         };
-        log::debug!("server: req={id} submitted priority={}", sreq.priority);
+        log::debug!("server: req={id} submitted priority={} tenant={tenant}", sreq.priority);
         if self.tx.send(MasterEvent::Submit(sreq)).is_err() {
             // Engine gone; roll the admission back.
             let mut st = self.shared.state.lock().unwrap();
             st.open = st.open.saturating_sub(1);
             st.submitted -= 1;
+            if let Some(n) = st.open_by_tenant.get_mut(&tenant) {
+                *n = n.saturating_sub(1);
+            }
+            drop(st);
+            {
+                let mut h = self.shared.hub.lock();
+                let t = h.tenant(&tenant);
+                t.submitted = t.submitted.saturating_sub(1);
+                t.open = t.open.saturating_sub(1);
+            }
             return Err(SubmitError::ShuttingDown);
         }
         Ok(RequestHandle {
@@ -562,6 +656,7 @@ impl InferenceServer {
             shed: st.shed,
             failed: st.failed,
             rejected_queue_full: st.rejected_queue_full,
+            rejected_tenant_quota: st.rejected_tenant_quota,
             open: st.open,
         }
     }

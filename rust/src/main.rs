@@ -13,6 +13,8 @@
 //!              [--deadline-ms D]                    # per-request deadline (shed when unmeetable)
 //!              [--queue-cap C]                      # admission bound (QueueFull backpressure)
 //!              [--concurrent M]                     # engine concurrency limit (0 = unlimited)
+//!              [--tenant-quota Q]                   # open requests per tenant (0 = unlimited)
+//!              [--tenant-weight a=2,b=1]            # DRR fair-share weights; --stream round-robins the named tenants
 //!              [--coalesce C]                       # merge ≤C same-layer requests per round (1 = off)
 //!              [--worker-slots S]                   # convs in flight per worker (1 = sequential)
 //!              [--hedge-quantile Q]                 # watchdog hedge quantile (0 = no hedging)
@@ -108,6 +110,32 @@ impl Args {
     }
 }
 
+/// Parse `--tenant-weight a=2,b=1` (a bare name means weight 1) into
+/// `MasterConfig::tenant_weights`.
+fn parse_tenant_weights(spec: Option<&str>) -> Result<Vec<(String, f64)>> {
+    let Some(spec) = spec else { return Ok(Vec::new()) };
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let (name, weight) = match part.split_once('=') {
+            Some((n, w)) => (
+                n.trim(),
+                w.trim()
+                    .parse::<f64>()
+                    .with_context(|| format!("--tenant-weight {part}"))?,
+            ),
+            None => (part.trim(), 1.0),
+        };
+        if name.is_empty() {
+            bail!("--tenant-weight {part}: empty tenant name");
+        }
+        if !(weight.is_finite() && weight > 0.0) {
+            bail!("--tenant-weight {part}: weight must be positive and finite");
+        }
+        out.push((name.to_string(), weight));
+    }
+    Ok(out)
+}
+
 fn scheme_from_str(s: &str) -> Result<SchemeKind> {
     Ok(match s {
         "mds" | "cocoi" => SchemeKind::Mds,
@@ -194,6 +222,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
         )?,
         trace: trace_handle.clone(),
         trace_sample: args.get_usize("trace-sample", MasterConfig::default().trace_sample)?,
+        tenant_weights: parse_tenant_weights(args.get("tenant-weight"))?,
         ..Default::default()
     };
     let telemetry_path = args.get("telemetry").map(std::path::PathBuf::from);
@@ -290,10 +319,17 @@ fn run_stream(
         ServerConfig {
             queue_capacity: args.get_usize("queue-cap", 64)?,
             max_concurrent: args.get_usize("concurrent", 0)?,
+            tenant_quota: args.get_usize("tenant-quota", 0)?,
         },
     );
 
     let model = zoo::model(model_name)?;
+    // With `--tenant-weight a=2,b=1`, stream requests round-robin across
+    // the named tenants so the DRR/quota path is exercisable from the CLI.
+    let tenants: Vec<String> = parse_tenant_weights(args.get("tenant-weight"))?
+        .into_iter()
+        .map(|(name, _)| name)
+        .collect();
     let mut rng = Rng::new(args.get_usize("seed", 1)? as u64 ^ 0x57EA);
     let mut handles = Vec::new();
     let mut rejected = 0usize;
@@ -306,6 +342,9 @@ fn run_stream(
         let mut req = InferenceRequest::new(input);
         if let Some(d) = deadline {
             req = req.with_deadline(d);
+        }
+        if !tenants.is_empty() {
+            req = req.with_tenant(&tenants[i % tenants.len()]);
         }
         match server.submit(req) {
             Ok(h) => handles.push(h),
@@ -345,8 +384,14 @@ fn run_stream(
     }
     let stats = server.stats();
     println!(
-        "server: {} submitted, {} completed, {} shed, {} failed, {} queue-full",
-        stats.submitted, stats.completed, stats.shed, stats.failed, stats.rejected_queue_full
+        "server: {} submitted, {} completed, {} shed, {} failed, {} queue-full, \
+         {} tenant-quota",
+        stats.submitted,
+        stats.completed,
+        stats.shed,
+        stats.failed,
+        stats.rejected_queue_full,
+        stats.rejected_tenant_quota
     );
     if let Some(path) = args.get("metrics") {
         let path = std::path::Path::new(path);

@@ -23,12 +23,30 @@ struct Family<T> {
     value: T,
 }
 
+/// A counter/gauge family whose samples carry one label (e.g. `tenant`):
+/// one `# TYPE`, one sample line per label value. Histograms stay
+/// unlabelled — per-label bucket series would break the per-family
+/// monotonicity walk in [`check_exposition`]; labelled quantile *gauges*
+/// carry the per-tenant latency signal instead.
+#[derive(Clone, Debug)]
+struct LabelledFamily {
+    name: String,
+    help: String,
+    /// `counter` or `gauge` (the `# TYPE` token).
+    kind: &'static str,
+    /// Label key, e.g. `tenant`.
+    label: String,
+    /// `(label value, sample)` pairs, emitted in the given order.
+    samples: Vec<(String, f64)>,
+}
+
 /// One coherent scrape of the system: counters, gauges, histograms.
 #[derive(Clone, Debug, Default)]
 pub struct Snapshot {
     counters: Vec<Family<f64>>,
     gauges: Vec<Family<f64>>,
     hists: Vec<Family<LogHistogram>>,
+    labelled: Vec<LabelledFamily>,
 }
 
 impl Snapshot {
@@ -66,6 +84,42 @@ impl Snapshot {
         self
     }
 
+    /// Add a counter family with one sample per `label` value.
+    pub fn labelled_counter(
+        &mut self,
+        name: &str,
+        help: &str,
+        label: &str,
+        samples: Vec<(String, f64)>,
+    ) -> &mut Snapshot {
+        self.labelled.push(LabelledFamily {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind: "counter",
+            label: label.to_string(),
+            samples,
+        });
+        self
+    }
+
+    /// Add a gauge family with one sample per `label` value.
+    pub fn labelled_gauge(
+        &mut self,
+        name: &str,
+        help: &str,
+        label: &str,
+        samples: Vec<(String, f64)>,
+    ) -> &mut Snapshot {
+        self.labelled.push(LabelledFamily {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind: "gauge",
+            label: label.to_string(),
+            samples,
+        });
+        self
+    }
+
     /// Prometheus text exposition format (version 0.0.4).
     pub fn to_prometheus(&self) -> String {
         let mut out = String::new();
@@ -78,6 +132,19 @@ impl Snapshot {
             out.push_str(&format!("# HELP {} {}\n", f.name, f.help));
             out.push_str(&format!("# TYPE {} gauge\n", f.name));
             out.push_str(&format!("{} {}\n", f.name, fmt_num(f.value)));
+        }
+        for f in &self.labelled {
+            out.push_str(&format!("# HELP {} {}\n", f.name, f.help));
+            out.push_str(&format!("# TYPE {} {}\n", f.name, f.kind));
+            for (lv, v) in &f.samples {
+                out.push_str(&format!(
+                    "{}{{{}=\"{}\"}} {}\n",
+                    f.name,
+                    f.label,
+                    lv,
+                    fmt_num(*v)
+                ));
+            }
         }
         for f in &self.hists {
             out.push_str(&format!("# HELP {} {}\n", f.name, f.help));
@@ -109,6 +176,25 @@ impl Snapshot {
                         .collect(),
                 ),
             ),
+            (
+                "labelled",
+                Json::obj(
+                    self.labelled
+                        .iter()
+                        .map(|f| {
+                            (
+                                f.name.as_str(),
+                                Json::obj(
+                                    f.samples
+                                        .iter()
+                                        .map(|(lv, v)| (lv.as_str(), Json::Num(*v)))
+                                        .collect(),
+                                ),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 
@@ -118,6 +204,7 @@ impl Snapshot {
             .iter()
             .map(|f| f.name.clone())
             .chain(self.gauges.iter().map(|f| f.name.clone()))
+            .chain(self.labelled.iter().map(|f| f.name.clone()))
             .chain(self.hists.iter().map(|f| f.name.clone()))
             .collect()
     }
@@ -247,6 +334,37 @@ mod tests {
         let torn = good.replace("cocoi_sojourn_seconds_count 50", "cocoi_sojourn_seconds_count 49");
         assert!(check_exposition(&torn).is_err(), "+Inf/_count mismatch accepted");
         assert!(check_exposition("").is_err(), "empty scrape accepted");
+    }
+
+    #[test]
+    fn labelled_families_pass_schema_check() {
+        let mut s = demo();
+        s.labelled_counter(
+            "cocoi_tenant_submitted_total",
+            "Per-tenant submissions.",
+            "tenant",
+            vec![("alpha".to_string(), 3.0), ("beta".to_string(), 1.0)],
+        )
+        .labelled_gauge(
+            "cocoi_tenant_open_requests",
+            "Per-tenant open requests.",
+            "tenant",
+            vec![("alpha".to_string(), 2.0)],
+        );
+        let text = s.to_prometheus();
+        assert!(text.contains("# TYPE cocoi_tenant_submitted_total counter"));
+        assert!(text.contains("cocoi_tenant_submitted_total{tenant=\"alpha\"} 3"));
+        assert!(text.contains("cocoi_tenant_submitted_total{tenant=\"beta\"} 1"));
+        assert!(text.contains("cocoi_tenant_open_requests{tenant=\"alpha\"} 2"));
+        // 3 demo families + 2 labelled; one TYPE per family even with
+        // multiple samples.
+        assert_eq!(check_exposition(&text).unwrap(), 5);
+        let j = s.to_json();
+        assert_eq!(
+            j.get("labelled").get("cocoi_tenant_submitted_total").req_f64("alpha").unwrap(),
+            3.0
+        );
+        assert_eq!(s.family_names().len(), 5);
     }
 
     #[test]

@@ -18,6 +18,7 @@ pub mod export;
 pub mod hist;
 pub mod trace;
 
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, MutexGuard};
 
 use hist::LogHistogram;
@@ -33,6 +34,24 @@ pub struct PoolGauges {
     pub retries: u64,
     pub cancels: u64,
     pub plan_switches: u64,
+    /// Heartbeats whose `seq` regressed vs the worker's last-seen seq —
+    /// a zombie half-open link replaying stale beacons.
+    pub hb_regressions: u64,
+}
+
+/// Per-tenant serving meters: admission counters plus the sojourn
+/// histogram behind the tenant-labelled scrape families and the
+/// `telemetry_json` per-tenant latency summaries.
+#[derive(Clone, Debug, Default)]
+pub struct TenantStats {
+    pub submitted: u64,
+    pub completed: u64,
+    /// Submissions refused by the per-tenant admission quota.
+    pub quota_rejections: u64,
+    /// Admitted but not yet delivered.
+    pub open: u64,
+    /// Submit → delivery for this tenant's requests.
+    pub sojourn: LogHistogram,
 }
 
 /// The histogram set every latency-stamping layer records into. Field per
@@ -59,6 +78,17 @@ pub struct HubInner {
     /// Local-fallback shard compute: last dispatch → local result ready.
     pub fallback_latency: LogHistogram,
     pub gauges: PoolGauges,
+    /// Per-tenant meters, keyed by tenant id (BTreeMap: the scrape's
+    /// label order stays deterministic). Empty until tenant-attributed
+    /// traffic flows; the 5 `cocoi_tenant_*` families appear with it.
+    pub tenants: BTreeMap<String, TenantStats>,
+}
+
+impl HubInner {
+    /// The per-tenant meter row, created on first touch.
+    pub fn tenant(&mut self, name: &str) -> &mut TenantStats {
+        self.tenants.entry(name.to_string()).or_default()
+    }
 }
 
 /// Shared, thread-safe metrics recording surface. Cheap to clone.
@@ -76,6 +106,16 @@ impl MetricsHub {
     /// `record` calls — and only ever taken from coordinator threads.
     pub fn lock(&self) -> MutexGuard<'_, HubInner> {
         self.inner.lock().unwrap()
+    }
+
+    /// Poison-tolerant lock for panic-path bookkeeping (the engine's
+    /// unwind guard zeroes per-tenant open counts through this — the
+    /// panic may have happened while a recorder held the hub).
+    pub fn lock_recover(&self) -> MutexGuard<'_, HubInner> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
     }
 
     /// Deep-copied snapshot for export (scrape builds run unlocked).
@@ -107,7 +147,47 @@ impl MetricsHub {
                 "cocoi_plan_switches_total",
                 "Adaptive replanner (n, k) switches.",
                 g.plan_switches as f64,
+            )
+            .counter(
+                "cocoi_heartbeat_regressions_total",
+                "Heartbeats with a regressed seq (stale-beacon replay).",
+                g.hb_regressions as f64,
             );
+        if !h.tenants.is_empty() {
+            let col = |f: &dyn Fn(&TenantStats) -> f64| -> Vec<(String, f64)> {
+                h.tenants.iter().map(|(t, s)| (t.clone(), f(s))).collect()
+            };
+            snap.labelled_counter(
+                "cocoi_tenant_submitted_total",
+                "Per-tenant requests accepted by submit().",
+                "tenant",
+                col(&|s| s.submitted as f64),
+            )
+            .labelled_counter(
+                "cocoi_tenant_completed_total",
+                "Per-tenant requests delivered successfully.",
+                "tenant",
+                col(&|s| s.completed as f64),
+            )
+            .labelled_counter(
+                "cocoi_tenant_quota_rejections_total",
+                "Per-tenant submissions refused by the admission quota.",
+                "tenant",
+                col(&|s| s.quota_rejections as f64),
+            )
+            .labelled_gauge(
+                "cocoi_tenant_open_requests",
+                "Per-tenant admitted-but-undelivered requests.",
+                "tenant",
+                col(&|s| s.open as f64),
+            )
+            .labelled_gauge(
+                "cocoi_tenant_sojourn_p95_seconds",
+                "Per-tenant p95 submit-to-delivery sojourn.",
+                "tenant",
+                col(&|s| if s.sojourn.count() == 0 { 0.0 } else { s.sojourn.quantile(0.95) }),
+            );
+        }
         let hists: [(&str, &str, &LogHistogram); 10] = [
             ("cocoi_queue_wait_seconds", "Submit to engine admission.", &h.queue_wait),
             ("cocoi_sojourn_seconds", "Submit to delivery, end to end.", &h.sojourn),
@@ -157,14 +237,33 @@ mod tests {
             h.gauges.members = 4;
             h.gauges.hedges = 2;
         }
+        // With no tenant traffic yet: 9 counters/gauges + 10 histograms.
+        let mut pre = export::Snapshot::new();
+        hub.export_into(&mut pre);
+        assert_eq!(export::check_exposition(&pre.to_prometheus()).unwrap(), 19);
+        {
+            let mut h = hub.lock();
+            let t = h.tenant("alpha");
+            t.submitted = 3;
+            t.completed = 2;
+            t.open = 1;
+            t.sojourn.record(0.2);
+            h.tenant("beta").quota_rejections = 1;
+            h.gauges.hb_regressions = 1;
+        }
         let mut snap = export::Snapshot::new();
         hub.export_into(&mut snap);
         let text = snap.to_prometheus();
-        assert_eq!(export::check_exposition(&text).unwrap(), 18);
+        // + the 5 tenant-labelled families once tenants exist.
+        assert_eq!(export::check_exposition(&text).unwrap(), 24);
         assert!(text.contains("cocoi_pool_members 4"));
         assert!(text.contains("cocoi_hedges_total 2"));
+        assert!(text.contains("cocoi_heartbeat_regressions_total 1"));
         assert!(text.contains("cocoi_sojourn_seconds_count 1"));
         assert!(text.contains("cocoi_hedge_win_seconds_count 1"));
+        assert!(text.contains("cocoi_tenant_submitted_total{tenant=\"alpha\"} 3"));
+        assert!(text.contains("cocoi_tenant_quota_rejections_total{tenant=\"beta\"} 1"));
+        assert!(text.contains("cocoi_tenant_open_requests{tenant=\"alpha\"} 1"));
         // A second export sees the same family list (stability).
         let mut snap2 = export::Snapshot::new();
         hub.export_into(&mut snap2);

@@ -13,7 +13,7 @@ pub mod scenario;
 pub use adaptive::{simulate_adaptive, AdaptiveSimResult, DriftScenario};
 pub use runner::{
     percentile, simulate_model, simulate_serving, simulate_serving_open,
-    simulate_serving_open_with, straggling_profile, MethodSim, ModelSimResult, ServeKnobs,
-    ServeSimMode, ServingSimResult,
+    simulate_serving_open_with, simulate_serving_tenants, straggling_profile, MethodSim,
+    ModelSimResult, ServeKnobs, ServeSimMode, ServingSimResult, TenantLoad, TenantSimResult,
 };
 pub use scenario::Scenario;

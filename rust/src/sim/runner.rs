@@ -265,7 +265,7 @@ fn trial_mds_like(
     }
 
     let mut done: Vec<f64> = arrivals.iter().flatten().copied().collect();
-    done.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    done.sort_unstable_by(f64::total_cmp);
     let workers = match needed {
         Needed::All => done.last().copied().unwrap_or(f64::INFINITY),
         Needed::KOfN(kk) => done.get(kk - 1).copied().unwrap_or(f64::INFINITY),
@@ -341,7 +341,7 @@ fn trial_lt(
             sym += n;
         }
     }
-    arrivals.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    arrivals.sort_unstable_by(f64::total_cmp);
     let needed = lt_cache.sample(k_lt, rng);
     let workers = arrivals
         .get(needed.saturating_sub(1))
@@ -1187,6 +1187,221 @@ pub fn simulate_serving_open_with(
     })
 }
 
+// ====================================================================
+// Multi-tenant serving: weighted fair sharing vs FIFO, per-tenant rng.
+// ====================================================================
+
+/// One tenant's offered load in [`simulate_serving_tenants`].
+#[derive(Clone, Debug)]
+pub struct TenantLoad {
+    pub name: String,
+    /// Poisson arrival rate (requests/second).
+    pub rate: f64,
+    /// Fair-share weight (the `MasterConfig::tenant_weights` mirror).
+    pub weight: f64,
+    /// Seed of this tenant's *private* rng stream. Arrivals and service
+    /// draws come only from it, so a tenant's trace is bitwise-identical
+    /// no matter who else shares the box — the starvation gate compares
+    /// a victim's isolated run against its flooded run and any latency
+    /// difference is pure scheduling interference, not different draws.
+    pub seed: u64,
+}
+
+/// Per-tenant outcome of [`simulate_serving_tenants`].
+#[derive(Clone, Debug)]
+pub struct TenantSimResult {
+    pub name: String,
+    pub arrivals: usize,
+    /// Requests shed at arrival (predicted sojourn past the deadline).
+    pub shed: usize,
+    /// Sojourn (arrival → completion) of every served request.
+    pub latencies: Vec<f64>,
+}
+
+impl TenantSimResult {
+    pub fn mean(&self) -> f64 {
+        self.latencies.iter().sum::<f64>() / self.latencies.len().max(1) as f64
+    }
+
+    pub fn p50(&self) -> f64 {
+        percentile(&self.latencies, 0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        percentile(&self.latencies, 0.95)
+    }
+}
+
+/// Multi-tenant open-loop serving: each tenant offers a Poisson stream
+/// at its own rate and the serving stack is modelled as one station.
+///
+/// * `fair = true` — preemptive-resume weighted fair sharing (the fluid
+///   limit of the engine's deficit-round-robin admission): at every
+///   instant the backlogged tenants split the station proportionally to
+///   weight, FIFO within a tenant. A tenant's worst-case drain rate is
+///   its guaranteed share, so a flooding neighbour cannot starve it.
+/// * `fair = false` — global arrival-FIFO, non-preemptive: the
+///   pre-tenancy single-queue baseline, where a flooder's backlog sits
+///   in front of everyone else's requests.
+///
+/// The DRR admission quantizes at whole requests while this mirror is
+/// fluid, so the live engine adds at most one residual service time of
+/// blocking on top of the fluid prediction — the 1.2× headroom in the
+/// starvation gate covers exactly that quantization.
+///
+/// With a relative `deadline`, a request is shed at arrival when its
+/// predicted sojourn — tenant backlog drained at the tenant's guaranteed
+/// share (fair) or the global backlog (FIFO) — already exceeds it.
+pub fn simulate_serving_tenants(
+    model: &ModelSpec,
+    profile: &SystemProfile,
+    n: usize,
+    method: MethodSim,
+    scenario: Scenario,
+    tenants: &[TenantLoad],
+    horizon: f64,
+    deadline: Option<f64>,
+    fair: bool,
+) -> Result<Vec<TenantSimResult>> {
+    anyhow::ensure!(!tenants.is_empty(), "need at least one tenant");
+    anyhow::ensure!(horizon > 0.0, "need a positive horizon");
+    // The layer plan is shared and drawn from a dedicated rng so that
+    // planning never perturbs any tenant's private stream.
+    let mut plan_rng = Rng::new(0x7E4A_9C01);
+    let (layer_cfg, local_mean) = plan_layers(model, profile, n, method, &scenario, &mut plan_rng)?;
+    let mut lt_cache = LtOverheadCache::new();
+
+    struct Job {
+        tenant: usize,
+        arrival: f64,
+        service: f64,
+        remaining: f64,
+    }
+    let mut jobs: Vec<Job> = Vec::new();
+    let mut per_tenant_arrivals = vec![0usize; tenants.len()];
+    for (ti, t) in tenants.iter().enumerate() {
+        anyhow::ensure!(t.rate > 0.0, "tenant {} needs a positive rate", t.name);
+        let mut rng = Rng::new(t.seed);
+        let mut at = 0.0;
+        let mut instants = Vec::new();
+        loop {
+            at += rng.exponential(t.rate);
+            if at >= horizon {
+                break;
+            }
+            instants.push(at);
+        }
+        per_tenant_arrivals[ti] = instants.len();
+        for a in instants {
+            let service: f64 = local_mean
+                + layer_cfg
+                    .iter()
+                    .map(|(_, dims, k)| {
+                        let (e, w, d) = draw_layer(
+                            method, dims, *k, profile, n, &scenario, None, &mut lt_cache,
+                            &mut rng,
+                        );
+                        e + w + d
+                    })
+                    .sum::<f64>();
+            jobs.push(Job { tenant: ti, arrival: a, service, remaining: service });
+        }
+    }
+    jobs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.tenant.cmp(&b.tenant)));
+
+    // Weights clamped like `coordinator::fair` clamps DRR quanta: a zero
+    // weight throttles, it does not starve.
+    let w: Vec<f64> = tenants.iter().map(|t| t.weight.max(0.01)).collect();
+    let w_all: f64 = w.iter().sum();
+
+    let mut done: Vec<Option<f64>> = vec![None; jobs.len()];
+    let mut shed = vec![0usize; tenants.len()];
+    if fair {
+        // Event-driven fluid weighted fair sharing: advance to the next
+        // arrival or head-of-line completion, progressing every
+        // backlogged tenant's head at rate weight/Σ(backlogged weights).
+        let mut queues: Vec<std::collections::VecDeque<usize>> =
+            vec![std::collections::VecDeque::new(); tenants.len()];
+        let mut now = 0.0f64;
+        let mut next = 0usize;
+        loop {
+            let backlogged: Vec<usize> =
+                (0..tenants.len()).filter(|&ti| !queues[ti].is_empty()).collect();
+            if backlogged.is_empty() {
+                let Some(job) = jobs.get(next) else { break };
+                now = job.arrival;
+            }
+            let w_active: f64 = backlogged.iter().map(|&ti| w[ti]).sum();
+            let mut t_fin = f64::INFINITY;
+            let mut fin_tenant = usize::MAX;
+            for &ti in &backlogged {
+                let j = *queues[ti].front().unwrap();
+                let tf = now + jobs[j].remaining.max(0.0) * w_active / w[ti];
+                if tf < t_fin {
+                    t_fin = tf;
+                    fin_tenant = ti;
+                }
+            }
+            let t_arr = jobs.get(next).map_or(f64::INFINITY, |j| j.arrival);
+            if t_arr == f64::INFINITY && backlogged.is_empty() {
+                break;
+            }
+            let t_next = t_fin.min(t_arr);
+            let dt = (t_next - now).max(0.0);
+            for &ti in &backlogged {
+                let j = *queues[ti].front().unwrap();
+                jobs[j].remaining -= dt * w[ti] / w_active;
+            }
+            now = t_next;
+            if t_arr <= t_fin {
+                // Admission: shed when even the guaranteed share cannot
+                // drain the tenant's backlog plus this request in time.
+                let ti = jobs[next].tenant;
+                let backlog: f64 = queues[ti].iter().map(|&j| jobs[j].remaining).sum();
+                let drains = (backlog + jobs[next].service) * w_all / w[ti];
+                if deadline.is_some_and(|d| drains > d) {
+                    shed[ti] += 1;
+                } else {
+                    queues[ti].push_back(next);
+                }
+                next += 1;
+            } else {
+                let j = queues[fin_tenant].pop_front().unwrap();
+                done[j] = Some(now);
+            }
+        }
+    } else {
+        // Non-preemptive global FIFO: one backlog, arrival order.
+        let mut server_free = 0.0f64;
+        for (ji, job) in jobs.iter().enumerate() {
+            let start = job.arrival.max(server_free);
+            if deadline.is_some_and(|d| start + job.service - job.arrival > d) {
+                shed[job.tenant] += 1;
+                continue;
+            }
+            server_free = start + job.service;
+            done[ji] = Some(server_free);
+        }
+    }
+
+    let mut out: Vec<TenantSimResult> = tenants
+        .iter()
+        .enumerate()
+        .map(|(ti, t)| TenantSimResult {
+            name: t.name.clone(),
+            arrivals: per_tenant_arrivals[ti],
+            shed: shed[ti],
+            latencies: Vec::new(),
+        })
+        .collect();
+    for (ji, job) in jobs.iter().enumerate() {
+        if let Some(t_done) = done[ji] {
+            out[job.tenant].latencies.push(t_done - job.arrival);
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1594,6 +1809,92 @@ mod tests {
         assert_eq!(with.latencies.len() + with.shed, with.arrivals);
         let without = open(ServeSimMode::Barrier, rate, 60, None, 13);
         assert_eq!(without.shed, 0);
+    }
+
+    fn tenant(name: &str, rate: f64, weight: f64, seed: u64) -> TenantLoad {
+        TenantLoad { name: name.to_string(), rate, weight, seed }
+    }
+
+    fn run_tenants(loads: &[TenantLoad], horizon: f64, fair: bool) -> Vec<TenantSimResult> {
+        let model = zoo::model("vgg16").unwrap();
+        let p = SystemProfile::paper_default();
+        simulate_serving_tenants(
+            &model,
+            &p,
+            10,
+            MethodSim::CocoiKCirc,
+            Scenario::None,
+            loads,
+            horizon,
+            None,
+            fair,
+        )
+        .unwrap()
+    }
+
+    /// A tenant's arrival/service draws come from its private seed, so
+    /// its offered trace is the same whether it runs alone or next to a
+    /// flooder — and a repeated run is bitwise-identical.
+    #[test]
+    fn tenant_streams_are_private_and_reproducible() {
+        let service = isolated_service(5);
+        let victim = tenant("victim", 0.25 / service, 1.0, 41);
+        let horizon = 30.0 * service;
+        let a = run_tenants(&[victim.clone()], horizon, true);
+        let b = run_tenants(&[victim.clone()], horizon, true);
+        assert!(a[0].arrivals > 0);
+        assert_eq!(a[0].latencies.len(), b[0].latencies.len());
+        for (x, y) in a[0].latencies.iter().zip(&b[0].latencies) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let flooder = tenant("flooder", 1.3 / service, 1.0, 42);
+        let both = run_tenants(&[victim, flooder], horizon, true);
+        assert_eq!(both[0].arrivals, a[0].arrivals);
+    }
+
+    /// The starvation gate at test scale: a trickle tenant weighted over
+    /// a flooding tenant keeps near-isolated tail latency under fair
+    /// sharing (its guaranteed share bounds the slowdown), while the
+    /// pre-tenancy FIFO queue buries it behind the flooder's backlog.
+    #[test]
+    fn fair_sharing_bounds_flood_interference() {
+        let service = isolated_service(5);
+        let horizon = 40.0 * service;
+        let victim = tenant("victim", 0.25 / service, 16.0, 41);
+        let flooder = tenant("flooder", 1.3 / service, 1.0, 42);
+        let iso = run_tenants(&[victim.clone()], horizon, true);
+        let fair = run_tenants(&[victim.clone(), flooder.clone()], horizon, true);
+        let fifo = run_tenants(&[victim, flooder], horizon, false);
+        assert!(
+            fair[0].p95() <= 1.2 * iso[0].p95(),
+            "fair victim p95 {} > 1.2x isolated {}",
+            fair[0].p95(),
+            iso[0].p95()
+        );
+        assert!(
+            fifo[0].p95() > fair[0].p95(),
+            "FIFO victim p95 {} should exceed fair {}",
+            fifo[0].p95(),
+            fair[0].p95()
+        );
+    }
+
+    /// Weights shift capacity: two equally-overloaded tenants, 3:1
+    /// weights ⇒ the heavy tenant's backlog grows slower, so its mean
+    /// sojourn stays below the light tenant's.
+    #[test]
+    fn weights_shift_capacity_between_overloaded_tenants() {
+        let service = isolated_service(5);
+        let horizon = 30.0 * service;
+        let heavy = tenant("heavy", 1.0 / service, 3.0, 51);
+        let light = tenant("light", 1.0 / service, 1.0, 52);
+        let out = run_tenants(&[heavy, light], horizon, true);
+        assert!(
+            out[0].mean() < out[1].mean(),
+            "heavy mean {} should undercut light mean {}",
+            out[0].mean(),
+            out[1].mean()
+        );
     }
 
     #[test]

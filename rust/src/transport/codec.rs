@@ -115,8 +115,14 @@ impl<'a> Decoder<'a> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    /// A count/index encoded as u64 on the wire. Checked conversion: on
+    /// a 32-bit host (the paper's Raspberry Pi 4B testbed commonly runs
+    /// 32-bit userland) a plain `as usize` cast would silently truncate
+    /// a malicious/corrupt value to its low 32 bits instead of erroring.
     pub fn usize(&mut self) -> Result<usize> {
-        Ok(self.u64()? as usize)
+        let v = self.u64()?;
+        v.try_into()
+            .map_err(|_| anyhow::anyhow!("u64 value {v} does not fit in usize on this host"))
     }
 
     pub fn f64(&mut self) -> Result<f64> {
@@ -220,6 +226,30 @@ mod tests {
         b.u32(7).str("x").f32s(&[1.0, 2.0]);
         assert_eq!(a.len(), b.len());
         assert_eq!(a.finish(), b.finish());
+    }
+
+    /// Regression: `Decoder::usize` was `u64 as usize` unchecked — on a
+    /// 32-bit host a wire value ≥ 2^32 silently truncated to its low 32
+    /// bits (e.g. `1 << 32` decoded as 0). The conversion is now
+    /// checked: out-of-range values error, in-range values round-trip.
+    #[test]
+    fn usize_decode_is_bounds_checked_not_truncating() {
+        let mut e = Encoder::new();
+        e.usize(7).usize(0);
+        let mut d = Decoder::new(&e.finish());
+        assert_eq!(d.usize().unwrap(), 7);
+        assert_eq!(d.usize().unwrap(), 0);
+        d.done().unwrap();
+        // A value past u32::MAX: errors where usize is 32-bit, decodes
+        // losslessly where it fits — never truncates.
+        let wide: u64 = u64::from(u32::MAX) + 1;
+        let mut e = Encoder::new();
+        e.u64(wide);
+        let bytes = e.finish();
+        match usize::try_from(wide) {
+            Ok(v) => assert_eq!(Decoder::new(&bytes).usize().unwrap(), v),
+            Err(_) => assert!(Decoder::new(&bytes).usize().is_err()),
+        }
     }
 
     #[test]

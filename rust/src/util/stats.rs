@@ -4,12 +4,17 @@
 /// [0, 1]; NaN on empty. THE percentile implementation — shared by
 /// [`Summary::quantile`] and the serving tables (`sim::percentile`), so
 /// every latency report interpolates the same way.
+///
+/// NaN samples (a failed/shed request folded into a latency table) are
+/// filtered out explicitly rather than fed to the comparator: the old
+/// `partial_cmp(..).unwrap()` sort panicked the whole bench driver on a
+/// single NaN. An all-NaN sample propagates NaN, like the empty one.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    if xs.is_empty() {
+    let mut s: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if s.is_empty() {
         return f64::NAN;
     }
-    let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -100,9 +105,12 @@ impl Summary {
 }
 
 /// Empirical CDF points `(x_i, i/n)` of a sample — used for Fig. 8.
+/// NaN samples are dropped (a NaN x-coordinate would break the
+/// monotone-x invariant the plot relies on); the CDF is over the
+/// remaining observations.
 pub fn ecdf(xs: &[f64]) -> Vec<(f64, f64)> {
-    let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut s: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    s.sort_by(f64::total_cmp);
     let n = s.len() as f64;
     s.iter()
         .enumerate()
@@ -139,5 +147,25 @@ mod tests {
         let s = Summary::new();
         assert!(s.mean().is_nan());
         assert!(s.quantile(0.5).is_nan());
+    }
+
+    /// Regression: a single NaN sample used to panic the sort inside
+    /// `percentile` (`partial_cmp(..).unwrap()`), taking the whole
+    /// bench/experiment driver down mid-sweep. NaNs are now filtered;
+    /// the percentile is over the remaining finite samples, and an
+    /// all-NaN table propagates NaN instead of panicking.
+    #[test]
+    fn nan_samples_are_filtered_not_panicking() {
+        let with_nan = [3.0, f64::NAN, 1.0, 2.0, f64::NAN];
+        assert_eq!(percentile(&with_nan, 0.0), 1.0);
+        assert_eq!(percentile(&with_nan, 1.0), 3.0);
+        assert!((percentile(&with_nan, 0.5) - 2.0).abs() < 1e-12);
+        assert!(percentile(&[f64::NAN, f64::NAN], 0.5).is_nan());
+        let pts = ecdf(&[f64::NAN, 2.0, 1.0]);
+        assert_eq!(pts.len(), 2);
+        assert!(pts.windows(2).all(|w| w[0].0 <= w[1].0));
+        assert!((pts.last().unwrap().1 - 1.0).abs() < 1e-12);
+        // Infinities still order deterministically under total_cmp.
+        assert_eq!(percentile(&[f64::INFINITY, 1.0], 1.0), f64::INFINITY);
     }
 }

@@ -419,6 +419,70 @@ fn silent_peer_is_evicted_on_heartbeat_timeout() {
     master.shutdown();
 }
 
+/// A heartbeat whose `seq` regresses is a replayed/stale beacon from a
+/// zombie half-open link: it must NOT refresh the liveness deadline,
+/// and it takes a strike on `cocoi_heartbeat_regressions_total`.
+/// Monotonically advancing beats take none.
+#[test]
+fn stale_heartbeat_replay_takes_a_strike() {
+    // Heartbeat deadline far beyond the test's lifetime so eviction
+    // never races the assertions — only the seq bookkeeping is on trial.
+    let (server, addr) = elastic_server(SchemeKind::Uncoded, Duration::from_secs(30));
+
+    // Manual handshake, same idiom as the silent-peer test.
+    let mut link = TcpLink::connect(&addr.to_string()).unwrap();
+    link.send(
+        &FromWorker::Join {
+            name: "replayer".into(),
+            protocol: PROTOCOL_VERSION,
+            model: String::new(),
+        }
+        .encode(),
+    )
+    .unwrap();
+    let frame = link.recv().unwrap().expect("master closed during handshake");
+    match ToWorker::decode(&frame).unwrap() {
+        ToWorker::JoinAck { worker_id, .. } => assert_eq!(worker_id, 0),
+        other => panic!("expected JoinAck, got {other:?}"),
+    }
+    link.send(&FromWorker::Ready.encode()).unwrap();
+
+    // Healthy beats advance strictly (3 then 5): no strikes. Then a
+    // replayed 4 and a duplicated 5 both sit at-or-below the last-seen
+    // seq and each takes one strike.
+    for seq in [3u64, 5] {
+        link.send(&FromWorker::Heartbeat { seq }.encode()).unwrap();
+    }
+    for seq in [4u64, 5] {
+        link.send(&FromWorker::Heartbeat { seq }.encode()).unwrap();
+    }
+
+    // Beats fold in on the engine thread; poll the scrape briefly.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    let mut text = String::new();
+    while std::time::Instant::now() < deadline {
+        text = server.scrape().to_prometheus();
+        if text.contains("cocoi_heartbeat_regressions_total 2") {
+            break;
+        }
+        thread::sleep(Duration::from_millis(20));
+    }
+    assert!(
+        text.contains("cocoi_heartbeat_regressions_total 2"),
+        "expected exactly two seq-regression strikes in scrape, got:\n{text}"
+    );
+
+    // The strikes were observational only: the worker is still a member.
+    let master = server.shutdown().unwrap();
+    assert_eq!(
+        members_with(&master, |k| matches!(k, EventKind::Joined)),
+        vec![0]
+    );
+    assert!(members_with(&master, |k| matches!(k, EventKind::Evicted)).is_empty());
+    assert_eq!(master.registry().worker_ids(), vec![0]);
+    master.shutdown();
+}
+
 /// A worker whose link drops dials back with capped exponential backoff,
 /// re-joins under a FRESH id (the old membership was already evicted),
 /// and serves requests again.

@@ -396,8 +396,9 @@ fn server_scrape_passes_schema_check_with_stable_families() {
 
     let snap = server.scrape();
     let text = snap.to_prometheus();
-    // 6 server families + 18 hub families, every one schema-clean.
-    assert_eq!(check_exposition(&text).unwrap(), 24);
+    // 6 server families + 19 hub families + 5 tenant-labelled families
+    // (requests flowed under the default tenant), every one schema-clean.
+    assert_eq!(check_exposition(&text).unwrap(), 30);
     assert!(text.contains("cocoi_server_submitted_total 3"));
     assert!(text.contains("cocoi_server_completed_total 3"));
     assert!(text.contains("cocoi_server_open_requests 0"));

@@ -1,0 +1,371 @@
+//! Multi-tenant fair-serving suite: per-tenant admission quotas
+//! (`SubmitError::TenantQuota`), deficit-round-robin dispatch across
+//! weighted tenant queues (EDF inside each tenant's turn), the
+//! no-starvation property the DRR schedule exists for, deadline-aware
+//! coalescing (a tight-deadline request rides alone), and the
+//! tenant-labelled scrape families. Runs without `artifacts/`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cocoi::conv::Tensor;
+use cocoi::coordinator::fair::{tight_deadline, DrrQueue};
+use cocoi::coordinator::{
+    ExecMode, InferenceRequest, InferenceServer, LocalCluster, MasterConfig, PoolOptions,
+    SchemeKind, ServerConfig, SubmitError, WorkerFaults, WorkerHandles,
+};
+use cocoi::latency::SystemProfile;
+use cocoi::model::graph::forward_local;
+use cocoi::model::{zoo, WeightStore};
+use cocoi::planner::SplitPolicy;
+use cocoi::runtime::FallbackProvider;
+use cocoi::sim::{
+    simulate_serving_open, simulate_serving_tenants, MethodSim, Scenario, ServeSimMode,
+    TenantLoad,
+};
+use cocoi::util::Rng;
+
+fn inputs_for(count: usize, seed: u64) -> Vec<Tensor> {
+    let model = zoo::model("tinyvgg").unwrap();
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| {
+            let mut t = Tensor::zeros(model.input.0, model.input.1, model.input.2);
+            rng.fill_uniform_f32(&mut t.data, -1.0, 1.0);
+            t
+        })
+        .collect()
+}
+
+fn local_refs(inputs: &[Tensor]) -> Vec<Tensor> {
+    let model = zoo::model("tinyvgg").unwrap();
+    let weights = WeightStore::generate(&model, 42).unwrap();
+    inputs
+        .iter()
+        .map(|i| forward_local(&model, &weights, i).unwrap())
+        .collect()
+}
+
+fn spawn_server(
+    master_cfg: MasterConfig,
+    server_cfg: ServerConfig,
+    faults: Vec<WorkerFaults>,
+) -> (InferenceServer, WorkerHandles) {
+    let n = faults.len();
+    let cluster = LocalCluster::spawn_with(
+        "tinyvgg",
+        n,
+        master_cfg,
+        Arc::new(FallbackProvider::new()),
+        faults,
+        PoolOptions { worker_slots: 1 },
+    )
+    .unwrap();
+    let (master, workers) = cluster.into_parts();
+    (InferenceServer::start(master, server_cfg), workers)
+}
+
+fn stop(server: InferenceServer, workers: WorkerHandles) {
+    let master = server.shutdown().unwrap();
+    master.shutdown();
+    workers.join().unwrap();
+}
+
+/// DRR weights are respected within one rotation round: with weights
+/// a:2, b:1 and both tenants backlogged, the steady-state pop pattern
+/// is a,a,b — tenant a gets exactly twice tenant b's service, never a
+/// long unfair burst.
+#[test]
+fn drr_weights_respected_within_one_round() {
+    let mut q: DrrQueue<i64> = DrrQueue::new(&[("a".to_string(), 2.0), ("b".to_string(), 1.0)]);
+    for i in 0..6 {
+        q.push("a", 100 - i); // descending: heap order == insertion order
+        q.push("b", 200 - i);
+    }
+    let mut owners = Vec::new();
+    while let Some(v) = q.pop() {
+        owners.push(if v >= 195 { 'b' } else { 'a' });
+    }
+    assert_eq!(
+        owners,
+        vec!['a', 'a', 'b', 'a', 'a', 'b', 'a', 'a', 'b', 'b', 'b', 'b'],
+        "weights 2:1 must yield the a,a,b rotation until a drains"
+    );
+}
+
+/// EDF inside a tenant's turn: within one tenant, pops follow the
+/// caller's `Ord` (here: plain max-heap order), independent of push
+/// order.
+#[test]
+fn edf_order_inside_each_turn() {
+    let mut q: DrrQueue<i64> = DrrQueue::new(&[]);
+    for x in [3, 9, 1, 7] {
+        q.push("solo", x);
+    }
+    let mut got = Vec::new();
+    while let Some(x) = q.pop() {
+        got.push(x);
+    }
+    assert_eq!(got, vec![9, 7, 3, 1]);
+}
+
+/// THE no-starvation property, at sim scale (the serving experiment's
+/// fifth hard gate): a trickle victim (0.25x capacity, weight 16) next
+/// to a flooding tenant keeps near-isolated tail latency under fair
+/// sharing, while the pre-tenancy FIFO queue starves it. Per-tenant rng
+/// seeds make the victim's draws bitwise-identical across all three
+/// arms, so the comparison is pure scheduling interference.
+#[test]
+fn no_starvation_under_flood() {
+    let model = zoo::model("vgg16").unwrap();
+    let p = SystemProfile::paper_default();
+    let scenario = Scenario::None;
+    // Mean isolated service time fixes the load scale.
+    let service = {
+        let mut rng = Rng::new(0x5E21);
+        let r = simulate_serving_open(
+            &model,
+            &p,
+            10,
+            MethodSim::CocoiKCirc,
+            scenario,
+            ServeSimMode::Barrier,
+            1e-9,
+            16,
+            None,
+            &mut rng,
+        )
+        .unwrap();
+        r.latencies.iter().sum::<f64>() / r.latencies.len() as f64
+    };
+    let victim = TenantLoad {
+        name: "victim".into(),
+        rate: 0.25 / service,
+        weight: 16.0,
+        seed: 0xF00D1,
+    };
+    let flooder = TenantLoad {
+        name: "flooder".into(),
+        rate: 1.3 / service,
+        weight: 1.0,
+        seed: 0xF00D2,
+    };
+    let horizon = 40.0 * service;
+    let run = |loads: &[TenantLoad], fair: bool| {
+        simulate_serving_tenants(
+            &model,
+            &p,
+            10,
+            MethodSim::CocoiKCirc,
+            scenario,
+            loads,
+            horizon,
+            None,
+            fair,
+        )
+        .unwrap()
+    };
+    let iso = run(std::slice::from_ref(&victim), true);
+    let fair = run(&[victim.clone(), flooder.clone()], true);
+    let fifo = run(&[victim, flooder], false);
+    assert!(iso[0].arrivals > 0 && iso[0].latencies.len() == iso[0].arrivals);
+    // Same private stream → same offered trace in every arm.
+    assert_eq!(fair[0].arrivals, iso[0].arrivals);
+    assert_eq!(fifo[0].arrivals, iso[0].arrivals);
+    // The gate: fair-shared victim p95 within 1.2x of isolated; and
+    // EVERY victim request completes within a small multiple of the
+    // worst isolated sojourn (no one starves, not just the p95).
+    assert!(
+        fair[0].p95() <= 1.2 * iso[0].p95(),
+        "fair victim p95 {} > 1.2x isolated {}",
+        fair[0].p95(),
+        iso[0].p95()
+    );
+    let iso_max = iso[0].latencies.iter().cloned().fold(0.0, f64::max);
+    let fair_max = fair[0].latencies.iter().cloned().fold(0.0, f64::max);
+    assert!(
+        fair_max <= 1.5 * iso_max,
+        "worst fair victim sojourn {fair_max} > 1.5x worst isolated {iso_max}"
+    );
+    // The FIFO baseline is what the gate rules out: the flooder's
+    // backlog buries the victim.
+    assert!(
+        fifo[0].p95() > 1.2 * iso[0].p95(),
+        "FIFO victim p95 {} unexpectedly within the fair bound {}",
+        fifo[0].p95(),
+        iso[0].p95()
+    );
+}
+
+/// Live DRR dispatch order: with a serial engine (max_concurrent 1) and
+/// a backlogged flooder, a weighted victim's requests are served ahead
+/// of the flooder's later backlog — engine-stamped sojourns expose the
+/// service order.
+#[test]
+fn weighted_tenant_overtakes_flooder_backlog() {
+    let inputs = inputs_for(6, 941);
+    // 20 ms per reply keeps the engine busy while the burst queues up.
+    let faults: Vec<WorkerFaults> = (0..3)
+        .map(|_| WorkerFaults::with_send_delay(0.020))
+        .collect();
+    let (server, workers) = spawn_server(
+        MasterConfig {
+            scheme: SchemeKind::Uncoded,
+            policy: SplitPolicy::Fixed(3),
+            mode: ExecMode::Pipelined,
+            tenant_weights: vec![("victim".to_string(), 4.0), ("flooder".to_string(), 1.0)],
+            ..Default::default()
+        },
+        ServerConfig {
+            max_concurrent: 1,
+            ..Default::default()
+        },
+        faults,
+    );
+    // f0 occupies the engine; f1..f3 then v1, v2 queue behind it.
+    let f: Vec<_> = inputs[..4]
+        .iter()
+        .map(|i| {
+            server
+                .submit(InferenceRequest::new(i.clone()).with_tenant("flooder"))
+                .unwrap()
+        })
+        .collect();
+    let v: Vec<_> = inputs[4..]
+        .iter()
+        .map(|i| {
+            server
+                .submit(InferenceRequest::new(i.clone()).with_tenant("victim"))
+                .unwrap()
+        })
+        .collect();
+    let settle = |h: cocoi::coordinator::RequestHandle| -> f64 {
+        let (res, sojourn) = h.wait_timed();
+        res.expect("request failed");
+        sojourn.as_secs_f64()
+    };
+    let f_sojourns: Vec<f64> = f.into_iter().map(settle).collect();
+    let v_sojourns: Vec<f64> = v.into_iter().map(settle).collect();
+    // DRR with weights {victim: 4, flooder: 1} serves f0, f1, v1, v2,
+    // f2, f3 — both victim requests complete before the flooder's last
+    // two, despite being submitted after them.
+    for (vi, vs) in v_sojourns.iter().enumerate() {
+        for (fi, fs) in f_sojourns.iter().enumerate().skip(2) {
+            assert!(
+                vs < fs,
+                "victim {vi} (sojourn {vs:.3}s) should beat flooder {fi} ({fs:.3}s)"
+            );
+        }
+    }
+    // The tenant-labelled scrape families carry the per-tenant counts.
+    let prom = server.scrape().to_prometheus();
+    assert!(prom.contains("cocoi_tenant_submitted_total{tenant=\"flooder\"} 4"));
+    assert!(prom.contains("cocoi_tenant_submitted_total{tenant=\"victim\"} 2"));
+    assert!(prom.contains("cocoi_tenant_completed_total{tenant=\"victim\"} 2"));
+    assert!(prom.contains("cocoi_tenant_open_requests{tenant=\"victim\"} 0"));
+    stop(server, workers);
+}
+
+/// Per-tenant admission quota: the third open request of a tenant is
+/// refused with `TenantQuota`, other tenants are unaffected, and the
+/// slot frees once a request completes.
+#[test]
+fn tenant_quota_bounds_open_requests() {
+    let inputs = inputs_for(5, 942);
+    let want = local_refs(&inputs);
+    let faults: Vec<WorkerFaults> = (0..3)
+        .map(|_| WorkerFaults::with_send_delay(0.020))
+        .collect();
+    let (server, workers) = spawn_server(
+        MasterConfig {
+            scheme: SchemeKind::Uncoded,
+            policy: SplitPolicy::Fixed(3),
+            mode: ExecMode::Pipelined,
+            ..Default::default()
+        },
+        ServerConfig {
+            tenant_quota: 2,
+            ..Default::default()
+        },
+        faults,
+    );
+    let a1 = server
+        .submit(InferenceRequest::new(inputs[0].clone()).with_tenant("acme"))
+        .unwrap();
+    let a2 = server
+        .submit(InferenceRequest::new(inputs[1].clone()).with_tenant("acme"))
+        .unwrap();
+    // Third open "acme" request: over quota.
+    match server.submit(InferenceRequest::new(inputs[2].clone()).with_tenant("acme")) {
+        Err(SubmitError::TenantQuota) => {}
+        other => panic!("expected TenantQuota, got {:?}", other.map(|h| h.id())),
+    }
+    assert_eq!(server.stats().rejected_tenant_quota, 1);
+    // A different tenant is not collateral damage.
+    let b1 = server
+        .submit(InferenceRequest::new(inputs[3].clone()).with_tenant("bravo"))
+        .unwrap();
+    // In-flight requests complete correctly despite the rejection.
+    for (h, want) in [(a1, &want[0]), (a2, &want[1]), (b1, &want[3])] {
+        let (out, _) = h.wait().unwrap();
+        assert_eq!(out.data, want.data);
+    }
+    // Quota freed: "acme" submits again.
+    let a3 = server
+        .submit(InferenceRequest::new(inputs[2].clone()).with_tenant("acme"))
+        .unwrap();
+    let (out, _) = a3.wait().unwrap();
+    assert_eq!(out.data, want[2].data);
+    let prom = server.scrape().to_prometheus();
+    assert!(prom.contains("cocoi_tenant_quota_rejections_total{tenant=\"acme\"} 1"));
+    stop(server, workers);
+}
+
+/// Deadline-aware coalescing pin. Policy level: a request whose slack
+/// is under `TIGHT_SLACK_MULTIPLE` x the predicted service time is
+/// tight and must ride alone. Engine level: a tight-deadline request
+/// submitted into a wide coalescing burst still completes bitwise-
+/// correctly and inside its deadline — it was dispatched as a closed
+/// singleton round, with the burst coalescing around it.
+#[test]
+fn tight_deadline_rides_alone_through_coalescing() {
+    // The policy itself (mirrors `fair::tight_deadline`'s contract).
+    assert!(tight_deadline(Some(1.0), Some(0.5)));
+    assert!(!tight_deadline(Some(10.0), Some(0.5)));
+    assert!(!tight_deadline(None, Some(0.5)));
+
+    let inputs = inputs_for(4, 943);
+    let want = local_refs(&inputs);
+    let (server, workers) = spawn_server(
+        MasterConfig {
+            scheme: SchemeKind::Uncoded,
+            policy: SplitPolicy::Fixed(3),
+            mode: ExecMode::Pipelined,
+            coalesce: 4,
+            ..Default::default()
+        },
+        ServerConfig::default(),
+        (0..3).map(|_| WorkerFaults::none()).collect(),
+    );
+    // Three wide (no-deadline) requests + one tight-deadline request.
+    // With the unfitted 0.5 s service floor, a 1 s deadline is tight
+    // (slack < 4 x 0.5 s) yet generous against tinyvgg's ~ms service —
+    // it must complete, not shed, and not sit behind a wide batch.
+    let wide: Vec<_> = inputs[..3]
+        .iter()
+        .map(|i| server.submit(InferenceRequest::new(i.clone())).unwrap())
+        .collect();
+    let tight = server
+        .submit(
+            InferenceRequest::new(inputs[3].clone())
+                .with_deadline(Duration::from_secs(1)),
+        )
+        .unwrap();
+    let (out, _) = tight.wait().expect("tight-deadline request must not shed or wedge");
+    assert_eq!(out.data, want[3].data);
+    for (h, want) in wide.into_iter().zip(&want) {
+        let (out, _) = h.wait().unwrap();
+        assert_eq!(out.data, want.data);
+    }
+    stop(server, workers);
+}
